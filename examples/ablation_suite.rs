@@ -1,0 +1,16 @@
+//! Ablation suite runner: reproduces the Appendix E ablations (Fig 15,
+//! Fig 16) in one shot, on the bundled artifacts.
+//!
+//! Run: cargo run --release --offline --example ablation_suite
+
+use scalebits::coordinator::{experiments_ablation as ab, Pipeline};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    println!("== ablation: adaptive gradients + channel reordering (Fig 15) ==");
+    ab::fig15(&artifacts, 42)?;
+    println!("\n== ablation: sensitivity statistics for one-sided updates (Fig 16) ==");
+    let mut p = Pipeline::load_full(&artifacts)?;
+    ab::fig16(&mut p, 42)?;
+    Ok(())
+}

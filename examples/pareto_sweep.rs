@@ -1,0 +1,56 @@
+//! Pareto sweep (Figure 1 analog): trace the perplexity–bits frontier.
+//!
+//! ScaleBITS reaches arbitrary budgets; uniform RTN only has discrete
+//! points. The sweep writes results/pareto.csv for plotting.
+//!
+//! Run: cargo run --release --offline --example pareto_sweep [-- --points 5]
+
+use std::io::Write;
+
+use scalebits::coordinator::Pipeline;
+use scalebits::quant::BitAlloc;
+use scalebits::search::SearchConfig;
+use scalebits::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let points = args.usize_or("points", 7)?;
+    let artifacts = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+
+    let mut p = Pipeline::load_full(&artifacts)?;
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+
+    println!("== uniform RTN operating points ==");
+    for bits in [2, 3, 4] {
+        let r = p.eval_alloc(&BitAlloc::uniform(&p.index, bits))?;
+        println!("  uniform {bits}b: ppl {:8.2}  acc {:5.1}%", r.perplexity, 100.0 * r.task_accuracy);
+        rows.push(("uniform".into(), r.avg_bits, r.perplexity, r.task_accuracy));
+    }
+
+    println!("== ScaleBITS frontier ==");
+    p.reorder(3, 42)?;
+    for i in 0..points {
+        let budget = 2.0 + 2.0 * i as f64 / (points - 1).max(1) as f64;
+        let cfg = SearchConfig { budget, seed: 42, ..Default::default() };
+        let res = p.search(&cfg)?;
+        let r = p.eval_alloc(&res.alloc)?;
+        println!(
+            "  budget {budget:4.2}: avg {:4.2}b  ppl {:8.2}  acc {:5.1}%  ({} iters, {:.1}s)",
+            r.avg_bits,
+            r.perplexity,
+            100.0 * r.task_accuracy,
+            res.iters.len(),
+            res.wall_secs
+        );
+        rows.push(("scalebits".into(), r.avg_bits, r.perplexity, r.task_accuracy));
+    }
+
+    std::fs::create_dir_all("results")?;
+    let mut f = std::fs::File::create("results/pareto.csv")?;
+    writeln!(f, "method,bits,ppl,task_acc")?;
+    for (m, b, ppl, acc) in &rows {
+        writeln!(f, "{m},{b:.3},{ppl:.4},{acc:.4}")?;
+    }
+    println!("wrote results/pareto.csv ({} rows)", rows.len());
+    Ok(())
+}

@@ -1,0 +1,282 @@
+"""AOT build: train the model, export datasets, weights, golden vectors,
+and lower every computation graph to HLO TEXT for the rust runtime.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (artifacts/):
+  manifest.json      — config, parameter table, executable signatures
+  weights.bin        — trained f32 weights, manifest order, little-endian
+  calib.bin/eval.bin — int32 token streams (calibration / held-out)
+  tasks.bin          — probe-task sequences (int32 [n, seq_len])
+  *.hlo.txt          — qloss, qgrad, qlogits{,_b1}, grams,
+                       mpq_matmul, dense_matmul, elemmp_matmul
+  golden.json        — cross-layer golden vectors (rust unit tests)
+
+Run: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from .kernels.mpq_matmul import mpq_matmul
+from .kernels.ref import quant_codes_ref, rtn_block_fakequant_ref
+from .model import ModelConfig, graph_arg_specs, make_graphs
+from .train import train
+
+KERNEL_M, KERNEL_N, KERNEL_K = 16, 512, 512  # Table-4 analog GEMM shape
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, specs, path: str) -> None:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB, {time.time() - t0:.1f}s)",
+          flush=True)
+
+
+# ---------------------------------------------------------------------
+# kernel-bench graphs (Table 4 analog)
+
+
+def dense_matmul(x, w):
+    """BF16-baseline analog: plain f32 GEMM at the same shape."""
+    return (x @ w.T,)
+
+
+def mpq_matmul_graph(x, codes, scales, bits):
+    return (mpq_matmul(x, codes, scales, bits),)
+
+
+def elemmp_matmul(x, wq, idx, vals):
+    """Unstructured element-wise MP baseline: scatter ~1% FP corrections
+    into the dequantized weight, then GEMM. Models the irregular-access
+    overhead of SpQR/SqueezeLLM-style element MP that the paper's
+    block-wise design avoids."""
+    w = wq.at[idx[:, 0], idx[:, 1]].set(vals)
+    return (x @ w.T,)
+
+
+# ---------------------------------------------------------------------
+
+
+def export(out_dir: str, steps: int, quick: bool) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = ModelConfig()
+    if quick:
+        cfg = ModelConfig(n_layers=2, seq_len=64)
+    batch = 8
+
+    # ---- data ------------------------------------------------------
+    print("[1/5] synthesizing corpus", flush=True)
+    n_train = 60_000 if quick else 400_000
+    corpus = data_mod.make_corpus(cfg.vocab, n_train, seed=7)
+    calib = data_mod.make_corpus(cfg.vocab, 64_000, seed=11)
+    evals = data_mod.make_corpus(cfg.vocab, 48_000, seed=13)
+    tasks = data_mod.make_probe_tasks(cfg.seq_len, 256, seed=17)
+    corpus.tofile(os.path.join(out_dir, "train.bin"))
+    calib.tofile(os.path.join(out_dir, "calib.bin"))
+    evals.tofile(os.path.join(out_dir, "eval.bin"))
+    tasks.tofile(os.path.join(out_dir, "tasks.bin"))
+
+    # ---- train (or reuse cached weights) ----------------------------
+    names = cfg.param_names()
+    weights_path = os.path.join(out_dir, "weights.bin")
+    expected = sum(int(np.prod(cfg.param_shape(n))) for n in names)
+    reuse = (not os.environ.get("SCALEBITS_RETRAIN")
+             and os.path.exists(weights_path)
+             and os.path.getsize(weights_path) == expected * 4)
+    if reuse:
+        print("[2/5] reusing cached trained weights "
+              "(set SCALEBITS_RETRAIN=1 to force retraining)", flush=True)
+        flat = np.fromfile(weights_path, dtype=np.float32)
+        params = {}
+        off = 0
+        for n in names:
+            shape = cfg.param_shape(n)
+            size = int(np.prod(shape))
+            params[n] = jnp.asarray(flat[off:off + size].reshape(shape))
+            off += size
+        final_loss = -1.0  # sentinel: weights reused, no fresh loss (NaN is not valid JSON)
+    else:
+        print(f"[2/5] training MiniLlama ({cfg.n_layers}L d{cfg.d_model}) "
+              f"for {steps} steps", flush=True)
+        result = train(cfg, corpus, steps=steps, seed=0)
+        params = result["params"]
+        final_loss = result["losses"][-1]
+        flat = np.concatenate(
+            [np.asarray(params[n], np.float32).ravel() for n in names])
+        flat.tofile(weights_path)
+
+    # ---- manifest ---------------------------------------------------
+    print("[3/5] writing manifest + golden vectors", flush=True)
+    qnames = cfg.quantized_names()
+    offset = 0
+    param_table = []
+    for n in names:
+        shape = list(cfg.param_shape(n))
+        size = int(np.prod(shape))
+        param_table.append({
+            "name": n, "shape": shape, "offset": offset,
+            "quantized": n in qnames,
+        })
+        offset += size
+
+    sig = (["tokens"] + [f"bits:{n}" for n in qnames]
+           + [f"param:{n}" for n in names])
+    gram_sites = []
+    for i in range(cfg.n_layers):
+        gram_sites += [
+            {"site": f"layers.{i}.attn_in", "dim": cfg.d_model,
+             "consumers": [f"layers.{i}.{w}" for w in ("wq", "wk", "wv")]},
+            {"site": f"layers.{i}.wo_in", "dim": cfg.d_model,
+             "consumers": [f"layers.{i}.wo"]},
+            {"site": f"layers.{i}.mlp_in", "dim": cfg.d_model,
+             "consumers": [f"layers.{i}.w_gate", f"layers.{i}.w_up"]},
+            {"site": f"layers.{i}.down_in", "dim": cfg.d_ff,
+             "consumers": [f"layers.{i}.w_down"]},
+        ]
+    manifest = {
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+            "block_rows": cfg.block_rows, "block_cols": cfg.block_cols,
+            "rope_theta": cfg.rope_theta,
+        },
+        "params": param_table,
+        "quantized": qnames,
+        "n_blocks": cfg.n_blocks(),
+        "executables": {
+            "qloss": {"file": "qloss.hlo.txt", "batch": batch,
+                      "inputs": sig, "outputs": ["loss"]},
+            "qgrad": {"file": "qgrad.hlo.txt", "batch": batch,
+                      "inputs": sig,
+                      "outputs": ["loss"] + [f"grad:{n}" for n in qnames]},
+            "qlogits": {"file": "qlogits.hlo.txt", "batch": batch,
+                        "inputs": sig, "outputs": ["logits"]},
+            "qlogits_b1": {"file": "qlogits_b1.hlo.txt", "batch": 1,
+                           "inputs": sig, "outputs": ["logits"]},
+            "qpredict": {"file": "qpredict.hlo.txt", "batch": batch,
+                         "inputs": sig, "outputs": ["pred"]},
+            "grams": {"file": "grams.hlo.txt", "batch": batch,
+                      "inputs": sig,
+                      "outputs": ["loss"] + [g["site"] for g in gram_sites]},
+        },
+        "gram_sites": gram_sites,
+        "kernel_bench": {
+            "m": KERNEL_M, "n": KERNEL_N, "k": KERNEL_K,
+            "block_rows": cfg.block_rows, "block_cols": cfg.block_cols,
+            "files": {
+                "mpq": "mpq_matmul.hlo.txt",
+                "dense": "dense_matmul.hlo.txt",
+                "elemmp": "elemmp_matmul.hlo.txt",
+            },
+            "elemmp_n_outliers": (KERNEL_N * KERNEL_K) // 100,
+        },
+        "datasets": {
+            "train": {"file": "train.bin", "n_tokens": int(len(corpus))},
+            "calib": {"file": "calib.bin", "n_tokens": int(len(calib))},
+            "eval": {"file": "eval.bin", "n_tokens": int(len(evals))},
+            "tasks": {"file": "tasks.bin", "n": int(tasks.shape[0]),
+                      "seq_len": int(tasks.shape[1])},
+        },
+        "train_info": {"steps": steps, "final_loss": final_loss},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # ---- golden vectors (rust <-> python cross-validation) ---------
+    rng = np.random.default_rng(3)
+    gw = rng.standard_normal((64, 64)).astype(np.float32)
+    gbits = rng.integers(0, 10, size=(2, 2)).astype(np.int32)
+    gq = np.asarray(rtn_block_fakequant_ref(
+        jnp.array(gw), jnp.array(gbits), 32, 32))
+    codes4, scales4 = quant_codes_ref(gw, 4, 32)
+    golden = {
+        "fakequant": {
+            "w": gw.ravel().tolist(), "rows": 64, "cols": 64,
+            "bits": gbits.ravel().tolist(),
+            "block_rows": 32, "block_cols": 32,
+            "out": gq.ravel().tolist(),
+        },
+        "codes4": {
+            "w": gw.ravel().tolist(), "rows": 64, "cols": 64, "group": 32,
+            "codes": codes4.astype(int).ravel().tolist(),
+            "scales": scales4.ravel().tolist(),
+        },
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+    # ---- lower model graphs -----------------------------------------
+    print("[4/5] lowering model graphs to HLO text", flush=True)
+    graphs = make_graphs(cfg)
+    specs = graph_arg_specs(cfg, batch)
+    specs_b1 = graph_arg_specs(cfg, 1)
+    lower_and_write(graphs["qloss"], specs, os.path.join(out_dir, "qloss.hlo.txt"))
+    lower_and_write(graphs["qgrad"], specs, os.path.join(out_dir, "qgrad.hlo.txt"))
+    lower_and_write(graphs["qlogits"], specs, os.path.join(out_dir, "qlogits.hlo.txt"))
+    lower_and_write(graphs["qlogits"], specs_b1,
+                    os.path.join(out_dir, "qlogits_b1.hlo.txt"))
+    lower_and_write(graphs["qpredict"], specs,
+                    os.path.join(out_dir, "qpredict.hlo.txt"))
+    lower_and_write(graphs["grams"], specs, os.path.join(out_dir, "grams.hlo.txt"))
+
+    # ---- lower kernel-bench graphs ----------------------------------
+    print("[5/5] lowering kernel-bench graphs", flush=True)
+    f32 = jnp.float32
+    br, bc = cfg.block_rows, cfg.block_cols
+    x_s = jax.ShapeDtypeStruct((KERNEL_M, KERNEL_K), f32)
+    codes_s = jax.ShapeDtypeStruct((KERNEL_N, KERNEL_K), jnp.int8)
+    scales_s = jax.ShapeDtypeStruct((KERNEL_N, KERNEL_K // bc), f32)
+    bits_s = jax.ShapeDtypeStruct((KERNEL_N // br, KERNEL_K // bc), jnp.int32)
+    w_s = jax.ShapeDtypeStruct((KERNEL_N, KERNEL_K), f32)
+    n_out = (KERNEL_N * KERNEL_K) // 100
+    idx_s = jax.ShapeDtypeStruct((n_out, 2), jnp.int32)
+    val_s = jax.ShapeDtypeStruct((n_out,), f32)
+
+    lower_and_write(mpq_matmul_graph, [x_s, codes_s, scales_s, bits_s],
+                    os.path.join(out_dir, "mpq_matmul.hlo.txt"))
+    lower_and_write(dense_matmul, [x_s, w_s],
+                    os.path.join(out_dir, "dense_matmul.hlo.txt"))
+    lower_and_write(elemmp_matmul, [x_s, w_s, idx_s, val_s],
+                    os.path.join(out_dir, "elemmp_matmul.hlo.txt"))
+
+    print("AOT export complete:", out_dir, flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny config for CI smoke runs")
+    args = ap.parse_args()
+    export(args.out, args.steps, args.quick)
+
+
+if __name__ == "__main__":
+    main()

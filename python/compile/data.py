@@ -1,0 +1,125 @@
+"""Build-time synthetic corpus + probe tasks.
+
+Substitution (DESIGN.md): we have no WikiText-2 / RedPajama, so we build
+a synthetic language with enough structure that (a) a small transformer
+learns something non-trivial, (b) quantization error maps to measurable
+perplexity/accuracy deltas, and (c) the model develops the heterogeneous
+channel sensitivity the paper exploits.
+
+The corpus mixes three processes:
+  1. Zipfian-marginal Markov chain ("text"): a sparse first-order chain
+     whose stationary distribution is approximately Zipf(1.1).
+  2. Induction patterns: segments `a b ... a b` where the second
+     occurrence is predictable — trains induction heads, the classic
+     source of a few highly sensitive channels.
+  3. Arithmetic-mod patterns: `x y (x+y mod V') ...` triples.
+
+Probe tasks ("zero-shot" analog): held-out sequences whose final token
+is fully determined by the pattern; accuracy = P(top-1 == target) at the
+answer position.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PATTERN_VOCAB = 64  # pattern tokens live in [0, PATTERN_VOCAB)
+
+
+def make_markov_chain(vocab: int, rng: np.random.Generator, out_degree: int = 24):
+    """Sparse row-stochastic transition matrix with Zipfian target mass."""
+    zipf = 1.0 / np.arange(1, vocab + 1) ** 1.1
+    zipf /= zipf.sum()
+    trans = np.zeros((vocab, vocab), np.float64)
+    for s in range(vocab):
+        nbrs = rng.choice(vocab, size=out_degree, replace=False, p=zipf)
+        w = rng.dirichlet(np.ones(out_degree) * 0.5)
+        np.add.at(trans[s], nbrs, w)
+        trans[s] /= trans[s].sum()
+    return trans
+
+
+def sample_markov(trans, n, rng, state=0):
+    vocab = trans.shape[0]
+    out = np.empty(n, np.int32)
+    for i in range(n):
+        state = rng.choice(vocab, p=trans[state])
+        out[i] = state
+    return out
+
+
+def inject_patterns(tokens: np.ndarray, rng: np.random.Generator,
+                    density: float = 0.15):
+    """Overwrite random windows with induction / arithmetic patterns."""
+    n = len(tokens)
+    n_windows = int(n * density / 16)
+    for _ in range(n_windows):
+        start = int(rng.integers(0, n - 24))
+        kind = int(rng.integers(0, 2))
+        if kind == 0:  # induction: a b c ... a b c (period-3 repeat)
+            a, b, c = rng.integers(0, PATTERN_VOCAB, 3)
+            pat = np.tile([a, b, c], 8)[:20]
+        else:  # arithmetic mod chains
+            x, y = rng.integers(0, PATTERN_VOCAB, 2)
+            pat = []
+            for _ in range(7):
+                z = (x + y) % PATTERN_VOCAB
+                pat += [x, y, z]
+                x, y = y, z
+            pat = np.array(pat[:20])
+        tokens[start:start + len(pat)] = pat
+    return tokens
+
+
+def make_corpus(vocab: int, n_tokens: int, seed: int, chain_seed: int = 7):
+    """Sample a token stream from the language defined by `chain_seed`.
+
+    The transition matrix (the "language") is fixed by chain_seed; the
+    sampling path varies with `seed`, so train/calib/eval are disjoint
+    held-out samples of the SAME distribution.
+    """
+    chain_rng = np.random.default_rng(chain_seed)
+    trans = make_markov_chain(vocab, chain_rng)
+    rng = np.random.default_rng(seed)
+    toks = sample_markov(trans, n_tokens, rng, state=int(rng.integers(0, vocab)))
+    toks = inject_patterns(toks, rng)
+    return toks.astype(np.int32)
+
+
+def make_probe_tasks(seq_len: int, n_tasks: int, seed: int):
+    """Sequences whose LAST token is pattern-determined.
+
+    Returns (tokens [n, seq_len] with the answer in the final slot,
+    answer_pos = seq_len - 1). Accuracy metric: model's top-1 prediction
+    at position answer_pos - 1 must equal tokens[:, answer_pos].
+    """
+    rng = np.random.default_rng(seed)
+    out = np.zeros((n_tasks, seq_len), np.int32)
+    for i in range(n_tasks):
+        # background: mild noise from the pattern vocab
+        out[i] = rng.integers(0, PATTERN_VOCAB, seq_len)
+        if i % 2 == 0:  # induction probe: ...a b c ... a b -> c
+            a, b, c = rng.integers(0, PATTERN_VOCAB, 3)
+            pat = np.tile([a, b, c], 6)
+            out[i, -len(pat) - 1:-1] = pat  # ends mid-cycle
+            k = (len(pat)) % 3
+            nxt = [a, b, c][k]
+            out[i, -1] = nxt
+        else:  # arithmetic probe: x y (x+y) repeated, answer next elt
+            x, y = rng.integers(0, PATTERN_VOCAB, 2)
+            seq = []
+            for _ in range(8):
+                z = (x + y) % PATTERN_VOCAB
+                seq += [int(x), int(y), int(z)]
+                x, y = y, z
+            seq = seq[:17]
+            out[i, -len(seq) - 1:-1] = seq
+            j = len(seq) % 3
+            # next element after seq[:17]: continue the triple stream
+            # recompute stream to position 17
+            x, y = seq[0], seq[1]
+            stream = [x, y]
+            while len(stream) < 18:
+                stream.append((stream[-2] + stream[-1]) % PATTERN_VOCAB)
+            out[i, -1] = stream[17]
+    return out

@@ -1,0 +1,116 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes/bits
+with hypothesis and asserts the Pallas kernels (interpret mode) match
+these implementations to float tolerance. The rust RTN quantizer is also
+cross-validated against `rtn_block_fakequant_ref` through golden vectors
+exported by aot.py.
+
+Quantization scheme (paper §5: RTN, group size = block width):
+  - per-block bitwidth b (uniform inside a hardware tile),
+  - per-(row, col-group) scale, symmetric grid,
+  - b == 1  -> sign(w) * mean|w| over the group (binary special case),
+  - b >= 9  -> passthrough (sentinel for "keep full precision").
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+FP_SENTINEL_BITS = 9  # bits >= this means "leave the block in full precision"
+
+
+def rtn_group_fakequant_ref(w: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quantize one (rows, group) tile with a single bitwidth.
+
+    w:    [rows, g] float32
+    bits: scalar int32
+    """
+    bf = bits.astype(jnp.float32)
+    qmax = jnp.exp2(bf - 1.0) - 1.0  # 2^(b-1) - 1 symmetric levels
+    amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    scale = amax / jnp.maximum(qmax, 1.0)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(w / safe), -qmax, qmax)
+    deq = q * scale
+
+    # 1-bit: sign * mean|w| per row-group.
+    mean_abs = jnp.mean(jnp.abs(w), axis=-1, keepdims=True)
+    sgn = jnp.where(w >= 0, 1.0, -1.0)
+    one_bit = sgn * mean_abs
+
+    out = jnp.where(bits == 1, one_bit, deq)
+    out = jnp.where(bits >= FP_SENTINEL_BITS, w, out)
+    # 0-bit: pruned block.
+    out = jnp.where(bits <= 0, jnp.zeros_like(w), out)
+    return out
+
+
+def rtn_block_fakequant_ref(
+    w: jnp.ndarray, bits: jnp.ndarray, block_rows: int, block_cols: int
+) -> jnp.ndarray:
+    """Fake-quantize a full matrix with per-block bitwidths.
+
+    w:    [R, C] float32
+    bits: [R // block_rows, C // block_cols] int32
+    Scales are per (row, block-col) => group size == block_cols,
+    matching the paper's "quantization group size must match the block
+    width" constraint (App. E.6).
+    """
+    import jax
+
+    R, C = w.shape
+    br, bc = block_rows, block_cols
+    # [nbr, nbc, br, bc]: one leading entry per block.
+    gw = w.reshape(R // br, br, C // bc, bc).transpose(0, 2, 1, 3)
+
+    out = jax.vmap(jax.vmap(rtn_group_fakequant_ref))(gw, bits)
+    return out.transpose(0, 2, 1, 3).reshape(R, C)
+
+
+def quant_codes_ref(w: np.ndarray, bits: int, group: int):
+    """Integer codes + scales for real (packed) quantization (numpy).
+
+    Used as golden data for the rust packer. Returns (codes int8 [R, C],
+    scales f32 [R, C//group]). bits in 1..8.
+    """
+    R, C = w.shape
+    wg = w.reshape(R, C // group, group)
+    if bits == 1:
+        scales = np.mean(np.abs(wg), axis=-1)
+        codes = np.where(wg >= 0, 1, -1).astype(np.int8)
+        return codes.reshape(R, C), scales.astype(np.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = np.max(np.abs(wg), axis=-1)
+    scales = amax / max(qmax, 1.0)
+    safe = np.where(scales > 0, scales, 1.0)[..., None]
+    codes = np.clip(np.round(wg / safe), -qmax, qmax).astype(np.int8)
+    return codes.reshape(R, C), scales.astype(np.float32)
+
+
+def mpq_matmul_ref(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    bits: jnp.ndarray,
+    block_rows: int,
+    block_cols: int,
+) -> jnp.ndarray:
+    """Reference for the fused dequant+matmul kernel.
+
+    x:      [M, K]  float32 activations
+    codes:  [N, K]  int8    quantized weight codes (row-major, W[N, K])
+    scales: [N, K // block_cols] float32 per-(row, col-group) scales
+    bits:   [N // block_rows, K // block_cols] int32 (only the pruned-
+            block zero mask is needed here; code values already encode
+            the precision)
+    returns y = x @ W_deq^T : [M, N]
+    """
+    deq = codes.astype(jnp.float32) * jnp.repeat(scales, block_cols, axis=1)
+    mask = jnp.repeat(
+        jnp.repeat((bits > 0).astype(jnp.float32), block_rows, axis=0),
+        block_cols,
+        axis=1,
+    )
+    return x @ (deq * mask).T

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: block-wise RTN fake-quantization.
+
+This is the hot inner op of the *search* path: every iteration of the
+scalable greedy search (Algorithm 1) re-quantizes the model under a new
+per-block bit allocation. Placing `Q(w, b)` on-device means the rust
+coordinator only re-uploads the tiny int32 `bits` grids each iteration;
+the full-precision weights live in device buffers uploaded once.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one grid step = one
+hardware tile staged HBM->VMEM. The per-tile bitwidth is a (1,1) scalar
+block rider; the dequant grid math is pure VPU element-wise work that
+fuses ahead of whatever consumes the tile (here: the transformer's
+matmuls). All precision branches are computed branchlessly with
+`jnp.where`, which is exactly why per-tile mixed precision costs nothing
+at runtime — there is no control-flow divergence across tiles.
+
+interpret=True: CPU PJRT cannot execute Mosaic custom-calls; interpret
+mode lowers the kernel to plain HLO so the same artifact runs everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FP_SENTINEL_BITS = 9
+
+
+def _fakequant_tile(w, bits):
+    """Branchless RTN fake-quant, vectorized over [..., group] tiles.
+
+    `w` is [..., g]; `bits` broadcasts against w's leading axes (the
+    group axis reduces). Works for a single tile ([br, bc] with scalar
+    bits) and for a whole stripe ([br, nbc, bc] with bits [1, nbc, 1]).
+    """
+    bf = bits.astype(jnp.float32)
+    qmax = jnp.exp2(bf - 1.0) - 1.0
+    amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    scale = amax / jnp.maximum(qmax, 1.0)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(w / safe), -qmax, qmax)
+    deq = q * scale
+
+    mean_abs = jnp.mean(jnp.abs(w), axis=-1, keepdims=True)
+    one_bit = jnp.where(w >= 0, 1.0, -1.0) * mean_abs
+
+    out = jnp.where(bits == 1, one_bit, deq)
+    out = jnp.where(bits >= FP_SENTINEL_BITS, w, out)
+    out = jnp.where(bits <= 0, jnp.zeros_like(w), out)
+    return out
+
+
+def _stripe_kernel(w_ref, bits_ref, o_ref):
+    # One grid step = one block-row STRIPE: [br, C] staged into VMEM,
+    # reshaped to [br, nbc, bc] so every column tile quantizes in one
+    # vectorized VPU pass against its own (1, nbc, 1) bit scalar.
+    w = w_ref[...]
+    br, c = w.shape
+    nbc = bits_ref.shape[1]
+    w3 = w.reshape(br, nbc, c // nbc)
+    bits3 = bits_ref[...].reshape(1, nbc, 1)
+    o_ref[...] = _fakequant_tile(w3, bits3).reshape(br, c)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def rtn_block_fakequant(
+    w: jnp.ndarray, bits: jnp.ndarray, block_rows: int = 32, block_cols: int = 32
+) -> jnp.ndarray:
+    """Fake-quantize matrix `w` [R, C] under per-block bits [R/br, C/bc].
+
+    Per-(row, col-group) symmetric scales with group size == block_cols.
+
+    Schedule (perf pass, EXPERIMENTS.md §Perf): the grid iterates over
+    block-row stripes only — each step stages a [br, C] stripe
+    HBM->VMEM and quantizes all of its column tiles in one vectorized
+    pass (C = 128-256 here => 16-32 KB per stripe, comfortably inside
+    VMEM; at LLM scale the stripe would be sub-tiled along C). The
+    original (R/br, C/bc) per-tile grid lowered (interpret mode) to
+    ~10x more sequential loop steps and dominated the qloss/qgrad
+    executables' runtime.
+    """
+    R, C = w.shape
+    br, bc = block_rows, block_cols
+    assert R % br == 0 and C % bc == 0, (w.shape, br, bc)
+    grid = (R // br,)
+    return pl.pallas_call(
+        _stripe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, C), lambda i: (i, 0)),
+            pl.BlockSpec((1, C // bc), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=True,
+    )(w, bits)

@@ -1,0 +1,310 @@
+"""L2: JAX transformer (MiniLlama) + the exported computation graphs.
+
+Architecture mirrors the Llama recipe the paper quantizes (RMSNorm, RoPE,
+MHA, SwiGLU), at a build-time-trainable scale. The rust coordinator
+NEVER sees this code — it consumes the lowered HLO artifacts plus
+`manifest.json`, which pins the exact positional parameter order used
+here.
+
+Canonical parameter order (manifest order; Q marks quantized matrices):
+
+  embed                       [V, D]
+  layers.i.attn_norm          [D]
+  layers.i.wq    Q            [D, D]
+  layers.i.wk    Q            [D, D]
+  layers.i.wv    Q            [D, D]
+  layers.i.wo    Q            [D, D]
+  layers.i.mlp_norm           [D]
+  layers.i.w_gate Q           [F, D]
+  layers.i.w_up   Q           [F, D]
+  layers.i.w_down Q           [D, F]
+  final_norm                  [D]
+  lm_head                     [V, D]
+
+All linears are `y = x @ W^T` with W stored [out, in], matching the
+paper's d_out x d_in convention (rows = output channels, cols = input
+channels).
+
+Exported graphs (see aot.py):
+  qloss   (tokens, *bits, *params) -> loss
+  qgrad   (tokens, *bits, *params) -> (loss, *grads at the quantized point)
+  qlogits (tokens, *bits, *params) -> logits
+  grams   (tokens, *bits, *params) -> (*X^T X per linear-input site)
+
+`bits` carries one int32 grid per quantized matrix; entries >= 9 mean
+"full precision", so a single artifact covers FP baseline, uniform RTN
+and mixed-precision paths. Q(w, b) is applied on-device via the L1
+Pallas kernel, and gradients are taken AT THE QUANTIZED POINT w^Q
+(paper Eq. 3) by differentiating wrt the already-fake-quantized weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.rtn_block_fakequant import rtn_block_fakequant
+
+QUANT_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 256
+    seq_len: int = 128
+    block_rows: int = 32
+    block_cols: int = 32
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    # ---- parameter registry ---------------------------------------
+
+    def param_names(self) -> List[str]:
+        names = ["embed"]
+        for i in range(self.n_layers):
+            p = f"layers.{i}."
+            names += [p + "attn_norm", p + "wq", p + "wk", p + "wv", p + "wo",
+                      p + "mlp_norm", p + "w_gate", p + "w_up", p + "w_down"]
+        names += ["final_norm", "lm_head"]
+        return names
+
+    def param_shape(self, name: str) -> Tuple[int, ...]:
+        V, D, F = self.vocab, self.d_model, self.d_ff
+        leaf = name.split(".")[-1]
+        return {
+            "embed": (V, D), "lm_head": (V, D),
+            "attn_norm": (D,), "mlp_norm": (D,), "final_norm": (D,),
+            "wq": (D, D), "wk": (D, D), "wv": (D, D), "wo": (D, D),
+            "w_gate": (F, D), "w_up": (F, D), "w_down": (D, F),
+        }[leaf]
+
+    def quantized_names(self) -> List[str]:
+        return [n for n in self.param_names() if n.split(".")[-1] in QUANT_NAMES]
+
+    def bits_shape(self, name: str) -> Tuple[int, int]:
+        r, c = self.param_shape(name)
+        return (r // self.block_rows, c // self.block_cols)
+
+    def n_blocks(self) -> int:
+        return sum(int(np.prod(self.bits_shape(n))) for n in self.quantized_names())
+
+
+# ---------------------------------------------------------------------
+# parameter helpers
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    params = {}
+    for name in cfg.param_names():
+        shape = cfg.param_shape(name)
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / np.sqrt(fan_in)
+            )
+    return params
+
+
+def params_to_list(cfg: ModelConfig, params: Dict[str, jnp.ndarray]):
+    return [params[n] for n in cfg.param_names()]
+
+
+def list_to_params(cfg: ModelConfig, lst) -> Dict[str, jnp.ndarray]:
+    return dict(zip(cfg.param_names(), lst))
+
+
+# ---------------------------------------------------------------------
+# model blocks
+
+
+def rmsnorm(x, g, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope(x, theta: float):
+    """x: [B, T, H, Hd]; rotate pairs (even, odd) of the head dim."""
+    B, T, H, Hd = x.shape
+    half = Hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = jnp.arange(T, dtype=jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    rx1 = x1 * cos[None, :, None, :] - x2 * sin[None, :, None, :]
+    rx2 = x1 * sin[None, :, None, :] + x2 * cos[None, :, None, :]
+    return jnp.concatenate([rx1, rx2], axis=-1)
+
+
+def attention(cfg: ModelConfig, x, wq, wk, wv, wo, collect=None):
+    B, T, D = x.shape
+    H, Hd = cfg.n_heads, cfg.head_dim
+    q = (x @ wq.T).reshape(B, T, H, Hd)
+    k = (x @ wk.T).reshape(B, T, H, Hd)
+    v = (x @ wv.T).reshape(B, T, H, Hd)
+    q, k = rope(q, cfg.rope_theta), rope(k, cfg.rope_theta)
+    att = jnp.einsum("bthd,bshd->bhts", q, k) / np.sqrt(Hd)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B, T, D)
+    if collect is not None:
+        collect.append(out)  # input of wo
+    return out @ wo.T
+
+
+def mlp(x, w_gate, w_up, w_down, collect=None):
+    h = jax.nn.silu(x @ w_gate.T) * (x @ w_up.T)
+    if collect is not None:
+        collect.append(h)  # input of w_down
+    return h @ w_down.T
+
+
+def forward(cfg: ModelConfig, params: Dict[str, jnp.ndarray], tokens,
+            collect_inputs: bool = False):
+    """tokens [B, T] int32 -> logits [B, T, V] (+ optional linear inputs).
+
+    collect_inputs gathers the activation entering each linear-input
+    site, in order (attn_in, wo_in, mlp_in, down_in) per layer — the
+    inputs whose Grams the GPTQ baseline needs.
+    """
+    sites = [] if collect_inputs else None
+    x = params["embed"][tokens]  # [B, T, D]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = rmsnorm(x, params[p + "attn_norm"])
+        if sites is not None:
+            sites.append(h)  # input of wq/wk/wv
+        x = x + attention(cfg, h, params[p + "wq"], params[p + "wk"],
+                          params[p + "wv"], params[p + "wo"], collect=sites)
+        h = rmsnorm(x, params[p + "mlp_norm"])
+        if sites is not None:
+            sites.append(h)  # input of w_gate/w_up
+        x = x + mlp(h, params[p + "w_gate"], params[p + "w_up"],
+                    params[p + "w_down"], collect=sites)
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["lm_head"].T
+    if collect_inputs:
+        # reorder per layer to (attn_in, wo_in, mlp_in, down_in)
+        per_layer = []
+        for i in range(cfg.n_layers):
+            attn_in, wo_in, mlp_in, down_in = (
+                sites[4 * i], sites[4 * i + 1], sites[4 * i + 2], sites[4 * i + 3])
+            per_layer += [attn_in, wo_in, mlp_in, down_in]
+        return logits, per_layer
+    return logits
+
+
+def ce_loss(logits, tokens):
+    """Next-token cross entropy, mean over positions."""
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------
+# quantized graphs
+
+
+def fakequant_params(cfg: ModelConfig, params, bits_list):
+    """Apply the L1 Pallas kernel Q(w, b) to every quantized matrix."""
+    qnames = cfg.quantized_names()
+    out = dict(params)
+    for name, bits in zip(qnames, bits_list):
+        out[name] = rtn_block_fakequant(
+            params[name], bits, cfg.block_rows, cfg.block_cols)
+    return out
+
+
+def make_graphs(cfg: ModelConfig):
+    """Build the 4 exported computations as positional-arg functions."""
+    names = cfg.param_names()
+    qnames = cfg.quantized_names()
+    nq = len(qnames)
+
+    def unpack(args):
+        tokens = args[0]
+        bits_list = list(args[1:1 + nq])
+        params = dict(zip(names, args[1 + nq:]))
+        return tokens, bits_list, params
+
+    def qloss(*args):
+        tokens, bits_list, params = unpack(args)
+        qp = fakequant_params(cfg, params, bits_list)
+        return (ce_loss(forward(cfg, qp, tokens), tokens),)
+
+    def qlogits(*args):
+        tokens, bits_list, params = unpack(args)
+        qp = fakequant_params(cfg, params, bits_list)
+        return (forward(cfg, qp, tokens),)
+
+    def qpredict(*args):
+        # Serving/eval fast path: top-1 prediction per position. Returns
+        # [B, T] int32 instead of [B, T, V] f32 logits — 512x less
+        # device->host traffic (EXPERIMENTS.md §Perf iteration 3).
+        tokens, bits_list, params = unpack(args)
+        qp = fakequant_params(cfg, params, bits_list)
+        logits = forward(cfg, qp, tokens)
+        return (jnp.argmax(logits, axis=-1).astype(jnp.int32),)
+
+    def qgrad(*args):
+        tokens, bits_list, params = unpack(args)
+        qp = fakequant_params(cfg, params, bits_list)
+        qmats = tuple(qp[n] for n in qnames)
+
+        def loss_at(qmats_):
+            p = dict(qp)
+            p.update(zip(qnames, qmats_))
+            return ce_loss(forward(cfg, p, tokens), tokens)
+
+        # Gradient AT the quantized point w^Q (paper Eq. 3) — the
+        # fake-quant op is outside the differentiation scope, so no
+        # straight-through estimator is involved.
+        loss, grads = jax.value_and_grad(loss_at)(qmats)
+        return (loss, *grads)
+
+    def grams(*args):
+        tokens, bits_list, params = unpack(args)
+        qp = fakequant_params(cfg, params, bits_list)
+        logits, sites = forward(cfg, qp, tokens, collect_inputs=True)
+        outs = []
+        for s in sites:  # [B, T, d] -> [d, d]
+            flat = s.reshape(-1, s.shape[-1])
+            outs.append(flat.T @ flat)
+        # The loss output keeps EVERY parameter live (lm_head, final
+        # norm, the last w_down): without it XLA prunes the unused
+        # inputs and the executable signature no longer matches the
+        # manifest's positional argument list.
+        return (ce_loss(logits, tokens), *outs)
+
+    return {
+        "qloss": qloss,
+        "qgrad": qgrad,
+        "qlogits": qlogits,
+        "qpredict": qpredict,
+        "grams": grams,
+    }
+
+
+def graph_arg_specs(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStructs for the shared (tokens, *bits, *params) signature."""
+    specs = [jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)]
+    for n in cfg.quantized_names():
+        specs.append(jax.ShapeDtypeStruct(cfg.bits_shape(n), jnp.int32))
+    for n in cfg.param_names():
+        specs.append(jax.ShapeDtypeStruct(cfg.param_shape(n), jnp.float32))
+    return specs

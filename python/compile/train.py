@@ -1,0 +1,69 @@
+"""Build-time training of the MiniLlama on the synthetic corpus.
+
+This runs ONCE inside `make artifacts` (python is never on the request
+path). A few hundred Adam steps are enough to (a) drive the loss well
+below the unigram entropy, (b) grow induction behaviour (probe accuracy
+>> 1/64 chance), and (c) develop the non-uniform channel sensitivity
+that ScaleBITS exploits.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ModelConfig, ce_loss, forward, init_params
+
+
+def adam_init(params):
+    z = lambda: {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def train_step(cfg: ModelConfig, params, opt, tokens, lr=3e-3):
+    def loss_fn(p):
+        return ce_loss(forward(cfg, p, tokens), tokens)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    t = opt["t"] + 1
+    new_m, new_v, new_p = {}, {}, {}
+    for k in params:
+        m = b1 * opt["m"][k] + (1 - b1) * grads[k]
+        v = b2 * opt["v"][k] + (1 - b2) * grads[k] ** 2
+        mhat = m / (1 - b1 ** t.astype(jnp.float32))
+        vhat = v / (1 - b2 ** t.astype(jnp.float32))
+        new_m[k], new_v[k] = m, v
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, {"m": new_m, "v": new_v, "t": t}, loss
+
+
+def batches(corpus: np.ndarray, batch: int, seq_len: int, rng: np.random.Generator):
+    n = len(corpus) - seq_len - 1
+    while True:
+        idx = rng.integers(0, n, batch)
+        yield np.stack([corpus[i:i + seq_len] for i in idx])
+
+
+def train(cfg: ModelConfig, corpus: np.ndarray, steps: int = 400,
+          batch: int = 16, seed: int = 0, log_every: int = 50) -> Dict:
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed + 1)
+    it = batches(corpus, batch, cfg.seq_len, rng)
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        toks = jnp.asarray(next(it))
+        params, opt, loss = train_step(cfg, params, opt, toks)
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"  train step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return {"params": params, "losses": losses}

@@ -1,0 +1,203 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+hypothesis sweeps shapes / bit patterns; assert_allclose against ref.py
+is THE core correctness signal for the kernel layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.mpq_matmul import mpq_matmul
+from compile.kernels.ref import (
+    mpq_matmul_ref,
+    quant_codes_ref,
+    rtn_block_fakequant_ref,
+    rtn_group_fakequant_ref,
+)
+from compile.kernels.rtn_block_fakequant import rtn_block_fakequant
+
+BR, BC = 32, 32
+
+
+def rand_w(rng, r, c, scale=1.0):
+    return (rng.standard_normal((r, c)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------
+# RTN fake-quant kernel
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nbr=st.integers(1, 3),
+    nbc=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rtn_kernel_matches_ref(nbr, nbc, seed):
+    rng = np.random.default_rng(seed)
+    w = rand_w(rng, nbr * BR, nbc * BC)
+    bits = rng.integers(0, 11, size=(nbr, nbc)).astype(np.int32)
+    got = rtn_block_fakequant(jnp.array(w), jnp.array(bits), BR, BC)
+    want = rtn_block_fakequant_ref(jnp.array(w), jnp.array(bits), BR, BC)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", list(range(0, 10)))
+def test_rtn_kernel_every_bitwidth(bits):
+    rng = np.random.default_rng(bits)
+    w = rand_w(rng, BR, BC)
+    b = np.full((1, 1), bits, np.int32)
+    got = np.array(rtn_block_fakequant(jnp.array(w), jnp.array(b), BR, BC))
+    want = np.array(rtn_block_fakequant_ref(jnp.array(w), jnp.array(b), BR, BC))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_rtn_zero_bits_prunes():
+    rng = np.random.default_rng(0)
+    w = rand_w(rng, BR, BC)
+    b = np.zeros((1, 1), np.int32)
+    got = np.array(rtn_block_fakequant(jnp.array(w), jnp.array(b), BR, BC))
+    assert np.all(got == 0)
+
+
+def test_rtn_fp_sentinel_passthrough():
+    rng = np.random.default_rng(1)
+    w = rand_w(rng, BR, BC)
+    b = np.full((1, 1), 9, np.int32)
+    got = np.array(rtn_block_fakequant(jnp.array(w), jnp.array(b), BR, BC))
+    np.testing.assert_array_equal(got, w)
+
+
+def test_rtn_error_shrinks_with_bits():
+    """Quantization error must be monotone non-increasing in bitwidth."""
+    rng = np.random.default_rng(2)
+    w = rand_w(rng, BR, BC)
+    errs = []
+    # start at b=2: the b=1 sign*mean quantizer is a different grid and
+    # can beat the 3-level symmetric 2-bit grid on MSE.
+    for bits in range(2, 9):
+        b = np.full((1, 1), bits, np.int32)
+        q = np.array(rtn_block_fakequant(jnp.array(w), jnp.array(b), BR, BC))
+        errs.append(float(np.mean((q - w) ** 2)))
+    assert all(errs[i + 1] <= errs[i] * 1.001 for i in range(len(errs) - 1)), errs
+
+
+def test_rtn_8bit_near_lossless():
+    rng = np.random.default_rng(3)
+    w = rand_w(rng, BR, BC)
+    b = np.full((1, 1), 8, np.int32)
+    q = np.array(rtn_block_fakequant(jnp.array(w), jnp.array(b), BR, BC))
+    assert np.max(np.abs(q - w)) < np.max(np.abs(w)) / 100
+
+
+def test_rtn_constant_zero_block():
+    w = np.zeros((BR, BC), np.float32)
+    for bits in [1, 2, 4, 8]:
+        b = np.full((1, 1), bits, np.int32)
+        q = np.array(rtn_block_fakequant(jnp.array(w), jnp.array(b), BR, BC))
+        assert np.all(np.isfinite(q))
+        np.testing.assert_allclose(q, 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([1e-4, 1.0, 1e4]))
+def test_rtn_scale_equivariance_and_finite(seed, scale):
+    """Symmetric RTN is scale-equivariant: Q(a*w) == a*Q(w) for a > 0."""
+    rng = np.random.default_rng(seed)
+    w = rand_w(rng, BR, BC)
+    b = np.full((1, 1), 3, np.int32)
+    q1 = np.array(rtn_block_fakequant(jnp.array(w * scale), jnp.array(b)))
+    q2 = np.array(rtn_block_fakequant(jnp.array(w), jnp.array(b))) * scale
+    np.testing.assert_allclose(q1, q2, rtol=1e-5, atol=1e-6 * scale)
+
+
+def test_group_ref_idempotent():
+    """Fake-quant is a projection: Q(Q(w)) == Q(w)."""
+    rng = np.random.default_rng(5)
+    w = jnp.array(rand_w(rng, BR, BC))
+    b = jnp.array(4, jnp.int32)
+    q1 = rtn_group_fakequant_ref(w, b)
+    q2 = rtn_group_fakequant_ref(q1, b)
+    np.testing.assert_allclose(np.array(q1), np.array(q2), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------
+# fused mixed-precision matmul kernel
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([16, 32]),
+    nbn=st.integers(1, 3),
+    nbk=st.integers(1, 3),
+    bits=st.sampled_from([1, 2, 3, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mpq_matmul_matches_ref(m, nbn, nbk, bits, seed):
+    rng = np.random.default_rng(seed)
+    n, k = nbn * BR, nbk * BC
+    w = rand_w(rng, n, k)
+    x = rand_w(rng, m, k)
+    codes, scales = quant_codes_ref(w, bits, BC)
+    bmap = np.full((nbn, nbk), bits, np.int32)
+    got = mpq_matmul(jnp.array(x), jnp.array(codes), jnp.array(scales),
+                     jnp.array(bmap), block_m=16)
+    want = mpq_matmul_ref(jnp.array(x), jnp.array(codes), jnp.array(scales),
+                          jnp.array(bmap), BR, BC)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=2e-4)
+
+
+def test_mpq_matmul_mixed_blocks():
+    """Blocks at different precisions in one GEMM — the paper's core case."""
+    rng = np.random.default_rng(9)
+    n, k = 64, 96
+    w = rand_w(rng, n, k)
+    x = rand_w(rng, 16, k)
+    # quantize each block at its own bitwidth, then assemble codes
+    bmap = rng.integers(1, 9, size=(n // BR, k // BC)).astype(np.int32)
+    codes = np.zeros((n, k), np.int8)
+    scales = np.zeros((n, k // BC), np.float32)
+    for i in range(n // BR):
+        for j in range(k // BC):
+            blk = w[i * BR:(i + 1) * BR, j * BC:(j + 1) * BC]
+            c, s = quant_codes_ref(blk, int(bmap[i, j]), BC)
+            codes[i * BR:(i + 1) * BR, j * BC:(j + 1) * BC] = c
+            scales[i * BR:(i + 1) * BR, j] = s[:, 0]
+    got = np.array(mpq_matmul(jnp.array(x), jnp.array(codes),
+                              jnp.array(scales), jnp.array(bmap)))
+    want = np.array(mpq_matmul_ref(jnp.array(x), jnp.array(codes),
+                                   jnp.array(scales), jnp.array(bmap), BR, BC))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_mpq_matmul_pruned_block_contributes_zero():
+    rng = np.random.default_rng(10)
+    n, k = 32, 64
+    w = rand_w(rng, n, k)
+    x = rand_w(rng, 16, k)
+    codes, scales = quant_codes_ref(w, 4, BC)
+    bmap = np.array([[4, 0]], np.int32)  # second K-block pruned
+    got = np.array(mpq_matmul(jnp.array(x), jnp.array(codes),
+                              jnp.array(scales), jnp.array(bmap)))
+    codes2 = codes.copy()
+    codes2[:, BC:] = 0
+    want = x @ (codes2.astype(np.float32)
+                * np.repeat(scales, BC, axis=1)).T
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_mpq_matmul_4bit_approximates_dense():
+    """Sanity: 4-bit fused GEMM tracks the dense GEMM within quant error."""
+    rng = np.random.default_rng(11)
+    n, k = 64, 64
+    w = rand_w(rng, n, k)
+    x = rand_w(rng, 16, k)
+    codes, scales = quant_codes_ref(w, 8, BC)
+    bmap = np.full((2, 2), 8, np.int32)
+    got = np.array(mpq_matmul(jnp.array(x), jnp.array(codes),
+                              jnp.array(scales), jnp.array(bmap)))
+    dense = x @ w.T
+    rel = np.linalg.norm(got - dense) / np.linalg.norm(dense)
+    assert rel < 0.02, rel

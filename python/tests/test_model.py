@@ -1,0 +1,198 @@
+"""L2 correctness: model graph shapes, quantization plumbing, gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    ce_loss,
+    forward,
+    graph_arg_specs,
+    init_params,
+    list_to_params,
+    make_graphs,
+    params_to_list,
+)
+
+CFG = ModelConfig(n_layers=2, seq_len=32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, (2, CFG.seq_len)), jnp.int32)
+    return params, toks
+
+
+def fp_bits():
+    return [jnp.full(CFG.bits_shape(n), 16, jnp.int32)
+            for n in CFG.quantized_names()]
+
+
+def uniform_bits(b):
+    return [jnp.full(CFG.bits_shape(n), b, jnp.int32)
+            for n in CFG.quantized_names()]
+
+
+def test_param_registry_roundtrip():
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    lst = params_to_list(CFG, params)
+    back = list_to_params(CFG, lst)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(params[k]))
+
+
+def test_param_shapes():
+    for n in CFG.param_names():
+        s = CFG.param_shape(n)
+        assert all(d > 0 for d in s)
+    for n in CFG.quantized_names():
+        r, c = CFG.param_shape(n)
+        assert r % CFG.block_rows == 0 and c % CFG.block_cols == 0
+
+
+def test_n_blocks_consistent():
+    total = sum(int(np.prod(CFG.bits_shape(n))) for n in CFG.quantized_names())
+    assert CFG.n_blocks() == total
+    assert total > 0
+
+
+def test_forward_shapes(setup):
+    params, toks = setup
+    logits = forward(CFG, params, toks)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_forward_causal(setup):
+    """Changing a future token must not change past logits."""
+    params, toks = setup
+    logits1 = forward(CFG, params, toks)
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % CFG.vocab)
+    logits2 = forward(CFG, params, toks2)
+    np.testing.assert_allclose(np.asarray(logits1[:, :-1]),
+                               np.asarray(logits2[:, :-1]), rtol=1e-5, atol=1e-5)
+
+
+def test_qloss_fp_equals_plain_loss(setup):
+    params, toks = setup
+    graphs = make_graphs(CFG)
+    args = [toks] + fp_bits() + params_to_list(CFG, params)
+    qloss = graphs["qloss"](*args)[0]
+    plain = ce_loss(forward(CFG, params, toks), toks)
+    np.testing.assert_allclose(float(qloss), float(plain), rtol=1e-6)
+
+
+def test_qloss_degrades_with_fewer_bits(setup):
+    params, toks = setup
+    graphs = make_graphs(CFG)
+    plist = params_to_list(CFG, params)
+    losses = {}
+    for b in [2, 8, 16]:
+        args = [toks] + uniform_bits(b) + plist
+        losses[b] = float(graphs["qloss"](*args)[0])
+    # 8-bit is near-lossless; 2-bit must hurt (random weights => small
+    # margins, so compare against the aggressive end only).
+    assert abs(losses[16] - losses[8]) < 0.05, losses
+    assert losses[2] > losses[16] + 0.02, losses
+
+
+def test_qgrad_loss_matches_qloss(setup):
+    params, toks = setup
+    graphs = make_graphs(CFG)
+    args = [toks] + uniform_bits(3) + params_to_list(CFG, params)
+    l1 = float(graphs["qloss"](*args)[0])
+    out = graphs["qgrad"](*args)
+    assert len(out) == 1 + len(CFG.quantized_names())
+    np.testing.assert_allclose(float(out[0]), l1, rtol=1e-6)
+
+
+def test_qgrad_is_gradient_at_quantized_point(setup):
+    """Finite-difference check of one gradient entry at w^Q (paper Eq. 3)."""
+    params, toks = setup
+    graphs = make_graphs(CFG)
+    from compile.model import fakequant_params
+    bits = uniform_bits(3)
+    plist = params_to_list(CFG, params)
+    out = graphs["qgrad"](*([toks] + bits + plist))
+    g_wq = np.asarray(out[1])  # grad of layers.0.wq
+
+    qp = fakequant_params(CFG, params, bits)
+    name = CFG.quantized_names()[0]
+    eps = 1e-3
+    ij = (1, 2)
+    for sign in (+1,):
+        pp = dict(qp)
+        pp[name] = qp[name].at[ij].add(eps)
+        lp = float(ce_loss(forward(CFG, pp, toks), toks))
+        pm = dict(qp)
+        pm[name] = qp[name].at[ij].add(-eps)
+        lm = float(ce_loss(forward(CFG, pm, toks), toks))
+        fd = (lp - lm) / (2 * eps)
+    assert abs(fd - g_wq[ij]) < 5e-3 * max(1.0, abs(fd)), (fd, g_wq[ij])
+
+
+def test_qlogits_matches_forward_of_fakequant(setup):
+    params, toks = setup
+    graphs = make_graphs(CFG)
+    from compile.model import fakequant_params
+    bits = uniform_bits(4)
+    args = [toks] + bits + params_to_list(CFG, params)
+    ql = graphs["qlogits"](*args)[0]
+    qp = fakequant_params(CFG, params, bits)
+    want = forward(CFG, qp, toks)
+    np.testing.assert_allclose(np.asarray(ql), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grams_shapes_and_psd(setup):
+    params, toks = setup
+    graphs = make_graphs(CFG)
+    args = [toks] + fp_bits() + params_to_list(CFG, params)
+    out = graphs["grams"](*args)
+    # first output is the loss (keeps all params live under XLA DCE)
+    assert len(out) == 1 + 4 * CFG.n_layers
+    assert np.isfinite(float(out[0]))
+    grams = out[1:]
+    dims = []
+    for i in range(CFG.n_layers):
+        dims += [CFG.d_model, CFG.d_model, CFG.d_model, CFG.d_ff]
+    for g, d in zip(grams, dims):
+        g = np.asarray(g)
+        assert g.shape == (d, d)
+        np.testing.assert_allclose(g, g.T, rtol=1e-4, atol=1e-4)
+        evals = np.linalg.eigvalsh(g)
+        assert evals.min() > -1e-2 * max(1.0, evals.max())
+
+
+def test_graph_arg_specs_align():
+    specs = graph_arg_specs(CFG, 4)
+    assert specs[0].shape == (4, CFG.seq_len)
+    nq = len(CFG.quantized_names())
+    for i, n in enumerate(CFG.quantized_names()):
+        assert specs[1 + i].shape == CFG.bits_shape(n)
+    for i, n in enumerate(CFG.param_names()):
+        assert specs[1 + nq + i].shape == CFG.param_shape(n)
+
+
+def test_rope_preserves_norm():
+    from compile.model import rope
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 8, 4, 32)), jnp.float32)
+    r = rope(x, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(r), axis=-1), rtol=1e-5)
+
+
+def test_rmsnorm_unit_scale():
+    from compile.model import rmsnorm
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+    y = np.asarray(rmsnorm(x, jnp.ones(16)))
+    rms = np.sqrt(np.mean(y * y, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

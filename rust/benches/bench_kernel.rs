@@ -1,0 +1,111 @@
+//! Bench: fused mixed-precision dequant+matmul executable (Table 4).
+//!
+//! Regenerates the paper's kernel-latency rows on the PJRT-CPU
+//! testbed: uniform-4bit vs mixed {2,4,8} mixtures vs dense f32 vs the
+//! unstructured element-MP scatter baseline.
+//!
+//! Run: cargo bench --offline --bench bench_kernel
+
+use scalebits::model::Manifest;
+use scalebits::quant::PackedMat;
+use scalebits::runtime::Engine;
+use scalebits::tensor::Mat;
+use scalebits::util::rng::Rng;
+use scalebits::util::timer;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let m = Manifest::load(&artifacts)?;
+    let kb = m.kernel_bench()?;
+    let engine = Engine::load(m, &[])?;
+    let dir = engine.manifest.dir.clone();
+    let mpq = engine.compile_hlo_file(&dir.join(&kb.files["mpq"]))?;
+    let dense = engine.compile_hlo_file(&dir.join(&kb.files["dense"]))?;
+    let elemmp = engine.compile_hlo_file(&dir.join(&kb.files["elemmp"]))?;
+
+    let (mm, n, k) = (kb.m, kb.n, kb.k);
+    let (br, bc) = (kb.block_rows, kb.block_cols);
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..mm * k).map(|_| rng.normal_f32()).collect();
+    let w = Mat::from_vec(n, k, (0..n * k).map(|_| rng.normal_f32()).collect())?;
+
+    let codes_for = |grid: &[i32]| -> (Vec<i8>, Vec<f32>) {
+        let packed = PackedMat::quantize(&w, grid, br, bc);
+        let deq = packed.dequantize();
+        let nbc = k / bc;
+        let mut codes = vec![0i8; n * k];
+        for r in 0..n {
+            for g in 0..nbc {
+                let s = packed.scales[r * nbc + g];
+                for c in 0..bc {
+                    let idx = r * k + g * bc + c;
+                    codes[idx] =
+                        if s > 0.0 { (deq.data[idx] / s).round_ties_even() as i8 } else { 0 };
+                }
+            }
+        }
+        (codes, packed.scales)
+    };
+
+    println!("GEMM {mm}x{k} @ {n}x{k}^T, {br}x{bc} blocks, PJRT-CPU");
+    let nblocks = (n / br) * (k / bc);
+    let mixes: &[(&str, Box<dyn Fn(usize) -> i32>)] = &[
+        ("uniform INT2", Box::new(|_| 2)),
+        ("uniform INT4", Box::new(|_| 4)),
+        ("uniform INT8", Box::new(|_| 8)),
+        ("mixed 40/40/20 (avg 4b)", Box::new(|i| match i % 10 {
+            0..=3 => 2,
+            4..=7 => 4,
+            _ => 8,
+        })),
+        ("mixed 25/50/25 (avg 4.5b)", Box::new(|i| match i % 4 {
+            0 => 2,
+            1 | 2 => 4,
+            _ => 8,
+        })),
+    ];
+    for (label, f) in mixes {
+        let grid: Vec<i32> = (0..nblocks).map(|i| f(i)).collect();
+        let (codes, scales) = codes_for(&grid);
+        let args = vec![
+            engine.upload_f32(&x, &[mm, k])?,
+            engine.upload_i8(&codes, &[n, k])?,
+            engine.upload_f32(&scales, &[n, k / bc])?,
+            engine.upload_i32(&grid, &[n / br, k / bc])?,
+        ];
+        let stats = timer::bench(5, 40, || {
+            engine.run_raw(&mpq, &args).expect("run");
+        });
+        println!("{}", stats.line(&format!("mpq {label}")));
+    }
+
+    let args = vec![engine.upload_f32(&x, &[mm, k])?, engine.upload_f32(&w.data, &[n, k])?];
+    let stats = timer::bench(5, 40, || {
+        engine.run_raw(&dense, &args).expect("run");
+    });
+    println!("{}", stats.line("dense f32 (BF16 analog)"));
+
+    let n_out = kb.elemmp_n_outliers;
+    let mut idx = Vec::with_capacity(n_out * 2);
+    let mut vals = Vec::with_capacity(n_out);
+    for _ in 0..n_out {
+        idx.push(rng.below(n) as i32);
+        idx.push(rng.below(k) as i32);
+        vals.push(rng.normal_f32());
+    }
+    let grid4: Vec<i32> = vec![4; nblocks];
+    let wq4 = PackedMat::quantize(&w, &grid4, br, bc).dequantize();
+    let args = vec![
+        engine.upload_f32(&x, &[mm, k])?,
+        engine.upload_f32(&wq4.data, &[n, k])?,
+        engine.upload_i32(&idx, &[n_out, 2])?,
+        engine.upload_f32(&vals, &[n_out])?,
+    ];
+    let stats = timer::bench(5, 40, || {
+        engine.run_raw(&elemmp, &args).expect("run");
+    });
+    println!("{}", stats.line("element-MP scatter (SpQR-like)"));
+    println!("\nshape claim (paper Table 4): all mpq rows within noise of each other;");
+    println!("element-MP pays a visible scatter penalty.");
+    Ok(())
+}

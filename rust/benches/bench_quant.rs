@@ -1,0 +1,69 @@
+//! Bench: pure-CPU quantizer hot paths — RTN fake-quant, integer-code
+//! generation, bit-packing/unpacking, and the whole-model PackedMat
+//! export. These dominate the coordinator-side (non-XLA) cost of a
+//! search iteration, so they are the L3 optimization targets of
+//! EXPERIMENTS.md §Perf.
+//!
+//! Run: cargo bench --offline --bench bench_quant
+
+use scalebits::model::{Manifest, WeightStore};
+use scalebits::quant::{
+    fakequant_mat, pack_codes, quant_group_codes, unpack_codes, BitAlloc, BlockIndex, PackedMat,
+};
+use scalebits::tensor::Mat;
+use scalebits::util::rng::Rng;
+use scalebits::util::timer;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(3);
+    let w = Mat::from_vec(512, 512, (0..512 * 512).map(|_| rng.normal_f32()).collect())?;
+    let bits: Vec<i32> = (0..(512 / 32) * (512 / 32)).map(|_| rng.range(1, 9) as i32).collect();
+
+    println!("CPU quantizer hot paths (512x512 matrix, 32x32 blocks)");
+    let stats = timer::bench(3, 50, || {
+        std::hint::black_box(fakequant_mat(&w, &bits, 32, 32));
+    });
+    println!("{}", stats.line("fakequant_mat 512x512"));
+    let mps = (512.0 * 512.0) * 1e6 / stats.mean_us / 1e6;
+    println!("{:>34} {:.0} Mweights/s", "->", mps);
+
+    let row: Vec<f32> = (0..512).map(|_| rng.normal_f32()).collect();
+    let stats = timer::bench(3, 2000, || {
+        std::hint::black_box(quant_group_codes(&row[..32], 4));
+    });
+    println!("{}", stats.line("quant_group_codes g32 b4"));
+
+    let codes: Vec<i8> = (0..4096).map(|_| rng.range(-7, 8) as i8).collect();
+    for b in [2, 4, 8] {
+        let packed = pack_codes(&codes, b);
+        let stats = timer::bench(3, 500, || {
+            std::hint::black_box(pack_codes(&codes, b));
+        });
+        println!("{}", stats.line(&format!("pack_codes 4096 @{b}bit")));
+        let stats = timer::bench(3, 500, || {
+            std::hint::black_box(unpack_codes(&packed, 4096, b));
+        });
+        println!("{}", stats.line(&format!("unpack_codes 4096 @{b}bit")));
+    }
+
+    // whole-model export (if artifacts are present)
+    let artifacts = std::path::PathBuf::from("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let m = Manifest::load(&artifacts)?;
+        let store = WeightStore::load(&m)?;
+        let index = BlockIndex::from_manifest(&m)?;
+        let alloc = BitAlloc::uniform(&index, 3);
+        let stats = timer::bench(1, 10, || {
+            let mut total = 0usize;
+            for (mi, name) in index.mats.iter().enumerate() {
+                let w = store.get(name).unwrap();
+                let grid = &alloc.bits[index.mat_range(mi)];
+                total += PackedMat::quantize(w, grid, index.block_rows, index.block_cols)
+                    .storage_bytes();
+            }
+            std::hint::black_box(total);
+        });
+        println!("{}", stats.line("pack whole model @3bit"));
+    }
+    Ok(())
+}

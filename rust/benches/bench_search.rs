@@ -1,0 +1,61 @@
+//! Bench: scalable-greedy search iteration cost (Table 3).
+//!
+//! Breaks one search iteration into its parts: qgrad execution, the
+//! CPU-side block reduction (s_up/s_down), candidate ranking, and the
+//! acceptance-check qloss execution. Also reports the end-to-end cost
+//! of a full budget-3.0 search.
+//!
+//! Run: cargo bench --offline --bench bench_search
+
+use scalebits::coordinator::Pipeline;
+use scalebits::quant::BitAlloc;
+use scalebits::search::SearchConfig;
+use scalebits::util::timer;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let p = Pipeline::load(&artifacts, &["qloss", "qgrad"])?;
+    let alloc = BitAlloc::uniform(&p.index, 3);
+    let mut sampler = p.sampler(3);
+    let batch = p.engine.batch_of("qgrad")?;
+    let tokens = sampler.sample(batch);
+
+    println!("search-iteration component costs (N = {} blocks)", p.index.n_blocks);
+
+    let stats = timer::bench(2, 12, || {
+        p.ctx().qloss(&tokens, &alloc).expect("qloss");
+    });
+    println!("{}", stats.line("qloss execution"));
+
+    let stats = timer::bench(2, 12, || {
+        p.ctx().qgrad(&tokens, &alloc).expect("qgrad");
+    });
+    println!("{}", stats.line("qgrad execution (fwd+bwd)"));
+
+    let (_, grads) = p.ctx().qgrad(&tokens, &alloc)?;
+    let stats = timer::bench(2, 30, || {
+        let _ = p.ctx().stats(&grads, &alloc);
+    });
+    println!("{}", stats.line("block s_up/s_down reduction"));
+
+    let st = p.ctx().stats(&grads, &alloc);
+    let stats = timer::bench(2, 100, || {
+        let mut order: Vec<usize> = (0..st.s_up.len()).collect();
+        order.sort_by(|&a, &b| st.s_up[b].partial_cmp(&st.s_up[a]).unwrap());
+        std::hint::black_box(order);
+    });
+    println!("{}", stats.line("candidate ranking (sort)"));
+
+    // end-to-end short search
+    let sw = scalebits::util::timer::Stopwatch::start();
+    let cfg = SearchConfig { budget: 3.0, seed: 5, ..Default::default() };
+    let res = p.search(&cfg)?;
+    println!(
+        "full search: {} iters, {} exec calls, {:.2}s wall ({:.0} ms/iter)",
+        res.iters.len(),
+        res.exec_calls,
+        sw.secs(),
+        1e3 * sw.secs() / res.iters.len().max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Bench: serving-path throughput/latency (end-to-end Table 4 claim).
+//!
+//! Measures the batching server under closed-loop load with uniform vs
+//! mixed bit grids, plus the raw single-request executable latency
+//! (qlogits_b1) as the no-batching floor.
+//!
+//! Run: cargo bench --offline --bench bench_serve
+
+use std::time::Duration;
+
+use scalebits::calib::TokenStream;
+use scalebits::model::Manifest;
+use scalebits::quant::{BitAlloc, BlockIndex};
+use scalebits::runtime::Engine;
+use scalebits::serve::{run_workload, start_server};
+use scalebits::util::rng::Rng;
+use scalebits::util::timer::{self, Stats};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let m = Manifest::load(&artifacts)?;
+    let index = BlockIndex::from_manifest(&m)?;
+    let stream = TokenStream::from_manifest(&m, "eval")?;
+    let seq = m.config.seq_len;
+
+    // raw single-request floor: qlogits_b1
+    {
+        let engine = Engine::load(Manifest::load(&artifacts)?, &["qlogits_b1"])?;
+        let store = scalebits::model::WeightStore::load(&engine.manifest)?;
+        let wbufs = engine.upload_weights(&store)?;
+        let alloc = BitAlloc::uniform(&index, 4);
+        let grids = alloc.grids(&index);
+        let tokens: Vec<i32> = stream.tokens[..seq].to_vec();
+        let stats = timer::bench(3, 20, || {
+            engine.run_model("qlogits_b1", &tokens, &grids, &wbufs).expect("run");
+        });
+        println!("{}", stats.line("qlogits batch=1 (no batching floor)"));
+    }
+
+    let mut mixed = BitAlloc::uniform(&index, 4);
+    let mut rng = Rng::new(2);
+    for b in mixed.bits.iter_mut() {
+        *b = match rng.below(10) {
+            0..=3 => 2,
+            4..=7 => 4,
+            _ => 8,
+        };
+    }
+
+    for (label, alloc) in
+        [("uniform-4bit", BitAlloc::uniform(&index, 4)), ("mixed-2/4/8", mixed)]
+    {
+        let mut server = start_server(artifacts.clone(), alloc, Duration::from_millis(3))?;
+        let t0 = std::time::Instant::now();
+        let lats = run_workload(&mut server, &stream, seq, 24, 200.0, 5)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = server.shutdown()?;
+        let s = Stats::from_samples_us(lats.iter().map(|x| x * 1e6).collect());
+        println!(
+            "{} | {:.1} req/s, occupancy {:.2}",
+            s.line(&format!("served {label}")),
+            24.0 / wall,
+            stats.mean_occupancy()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Calibration / evaluation data pipeline.
+//!
+//! Token streams are raw little-endian int32 files produced at build
+//! time (`artifacts/{calib,eval,train}.bin`); probe tasks are fixed
+//! [n, seq_len] int32 matrices (`tasks.bin`). The sampler mirrors the
+//! paper's protocol: each search iteration draws a fresh random batch
+//! of calibration sequences (Algorithm 1 line 4).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::Manifest;
+use crate::util::rng::Rng;
+
+/// An int32 token stream.
+#[derive(Clone)]
+pub struct TokenStream {
+    pub tokens: Vec<i32>,
+}
+
+impl TokenStream {
+    pub fn load(path: &Path) -> Result<TokenStream> {
+        let bytes =
+            std::fs::read(path).map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{}: not a multiple of 4 bytes", path.display());
+        }
+        let tokens = bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(TokenStream { tokens })
+    }
+
+    pub fn from_manifest(m: &Manifest, name: &str) -> Result<TokenStream> {
+        let info = m
+            .datasets
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown dataset {name:?}"))?;
+        let ts = TokenStream::load(&m.dir.join(&info.file))?;
+        if ts.tokens.len() != info.n_tokens {
+            bail!("{name}: {} tokens, manifest says {}", ts.tokens.len(), info.n_tokens);
+        }
+        Ok(ts)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Random-window batch sampler over a token stream.
+pub struct BatchSampler {
+    stream: TokenStream,
+    seq_len: usize,
+    rng: Rng,
+}
+
+impl BatchSampler {
+    pub fn new(stream: TokenStream, seq_len: usize, seed: u64) -> BatchSampler {
+        assert!(stream.len() > seq_len + 1, "stream too short");
+        BatchSampler { stream, seq_len, rng: Rng::new(seed) }
+    }
+
+    /// One batch of `batch` random windows, row-major [batch, seq_len].
+    pub fn sample(&mut self, batch: usize) -> Vec<i32> {
+        let max_start = self.stream.len() - self.seq_len - 1;
+        let mut out = Vec::with_capacity(batch * self.seq_len);
+        for _ in 0..batch {
+            let start = self.rng.below(max_start);
+            out.extend_from_slice(&self.stream.tokens[start..start + self.seq_len]);
+        }
+        out
+    }
+}
+
+/// Deterministic sequential batches covering a stream (evaluation).
+pub struct SequentialBatches<'a> {
+    stream: &'a TokenStream,
+    seq_len: usize,
+    pos: usize,
+}
+
+impl<'a> SequentialBatches<'a> {
+    pub fn new(stream: &'a TokenStream, seq_len: usize) -> SequentialBatches<'a> {
+        SequentialBatches { stream, seq_len, pos: 0 }
+    }
+
+    /// Next batch (row-major), padding by wrapping to the stream start
+    /// if the final windows run short. Returns None when exhausted.
+    pub fn next_batch(&mut self, batch: usize) -> Option<Vec<i32>> {
+        if self.pos + self.seq_len + 1 > self.stream.len() {
+            return None;
+        }
+        let mut out = Vec::with_capacity(batch * self.seq_len);
+        for _ in 0..batch {
+            if self.pos + self.seq_len + 1 > self.stream.len() {
+                // wrap: repeat the first window (keeps batch shape static)
+                out.extend_from_slice(&self.stream.tokens[0..self.seq_len]);
+            } else {
+                out.extend_from_slice(&self.stream.tokens[self.pos..self.pos + self.seq_len]);
+                self.pos += self.seq_len;
+            }
+        }
+        Some(out)
+    }
+}
+
+/// Probe tasks: fixed sequences, answer at the final position.
+pub struct ProbeTasks {
+    pub rows: Vec<Vec<i32>>,
+    pub seq_len: usize,
+}
+
+impl ProbeTasks {
+    pub fn load(m: &Manifest) -> Result<ProbeTasks> {
+        let ts = TokenStream::load(&m.dir.join("tasks.bin"))?;
+        let (n, seq) = (m.tasks_n, m.tasks_seq_len);
+        if ts.tokens.len() != n * seq {
+            bail!("tasks.bin: {} != {n}x{seq}", ts.tokens.len());
+        }
+        let rows = ts.tokens.chunks_exact(seq).map(|c| c.to_vec()).collect();
+        Ok(ProbeTasks { rows, seq_len: seq })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(n: usize) -> TokenStream {
+        TokenStream { tokens: (0..n as i32).collect() }
+    }
+
+    #[test]
+    fn sampler_windows_valid() {
+        let mut s = BatchSampler::new(stream(1000), 16, 1);
+        for _ in 0..10 {
+            let b = s.sample(4);
+            assert_eq!(b.len(), 64);
+            for w in b.chunks_exact(16) {
+                // windows are contiguous runs of the stream
+                for i in 1..16 {
+                    assert_eq!(w[i], w[i - 1] + 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampler_deterministic() {
+        let mut a = BatchSampler::new(stream(500), 8, 42);
+        let mut b = BatchSampler::new(stream(500), 8, 42);
+        assert_eq!(a.sample(4), b.sample(4));
+    }
+
+    #[test]
+    fn sequential_covers_stream() {
+        let ts = stream(100);
+        let mut it = SequentialBatches::new(&ts, 10);
+        let mut count = 0;
+        while let Some(b) = it.next_batch(2) {
+            assert_eq!(b.len(), 20);
+            count += 1;
+        }
+        assert!(count >= 4, "{count}");
+    }
+}

@@ -1,0 +1,467 @@
+//! Main-result experiments: Fig 1 (Pareto), Table 2 (method grid),
+//! Table 3 (search cost), Table 4 (kernel latency), Table 5 (MP
+//! baseline grid), Table 6 (instruct-analog task splits).
+//!
+//! Every harness prints the paper-style rows AND writes
+//! `results/<id>.json` with the raw numbers; EXPERIMENTS.md records the
+//! paper-vs-measured comparison.
+
+use anyhow::Result;
+
+use crate::baselines::{keep_topk_fp, slimllm_alloc, uniform, GptqConfig};
+use crate::coordinator::{write_result, Pipeline};
+use crate::quant::{BitAlloc, PackedMat};
+use crate::search::SearchConfig;
+use crate::util::json::Json;
+use crate::util::table::{f2, pct, ppl, Table};
+use crate::util::timer;
+
+/// Salience scores used by the SlimLLM-style baseline: one qgrad at the
+/// uniform base allocation, reduced to |s_up| per block.
+fn salience_scores(p: &Pipeline, base_bits: i32, seed: u64) -> Result<Vec<f64>> {
+    let alloc = BitAlloc::uniform(&p.index, base_bits);
+    let mut sampler = p.sampler(seed);
+    let batch = p.engine.batch_of("qgrad")?;
+    let tokens = sampler.sample(batch);
+    let (_, grads) = p.ctx().qgrad(&tokens, &alloc)?;
+    let stats = p.ctx().stats(&grads, &alloc);
+    Ok(stats.s_up.iter().map(|x| x.abs()).collect())
+}
+
+// ---------------------------------------------------------------------
+// Fig 1: accuracy–compression Pareto frontier
+
+pub fn fig1(p: &mut Pipeline, budgets: &[f64], seed: u64) -> Result<()> {
+    println!("[fig1] bitwidth–perplexity Pareto frontier");
+    let mut t = Table::new(
+        "Fig 1 analog: perplexity vs average code bits",
+        &["method", "bits", "eff_bits", "ppl", "task_acc"],
+    );
+    let mut series_sb: Vec<(f64, f64)> = Vec::new();
+    let mut series_rtn: Vec<(f64, f64)> = Vec::new();
+
+    // uniform RTN: only the discrete operating points exist
+    for bits in [2, 3, 4] {
+        let alloc = uniform(&p.index, bits);
+        let r = p.eval_alloc(&alloc)?;
+        series_rtn.push((r.avg_bits, r.perplexity));
+        t.row(vec![
+            "RTN-uniform".into(),
+            f2(r.avg_bits),
+            f2(r.effective_bits),
+            ppl(r.perplexity),
+            pct(r.task_accuracy),
+        ]);
+    }
+
+    // ScaleBITS: any budget is reachable
+    p.reorder(3, seed)?;
+    for &b in budgets {
+        let cfg = SearchConfig { budget: b, seed, ..Default::default() };
+        let res = p.search(&cfg)?;
+        let r = p.eval_alloc(&res.alloc)?;
+        series_sb.push((r.avg_bits, r.perplexity));
+        t.row(vec![
+            "ScaleBITS".into(),
+            f2(r.avg_bits),
+            f2(r.effective_bits),
+            ppl(r.perplexity),
+            pct(r.task_accuracy),
+        ]);
+        println!(
+            "  budget {b:.2}: {} iters, loss {:.4}, ppl {:.3}",
+            res.iters.len(),
+            res.final_loss,
+            r.perplexity
+        );
+    }
+    t.print();
+
+    let json = Json::from_pairs(vec![
+        ("scalebits_bits", Json::arr_f64(&series_sb.iter().map(|x| x.0).collect::<Vec<_>>())),
+        ("scalebits_ppl", Json::arr_f64(&series_sb.iter().map(|x| x.1).collect::<Vec<_>>())),
+        ("rtn_bits", Json::arr_f64(&series_rtn.iter().map(|x| x.0).collect::<Vec<_>>())),
+        ("rtn_ppl", Json::arr_f64(&series_rtn.iter().map(|x| x.1).collect::<Vec<_>>())),
+    ]);
+    write_result("fig1", json)
+}
+
+// ---------------------------------------------------------------------
+// Table 2: main comparison grid
+
+pub fn tab2(p: &mut Pipeline, seed: u64) -> Result<()> {
+    println!("[tab2] main results: methods x budgets");
+    let budgets: [(i32, f64); 2] = [(3, 3.0), (2, 2.0)];
+    let mut t = Table::new(
+        "Table 2 analog (Wiki2 -> synthetic ppl, 0-shot -> probe acc)",
+        &["method", "MP", "bits", "ppl", "task_acc"],
+    );
+    let mut out = Json::obj();
+
+    // FP16 reference
+    let fp = p.eval_alloc(&p.fp_alloc())?;
+    t.row(vec!["fp16".into(), "x".into(), "16".into(), ppl(fp.perplexity), pct(fp.task_accuracy)]);
+    out.set("fp16", Json::from_pairs(vec![
+        ("ppl", Json::Num(fp.perplexity)),
+        ("acc", Json::Num(fp.task_accuracy)),
+    ]));
+
+    // Baselines on the ORIGINAL (unreordered) weights.
+    for &(b, _) in &budgets {
+        // RTN uniform
+        let r = p.eval_alloc(&uniform(&p.index, b))?;
+        t.row(vec![format!("RTN-g32"), "x".into(), f2(r.avg_bits), ppl(r.perplexity), pct(r.task_accuracy)]);
+        out.set(&format!("rtn_{b}"), report_json(&r));
+
+        // GPTQ uniform
+        let gptq_cfg = GptqConfig { bits: b, group: 32, act_order: true, damp: 0.01 };
+        let qstore = p.gptq_quantize(&gptq_cfg, 2, seed)?;
+        let r = p.eval_weights(&qstore, b as f64)?;
+        t.row(vec![format!("GPTQ-g32"), "x".into(), f2(r.avg_bits), ppl(r.perplexity), pct(r.task_accuracy)]);
+        out.set(&format!("gptq_{b}"), report_json(&r));
+
+        // SlimLLM-style restricted MP
+        let sal = salience_scores(p, b, seed)?;
+        let alloc = slimllm_alloc(&p.index, &sal, b, 0.25, 1, 8);
+        let r = p.eval_alloc(&alloc)?;
+        t.row(vec!["SlimLLM-like".into(), "v".into(), f2(r.avg_bits), ppl(r.perplexity), pct(r.task_accuracy)]);
+        out.set(&format!("slimllm_{b}"), report_json(&r));
+    }
+
+    // ScaleBITS: reorder once, search per budget.
+    p.reorder(3, seed)?;
+    for &(_, budget) in &budgets {
+        let cfg = SearchConfig { budget, seed, ..Default::default() };
+        let res = p.search(&cfg)?;
+        let r = p.eval_alloc(&res.alloc)?;
+        t.row(vec![
+            "ScaleBITS+RTN".into(),
+            "v".into(),
+            f2(r.avg_bits),
+            ppl(r.perplexity),
+            pct(r.task_accuracy),
+        ]);
+        out.set(&format!("scalebits_{budget}"), report_json(&r));
+    }
+    t.print();
+    write_result("tab2", out)
+}
+
+fn report_json(r: &crate::eval::EvalReport) -> Json {
+    Json::from_pairs(vec![
+        ("ppl", Json::Num(r.perplexity)),
+        ("acc", Json::Num(r.task_accuracy)),
+        ("bits", Json::Num(r.avg_bits)),
+        ("eff_bits", Json::Num(r.effective_bits)),
+    ])
+}
+
+// ---------------------------------------------------------------------
+// Table 3: precision-search cost
+
+pub fn tab3(p: &mut Pipeline, seed: u64) -> Result<()> {
+    println!("[tab3] search cost: scalable vs classic greedy");
+    let n = p.index.n_blocks as f64;
+
+    // ScaleBITS scalable greedy at block granularity (3.1 = the
+    // paper's Table-3 regime: expansion headroom + exchange phase).
+    let cfg = SearchConfig { budget: 3.1, seed, ..Default::default() };
+    let res = p.search(&cfg)?;
+
+    // Classic greedy at matrix granularity (tractable stand-in).
+    let mut sampler = p.sampler(seed + 1);
+    let batch = p.engine.batch_of("qloss")?;
+    let classic = crate::search::classic_greedy(&p.ctx(), &mut sampler, batch, 3.0, 1, 8, false)?;
+
+    // Extrapolations: classic greedy at BLOCK granularity needs
+    // ~N·(B−b_min) increments, each costing N marginal evaluations.
+    let classic_block_evals = n * (3.0 - 1.0) * n;
+    let per_eval = classic.wall_secs / classic.exec_calls.max(1) as f64;
+    let classic_block_secs = classic_block_evals * per_eval;
+
+    let mut t = Table::new(
+        "Table 3 analog: quantization/search cost (this testbed)",
+        &["method", "wall(s)", "iterations", "exec_calls"],
+    );
+    t.row(vec![
+        "ScaleBITS (Alg.1, blocks)".into(),
+        f2(res.wall_secs),
+        format!("{}", res.iters.len()),
+        format!("{}", res.exec_calls),
+    ]);
+    t.row(vec![
+        "ClassicGreedy (Alg.2, matrices)".into(),
+        f2(classic.wall_secs),
+        format!("{}", classic.iters.len()),
+        format!("{}", classic.exec_calls),
+    ]);
+    t.row(vec![
+        "ClassicGreedy (Alg.2, blocks, extrapolated)".into(),
+        format!("{classic_block_secs:.0}"),
+        format!("{:.1e}", n * 2.0),
+        format!("{classic_block_evals:.1e}"),
+    ]);
+    t.print();
+    println!(
+        "  speedup vs block-level classic greedy: {:.0}x (paper: ~10^4x at 8B scale)",
+        classic_block_secs / res.wall_secs.max(1e-9)
+    );
+
+    write_result(
+        "tab3",
+        Json::from_pairs(vec![
+            ("scalebits_secs", Json::Num(res.wall_secs)),
+            ("scalebits_iters", Json::Num(res.iters.len() as f64)),
+            ("scalebits_exec_calls", Json::Num(res.exec_calls as f64)),
+            ("classic_mat_secs", Json::Num(classic.wall_secs)),
+            ("classic_mat_exec_calls", Json::Num(classic.exec_calls as f64)),
+            ("classic_block_secs_extrapolated", Json::Num(classic_block_secs)),
+            ("classic_block_evals_extrapolated", Json::Num(classic_block_evals)),
+        ]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Table 4: fused-kernel latency under precision mixtures
+
+pub fn tab4(p: &mut Pipeline, iters: usize) -> Result<()> {
+    println!("[tab4] fused mpq_matmul latency: uniform vs mixed precision");
+    let kb = p.engine.manifest.kernel_bench()?;
+    let dir = p.engine.manifest.dir.clone();
+    let mpq = p.engine.compile_hlo_file(&dir.join(&kb.files["mpq"]))?;
+    let dense = p.engine.compile_hlo_file(&dir.join(&kb.files["dense"]))?;
+    let elemmp = p.engine.compile_hlo_file(&dir.join(&kb.files["elemmp"]))?;
+
+    let (m, n, k) = (kb.m, kb.n, kb.k);
+    let (br, bc) = (kb.block_rows, kb.block_cols);
+    let mut rng = crate::util::rng::Rng::new(7);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+    let w = crate::tensor::Mat::from_vec(
+        n,
+        k,
+        (0..n * k).map(|_| rng.normal_f32()).collect(),
+    )?;
+
+    // Build codes/scales for a given per-block bit grid.
+    let build = |bits_grid: &[i32]| -> (Vec<i8>, Vec<f32>) {
+        let packed = PackedMat::quantize(&w, bits_grid, br, bc);
+        let deq = packed.dequantize();
+        // codes = deq / scale per group (re-derive integer codes)
+        let nbc = k / bc;
+        let mut codes = vec![0i8; n * k];
+        for r in 0..n {
+            for g in 0..nbc {
+                let s = packed.scales[r * nbc + g];
+                for c in 0..bc {
+                    let idx = r * k + g * bc + c;
+                    codes[idx] = if s > 0.0 {
+                        (deq.data[idx] / s).round_ties_even() as i8
+                    } else {
+                        0
+                    };
+                }
+            }
+        }
+        (codes, packed.scales.clone())
+    };
+
+    let nbr = n / br;
+    let nbc = k / bc;
+    let uniform4 = vec![4i32; nbr * nbc];
+    // paper's mixture: [40% INT2, 40% INT4, 20% INT8] -> avg 4 bits
+    let mut mixed = Vec::with_capacity(nbr * nbc);
+    for i in 0..nbr * nbc {
+        let r = i % 10;
+        mixed.push(if r < 4 { 2 } else if r < 8 { 4 } else { 8 });
+    }
+
+    let mut t = Table::new(
+        "Table 4 analog: GEMM latency (us) on PJRT-CPU",
+        &["kernel", "mix [2,4,8]", "mean_us", "p50_us", "p95_us"],
+    );
+    let mut out = Json::obj();
+
+    for (label, grid) in [("mpq uniform-4bit", &uniform4), ("mpq mixed 40/40/20", &mixed)] {
+        let (codes, scales) = build(grid);
+        let args = vec![
+            p.engine.upload_f32(&x, &[m, k])?,
+            p.engine.upload_i8(&codes, &[n, k])?,
+            p.engine.upload_f32(&scales, &[n, k / bc])?,
+            p.engine.upload_i32(grid, &[nbr, nbc])?,
+        ];
+        let stats = timer::bench(3, iters, || {
+            p.engine.run_raw(&mpq, &args).expect("mpq run");
+        });
+        println!("  {}", stats.line(label));
+        t.row(vec![
+            label.into(),
+            if label.contains("uniform") { "[0,100,0]".into() } else { "[40,40,20]".into() },
+            f2(stats.mean_us),
+            f2(stats.p50_us),
+            f2(stats.p95_us),
+        ]);
+        out.set(
+            if label.contains("uniform") { "uniform4_us" } else { "mixed_us" },
+            Json::Num(stats.mean_us),
+        );
+    }
+
+    // dense f32 baseline (the BF16/CUTLASS analog)
+    {
+        let args = vec![
+            p.engine.upload_f32(&x, &[m, k])?,
+            p.engine.upload_f32(&w.data, &[n, k])?,
+        ];
+        let stats = timer::bench(3, iters, || {
+            p.engine.run_raw(&dense, &args).expect("dense run");
+        });
+        println!("  {}", stats.line("dense f32 (BF16 analog)"));
+        t.row(vec!["dense f32".into(), "-".into(), f2(stats.mean_us), f2(stats.p50_us), f2(stats.p95_us)]);
+        out.set("dense_us", Json::Num(stats.mean_us));
+    }
+
+    // unstructured element-MP baseline (scatter overhead)
+    {
+        let n_out = kb.elemmp_n_outliers;
+        let mut idx = Vec::with_capacity(n_out * 2);
+        let mut vals = Vec::with_capacity(n_out);
+        for _ in 0..n_out {
+            let r = rng.below(n) as i32;
+            let c = rng.below(k) as i32;
+            idx.push(r);
+            idx.push(c);
+            vals.push(rng.normal_f32());
+        }
+        let (_, _) = build(&uniform4);
+        let wq4 = PackedMat::quantize(&w, &uniform4, br, bc).dequantize();
+        let args = vec![
+            p.engine.upload_f32(&x, &[m, k])?,
+            p.engine.upload_f32(&wq4.data, &[n, k])?,
+            p.engine.upload_i32(&idx, &[n_out, 2])?,
+            p.engine.upload_f32(&vals, &[n_out])?,
+        ];
+        let stats = timer::bench(3, iters, || {
+            p.engine.run_raw(&elemmp, &args).expect("elemmp run");
+        });
+        println!("  {}", stats.line("element-MP scatter (SpQR-like)"));
+        t.row(vec![
+            "element-MP scatter".into(),
+            "1% FP outliers".into(),
+            f2(stats.mean_us),
+            f2(stats.p50_us),
+            f2(stats.p95_us),
+        ]);
+        out.set("elemmp_us", Json::Num(stats.mean_us));
+    }
+
+    t.print();
+    write_result("tab4", out)
+}
+
+// ---------------------------------------------------------------------
+// Table 5: mixed-precision baseline grid at 2.x bits
+
+pub fn tab5(p: &mut Pipeline, seed: u64) -> Result<()> {
+    println!("[tab5] mixed-precision comparisons in the 2-2.5 bit regime");
+    let mut t = Table::new(
+        "Table 5 analog: MP methods at ultra-low budget",
+        &["method", "granularity", "bits", "ppl", "task_acc"],
+    );
+    let mut out = Json::obj();
+
+    let sal = salience_scores(p, 2, seed)?;
+
+    // PB-LLM-like: keep 18% blocks at 8 bits, binarize the rest
+    // (avg = 0.18*8 + 0.82*1 ~ 2.26)
+    let pb = keep_topk_fp(&p.index, &sal, 0.18, 8, 1);
+    let r = p.eval_alloc(&pb)?;
+    t.row(vec!["PB-LLM-like".into(), "block(1/8bit)".into(), f2(r.avg_bits), ppl(r.perplexity), pct(r.task_accuracy)]);
+    out.set("pbllm", report_json(&r));
+
+    // SqueezeLLM-like: keep 4% at 8 bits, rest at 2 (avg ~ 2.24)
+    let sq = keep_topk_fp(&p.index, &sal, 0.04, 8, 2);
+    let r = p.eval_alloc(&sq)?;
+    t.row(vec!["SqueezeLLM-like".into(), "block(2/8bit)".into(), f2(r.avg_bits), ppl(r.perplexity), pct(r.task_accuracy)]);
+    out.set("squeezellm", report_json(&r));
+
+    // SlimLLM-style
+    let slim = slimllm_alloc(&p.index, &sal, 2, 0.25, 1, 8);
+    let r = p.eval_alloc(&slim)?;
+    t.row(vec!["SlimLLM-like".into(), "in-layer {1,2,3}".into(), f2(r.avg_bits), ppl(r.perplexity), pct(r.task_accuracy)]);
+    out.set("slimllm", report_json(&r));
+
+    // ScaleBITS at matched budgets
+    p.reorder(3, seed)?;
+    for budget in [2.1, 2.3] {
+        let cfg = SearchConfig { budget, seed, ..Default::default() };
+        let res = p.search(&cfg)?;
+        let r = p.eval_alloc(&res.alloc)?;
+        t.row(vec![
+            format!("ScaleBITS@{budget}"),
+            "block global".into(),
+            f2(r.avg_bits),
+            ppl(r.perplexity),
+            pct(r.task_accuracy),
+        ]);
+        out.set(&format!("scalebits_{budget}"), report_json(&r));
+    }
+    t.print();
+    write_result("tab5", out)
+}
+
+// ---------------------------------------------------------------------
+// Table 6: instruct-analog split tasks (GSM8K/MBPP analog)
+
+pub fn tab6(p: &mut Pipeline, seed: u64) -> Result<()> {
+    println!("[tab6] task-split generalization (GSM8K/MBPP analog probes)");
+    // Probe tasks alternate: even rows = induction, odd rows = modular
+    // arithmetic — the "reasoning-intensive" split.
+    let split_acc = |p: &Pipeline, alloc: &BitAlloc, parity: usize| -> Result<f64> {
+        let rows: Vec<Vec<i32>> = p
+            .tasks
+            .rows
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % 2 == parity)
+            .map(|(_, r)| r.clone())
+            .take(64)
+            .collect();
+        let tasks = crate::calib::ProbeTasks { rows, seq_len: p.tasks.seq_len };
+        crate::eval::task_accuracy(&p.engine, &p.wbufs, &p.index, alloc, &tasks, 64)
+    };
+
+    let mut t = Table::new(
+        "Table 6 analog: per-task-family accuracy",
+        &["method", "bits", "ppl", "induction_acc", "arith_acc"],
+    );
+    let mut out = Json::obj();
+
+    let mut record = |p: &Pipeline, label: &str, alloc: &BitAlloc, out: &mut Json| -> Result<()> {
+        let r = p.eval_alloc(alloc)?;
+        let ind = split_acc(p, alloc, 0)?;
+        let ari = split_acc(p, alloc, 1)?;
+        t.row(vec![label.into(), f2(r.avg_bits), ppl(r.perplexity), pct(ind), pct(ari)]);
+        out.set(
+            label,
+            Json::from_pairs(vec![
+                ("ppl", Json::Num(r.perplexity)),
+                ("induction", Json::Num(ind)),
+                ("arith", Json::Num(ari)),
+            ]),
+        );
+        Ok(())
+    };
+
+    record(p, "fp16", &p.fp_alloc(), &mut out)?;
+    record(p, "rtn_3", &uniform(&p.index, 3), &mut out)?;
+    record(p, "rtn_2", &uniform(&p.index, 2), &mut out)?;
+
+    p.reorder(3, seed)?;
+    for budget in [3.0, 2.0] {
+        let cfg = SearchConfig { budget, seed, ..Default::default() };
+        let res = p.search(&cfg)?;
+        record(p, &format!("scalebits_{budget}"), &res.alloc, &mut out)?;
+    }
+    t.print();
+    write_result("tab6", out)
+}

@@ -1,0 +1,265 @@
+//! Pipeline orchestration: load artifacts → sensitivity → reorder →
+//! search → evaluate → report. The experiment harness (one entry per
+//! paper table/figure) lives in the `experiments*` submodules.
+
+pub mod experiments_ablation;
+pub mod experiments_analysis;
+pub mod experiments_main;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::baselines::GptqConfig;
+use crate::calib::{BatchSampler, ProbeTasks, TokenStream};
+use crate::eval::{evaluate, EvalReport};
+use crate::linalg::SqMat;
+use crate::model::{Manifest, WeightStore};
+use crate::quant::{BitAlloc, BlockIndex, FP_SENTINEL_BITS};
+use crate::reorder::{apply_reordering, compute_reordering, Reordering};
+use crate::runtime::{literal_scalar_f32, literal_to_mat, Engine, WeightBuffers};
+use crate::search::{scalable_greedy, SearchConfig, SearchContext, SearchResult};
+use crate::sensitivity::element_sensitivity;
+use crate::tensor::Mat;
+
+/// Default evaluation sizes (kept moderate: the whole experiment grid
+/// must run on a single-core CPU testbed).
+pub const EVAL_BATCHES: usize = 12;
+pub const EVAL_TASKS: usize = 128;
+
+pub struct Pipeline {
+    pub engine: Engine,
+    /// Current (possibly reordered) full-precision weights.
+    pub store: WeightStore,
+    pub wbufs: WeightBuffers,
+    pub index: BlockIndex,
+    pub calib: TokenStream,
+    pub eval_stream: TokenStream,
+    pub tasks: ProbeTasks,
+    pub reordering: Option<Reordering>,
+}
+
+impl Pipeline {
+    /// Load artifacts and compile the requested executables.
+    pub fn load(artifacts: &Path, execs: &[&str]) -> Result<Pipeline> {
+        let manifest = Manifest::load(artifacts)?;
+        let engine = Engine::load(manifest, execs)?;
+        let store = WeightStore::load(&engine.manifest)?;
+        let wbufs = engine.upload_weights(&store)?;
+        let index = BlockIndex::from_manifest(&engine.manifest)?;
+        let calib = TokenStream::from_manifest(&engine.manifest, "calib")?;
+        let eval_stream = TokenStream::from_manifest(&engine.manifest, "eval")?;
+        let tasks = ProbeTasks::load(&engine.manifest)?;
+        Ok(Pipeline {
+            engine,
+            store,
+            wbufs,
+            index,
+            calib,
+            eval_stream,
+            tasks,
+            reordering: None,
+        })
+    }
+
+    /// Standard executable set for the full pipeline.
+    pub fn load_full(artifacts: &Path) -> Result<Pipeline> {
+        Pipeline::load(artifacts, &["qloss", "qgrad", "qlogits", "qpredict"])
+    }
+
+    pub fn ctx(&self) -> SearchContext<'_> {
+        SearchContext {
+            engine: &self.engine,
+            index: &self.index,
+            store: &self.store,
+            wbufs: &self.wbufs,
+        }
+    }
+
+    pub fn sampler(&self, seed: u64) -> BatchSampler {
+        BatchSampler::new(self.calib.clone(), self.engine.manifest.config.seq_len, seed)
+    }
+
+    pub fn fp_alloc(&self) -> BitAlloc {
+        BitAlloc::uniform(&self.index, 16)
+    }
+
+    // ---- sensitivity + reordering -----------------------------------
+
+    /// Element sensitivity maps |g·Δw| per quantized matrix, with
+    /// gradients taken at the `probe_bits`-quantized point (Eq. 3).
+    pub fn sensitivity_maps(
+        &self,
+        probe_bits: i32,
+        seed: u64,
+    ) -> Result<HashMap<String, Mat>> {
+        let alloc = BitAlloc::uniform(&self.index, probe_bits);
+        let mut sampler = self.sampler(seed);
+        let batch = self.engine.batch_of("qgrad")?;
+        let tokens = sampler.sample(batch);
+        let (_, grads) = self.ctx().qgrad(&tokens, &alloc)?;
+        let mut out = HashMap::new();
+        for (mi, name) in self.index.mats.iter().enumerate() {
+            let w = self.store.get(name)?;
+            let grid = &alloc.bits[self.index.mat_range(mi)];
+            let wq = crate::quant::fakequant_mat(
+                w,
+                grid,
+                self.index.block_rows,
+                self.index.block_cols,
+            );
+            out.insert(name.clone(), element_sensitivity(w, &grads[mi], &wq));
+        }
+        Ok(out)
+    }
+
+    /// Bi-directional channel reordering pass: compute, apply, re-upload
+    /// device weights, and validate functional equivalence (FP logloss
+    /// before == after within float tolerance).
+    pub fn reorder(&mut self, probe_bits: i32, seed: u64) -> Result<&Reordering> {
+        let fp = self.fp_alloc();
+        let mut sampler = self.sampler(seed ^ 0xabcd);
+        let batch = self.engine.batch_of("qloss")?;
+        let check_tokens = sampler.sample(batch);
+        let loss_before = self.ctx().qloss(&check_tokens, &fp)?;
+
+        let sens = self.sensitivity_maps(probe_bits, seed)?;
+        let r = compute_reordering(&self.engine.manifest, &sens)?;
+        let new_store = apply_reordering(&self.engine.manifest, &self.store, &r)?;
+        let new_bufs = self.engine.upload_weights(&new_store)?;
+        // equivalence check against the reordered weights
+        let tmp_ctx = SearchContext {
+            engine: &self.engine,
+            index: &self.index,
+            store: &new_store,
+            wbufs: &new_bufs,
+        };
+        let loss_after = {
+            let grids = fp.grids(&self.index);
+            let out = tmp_ctx.engine.run_model("qloss", &check_tokens, &grids, &new_bufs)?;
+            literal_scalar_f32(&out[0])? as f64
+        };
+        if (loss_before - loss_after).abs() > 1e-3 * loss_before.abs().max(1.0) {
+            bail!(
+                "reordering broke functional equivalence: {loss_before} vs {loss_after}"
+            );
+        }
+        self.store = new_store;
+        self.wbufs = new_bufs;
+        self.reordering = Some(r);
+        Ok(self.reordering.as_ref().unwrap())
+    }
+
+    // ---- search + eval ---------------------------------------------
+
+    pub fn search(&self, cfg: &SearchConfig) -> Result<SearchResult> {
+        let mut sampler = self.sampler(cfg.seed);
+        let batch = self.engine.batch_of("qgrad")?;
+        scalable_greedy(&self.ctx(), &mut sampler, batch, cfg)
+    }
+
+    pub fn eval_alloc(&self, alloc: &BitAlloc) -> Result<EvalReport> {
+        evaluate(
+            &self.engine,
+            &self.wbufs,
+            &self.index,
+            alloc,
+            &self.eval_stream,
+            &self.tasks,
+            EVAL_BATCHES,
+            EVAL_TASKS,
+        )
+    }
+
+    /// Evaluate externally quantized weights (e.g. GPTQ output): upload
+    /// the modified store and run with the FP sentinel so the on-device
+    /// fake-quant passes them through unchanged.
+    pub fn eval_weights(&self, store: &WeightStore, reported_bits: f64) -> Result<EvalReport> {
+        let bufs = self.engine.upload_weights(store)?;
+        let alloc = BitAlloc::uniform(&self.index, FP_SENTINEL_BITS + 7);
+        let mut report = evaluate(
+            &self.engine,
+            &bufs,
+            &self.index,
+            &alloc,
+            &self.eval_stream,
+            &self.tasks,
+            EVAL_BATCHES,
+            EVAL_TASKS,
+        )?;
+        report.avg_bits = reported_bits;
+        report.effective_bits =
+            reported_bits + crate::quant::SCALE_BITS / self.index.block_cols as f64;
+        Ok(report)
+    }
+
+    // ---- GPTQ support ------------------------------------------------
+
+    /// Input Grams XᵀX for every quantized matrix, accumulated over
+    /// `n_batches` calibration batches at the given allocation state.
+    pub fn grams(&self, alloc: &BitAlloc, n_batches: usize, seed: u64) -> Result<HashMap<String, SqMat>> {
+        if !self.engine.has_exec("grams") {
+            bail!("grams executable not loaded");
+        }
+        let mut sampler = self.sampler(seed);
+        let batch = self.engine.batch_of("grams")?;
+        let grids = alloc.grids(&self.index);
+        let sites = &self.engine.manifest.gram_sites;
+        let mut acc: Vec<Option<SqMat>> = vec![None; sites.len()];
+        for _ in 0..n_batches {
+            let tokens = sampler.sample(batch);
+            let out = self.engine.run_model("grams", &tokens, &grids, &self.wbufs)?;
+            // out[0] is the loss (kept to stop XLA pruning params).
+            for (si, site) in sites.iter().enumerate() {
+                let m = literal_to_mat(&out[1 + si], site.dim, site.dim)?;
+                match &mut acc[si] {
+                    None => acc[si] = Some(SqMat::from_f32(site.dim, &m.data)),
+                    Some(a) => {
+                        for (dst, src) in a.data.iter_mut().zip(&m.data) {
+                            *dst += *src as f64;
+                        }
+                    }
+                }
+            }
+        }
+        let mut by_mat = HashMap::new();
+        for (si, site) in sites.iter().enumerate() {
+            let g = acc[si].take().ok_or_else(|| anyhow!("missing gram"))?;
+            for consumer in &site.consumers {
+                by_mat.insert(consumer.clone(), g.clone());
+            }
+        }
+        Ok(by_mat)
+    }
+
+    /// Full GPTQ baseline: quantize every matrix with error
+    /// compensation (sequential within the store), return the modified
+    /// weight store.
+    pub fn gptq_quantize(&self, cfg: &GptqConfig, n_gram_batches: usize, seed: u64) -> Result<WeightStore> {
+        let fp = self.fp_alloc();
+        let grams = self.grams(&fp, n_gram_batches, seed)?;
+        let mut out = self.store.clone();
+        // Capture only Send+Sync data in the parallel closure (the
+        // Engine's PJRT handles must stay on this thread).
+        let store_ref = &self.store;
+        let grams_ref = &grams;
+        let results = crate::util::threadpool::par_map(&self.index.mats, move |_, name| {
+            let w = store_ref.get(name).expect("weight");
+            let gram = grams_ref.get(name).expect("gram");
+            crate::baselines::gptq_quantize_matrix(w, gram, cfg)
+        });
+        for (name, res) in self.index.mats.iter().zip(results) {
+            *out.get_mut(name)? = res?;
+        }
+        Ok(out)
+    }
+}
+
+/// Write an experiment result JSON under results/.
+pub fn write_result(name: &str, json: crate::util::json::Json) -> Result<()> {
+    let path = std::path::Path::new("results").join(format!("{name}.json"));
+    json.write_file(&path)?;
+    println!("  -> wrote {}", path.display());
+    Ok(())
+}

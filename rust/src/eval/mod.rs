@@ -1,0 +1,131 @@
+//! Evaluation harness: perplexity + probe-task accuracy.
+//!
+//! Perplexity is exp(mean next-token CE) over the held-out stream —
+//! the WikiText-2 analog. Probe-task accuracy (top-1 at the answer
+//! position of the synthetic cloze tasks) is the zero-shot-suite
+//! analog: it degrades with quantization and recovers with better
+//! allocation, which is the signal Table 2's accuracy columns carry.
+
+use anyhow::Result;
+
+use crate::calib::{ProbeTasks, SequentialBatches, TokenStream};
+use crate::quant::{BitAlloc, BlockIndex};
+use crate::runtime::{literal_scalar_f32, literal_to_vec_f32, Engine, WeightBuffers};
+
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub perplexity: f64,
+    pub task_accuracy: f64,
+    pub avg_bits: f64,
+    pub effective_bits: f64,
+}
+
+/// Perplexity of the quantized model on a token stream.
+pub fn perplexity(
+    engine: &Engine,
+    wbufs: &WeightBuffers,
+    index: &BlockIndex,
+    alloc: &BitAlloc,
+    stream: &TokenStream,
+    max_batches: usize,
+) -> Result<f64> {
+    let batch = engine.batch_of("qloss")?;
+    let seq = engine.manifest.config.seq_len;
+    let grids = alloc.grids(index);
+    let mut it = SequentialBatches::new(stream, seq);
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    while let Some(tokens) = it.next_batch(batch) {
+        let out = engine.run_model("qloss", &tokens, &grids, wbufs)?;
+        total += literal_scalar_f32(&out[0])? as f64;
+        n += 1;
+        if n >= max_batches {
+            break;
+        }
+    }
+    Ok((total / n.max(1) as f64).exp())
+}
+
+/// Probe-task accuracy: top-1 prediction at position L−2 must equal the
+/// answer token at position L−1.
+pub fn task_accuracy(
+    engine: &Engine,
+    wbufs: &WeightBuffers,
+    index: &BlockIndex,
+    alloc: &BitAlloc,
+    tasks: &ProbeTasks,
+    max_tasks: usize,
+) -> Result<f64> {
+    // Fast path: `qpredict` ships [B, T] int32 predictions instead of
+    // the full [B, T, V] f32 logits (512x less device->host traffic —
+    // EXPERIMENTS.md §Perf). Falls back to qlogits for engines that
+    // only compiled the logits graph.
+    let use_pred = engine.has_exec("qpredict");
+    let exec_name = if use_pred { "qpredict" } else { "qlogits" };
+    let batch = engine.batch_of(exec_name)?;
+    let seq = engine.manifest.config.seq_len;
+    let vocab = engine.manifest.config.vocab;
+    assert_eq!(tasks.seq_len, seq, "task seq_len mismatch");
+    let grids = alloc.grids(index);
+
+    let n_tasks = tasks.rows.len().min(max_tasks);
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    while done < n_tasks {
+        let take = batch.min(n_tasks - done);
+        let mut tokens = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            let row = &tasks.rows[(done + b.min(take - 1)).min(n_tasks - 1)];
+            tokens.extend_from_slice(row);
+        }
+        let out = engine.run_model(exec_name, &tokens, &grids, wbufs)?;
+        if use_pred {
+            let preds = out[0]
+                .to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("pred fetch: {e:?}"))?;
+            for b in 0..take {
+                let answer = tokens[b * seq + seq - 1];
+                if preds[b * seq + seq - 2] == answer {
+                    correct += 1;
+                }
+            }
+        } else {
+            let logits = literal_to_vec_f32(&out[0])?; // [batch, seq, vocab]
+            for b in 0..take {
+                let answer = tokens[b * seq + seq - 1];
+                let base = (b * seq + (seq - 2)) * vocab;
+                let row = &logits[base..base + vocab];
+                let mut best = 0usize;
+                for (v, &x) in row.iter().enumerate() {
+                    if x > row[best] {
+                        best = v;
+                    }
+                }
+                if best as i32 == answer {
+                    correct += 1;
+                }
+            }
+        }
+        done += take;
+    }
+    Ok(correct as f64 / n_tasks.max(1) as f64)
+}
+
+/// Full evaluation of one allocation.
+pub fn evaluate(
+    engine: &Engine,
+    wbufs: &WeightBuffers,
+    index: &BlockIndex,
+    alloc: &BitAlloc,
+    stream: &TokenStream,
+    tasks: &ProbeTasks,
+    max_batches: usize,
+    max_tasks: usize,
+) -> Result<EvalReport> {
+    Ok(EvalReport {
+        perplexity: perplexity(engine, wbufs, index, alloc, stream, max_batches)?,
+        task_accuracy: task_accuracy(engine, wbufs, index, alloc, tasks, max_tasks)?,
+        avg_bits: alloc.avg_bits(),
+        effective_bits: alloc.effective_bits(index.block_cols),
+    })
+}

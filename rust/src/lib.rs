@@ -1,0 +1,42 @@
+//! # ScaleBITS — Scalable Bitwidth Search for Hardware-Aligned
+//! # Mixed-Precision LLMs (reproduction)
+//!
+//! Layer-3 coordinator of the three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels: block-wise RTN
+//!   fake-quantization and the fused mixed-precision dequant+matmul.
+//! * **L2** (`python/compile/model.py`) — the JAX transformer whose
+//!   quantized loss/gradient/logit graphs are AOT-lowered to HLO text.
+//! * **L3** (this crate) — everything at runtime: the PJRT runtime,
+//!   the RTN quantizer and bit-packing, progressive sensitivity
+//!   estimation, bi-directional channel reordering, the scalable greedy
+//!   bitwidth search (the paper's Algorithm 1), baselines (classic
+//!   greedy, GPTQ, SlimLLM-style, heuristics), evaluation, a batching
+//!   inference server, and the experiment harness reproducing every
+//!   table and figure of the paper.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! graphs once; the `scalebits` binary is self-contained afterwards.
+//!
+//! Offline-environment note: the crates.io mirror only carries the
+//! `xla` closure, so common substrates (JSON, RNG, CLI parsing,
+//! property testing, bench timing) are implemented in-tree under
+//! [`util`] and [`testkit`].
+
+pub mod baselines;
+pub mod calib;
+pub mod coordinator;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod reorder;
+pub mod runtime;
+pub mod search;
+pub mod sensitivity;
+pub mod serve;
+pub mod tensor;
+pub mod testkit;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,279 @@
+//! Dense linear algebra substrate for the GPTQ baseline.
+//!
+//! GPTQ needs, per linear layer: H = 2·XᵀX + λI (from the `grams`
+//! executable), the Cholesky factor of H⁻¹, and triangular solves.
+//! Implemented in f64 for numerical headroom at the tiny sizes involved
+//! (d ≤ 256 here; the algorithms are standard unblocked kernels).
+
+use anyhow::{bail, Result};
+
+/// Row-major square matrix in f64.
+#[derive(Clone, Debug)]
+pub struct SqMat {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl SqMat {
+    pub fn zeros(n: usize) -> SqMat {
+        SqMat { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn eye(n: usize) -> SqMat {
+        let mut m = SqMat::zeros(n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_f32(n: usize, data: &[f32]) -> SqMat {
+        assert_eq!(data.len(), n * n);
+        SqMat { n, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.n + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.n + c] = v;
+    }
+
+    pub fn add_diag(&mut self, v: f64) {
+        for i in 0..self.n {
+            self.data[i * self.n + i] += v;
+        }
+    }
+
+    pub fn scale(&mut self, v: f64) {
+        for x in &mut self.data {
+            *x *= v;
+        }
+    }
+
+    /// Symmetric permutation P·A·Pᵀ (for GPTQ act-order).
+    pub fn permute_sym(&self, perm: &[usize]) -> SqMat {
+        assert_eq!(perm.len(), self.n);
+        let mut out = SqMat::zeros(self.n);
+        for r in 0..self.n {
+            for c in 0..self.n {
+                out.set(r, c, self.at(perm[r], perm[c]));
+            }
+        }
+        out
+    }
+
+    /// Lower-triangular Cholesky: A = L·Lᵀ. Errors if not SPD.
+    pub fn cholesky(&self) -> Result<SqMat> {
+        let n = self.n;
+        let mut l = SqMat::zeros(n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self.at(i, j);
+                for k in 0..j {
+                    s -= l.at(i, k) * l.at(j, k);
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        bail!("cholesky: matrix not SPD at pivot {i} (s={s})");
+                    }
+                    l.set(i, j, s.sqrt());
+                } else {
+                    l.set(i, j, s / l.at(j, j));
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Solve L·y = b (forward substitution), L lower-triangular.
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.at(i, k) * y[k];
+            }
+            y[i] = s / self.at(i, i);
+        }
+        y
+    }
+
+    /// Solve Lᵀ·x = y (backward substitution), L lower-triangular.
+    pub fn solve_lower_t(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.at(k, i) * x[k];
+            }
+            x[i] = s / self.at(i, i);
+        }
+        x
+    }
+
+    /// A⁻¹ via Cholesky (A must be SPD).
+    pub fn spd_inverse(&self) -> Result<SqMat> {
+        let l = self.cholesky()?;
+        let n = self.n;
+        let mut inv = SqMat::zeros(n);
+        for col in 0..n {
+            let mut e = vec![0.0; n];
+            e[col] = 1.0;
+            let y = l.solve_lower(&e);
+            let x = l.solve_lower_t(&y);
+            for r in 0..n {
+                inv.set(r, col, x[r]);
+            }
+        }
+        Ok(inv)
+    }
+
+    /// Upper-triangular Cholesky of A⁻¹ — the factor GPTQ iterates on.
+    /// Returns U with A⁻¹ = Uᵀ·U ... computed as chol(A⁻¹) transposed.
+    pub fn inverse_cholesky_upper(&self) -> Result<SqMat> {
+        let inv = self.spd_inverse()?;
+        let l = inv.cholesky()?;
+        // U = Lᵀ
+        let n = self.n;
+        let mut u = SqMat::zeros(n);
+        for r in 0..n {
+            for c in 0..n {
+                u.set(r, c, l.at(c, r));
+            }
+        }
+        Ok(u)
+    }
+
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut out = vec![0.0; n];
+        for r in 0..n {
+            let mut s = 0.0;
+            for c in 0..n {
+                s += self.at(r, c) * v[c];
+            }
+            out[r] = s;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> SqMat {
+        let mut rng = Rng::new(seed);
+        let mut a = SqMat::zeros(n);
+        for r in 0..n {
+            for c in 0..n {
+                a.set(r, c, rng.normal());
+            }
+        }
+        // A·Aᵀ + n·I is SPD
+        let mut spd = SqMat::zeros(n);
+        for r in 0..n {
+            for c in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a.at(r, k) * a.at(c, k);
+                }
+                spd.set(r, c, s);
+            }
+        }
+        spd.add_diag(n as f64);
+        spd
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(16, 1);
+        let l = a.cholesky().unwrap();
+        for r in 0..16 {
+            for c in 0..16 {
+                let mut s = 0.0;
+                for k in 0..16 {
+                    s += l.at(r, k) * l.at(c, k);
+                }
+                assert!((s - a.at(r, c)).abs() < 1e-9, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_inverts() {
+        let a = random_spd(12, 2);
+        let l = a.cholesky().unwrap();
+        let mut rng = Rng::new(3);
+        let b: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let y = l.solve_lower(&b);
+        let x = l.solve_lower_t(&y);
+        let ax = a.matvec(&x);
+        for i in 0..12 {
+            assert!((ax[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_identity() {
+        let a = random_spd(10, 4);
+        let inv = a.spd_inverse().unwrap();
+        for r in 0..10 {
+            for c in 0..10 {
+                let mut s = 0.0;
+                for k in 0..10 {
+                    s += a.at(r, k) * inv.at(k, c);
+                }
+                let want = if r == c { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-8, "({r},{c}): {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_cholesky_upper_is_upper() {
+        let a = random_spd(8, 5);
+        let u = a.inverse_cholesky_upper().unwrap();
+        for r in 1..8 {
+            for c in 0..r {
+                assert_eq!(u.at(r, c), 0.0);
+            }
+        }
+        // Uᵀ·U == A⁻¹
+        let inv = a.spd_inverse().unwrap();
+        for r in 0..8 {
+            for c in 0..8 {
+                let mut s = 0.0;
+                for k in 0..8 {
+                    s += u.at(k, r) * u.at(k, c);
+                }
+                assert!((s - inv.at(r, c)).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn non_spd_errors() {
+        let mut a = SqMat::eye(4);
+        a.set(3, 3, -1.0);
+        assert!(a.cholesky().is_err());
+    }
+
+    #[test]
+    fn permute_sym_diag() {
+        let mut a = SqMat::zeros(3);
+        for i in 0..3 {
+            a.set(i, i, i as f64);
+        }
+        let p = a.permute_sym(&[2, 0, 1]);
+        assert_eq!(p.at(0, 0), 2.0);
+        assert_eq!(p.at(1, 1), 0.0);
+    }
+}

@@ -1,0 +1,310 @@
+//! `scalebits` — leader binary: quantization pipeline, experiment
+//! harness, evaluation and serving demo.
+//!
+//! Usage:
+//!   scalebits info
+//!   scalebits quantize   --budget 3.0 [--no-reorder] [--out results/alloc.json]
+//!   scalebits eval       --bits 3 | --alloc results/alloc.json
+//!   scalebits exp <id>   (fig1 fig2 fig3 fig5 fig6 fig7 fig10 fig13
+//!                         fig15 fig16 fig17 fig18 tab2 tab3 tab4 tab5 tab6 | all)
+//!   scalebits serve-demo --requests 32 --rate 50
+//!
+//! Global options: --artifacts <dir> (default: artifacts), --seed <n>.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+use scalebits::coordinator::{
+    experiments_ablation as ab, experiments_analysis as an, experiments_main as em, Pipeline,
+};
+use scalebits::quant::{BitAlloc, PackedMat};
+use scalebits::search::SearchConfig;
+use scalebits::util::cli::Args;
+use scalebits::util::json::Json;
+use scalebits::util::table::{f2, pct, ppl, Table};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["no-reorder", "verbose", "fixed-grads"]);
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let seed = args.u64_or("seed", 1234)?;
+    match args.subcommand.as_deref() {
+        Some("info") => info(&artifacts),
+        Some("quantize") => quantize(&artifacts, &args, seed),
+        Some("eval") => eval_cmd(&artifacts, &args),
+        Some("exp") => exp(&artifacts, &args, seed),
+        Some("export") => export_cmd(&artifacts, &args),
+        Some("serve-demo") => serve_demo(&artifacts, &args, seed),
+        other => {
+            bail!(
+                "unknown subcommand {other:?}; expected info|quantize|eval|exp|serve-demo (see --help in README)"
+            )
+        }
+    }
+}
+
+fn info(artifacts: &PathBuf) -> Result<()> {
+    let m = scalebits::model::Manifest::load(artifacts)?;
+    let c = &m.config;
+    println!("model: MiniLlama vocab={} d_model={} layers={} heads={} d_ff={} seq={}",
+        c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.seq_len);
+    println!("blocks: {} ({}x{} tiles) over {} quantized matrices ({} weights)",
+        m.n_blocks, c.block_rows, c.block_cols, m.quantized.len(), m.quantized_numel());
+    println!("executables:");
+    for (name, e) in &m.executables {
+        println!("  {name:<12} batch={} inputs={} outputs={} ({})",
+            e.batch, e.inputs.len(), e.outputs.len(), e.file);
+    }
+    for (name, d) in &m.datasets {
+        println!("dataset {name:<6} {} tokens ({})", d.n_tokens, d.file);
+    }
+    Ok(())
+}
+
+fn quantize(artifacts: &PathBuf, args: &Args, seed: u64) -> Result<()> {
+    // Config precedence: --config file < CLI flags.
+    let mut cfg_base = scalebits::search::SearchConfig::default();
+    let mut reorder_enabled = true;
+    let mut probe_bits = 3;
+    if let Some(path) = args.str_opt("config") {
+        let doc = scalebits::util::tomlite::TomlDoc::read_file(std::path::Path::new(path))?;
+        cfg_base = scalebits::util::tomlite::search_config_from(&doc)?;
+        reorder_enabled = doc.bool_or("reorder", "enabled", true)?;
+        probe_bits = doc.i32_or("reorder", "probe_bits", 3)?;
+        println!(
+            "loaded config {path} ({})",
+            doc.get("", "name").map(|v| v.as_str().unwrap_or("?").to_string()).unwrap_or_default()
+        );
+    }
+    let budget = args.f64_or("budget", cfg_base.budget)?;
+    let out_path = args.str_or("out", "results/alloc.json");
+    let mut p = Pipeline::load_full(artifacts)?;
+
+    println!("[1/4] baseline (uniform {} bits) ...", budget.floor());
+    let base = p.eval_alloc(&BitAlloc::uniform(&p.index, budget.floor() as i32))?;
+    println!("  uniform: ppl {:.3}, task acc {:.2}%", base.perplexity, 100.0 * base.task_accuracy);
+
+    if reorder_enabled && !args.has_flag("no-reorder") {
+        println!("[2/4] bi-directional channel reordering ...");
+        p.reorder(probe_bits, seed)?;
+        println!("  reordered (functional equivalence verified)");
+    } else {
+        println!("[2/4] reordering skipped");
+    }
+
+    println!("[3/4] scalable greedy search (budget {budget}) ...");
+    let cfg = SearchConfig {
+        budget,
+        seed,
+        fixed_grads: cfg_base.fixed_grads || args.has_flag("fixed-grads"),
+        verbose: args.has_flag("verbose"),
+        ..cfg_base
+    };
+    let res = p.search(&cfg)?;
+    println!(
+        "  {} iterations ({} accepted), {:.1}s, {} executable calls",
+        res.iters.len(),
+        res.accepted_iters(),
+        res.wall_secs,
+        res.exec_calls
+    );
+
+    println!("[4/4] evaluation + packing ...");
+    let r = p.eval_alloc(&res.alloc)?;
+    println!(
+        "  ScaleBITS: ppl {:.3} (uniform {:.3}), task acc {:.2}% (uniform {:.2}%)",
+        r.perplexity, base.perplexity, 100.0 * r.task_accuracy, 100.0 * base.task_accuracy
+    );
+
+    // Real packed storage accounting.
+    let mut packed_bytes = 0usize;
+    let mut fp_bytes = 0usize;
+    for (mi, name) in p.index.mats.iter().enumerate() {
+        let w = p.store.get(name)?;
+        let grid = &res.alloc.bits[p.index.mat_range(mi)];
+        let pm = PackedMat::quantize(w, grid, p.index.block_rows, p.index.block_cols);
+        packed_bytes += pm.storage_bytes();
+        fp_bytes += w.data.len() * 2; // bf16 reference
+    }
+    println!(
+        "  packed weights: {:.2} MiB vs bf16 {:.2} MiB ({:.2}x compression, avg {:.2} code bits)",
+        packed_bytes as f64 / (1 << 20) as f64,
+        fp_bytes as f64 / (1 << 20) as f64,
+        fp_bytes as f64 / packed_bytes as f64,
+        res.alloc.avg_bits()
+    );
+
+    let json = Json::from_pairs(vec![
+        ("budget", Json::Num(budget)),
+        ("avg_bits", Json::Num(res.alloc.avg_bits())),
+        ("effective_bits", Json::Num(res.alloc.effective_bits(p.index.block_cols))),
+        ("ppl", Json::Num(r.perplexity)),
+        ("task_acc", Json::Num(r.task_accuracy)),
+        ("iterations", Json::Num(res.iters.len() as f64)),
+        ("wall_secs", Json::Num(res.wall_secs)),
+        ("bits", Json::Arr(res.alloc.bits.iter().map(|&b| Json::Num(b as f64)).collect())),
+    ]);
+    json.write_file(std::path::Path::new(&out_path))?;
+    println!("  wrote {out_path}");
+    Ok(())
+}
+
+fn load_alloc(p: &Pipeline, args: &Args) -> Result<BitAlloc> {
+    if let Some(path) = args.str_opt("alloc") {
+        let j = Json::read_file(std::path::Path::new(path))?;
+        let bits = j.get("bits")?.to_vec_i32()?;
+        if bits.len() != p.index.n_blocks {
+            bail!("alloc file has {} blocks, model has {}", bits.len(), p.index.n_blocks);
+        }
+        Ok(BitAlloc { bits })
+    } else {
+        let bits = args.usize_or("bits", 16)? as i32;
+        Ok(BitAlloc::uniform(&p.index, bits))
+    }
+}
+
+fn eval_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let p = Pipeline::load(artifacts, &["qloss", "qpredict"])?;
+    let alloc = load_alloc(&p, args)?;
+    let r = p.eval_alloc(&alloc)?;
+    let mut t = Table::new("evaluation", &["avg_bits", "eff_bits", "ppl", "task_acc"]);
+    t.row(vec![f2(r.avg_bits), f2(r.effective_bits), ppl(r.perplexity), pct(r.task_accuracy)]);
+    t.print();
+    Ok(())
+}
+
+/// Export a packed `.sbits` model from an allocation, verify the
+/// roundtrip bit-exactly, and report compression.
+fn export_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    use scalebits::quant::packfile;
+    let out = args.str_or("out", "results/model.sbits");
+    let p = Pipeline::load(artifacts, &[])?;
+    let alloc = load_alloc(&p, args)?;
+    let n = packfile::write_packfile(
+        std::path::Path::new(&out),
+        &p.engine.manifest,
+        &p.index,
+        &p.store,
+        &alloc,
+    )?;
+    // roundtrip verification
+    let (store2, alloc2) =
+        packfile::read_packfile(std::path::Path::new(&out), &p.engine.manifest, &p.index)?;
+    anyhow::ensure!(alloc2.bits == alloc.bits, "bit grids diverged in roundtrip");
+    for name in &p.index.mats {
+        let mi = p.index.mat_index(name).unwrap();
+        let grid = &alloc.bits[p.index.mat_range(mi)];
+        let want = scalebits::quant::fakequant_mat(
+            p.store.get(name)?,
+            grid,
+            p.index.block_rows,
+            p.index.block_cols,
+        );
+        let got = store2.get(name)?;
+        for i in 0..want.data.len() {
+            // f16 scale storage => ~1e-3 relative on dequantized values
+            let tol = 2e-3 * want.data[i].abs().max(1e-3);
+            anyhow::ensure!(
+                (got.data[i] - want.data[i]).abs() <= tol,
+                "{name}[{i}]: {} vs {}",
+                got.data[i],
+                want.data[i]
+            );
+        }
+    }
+    let fp16: usize = p.index.mats.iter().map(|n| p.store.get(n).unwrap().data.len() * 2).sum();
+    println!(
+        "wrote {out}: {:.2} MiB ({:.2}x vs bf16 quantized-part, avg {:.2} code bits); roundtrip verified",
+        n as f64 / (1 << 20) as f64,
+        fp16 as f64 / n as f64,
+        alloc.avg_bits()
+    );
+    Ok(())
+}
+
+fn exp(artifacts: &PathBuf, args: &Args, seed: u64) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: scalebits exp <id>|all"))?
+        .clone();
+    let iters = args.usize_or("iters", 30)?;
+    let run_one = |id: &str| -> Result<()> {
+        let sw = scalebits::util::timer::Stopwatch::start();
+        match id {
+            "fig1" => {
+                let budgets: Vec<f64> =
+                    (0..9).map(|i| 2.0 + 0.25 * i as f64).collect();
+                let mut p = Pipeline::load_full(artifacts)?;
+                em::fig1(&mut p, &budgets, seed)?;
+            }
+            "tab2" => em::tab2(&mut Pipeline::load(artifacts, &["qloss", "qgrad", "qlogits", "grams"])?, seed)?,
+            "tab3" => em::tab3(&mut Pipeline::load_full(artifacts)?, seed)?,
+            "tab4" => em::tab4(&mut Pipeline::load(artifacts, &[])?, iters)?,
+            "tab5" => em::tab5(&mut Pipeline::load_full(artifacts)?, seed)?,
+            "tab6" => em::tab6(&mut Pipeline::load_full(artifacts)?, seed)?,
+            "fig2" => an::fig2(&mut Pipeline::load_full(artifacts)?, seed)?,
+            "fig3" => an::fig3(&mut Pipeline::load_full(artifacts)?, seed)?,
+            "fig5" => an::fig5(&mut Pipeline::load_full(artifacts)?, seed)?,
+            "fig6" => an::fig6(&mut Pipeline::load_full(artifacts)?, seed)?,
+            "fig7" => an::fig7(&mut Pipeline::load_full(artifacts)?, seed)?,
+            "fig10" => an::fig10(&mut Pipeline::load(artifacts, &["qloss", "qgrad", "qlogits", "grams"])?, seed)?,
+            "fig13" => an::fig13(&mut Pipeline::load_full(artifacts)?, seed)?,
+            "fig15" => ab::fig15(artifacts, seed)?,
+            "fig16" => ab::fig16(&mut Pipeline::load_full(artifacts)?, seed)?,
+            "fig17" => ab::fig17(artifacts, seed)?,
+            "fig18" => ab::fig18(&mut Pipeline::load_full(artifacts)?, seed)?,
+            other => bail!("unknown experiment {other:?}"),
+        }
+        println!("[{id}] done in {:.1}s\n", sw.secs());
+        Ok(())
+    };
+    if id == "all" {
+        for id in [
+            "fig2", "fig3", "fig7", "fig13", "fig10", "fig16", "tab4", "tab3", "fig5", "fig6",
+            "fig18", "tab2", "tab5", "tab6", "fig15", "fig17", "fig1",
+        ] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(&id)
+    }
+}
+
+fn serve_demo(artifacts: &PathBuf, args: &Args, seed: u64) -> Result<()> {
+    use std::time::Duration;
+    let n_requests = args.usize_or("requests", 32)?;
+    let rate = args.f64_or("rate", 50.0)?;
+    let bits = args.usize_or("bits", 3)? as i32;
+
+    let m = scalebits::model::Manifest::load(artifacts)?;
+    let index = scalebits::quant::BlockIndex::from_manifest(&m)?;
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval")?;
+    let seq = m.config.seq_len;
+
+    println!("starting batching server (uniform {bits}-bit grids, window 3ms)");
+    let alloc = BitAlloc::uniform(&index, bits);
+    let mut server =
+        scalebits::serve::start_server(artifacts.clone(), alloc, Duration::from_millis(3))?;
+    let lats = scalebits::serve::run_workload(&mut server, &stream, seq, n_requests, rate, seed)?;
+    let stats = server.shutdown()?;
+
+    let s = scalebits::util::timer::Stats::from_samples_us(
+        lats.iter().map(|x| x * 1e6).collect(),
+    );
+    println!("{}", s.line("request latency"));
+    println!(
+        "served {} requests in {} batches (mean occupancy {:.2})",
+        stats.served,
+        stats.batches,
+        stats.mean_occupancy()
+    );
+    Ok(())
+}

@@ -1,0 +1,310 @@
+//! Model manifest + weight store.
+//!
+//! Mirrors `python/compile/model.py`'s canonical parameter registry.
+//! The manifest pins the exact positional argument order of every AOT
+//! executable, so the rust side never guesses shapes or ordering.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Mat;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub block_rows: usize,
+    pub block_cols: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub quantized: bool,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        if self.shape.len() > 1 {
+            self.shape[1]
+        } else {
+            1
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecInfo {
+    pub file: String,
+    pub batch: usize,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GramSite {
+    pub site: String,
+    pub dim: usize,
+    /// Quantized matrices whose input activation this Gram describes.
+    pub consumers: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetInfo {
+    pub file: String,
+    pub n_tokens: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct KernelBenchInfo {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub block_rows: usize,
+    pub block_cols: usize,
+    pub files: HashMap<String, String>,
+    pub elemmp_n_outliers: usize,
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub params: Vec<ParamInfo>,
+    pub quantized: Vec<String>,
+    pub n_blocks: usize,
+    pub executables: HashMap<String, ExecInfo>,
+    pub gram_sites: Vec<GramSite>,
+    pub datasets: HashMap<String, DatasetInfo>,
+    pub tasks_n: usize,
+    pub tasks_seq_len: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::read_file(&dir.join("manifest.json"))
+            .context("loading manifest.json — run `make artifacts` first")?;
+        let c = j.get("config")?;
+        let config = ModelConfig {
+            vocab: c.get("vocab")?.as_usize()?,
+            d_model: c.get("d_model")?.as_usize()?,
+            n_layers: c.get("n_layers")?.as_usize()?,
+            n_heads: c.get("n_heads")?.as_usize()?,
+            d_ff: c.get("d_ff")?.as_usize()?,
+            seq_len: c.get("seq_len")?.as_usize()?,
+            block_rows: c.get("block_rows")?.as_usize()?,
+            block_cols: c.get("block_cols")?.as_usize()?,
+        };
+        let mut params = Vec::new();
+        for p in j.get("params")?.as_arr()? {
+            params.push(ParamInfo {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p.get("shape")?.to_vec_usize()?,
+                offset: p.get("offset")?.as_usize()?,
+                quantized: p.get("quantized")?.as_bool()?,
+            });
+        }
+        let quantized: Vec<String> = j
+            .get("quantized")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let mut executables = HashMap::new();
+        for (name, e) in j.get("executables")?.as_obj()? {
+            executables.insert(
+                name.clone(),
+                ExecInfo {
+                    file: e.get("file")?.as_str()?.to_string(),
+                    batch: e.get("batch")?.as_usize()?,
+                    inputs: e
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| Ok(x.as_str()?.to_string()))
+                        .collect::<Result<_>>()?,
+                    outputs: e
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| Ok(x.as_str()?.to_string()))
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+        let mut gram_sites = Vec::new();
+        for g in j.get("gram_sites")?.as_arr()? {
+            gram_sites.push(GramSite {
+                site: g.get("site")?.as_str()?.to_string(),
+                dim: g.get("dim")?.as_usize()?,
+                consumers: g
+                    .get("consumers")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| Ok(x.as_str()?.to_string()))
+                    .collect::<Result<_>>()?,
+            });
+        }
+        let mut datasets = HashMap::new();
+        for (name, d) in j.get("datasets")?.as_obj()? {
+            if name == "tasks" {
+                continue;
+            }
+            datasets.insert(
+                name.clone(),
+                DatasetInfo {
+                    file: d.get("file")?.as_str()?.to_string(),
+                    n_tokens: d.get("n_tokens")?.as_usize()?,
+                },
+            );
+        }
+        let tasks = j.get("datasets")?.get("tasks")?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config,
+            params,
+            quantized,
+            n_blocks: j.get("n_blocks")?.as_usize()?,
+            executables,
+            gram_sites,
+            datasets,
+            tasks_n: tasks.get("n")?.as_usize()?,
+            tasks_seq_len: tasks.get("seq_len")?.as_usize()?,
+        })
+    }
+
+    pub fn kernel_bench(&self) -> Result<KernelBenchInfo> {
+        let j = Json::read_file(&self.dir.join("manifest.json"))?;
+        let k = j.get("kernel_bench")?;
+        let mut files = HashMap::new();
+        for (name, f) in k.get("files")?.as_obj()? {
+            files.insert(name.clone(), f.as_str()?.to_string());
+        }
+        Ok(KernelBenchInfo {
+            m: k.get("m")?.as_usize()?,
+            n: k.get("n")?.as_usize()?,
+            k: k.get("k")?.as_usize()?,
+            block_rows: k.get("block_rows")?.as_usize()?,
+            block_cols: k.get("block_cols")?.as_usize()?,
+            files,
+            elemmp_n_outliers: k.get("elemmp_n_outliers")?.as_usize()?,
+        })
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamInfo> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow!("unknown param {name:?}"))
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&ExecInfo> {
+        self.executables.get(name).ok_or_else(|| anyhow!("unknown executable {name:?}"))
+    }
+
+    /// Block-grid shape of a quantized matrix.
+    pub fn bits_shape(&self, name: &str) -> Result<(usize, usize)> {
+        let p = self.param(name)?;
+        if !p.quantized {
+            bail!("{name:?} is not quantized");
+        }
+        Ok((p.rows() / self.config.block_rows, p.cols() / self.config.block_cols))
+    }
+
+    /// Total quantizable weight elements (the budget denominator).
+    pub fn quantized_numel(&self) -> usize {
+        self.params.iter().filter(|p| p.quantized).map(|p| p.numel()).sum()
+    }
+}
+
+/// Full-precision weights, loaded once from `weights.bin`, addressable
+/// by name. All transformations (reordering, quantization previews)
+/// work on copies — the store itself is the pristine trained model.
+#[derive(Clone)]
+pub struct WeightStore {
+    pub mats: HashMap<String, Mat>,
+    pub order: Vec<String>,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        let path = manifest.dir.join("weights.bin");
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow!("read {}: {e} — run `make artifacts`", path.display()))?;
+        let total: usize = manifest.params.iter().map(|p| p.numel()).sum();
+        if bytes.len() != total * 4 {
+            bail!("weights.bin: expected {} f32s, got {} bytes", total, bytes.len());
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut mats = HashMap::new();
+        let mut order = Vec::new();
+        for p in &manifest.params {
+            let data = floats[p.offset..p.offset + p.numel()].to_vec();
+            mats.insert(p.name.clone(), Mat::from_vec(p.rows(), p.cols(), data)?);
+            order.push(p.name.clone());
+        }
+        Ok(WeightStore { mats, order })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Mat> {
+        self.mats.get(name).ok_or_else(|| anyhow!("missing weight {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Mat> {
+        self.mats.get_mut(name).ok_or_else(|| anyhow!("missing weight {name:?}"))
+    }
+
+    /// Weights flattened in manifest order (the executables' layout).
+    pub fn in_order(&self) -> Vec<(&str, &Mat)> {
+        self.order.iter().map(|n| (n.as_str(), &self.mats[n])).collect()
+    }
+}
+
+/// Split "layers.2.wq" -> (Some(2), "wq"); "embed" -> (None, "embed").
+pub fn split_param_name(name: &str) -> (Option<usize>, &str) {
+    let parts: Vec<&str> = name.split('.').collect();
+    if parts.len() == 3 && parts[0] == "layers" {
+        (parts[1].parse().ok(), parts[2])
+    } else {
+        (None, name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_names() {
+        assert_eq!(split_param_name("layers.2.wq"), (Some(2), "wq"));
+        assert_eq!(split_param_name("embed"), (None, "embed"));
+        assert_eq!(split_param_name("final_norm"), (None, "final_norm"));
+    }
+}

@@ -1,0 +1,519 @@
+//! RTN quantizer, block partition state, bit allocation and packing.
+//!
+//! This is the rust mirror of the L1 Pallas fake-quant kernel: the same
+//! symmetric, per-(row, col-group) RTN scheme, bit-exact up to f32
+//! rounding (cross-validated against `artifacts/golden.json`). The rust
+//! copy exists because the coordinator needs CPU-side quantization for
+//! (a) Δw = w − w^Q in the sensitivity statistics, (b) the GPTQ
+//! baseline's inner loop, and (c) real bit-packing for storage export.
+
+
+use anyhow::{bail, Result};
+
+use crate::model::Manifest;
+use crate::tensor::Mat;
+
+pub mod packfile;
+
+/// bits >= FP_SENTINEL means "keep full precision".
+pub const FP_SENTINEL_BITS: i32 = 9;
+/// Scale storage cost per group, in bits (f16 scale, paper-style).
+pub const SCALE_BITS: f64 = 16.0;
+
+// ---------------------------------------------------------------------
+// scalar RTN
+
+/// Fake-quantize one row-group (slice of `group` weights) at bitwidth b.
+/// Mirrors `rtn_group_fakequant_ref` in python/compile/kernels/ref.py.
+pub fn fakequant_group(w: &mut [f32], bits: i32) {
+    if bits >= FP_SENTINEL_BITS {
+        return;
+    }
+    if bits <= 0 {
+        w.fill(0.0);
+        return;
+    }
+    if bits == 1 {
+        let mean_abs = w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32;
+        for x in w.iter_mut() {
+            *x = if *x >= 0.0 { mean_abs } else { -mean_abs };
+        }
+        return;
+    }
+    let qmax = (2.0f32).powi(bits - 1) - 1.0;
+    let amax = w.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    let scale = amax / qmax.max(1.0);
+    let safe = if scale > 0.0 { scale } else { 1.0 };
+    for x in w.iter_mut() {
+        let q = (*x / safe).round_ties_even().clamp(-qmax, qmax);
+        *x = q * scale;
+    }
+}
+
+/// Integer codes + scale for one group (real quantization, bits 1..=8).
+pub fn quant_group_codes(w: &[f32], bits: i32) -> (Vec<i8>, f32) {
+    assert!((1..=8).contains(&bits));
+    if bits == 1 {
+        let scale = w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32;
+        let codes = w.iter().map(|x| if *x >= 0.0 { 1i8 } else { -1i8 }).collect();
+        return (codes, scale);
+    }
+    let qmax = (2.0f32).powi(bits - 1) - 1.0;
+    let amax = w.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    let scale = amax / qmax.max(1.0);
+    let safe = if scale > 0.0 { scale } else { 1.0 };
+    let codes = w
+        .iter()
+        .map(|x| (*x / safe).round_ties_even().clamp(-qmax, qmax) as i8)
+        .collect();
+    (codes, scale)
+}
+
+/// Fake-quantize a whole matrix under a per-block bit grid.
+pub fn fakequant_mat(w: &Mat, bits: &[i32], block_rows: usize, block_cols: usize) -> Mat {
+    let (nbr, nbc) = (w.rows / block_rows, w.cols / block_cols);
+    assert_eq!(bits.len(), nbr * nbc, "bit grid mismatch");
+    let mut out = w.clone();
+    for bi in 0..nbr {
+        for bj in 0..nbc {
+            let b = bits[bi * nbc + bj];
+            for r in 0..block_rows {
+                let row = bi * block_rows + r;
+                let start = row * w.cols + bj * block_cols;
+                fakequant_group(&mut out.data[start..start + block_cols], b);
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// block index + allocation
+
+/// Flat index over every quantizable block in the model: block id <->
+/// (matrix, block-row, block-col). The search operates on flat ids.
+#[derive(Clone, Debug)]
+pub struct BlockIndex {
+    /// Quantized matrix names in manifest order.
+    pub mats: Vec<String>,
+    /// Per matrix: (block-grid rows, block-grid cols).
+    pub grids: Vec<(usize, usize)>,
+    /// Per matrix: flat id of its first block.
+    pub offsets: Vec<usize>,
+    pub block_rows: usize,
+    pub block_cols: usize,
+    pub n_blocks: usize,
+}
+
+impl BlockIndex {
+    pub fn from_manifest(m: &Manifest) -> Result<BlockIndex> {
+        let mut mats = Vec::new();
+        let mut grids = Vec::new();
+        let mut offsets = Vec::new();
+        let mut off = 0usize;
+        for name in &m.quantized {
+            let (gr, gc) = m.bits_shape(name)?;
+            mats.push(name.clone());
+            grids.push((gr, gc));
+            offsets.push(off);
+            off += gr * gc;
+        }
+        if off != m.n_blocks {
+            bail!("block count mismatch: {} vs manifest {}", off, m.n_blocks);
+        }
+        Ok(BlockIndex {
+            mats,
+            grids,
+            offsets,
+            block_rows: m.config.block_rows,
+            block_cols: m.config.block_cols,
+            n_blocks: off,
+        })
+    }
+
+    /// Flat id -> (matrix index, block-row, block-col).
+    pub fn locate(&self, id: usize) -> (usize, usize, usize) {
+        debug_assert!(id < self.n_blocks);
+        // binary search over offsets
+        let mi = match self.offsets.binary_search(&id) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        let local = id - self.offsets[mi];
+        let (_, gc) = self.grids[mi];
+        (mi, local / gc, local % gc)
+    }
+
+    pub fn flat_id(&self, mat_idx: usize, bi: usize, bj: usize) -> usize {
+        let (_, gc) = self.grids[mat_idx];
+        self.offsets[mat_idx] + bi * gc + bj
+    }
+
+    /// Elements per block (constant across the model by construction).
+    pub fn block_numel(&self) -> usize {
+        self.block_rows * self.block_cols
+    }
+
+    pub fn mat_index(&self, name: &str) -> Option<usize> {
+        self.mats.iter().position(|m| m == name)
+    }
+
+    /// Range of flat ids belonging to matrix `mi`.
+    pub fn mat_range(&self, mi: usize) -> std::ops::Range<usize> {
+        let start = self.offsets[mi];
+        let (gr, gc) = self.grids[mi];
+        start..start + gr * gc
+    }
+}
+
+/// A bit allocation: one bitwidth per block, flat over the BlockIndex.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitAlloc {
+    pub bits: Vec<i32>,
+}
+
+impl BitAlloc {
+    pub fn uniform(index: &BlockIndex, bits: i32) -> BitAlloc {
+        BitAlloc { bits: vec![bits; index.n_blocks] }
+    }
+
+    pub fn full_precision(index: &BlockIndex) -> BitAlloc {
+        BitAlloc::uniform(index, 16)
+    }
+
+    /// Average code bits per quantized weight (uniform block sizes make
+    /// this the plain mean; FP sentinel blocks count as 16).
+    pub fn avg_bits(&self) -> f64 {
+        let total: i64 = self.bits.iter().map(|&b| b.clamp(0, 16) as i64).sum();
+        total as f64 / self.bits.len() as f64
+    }
+
+    /// Average bits per weight including scale storage overhead
+    /// (f16 scale per `group` weights), matching the paper's "+0.1 for
+    /// g128" accounting (+0.5 at our g=32).
+    pub fn effective_bits(&self, group: usize) -> f64 {
+        self.avg_bits() + SCALE_BITS / group as f64
+    }
+
+    /// Per-matrix grids in manifest order — the `bits` inputs of every
+    /// AOT executable.
+    pub fn grids(&self, index: &BlockIndex) -> Vec<Vec<i32>> {
+        index
+            .mats
+            .iter()
+            .enumerate()
+            .map(|(mi, _)| self.bits[index.mat_range(mi)].to_vec())
+            .collect()
+    }
+
+    /// Mean bits of one matrix (fig 18 per-layer statistics).
+    pub fn mat_avg(&self, index: &BlockIndex, mi: usize) -> f64 {
+        let r = index.mat_range(mi);
+        let s: i64 = self.bits[r.clone()].iter().map(|&b| b as i64).sum();
+        s as f64 / r.len() as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// bit packing (real storage path)
+
+/// Pack b-bit two's-complement codes into a dense little-endian u64
+/// stream. For b == 1 codes are mapped {-1 -> 0, +1 -> 1}.
+pub fn pack_codes(codes: &[i8], bits: i32) -> Vec<u64> {
+    assert!((1..=8).contains(&bits));
+    let b = bits as usize;
+    let mask = if b == 64 { u64::MAX } else { (1u64 << b) - 1 };
+    let mut out = vec![0u64; (codes.len() * b).div_ceil(64)];
+    for (i, &c) in codes.iter().enumerate() {
+        let v = if bits == 1 {
+            (c > 0) as u64
+        } else {
+            (c as i64 as u64) & mask
+        };
+        let bitpos = i * b;
+        let word = bitpos / 64;
+        let off = bitpos % 64;
+        out[word] |= v << off;
+        if off + b > 64 {
+            out[word + 1] |= v >> (64 - off);
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_codes`].
+pub fn unpack_codes(packed: &[u64], n: usize, bits: i32) -> Vec<i8> {
+    assert!((1..=8).contains(&bits));
+    let b = bits as usize;
+    let mask = (1u64 << b) - 1;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let bitpos = i * b;
+        let word = bitpos / 64;
+        let off = bitpos % 64;
+        let mut v = packed[word] >> off;
+        if off + b > 64 {
+            v |= packed[word + 1] << (64 - off);
+        }
+        v &= mask;
+        if bits == 1 {
+            out.push(if v == 1 { 1 } else { -1 });
+        } else {
+            // sign-extend b-bit two's complement
+            let sign_bit = 1u64 << (b - 1);
+            let val = if v & sign_bit != 0 {
+                (v | !mask) as i64
+            } else {
+                v as i64
+            };
+            out.push(val as i8);
+        }
+    }
+    out
+}
+
+/// A fully packed quantized matrix: per-block packed code words +
+/// per-(row, block-col) f32 scales. This is the storage format the
+/// serving path would ship; `dequantize` reconstructs the fake-quant
+/// matrix exactly.
+pub struct PackedMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub block_rows: usize,
+    pub block_cols: usize,
+    pub bits: Vec<i32>,
+    /// One packed stream per block (row-major code order inside block).
+    pub blocks: Vec<Vec<u64>>,
+    /// scales[row][block_col]
+    pub scales: Vec<f32>,
+}
+
+impl PackedMat {
+    pub fn quantize(w: &Mat, bits: &[i32], block_rows: usize, block_cols: usize) -> PackedMat {
+        let (nbr, nbc) = (w.rows / block_rows, w.cols / block_cols);
+        assert_eq!(bits.len(), nbr * nbc);
+        let mut blocks = Vec::with_capacity(nbr * nbc);
+        let mut scales = vec![0.0f32; w.rows * nbc];
+        for bi in 0..nbr {
+            for bj in 0..nbc {
+                let b = bits[bi * nbc + bj].clamp(0, 8);
+                if b == 0 {
+                    blocks.push(Vec::new());
+                    continue;
+                }
+                let mut codes = Vec::with_capacity(block_rows * block_cols);
+                for r in 0..block_rows {
+                    let row = bi * block_rows + r;
+                    let start = row * w.cols + bj * block_cols;
+                    let (c, s) = quant_group_codes(&w.data[start..start + block_cols], b);
+                    scales[row * nbc + bj] = s;
+                    codes.extend_from_slice(&c);
+                }
+                blocks.push(pack_codes(&codes, b));
+            }
+        }
+        PackedMat {
+            rows: w.rows,
+            cols: w.cols,
+            block_rows,
+            block_cols,
+            bits: bits.iter().map(|&b| b.clamp(0, 8)).collect(),
+            blocks,
+            scales,
+        }
+    }
+
+    pub fn dequantize(&self) -> Mat {
+        let (nbr, nbc) = (self.rows / self.block_rows, self.cols / self.block_cols);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for bi in 0..nbr {
+            for bj in 0..nbc {
+                let b = self.bits[bi * nbc + bj];
+                if b == 0 {
+                    continue;
+                }
+                let codes =
+                    unpack_codes(&self.blocks[bi * nbc + bj], self.block_rows * self.block_cols, b);
+                for r in 0..self.block_rows {
+                    let row = bi * self.block_rows + r;
+                    let scale = self.scales[row * nbc + bj];
+                    for c in 0..self.block_cols {
+                        let col = bj * self.block_cols + c;
+                        out.data[row * self.cols + col] =
+                            codes[r * self.block_cols + c] as f32 * scale;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Packed storage footprint in bytes (codes + f16 scales).
+    pub fn storage_bytes(&self) -> usize {
+        let code_bytes: usize = self.blocks.iter().map(|b| b.len() * 8).sum();
+        let scale_bytes = self.scales.len() * 2; // f16 scales on disk
+        code_bytes + scale_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Config};
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal_f32()).collect()).unwrap()
+    }
+
+    #[test]
+    fn fakequant_passthrough_and_prune() {
+        let mut w = vec![1.0f32, -2.0, 3.0];
+        let orig = w.clone();
+        fakequant_group(&mut w, 16);
+        assert_eq!(w, orig);
+        fakequant_group(&mut w, 0);
+        assert_eq!(w, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn fakequant_one_bit() {
+        let mut w = vec![0.5f32, -1.5, 2.0, -2.0];
+        fakequant_group(&mut w, 1);
+        let m = (0.5 + 1.5 + 2.0 + 2.0) / 4.0;
+        assert_eq!(w, vec![m, -m, m, -m]);
+    }
+
+    #[test]
+    fn fakequant_error_decreases_with_bits() {
+        let w0 = rand_mat(1, 128, 3);
+        let mut prev = f64::INFINITY;
+        for bits in 2..=8 {
+            let mut w = w0.data.clone();
+            fakequant_group(&mut w, bits);
+            let err: f64 = w
+                .iter()
+                .zip(&w0.data)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            assert!(err <= prev * 1.001, "bits={bits}: {err} > {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn codes_match_fakequant() {
+        // dequantized codes must reproduce fakequant output exactly
+        forall("codes-vs-fakequant", Config::default(), |g| {
+            let bits = *g.pick(&[1, 2, 3, 4, 5, 8]);
+            let n = g.usize_in(4, 64);
+            let w = g.vec_f32(n);
+            let (codes, scale) = quant_group_codes(&w, bits);
+            let mut fq = w.clone();
+            fakequant_group(&mut fq, bits);
+            for i in 0..n {
+                let deq = codes[i] as f32 * scale;
+                crate::prop_assert!(
+                    (deq - fq[i]).abs() <= 1e-6 * scale.abs().max(1.0),
+                    "i={i} deq={deq} fq={}",
+                    fq[i]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        forall("pack-roundtrip", Config { cases: 128, ..Config::default() }, |g| {
+            let bits = g.i32_in(1, 8);
+            let n = g.usize_in(1, 200);
+            let qmax = if bits == 1 { 1 } else { (1 << (bits - 1)) - 1 };
+            let codes: Vec<i8> = (0..n)
+                .map(|_| {
+                    if bits == 1 {
+                        if g.rng.below(2) == 0 {
+                            -1
+                        } else {
+                            1
+                        }
+                    } else {
+                        g.i32_in(-qmax, qmax) as i8
+                    }
+                })
+                .collect();
+            let packed = pack_codes(&codes, bits);
+            let got = unpack_codes(&packed, n, bits);
+            crate::prop_assert!(got == codes, "bits={bits} n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_mat_dequant_matches_fakequant() {
+        let w = rand_mat(64, 64, 7);
+        let mut rng = Rng::new(8);
+        let bits: Vec<i32> = (0..4).map(|_| rng.range(1, 9) as i32).collect();
+        let packed = PackedMat::quantize(&w, &bits, 32, 32);
+        let deq = packed.dequantize();
+        let fq = fakequant_mat(&w, &bits, 32, 32);
+        for i in 0..deq.data.len() {
+            assert!(
+                (deq.data[i] - fq.data[i]).abs() < 1e-5,
+                "i={i}: {} vs {}",
+                deq.data[i],
+                fq.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn packed_storage_scales_with_bits() {
+        let w = rand_mat(64, 64, 9);
+        let b2 = PackedMat::quantize(&w, &[2, 2, 2, 2], 32, 32).storage_bytes();
+        let b4 = PackedMat::quantize(&w, &[4, 4, 4, 4], 32, 32).storage_bytes();
+        let b8 = PackedMat::quantize(&w, &[8, 8, 8, 8], 32, 32).storage_bytes();
+        let scale_overhead = 64 * 2 * 2;
+        assert_eq!(b4 - scale_overhead, 2 * (b2 - scale_overhead));
+        assert_eq!(b8 - scale_overhead, 2 * (b4 - scale_overhead));
+    }
+
+    #[test]
+    fn bitalloc_budget_math() {
+        let idx = BlockIndex {
+            mats: vec!["a".into(), "b".into()],
+            grids: vec![(2, 2), (1, 4)],
+            offsets: vec![0, 4],
+            block_rows: 32,
+            block_cols: 32,
+            n_blocks: 8,
+        };
+        let mut a = BitAlloc::uniform(&idx, 3);
+        assert_eq!(a.avg_bits(), 3.0);
+        a.bits[0] = 5;
+        a.bits[7] = 1;
+        assert!((a.avg_bits() - 3.0).abs() < 1e-12);
+        assert!((a.effective_bits(32) - 3.5).abs() < 1e-12);
+        let grids = a.grids(&idx);
+        assert_eq!(grids.len(), 2);
+        assert_eq!(grids[0], vec![5, 3, 3, 3]);
+        assert_eq!(grids[1], vec![3, 3, 3, 1]);
+    }
+
+    #[test]
+    fn block_index_locate_roundtrip() {
+        let idx = BlockIndex {
+            mats: vec!["a".into(), "b".into(), "c".into()],
+            grids: vec![(2, 3), (4, 1), (1, 1)],
+            offsets: vec![0, 6, 10],
+            block_rows: 32,
+            block_cols: 32,
+            n_blocks: 11,
+        };
+        for id in 0..11 {
+            let (mi, bi, bj) = idx.locate(id);
+            assert_eq!(idx.flat_id(mi, bi, bj), id);
+        }
+    }
+}

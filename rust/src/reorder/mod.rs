@@ -1,0 +1,214 @@
+//! Bi-directional channel reordering (paper §4.1 + Appendix D).
+//!
+//! Sensitive weights concentrate in a few rows AND columns (Eq. 5:
+//! s_ij = |g_i^(y)| · |x_j| · |Δw_ij|). Block-wise partitions dilute
+//! this structure unless similar channels are grouped, so we reorder
+//! both directions, under the transformer's coupling constraints:
+//!
+//! * **residual stream** (global, dim d_model): every matrix touching
+//!   the residual must share one permutation — cols of wq/wk/wv/
+//!   w_gate/w_up, rows of wo/w_down, cols of embed & lm_head, and the
+//!   RMSNorm gain vectors.
+//! * **MLP hidden** (per layer, dim d_ff): rows of w_gate/w_up and
+//!   cols of w_down reorder jointly, independently per layer.
+//! * **V/O head-local** (per layer): rows of wv and cols of wo reorder
+//!   jointly but only WITHIN each attention head (the attention
+//!   pattern itself must stay fixed).
+//! * **Q/K output channels stay in place** (RoPE acts on the head-dim
+//!   index, Appendix D) — they only receive the residual column perm.
+//!
+//! Reordering is a one-time preprocessing step; functional equivalence
+//! is validated by an integration test comparing logits before/after.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::model::{split_param_name, Manifest, WeightStore};
+use crate::tensor::{argsort_desc, Mat};
+
+/// The permutations of one reordering pass.
+/// Convention: `perm[dst] = src`, i.e. `new[dst] = old[perm[dst]]`,
+/// sorted so the most sensitive channel lands at index 0 (top-left).
+#[derive(Clone, Debug)]
+pub struct Reordering {
+    pub residual: Vec<usize>,
+    /// per layer: hidden-dim permutation (d_ff)
+    pub mlp: Vec<Vec<usize>>,
+    /// per layer: head-local v/o permutation (d_model, block-diagonal
+    /// over heads)
+    pub vo: Vec<Vec<usize>>,
+}
+
+impl Reordering {
+    pub fn identity(manifest: &Manifest) -> Reordering {
+        let c = &manifest.config;
+        Reordering {
+            residual: (0..c.d_model).collect(),
+            mlp: vec![(0..c.d_ff).collect(); c.n_layers],
+            vo: vec![(0..c.d_model).collect(); c.n_layers],
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        let id = |p: &[usize]| p.iter().enumerate().all(|(i, &x)| i == x);
+        id(&self.residual) && self.mlp.iter().all(|p| id(p)) && self.vo.iter().all(|p| id(p))
+    }
+}
+
+/// Restrict an arbitrary score ordering to head-local moves: sort
+/// indices by score descending WITHIN each head chunk.
+fn head_local_perm(scores: &[f32], n_heads: usize) -> Vec<usize> {
+    let d = scores.len();
+    let hd = d / n_heads;
+    let mut out = Vec::with_capacity(d);
+    for h in 0..n_heads {
+        let chunk = &scores[h * hd..(h + 1) * hd];
+        let order = argsort_desc(chunk);
+        out.extend(order.into_iter().map(|i| h * hd + i));
+    }
+    out
+}
+
+/// Compute the reordering from element-wise sensitivity maps (one per
+/// quantized matrix, keyed by name). Scores are aggregated with ℓ1
+/// across every matrix coupled to a channel (Appendix D "joint
+/// reordering ... aggregating sensitivity scores across all coupled
+/// matrices").
+pub fn compute_reordering(
+    manifest: &Manifest,
+    sens: &HashMap<String, Mat>,
+) -> Result<Reordering> {
+    let c = &manifest.config;
+    let mut residual = vec![0.0f32; c.d_model];
+    let mut mlp = vec![vec![0.0f32; c.d_ff]; c.n_layers];
+    let mut vo = vec![vec![0.0f32; c.d_model]; c.n_layers];
+
+    let add = |acc: &mut [f32], v: &[f32]| {
+        for (a, b) in acc.iter_mut().zip(v) {
+            *a += *b;
+        }
+    };
+
+    for (name, s) in sens {
+        let (layer, leaf) = split_param_name(name);
+        match leaf {
+            "wq" | "wk" => add(&mut residual, &s.col_l1()),
+            "wv" => {
+                add(&mut residual, &s.col_l1());
+                add(&mut vo[layer.unwrap()], &s.row_l1());
+            }
+            "wo" => {
+                add(&mut residual, &s.row_l1());
+                add(&mut vo[layer.unwrap()], &s.col_l1());
+            }
+            "w_gate" | "w_up" => {
+                add(&mut residual, &s.col_l1());
+                add(&mut mlp[layer.unwrap()], &s.row_l1());
+            }
+            "w_down" => {
+                add(&mut residual, &s.row_l1());
+                add(&mut mlp[layer.unwrap()], &s.col_l1());
+            }
+            _ => {}
+        }
+    }
+
+    Ok(Reordering {
+        residual: argsort_desc(&residual),
+        mlp: mlp.iter().map(|s| argsort_desc(s)).collect(),
+        vo: vo.iter().map(|s| head_local_perm(s, c.n_heads)).collect(),
+    })
+}
+
+/// Apply the reordering to a weight store, producing the permuted model
+/// (bit-exact functional equivalent of the original).
+pub fn apply_reordering(
+    manifest: &Manifest,
+    store: &WeightStore,
+    r: &Reordering,
+) -> Result<WeightStore> {
+    let mut out = store.clone();
+    for p in &manifest.params {
+        let (layer, leaf) = split_param_name(&p.name);
+        let m = store.get(&p.name)?;
+        let new = match leaf {
+            "embed" | "lm_head" => m.permute_cols(&r.residual),
+            "attn_norm" | "mlp_norm" | "final_norm" => {
+                // 1-D gains stored as [d, 1] column "matrices"? They are
+                // [d] vectors => Mat with cols == 1; permute rows.
+                m.permute_rows(&r.residual)
+            }
+            "wq" | "wk" => m.permute_cols(&r.residual),
+            "wv" => m.permute_rows(&r.vo[layer.unwrap()]).permute_cols(&r.residual),
+            "wo" => m.permute_rows(&r.residual).permute_cols(&r.vo[layer.unwrap()]),
+            "w_gate" | "w_up" => {
+                m.permute_rows(&r.mlp[layer.unwrap()]).permute_cols(&r.residual)
+            }
+            "w_down" => m.permute_rows(&r.residual).permute_cols(&r.mlp[layer.unwrap()]),
+            _ => m.clone(),
+        };
+        *out.get_mut(&p.name)? = new;
+    }
+    Ok(out)
+}
+
+/// Positions (as fractions of the matrix) of the top-k% sensitive
+/// channels before/after reordering — the fig-13 clustering statistic.
+/// Returns mean index position of the top channels (0 = fully clustered
+/// to the front, 0.5 = dispersed).
+pub fn top_channel_mean_position(scores: &[f32], top_frac: f64) -> f64 {
+    let order = argsort_desc(scores);
+    let k = ((scores.len() as f64 * top_frac).ceil() as usize).max(1);
+    let mean_idx: f64 = order[..k].iter().map(|&i| i as f64).sum::<f64>() / k as f64;
+    mean_idx / scores.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Config};
+
+    #[test]
+    fn head_local_stays_within_heads() {
+        forall("head-local", Config::default(), |g| {
+            let n_heads = *g.pick(&[2usize, 4]);
+            let hd = *g.pick(&[4usize, 8]);
+            let d = n_heads * hd;
+            let scores = g.vec_f32(d);
+            let p = head_local_perm(&scores, n_heads);
+            // permutation property
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            crate::prop_assert!(sorted == (0..d).collect::<Vec<_>>());
+            // locality property
+            for (dst, &src) in p.iter().enumerate() {
+                crate::prop_assert!(dst / hd == src / hd, "dst {dst} src {src}");
+            }
+            // within-head descending scores
+            for h in 0..n_heads {
+                for i in h * hd..(h + 1) * hd - 1 {
+                    crate::prop_assert!(scores[p[i]] >= scores[p[i + 1]]);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mean_position_statistic() {
+        // clustered front
+        let mut s = vec![0.0f32; 100];
+        s[0] = 10.0;
+        s[1] = 9.0;
+        s[2] = 8.0;
+        assert!(top_channel_mean_position(&s, 0.03) < 0.02);
+        // dispersed
+        let mut s2 = vec![0.0f32; 100];
+        s2[10] = 1.0;
+        s2[50] = 1.0;
+        s2[90] = 1.0;
+        let p = top_channel_mean_position(&s2, 0.03);
+        assert!(p > 0.3 && p < 0.7, "{p}");
+    }
+}

@@ -1,0 +1,236 @@
+//! PJRT runtime: loads AOT-lowered HLO-text artifacts and executes them.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
+//! from_text_file` -> `XlaComputation::from_proto` -> `client.compile`.
+//!
+//! Hot-path discipline: the full-precision weights are uploaded to
+//! device buffers ONCE (`WeightBuffers`), and each search iteration
+//! re-uploads only the tiny int32 per-block bit grids + the token
+//! batch, then calls `execute_b`. This is what makes the scalable
+//! greedy loop cheap: the multi-MB weight transfer is off the
+//! per-iteration path.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::model::{Manifest, WeightStore};
+use crate::tensor::Mat;
+
+/// Cumulative execution counters (Table 3 cost accounting).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// One compiled executable + its manifest signature.
+pub struct LoadedExec {
+    pub name: String,
+    pub exe: PjRtLoadedExecutable,
+    pub batch: usize,
+    pub n_outputs: usize,
+}
+
+/// The PJRT engine: client + compiled executables + counters.
+pub struct Engine {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    execs: HashMap<String, LoadedExec>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Engine {
+    /// Create a CPU engine and compile the named executables.
+    pub fn load(manifest: Manifest, exec_names: &[&str]) -> Result<Engine> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut engine = Engine {
+            client,
+            manifest,
+            execs: HashMap::new(),
+            stats: RefCell::new(HashMap::new()),
+        };
+        for name in exec_names {
+            engine.compile_exec(name)?;
+        }
+        Ok(engine)
+    }
+
+    /// Compile (or re-compile) one executable from its HLO text file.
+    pub fn compile_exec(&mut self, name: &str) -> Result<()> {
+        let info = self.manifest.exec(name)?.clone();
+        let path = self.manifest.dir.join(&info.file);
+        let exe = self.compile_hlo_file(&path)?;
+        self.execs.insert(
+            name.to_string(),
+            LoadedExec { name: name.to_string(), exe, batch: info.batch, n_outputs: info.outputs.len() },
+        );
+        Ok(())
+    }
+
+    /// Compile an arbitrary HLO text file (kernel benches use this).
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+    }
+
+    pub fn has_exec(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    pub fn batch_of(&self, name: &str) -> Result<usize> {
+        Ok(self.exec_ref(name)?.batch)
+    }
+
+    fn exec_ref(&self, name: &str) -> Result<&LoadedExec> {
+        self.execs
+            .get(name)
+            .ok_or_else(|| anyhow!("executable {name:?} not loaded"))
+    }
+
+    // ---- buffer helpers ------------------------------------------------
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+
+    pub fn upload_i8(&self, data: &[i8], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i8 {dims:?}: {e:?}"))
+    }
+
+    /// Upload all model weights once; reuse across every execution.
+    pub fn upload_weights(&self, store: &WeightStore) -> Result<WeightBuffers> {
+        let mut bufs = Vec::with_capacity(store.order.len());
+        for p in &self.manifest.params {
+            let mat = store.get(&p.name)?;
+            let dims: Vec<usize> = p.shape.clone();
+            bufs.push(self.upload_f32(&mat.data, &dims)?);
+        }
+        Ok(WeightBuffers { bufs })
+    }
+
+    // ---- execution -------------------------------------------------
+
+    /// Run one of the model executables: (tokens, *bits, *params).
+    /// `tokens` is row-major [batch, seq_len]; `grids` one i32 grid per
+    /// quantized matrix in manifest order.
+    pub fn run_model(
+        &self,
+        name: &str,
+        tokens: &[i32],
+        grids: &[Vec<i32>],
+        weights: &WeightBuffers,
+    ) -> Result<Vec<Literal>> {
+        let le = self.exec_ref(name)?;
+        let batch = le.batch;
+        let seq = self.manifest.config.seq_len;
+        if tokens.len() != batch * seq {
+            bail!("{name}: tokens len {} != {batch}x{seq}", tokens.len());
+        }
+        if grids.len() != self.manifest.quantized.len() {
+            bail!("{name}: got {} bit grids, want {}", grids.len(), self.manifest.quantized.len());
+        }
+        let mut args: Vec<PjRtBuffer> = Vec::with_capacity(1 + grids.len());
+        args.push(self.upload_i32(tokens, &[batch, seq])?);
+        for (gi, grid) in grids.iter().enumerate() {
+            let (gr, gc) = self.manifest.bits_shape(&self.manifest.quantized[gi])?;
+            if grid.len() != gr * gc {
+                bail!("{name}: grid {gi} len {} != {gr}x{gc}", grid.len());
+            }
+            args.push(self.upload_i32(grid, &[gr, gc])?);
+        }
+        let mut refs: Vec<&PjRtBuffer> = args.iter().collect();
+        refs.extend(weights.bufs.iter());
+
+        let t0 = Instant::now();
+        let out = le
+            .exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.borrow_mut();
+            let s = stats.entry(name.to_string()).or_default();
+            s.calls += 1;
+            s.total_secs += dt;
+        }
+        if parts.len() != le.n_outputs {
+            bail!("{name}: {} outputs, manifest says {}", parts.len(), le.n_outputs);
+        }
+        Ok(parts)
+    }
+
+    /// Raw execution for kernel-bench executables (caller owns layout).
+    pub fn run_raw(&self, exe: &PjRtLoadedExecutable, args: &[PjRtBuffer]) -> Result<Vec<Literal>> {
+        let refs: Vec<&PjRtBuffer> = args.iter().collect();
+        let out = exe.execute_b(&refs).map_err(|e| anyhow!("execute raw: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("fetch raw: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple raw: {e:?}"))
+    }
+
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+}
+
+/// Device-resident full-precision weights (uploaded once).
+pub struct WeightBuffers {
+    pub bufs: Vec<PjRtBuffer>,
+}
+
+// ---------------------------------------------------------------------
+// literal conversion helpers
+
+pub fn literal_scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("literal scalar: {e:?}"))
+}
+
+pub fn literal_to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal vec: {e:?}"))
+}
+
+pub fn literal_to_mat(lit: &Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v = literal_to_vec_f32(lit)?;
+    Mat::from_vec(rows, cols, v)
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine integration tests live in rust/tests/ (they need the
+    // artifacts directory); here we only test pure helpers.
+    use super::*;
+
+    #[test]
+    fn exec_stats_default() {
+        let s = ExecStats::default();
+        assert_eq!(s.calls, 0);
+        assert_eq!(s.total_secs, 0.0);
+    }
+}

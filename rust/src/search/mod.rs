@@ -1,0 +1,435 @@
+//! Bitwidth search: the paper's scalable greedy (Algorithm 1) and the
+//! classic greedy baseline (Algorithm 2).
+//!
+//! Scalable greedy structure:
+//!  * warm start at b = ⌊B⌋ (uniform),
+//!  * each iteration: sample a calibration batch, compute gradients at
+//!    the current quantized point (one `qgrad` execution), reduce them
+//!    to per-block s_up / s_down surrogates (Eq. 9/10),
+//!  * two-stage batched update — pure expansion while under budget,
+//!    balanced top-k/2 up + bottom-k/2 down exchange at the budget,
+//!  * acceptance check on the same batch (one `qloss` execution):
+//!    reject and halve k if the loss got worse,
+//!  * stop when k < ⌊γ_T·N⌋.
+//!
+//! Cost per iteration is two executable calls — independent of N —
+//! which is the whole point versus Algorithm 2's O(N) marginal-gain
+//! evaluations per allocated bit.
+
+use anyhow::Result;
+
+use crate::calib::BatchSampler;
+use crate::model::WeightStore;
+use crate::quant::{BitAlloc, BlockIndex};
+use crate::runtime::{literal_scalar_f32, literal_to_mat, Engine, WeightBuffers};
+use crate::sensitivity::{block_stats, BlockStats};
+use crate::tensor::Mat;
+use crate::util::timer::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Target average code bits per weight.
+    pub budget: f64,
+    /// Initial / terminal batched-update ratios (paper: 5% / 2%).
+    pub gamma0: f64,
+    pub gamma_t: f64,
+    /// Precision search space (paper: {1..8}).
+    pub bits_min: i32,
+    pub bits_max: i32,
+    /// Calibration batch seed.
+    pub seed: u64,
+    /// Ablation (fig 15): reuse the gradients from iteration 0 instead
+    /// of re-estimating at every new quantized point.
+    pub fixed_grads: bool,
+    /// Hard cap on iterations (safety; paper needs 16-36).
+    pub max_iters: usize,
+    /// Relative same-batch improvement below which an accepted step
+    /// still halves k. Algorithm 1 halves only on rejection; with a
+    /// small N the batch noise is low enough that outright rejections
+    /// get rare, so this supplies the "implicit stopping criterion" the
+    /// paper attributes to the acceptance check (§4.2).
+    pub accept_tol: f64,
+    pub verbose: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            budget: 3.0,
+            gamma0: 0.05,
+            gamma_t: 0.02,
+            bits_min: 1,
+            bits_max: 8,
+            seed: 1234,
+            fixed_grads: false,
+            max_iters: 100,
+            accept_tol: 5e-3,
+            verbose: false,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IterLog {
+    pub iter: usize,
+    pub k: usize,
+    pub loss_before: f64,
+    pub loss_after: f64,
+    pub accepted: bool,
+    pub avg_bits: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub alloc: BitAlloc,
+    pub iters: Vec<IterLog>,
+    pub wall_secs: f64,
+    pub exec_calls: u64,
+    pub final_loss: f64,
+}
+
+impl SearchResult {
+    pub fn accepted_iters(&self) -> usize {
+        self.iters.iter().filter(|i| i.accepted).count()
+    }
+}
+
+/// Runtime context shared by the searchers: engine + device-resident
+/// weights + host weight copies for the CPU-side reductions.
+pub struct SearchContext<'a> {
+    pub engine: &'a Engine,
+    pub index: &'a BlockIndex,
+    pub store: &'a WeightStore,
+    pub wbufs: &'a WeightBuffers,
+}
+
+impl<'a> SearchContext<'a> {
+    pub fn qloss(&self, tokens: &[i32], alloc: &BitAlloc) -> Result<f64> {
+        let grids = alloc.grids(self.index);
+        let out = self.engine.run_model("qloss", tokens, &grids, self.wbufs)?;
+        Ok(literal_scalar_f32(&out[0])? as f64)
+    }
+
+    /// One `qgrad` call: loss + per-matrix gradients at w^Q.
+    pub fn qgrad(&self, tokens: &[i32], alloc: &BitAlloc) -> Result<(f64, Vec<Mat>)> {
+        let grids = alloc.grids(self.index);
+        let out = self.engine.run_model("qgrad", tokens, &grids, self.wbufs)?;
+        let loss = literal_scalar_f32(&out[0])? as f64;
+        let mut grads = Vec::with_capacity(self.index.mats.len());
+        for (mi, name) in self.index.mats.iter().enumerate() {
+            let p = self.engine.manifest.param(name)?;
+            grads.push(literal_to_mat(&out[1 + mi], p.rows(), p.cols())?);
+        }
+        Ok((loss, grads))
+    }
+
+    pub fn stats(&self, grads: &[Mat], alloc: &BitAlloc) -> BlockStats {
+        block_stats(self.index, &self.store.mats, grads, alloc)
+    }
+}
+
+/// Candidate ordering helpers: indices of blocks eligible to move up /
+/// down, ranked by the surrogate statistics.
+///
+/// Sign convention: around the quantized point, L(w) − L(w^Q) ≈
+/// g(w^Q)ᵀ(w − w^Q) = −ΔᵀHΔ ≤ 0 near a trained optimum — restoring
+/// precision DECREASES loss by |s_up| where s_up (Eq. 9) comes out
+/// negative. The predicted gain of upgrading block i is therefore
+/// −s_up_i, so candidates are ranked by s_up ASCENDING (most negative
+/// first). This is exactly why the paper's App. E.3 finds the *signed*
+/// aggregation superior for up-moves: the sign carries the direction
+/// the magnitude-based variants throw away.
+fn top_up_candidates(stats: &BlockStats, alloc: &BitAlloc, bits_max: i32, k: usize) -> Vec<usize> {
+    let mut cand: Vec<usize> =
+        (0..alloc.bits.len()).filter(|&i| alloc.bits[i] < bits_max).collect();
+    cand.sort_by(|&a, &b| {
+        stats.s_up[a].partial_cmp(&stats.s_up[b]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    cand.truncate(k);
+    cand
+}
+
+fn bottom_down_candidates(
+    stats: &BlockStats,
+    alloc: &BitAlloc,
+    bits_min: i32,
+    k: usize,
+) -> Vec<usize> {
+    let mut cand: Vec<usize> =
+        (0..alloc.bits.len()).filter(|&i| alloc.bits[i] > bits_min).collect();
+    cand.sort_by(|&a, &b| {
+        stats.s_down[a].partial_cmp(&stats.s_down[b]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    cand.truncate(k);
+    cand
+}
+
+/// Algorithm 1: scalable greedy search.
+pub fn scalable_greedy(
+    ctx: &SearchContext,
+    sampler: &mut BatchSampler,
+    batch: usize,
+    cfg: &SearchConfig,
+) -> Result<SearchResult> {
+    let n = ctx.index.n_blocks;
+    let sw = Stopwatch::start();
+    ctx.engine.reset_stats();
+
+    // Warm start: b = ⌊B⌋ uniform (paper: avoids the collapsed-model
+    // regime where gradients are uninformative).
+    let mut alloc = BitAlloc::uniform(ctx.index, (cfg.budget.floor() as i32).max(cfg.bits_min));
+    let mut k = ((cfg.gamma0 * n as f64).floor() as usize).max(1);
+    let k_min = ((cfg.gamma_t * n as f64).floor() as usize).max(1);
+
+    let mut iters = Vec::new();
+    let mut cached_grads: Option<Vec<Mat>> = None;
+    let mut final_loss = f64::NAN;
+    let mut t = 0;
+
+    while k >= k_min && t < cfg.max_iters {
+        let tokens = sampler.sample(batch);
+
+        // Sensitivity at the current quantized point (Eq. 3) — or the
+        // frozen iteration-0 gradients for the fig-15 ablation.
+        let (loss_before, grads) = if cfg.fixed_grads {
+            if let Some(g) = &cached_grads {
+                (ctx.qloss(&tokens, &alloc)?, g.clone())
+            } else {
+                let (l, g) = ctx.qgrad(&tokens, &alloc)?;
+                cached_grads = Some(g.clone());
+                (l, g)
+            }
+        } else {
+            ctx.qgrad(&tokens, &alloc)?
+        };
+        let stats = ctx.stats(&grads, &alloc);
+
+        // Two-stage batched update.
+        let mut next = alloc.clone();
+        let avg = alloc.avg_bits();
+        if avg < cfg.budget {
+            // Pure expansion, capped so we don't overshoot the budget.
+            let headroom = ((cfg.budget - avg) * n as f64).floor() as usize;
+            let k_eff = k.min(headroom.max(1));
+            for i in top_up_candidates(&stats, &alloc, cfg.bits_max, k_eff) {
+                next.bits[i] += 1;
+            }
+        } else {
+            // Balanced exchange at the budget boundary.
+            let half = (k / 2).max(1);
+            let ups = top_up_candidates(&stats, &alloc, cfg.bits_max, half);
+            let downs: Vec<usize> = bottom_down_candidates(&stats, &alloc, cfg.bits_min, half + ups.len())
+                .into_iter()
+                .filter(|i| !ups.contains(i))
+                .take(ups.len())
+                .collect();
+            // Exchange only in matched pairs to keep the budget exact.
+            let pairs = ups.len().min(downs.len());
+            for &i in ups.iter().take(pairs) {
+                next.bits[i] += 1;
+            }
+            for &i in downs.iter().take(pairs) {
+                next.bits[i] -= 1;
+            }
+        }
+
+        // Acceptance check on the SAME batch (Algorithm 1 line 11).
+        let loss_after = ctx.qloss(&tokens, &next)?;
+        let accepted = loss_after <= loss_before;
+        if accepted {
+            alloc = next;
+            // Accepted but marginal => the exchange frontier is flattening;
+            // shrink the move size (implicit stopping criterion).
+            if loss_before - loss_after < cfg.accept_tol * loss_before.abs() {
+                k /= 2;
+            }
+        } else {
+            k /= 2;
+        }
+        final_loss = if accepted { loss_after } else { loss_before };
+        iters.push(IterLog {
+            iter: t,
+            k,
+            loss_before,
+            loss_after,
+            accepted,
+            avg_bits: alloc.avg_bits(),
+        });
+        if cfg.verbose {
+            println!(
+                "  iter {t:3} k={k:4} loss {loss_before:.4} -> {loss_after:.4} {} avg_bits={:.3}",
+                if accepted { "accept" } else { "REJECT" },
+                alloc.avg_bits()
+            );
+        }
+        t += 1;
+    }
+
+    let exec_calls = ctx.engine.stats().values().map(|s| s.calls).sum();
+    Ok(SearchResult { alloc, iters, wall_secs: sw.secs(), exec_calls, final_loss })
+}
+
+/// Algorithm 2: classic greedy at COMPONENT granularity (one component
+/// = one quantized matrix). Each step evaluates the true marginal loss
+/// of +1 bit for every component — O(N_components) executions per
+/// allocated bit. Tractable only because our component count is small;
+/// at the paper's block granularity this is the ~10^10-evaluation
+/// baseline of Table 3.
+pub fn classic_greedy(
+    ctx: &SearchContext,
+    sampler: &mut BatchSampler,
+    batch: usize,
+    budget: f64,
+    bits_min: i32,
+    bits_max: i32,
+    verbose: bool,
+) -> Result<SearchResult> {
+    let sw = Stopwatch::start();
+    ctx.engine.reset_stats();
+    let n_mats = ctx.index.mats.len();
+    // Component-uniform allocation, starting from the minimum.
+    let mut comp_bits = vec![bits_min; n_mats];
+    let tokens = sampler.sample(batch);
+
+    let alloc_of = |comp_bits: &[i32]| -> BitAlloc {
+        let mut a = BitAlloc::uniform(ctx.index, bits_min);
+        for (mi, &b) in comp_bits.iter().enumerate() {
+            for i in ctx.index.mat_range(mi) {
+                a.bits[i] = b;
+            }
+        }
+        a
+    };
+
+    let mut iters = Vec::new();
+    let mut cur_loss = ctx.qloss(&tokens, &alloc_of(&comp_bits))?;
+    let mut t = 0;
+    loop {
+        let avg = alloc_of(&comp_bits).avg_bits();
+        if avg >= budget {
+            break;
+        }
+        // Evaluate the marginal gain of +1 bit on every component.
+        let mut best: Option<(usize, f64)> = None;
+        for mi in 0..n_mats {
+            if comp_bits[mi] >= bits_max {
+                continue;
+            }
+            let mut trial = comp_bits.clone();
+            trial[mi] += 1;
+            let loss = ctx.qloss(&tokens, &alloc_of(&trial))?;
+            let gain = cur_loss - loss;
+            if best.map_or(true, |(_, g)| gain > g) {
+                best = Some((mi, gain));
+            }
+        }
+        let Some((mi, gain)) = best else { break };
+        comp_bits[mi] += 1;
+        cur_loss -= gain;
+        iters.push(IterLog {
+            iter: t,
+            k: 1,
+            loss_before: cur_loss + gain,
+            loss_after: cur_loss,
+            accepted: true,
+            avg_bits: alloc_of(&comp_bits).avg_bits(),
+        });
+        if verbose {
+            println!(
+                "  classic iter {t}: +1 bit to {} (gain {gain:.5}), avg {:.3}",
+                ctx.index.mats[mi],
+                alloc_of(&comp_bits).avg_bits()
+            );
+        }
+        t += 1;
+    }
+    let exec_calls = ctx.engine.stats().values().map(|s| s.calls).sum();
+    let final_loss = cur_loss;
+    Ok(SearchResult { alloc: alloc_of(&comp_bits), iters, wall_secs: sw.secs(), exec_calls, final_loss })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Config};
+
+    fn toy_index() -> BlockIndex {
+        BlockIndex {
+            mats: vec!["a".into(), "b".into()],
+            grids: vec![(4, 4), (2, 4)],
+            offsets: vec![0, 16],
+            block_rows: 32,
+            block_cols: 32,
+            n_blocks: 24,
+        }
+    }
+
+    #[test]
+    fn candidates_respect_bounds() {
+        forall("cand-bounds", Config::default(), |g| {
+            let index = toy_index();
+            let n = index.n_blocks;
+            let mut alloc = BitAlloc::uniform(&index, 3);
+            for b in alloc.bits.iter_mut() {
+                *b = g.i32_in(1, 8);
+            }
+            let stats = BlockStats {
+                s_up: (0..n).map(|_| g.rng.normal()).collect(),
+                s_down: (0..n).map(|_| g.rng.normal().abs()).collect(),
+            };
+            let k = g.usize_in(1, n);
+            let ups = top_up_candidates(&stats, &alloc, 8, k);
+            crate::prop_assert!(ups.len() <= k);
+            for &i in &ups {
+                crate::prop_assert!(alloc.bits[i] < 8);
+            }
+            // ranked ascending by s_up (most negative = biggest gain)
+            for w in ups.windows(2) {
+                crate::prop_assert!(stats.s_up[w[0]] <= stats.s_up[w[1]]);
+            }
+            let downs = bottom_down_candidates(&stats, &alloc, 1, k);
+            for &i in &downs {
+                crate::prop_assert!(alloc.bits[i] > 1);
+            }
+            for w in downs.windows(2) {
+                crate::prop_assert!(stats.s_down[w[0]] <= stats.s_down[w[1]]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exchange_preserves_budget_sketch() {
+        // The balanced stage moves equal counts up and down => the sum
+        // of bits is invariant. Simulated here without an engine.
+        forall("exchange-budget", Config::default(), |g| {
+            let index = toy_index();
+            let n = index.n_blocks;
+            let mut alloc = BitAlloc::uniform(&index, 3);
+            let stats = BlockStats {
+                s_up: (0..n).map(|_| g.rng.normal()).collect(),
+                s_down: (0..n).map(|_| g.rng.normal().abs()).collect(),
+            };
+            let k = g.usize_in(2, 12);
+            let half = (k / 2).max(1);
+            let ups = top_up_candidates(&stats, &alloc, 8, half);
+            let downs: Vec<usize> = bottom_down_candidates(&stats, &alloc, 1, half + ups.len())
+                .into_iter()
+                .filter(|i| !ups.contains(i))
+                .take(ups.len())
+                .collect();
+            let before: i64 = alloc.bits.iter().map(|&b| b as i64).sum();
+            let pairs = ups.len().min(downs.len());
+            for &i in ups.iter().take(pairs) {
+                alloc.bits[i] += 1;
+            }
+            for &i in downs.iter().take(pairs) {
+                alloc.bits[i] -= 1;
+            }
+            let after: i64 = alloc.bits.iter().map(|&b| b as i64).sum();
+            crate::prop_assert!(before == after, "{before} != {after}");
+            crate::prop_assert!(alloc.bits.iter().all(|&b| (1..=8).contains(&b)));
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,354 @@
+//! Progressive-quantization sensitivity estimation (paper §3).
+//!
+//! The core quantity is the first-order Taylor term around the
+//! QUANTIZED model (Eq. 3): s_i = |g(w^Q)ᵀ Δw_i|, with the asymmetric
+//! block surrogates of App. E.3:
+//!
+//!   s_up_i   = g(w_i^Q)ᵀ (w_i − w_i^Q)          (Eq. 9, signed)
+//!   s_down_i = 2^{−b_i} · ‖g(w_i^Q) ⊙ w_i^Q‖₁    (Eq. 10)
+//!
+//! plus the Table-1 "metric zoo" used for the comparison figures
+//! (fig 3 / fig 10 analogs) and the channel ℓ1 aggregation feeding the
+//! bi-directional reordering (§4.1).
+
+use std::collections::HashMap;
+
+
+use crate::model::Manifest;
+use crate::quant::{BitAlloc, BlockIndex};
+use crate::tensor::Mat;
+use crate::util::threadpool::par_map;
+
+/// Per-block statistics for one greedy step.
+#[derive(Clone, Debug)]
+pub struct BlockStats {
+    pub s_up: Vec<f64>,
+    pub s_down: Vec<f64>,
+}
+
+/// Compute s_up / s_down for every block given gradients at w^Q.
+///
+/// `grads` holds one gradient matrix per quantized matrix (manifest
+/// order). Weights are the CURRENT (possibly reordered) full-precision
+/// matrices; w^Q is recomputed here with the rust RTN mirror.
+pub fn block_stats(
+    index: &BlockIndex,
+    weights: &HashMap<String, Mat>,
+    grads: &[Mat],
+    alloc: &BitAlloc,
+) -> BlockStats {
+    let (br, bc) = (index.block_rows, index.block_cols);
+    let per_mat: Vec<(Vec<f64>, Vec<f64>)> = par_map(&index.mats, |mi, name| {
+        let w = &weights[name.as_str()];
+        let g = &grads[mi];
+        let range = index.mat_range(mi);
+        let grid = &alloc.bits[range];
+        let (gr, gc) = index.grids[mi];
+        let mut s_up = vec![0.0f64; gr * gc];
+        let mut s_down = vec![0.0f64; gr * gc];
+        // Fused quantize+reduce (EXPERIMENTS.md §Perf iteration 2):
+        // quantize one row-group into a stack buffer and accumulate
+        // immediately, instead of materializing the full w^Q matrix
+        // (two 2.6 MB allocations per search iteration before).
+        let mut buf = vec![0.0f32; bc];
+        for bi in 0..gr {
+            for bj in 0..gc {
+                let b = grid[bi * gc + bj];
+                let eps = (2.0f64).powi(-b.clamp(0, 30));
+                let mut up = 0.0f64;
+                let mut down = 0.0f64;
+                for r in 0..br {
+                    let row = bi * br + r;
+                    let base = row * w.cols + bj * bc;
+                    buf.copy_from_slice(&w.data[base..base + bc]);
+                    crate::quant::fakequant_group(&mut buf, b);
+                    for c in 0..bc {
+                        let gi = g.data[base + c] as f64;
+                        up += gi * (w.data[base + c] - buf[c]) as f64;
+                        down += (gi * buf[c] as f64).abs();
+                    }
+                }
+                s_up[bi * gc + bj] = up;
+                s_down[bi * gc + bj] = eps * down;
+            }
+        }
+        (s_up, s_down)
+    });
+    let mut s_up = Vec::with_capacity(index.n_blocks);
+    let mut s_down = Vec::with_capacity(index.n_blocks);
+    for (u, d) in per_mat {
+        s_up.extend(u);
+        s_down.extend(d);
+    }
+    BlockStats { s_up, s_down }
+}
+
+/// Element-wise sensitivity map s_ij = |g_ij · Δw_ij| for one matrix
+/// (Eq. 5) — the raw material for channel aggregation and the fig-2
+/// style heat structure.
+pub fn element_sensitivity(w: &Mat, g: &Mat, wq: &Mat) -> Mat {
+    let mut out = Mat::zeros(w.rows, w.cols);
+    for i in 0..w.data.len() {
+        out.data[i] = (g.data[i] * (w.data[i] - wq.data[i])).abs();
+    }
+    out
+}
+
+/// ℓ1 channel aggregation (paper §4.1: "emphasizes the presence of
+/// highly sensitive elements rather than canceling them out").
+pub struct ChannelScores {
+    pub rows: Vec<f32>,
+    pub cols: Vec<f32>,
+}
+
+pub fn channel_scores(sens: &Mat) -> ChannelScores {
+    ChannelScores { rows: sens.row_l1(), cols: sens.col_l1() }
+}
+
+/// Concentration diagnostic for the fig-2/fig-13 analogs: fraction of
+/// total channel mass carried by the top `top_frac` channels. A
+/// uniform distribution gives ~top_frac; bi-directional clustering
+/// shows up as values several times larger.
+pub fn concentration(scores: &[f32], top_frac: f64) -> f64 {
+    let mut sorted: Vec<f32> = scores.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let k = ((scores.len() as f64 * top_frac).ceil() as usize).max(1);
+    let top: f64 = sorted[..k].iter().map(|&x| x as f64).sum();
+    let total: f64 = sorted.iter().map(|&x| x as f64).sum();
+    if total > 0.0 {
+        top / total
+    } else {
+        0.0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table-1 metric zoo (for the comparison experiments)
+
+/// Which sensitivity metric to use when scoring elements/components.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// ① |g(w)ᵀ Δw| — first-order at FULL-PRECISION weights (LLM-MQ).
+    FpGradTimesDelta,
+    /// ② |g(w)ᵀ Δw ⊙ w| — TACQ-style.
+    FpGradDeltaWeight,
+    /// ③ Fisher-diagonal: g² ⊙ Δw² (SqueezeLLM).
+    FisherDelta,
+    /// ④ activation second-order: Δw² · diag(XXᵀ) (SpQR/OWQ family).
+    ActHessianDelta,
+    /// Ours (Eq. 3): |g(w^Q)ᵀ Δw| — first-order at the QUANTIZED point.
+    QuantGradTimesDelta,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::FpGradTimesDelta => "fp-grad*dw (1)",
+            Metric::FpGradDeltaWeight => "fp-grad*dw*w (2)",
+            Metric::FisherDelta => "fisher*dw2 (3)",
+            Metric::ActHessianDelta => "act-hess*dw2 (4)",
+            Metric::QuantGradTimesDelta => "quant-grad*dw (ours)",
+        }
+    }
+
+    pub fn all() -> [Metric; 5] {
+        [
+            Metric::FpGradTimesDelta,
+            Metric::FpGradDeltaWeight,
+            Metric::FisherDelta,
+            Metric::ActHessianDelta,
+            Metric::QuantGradTimesDelta,
+        ]
+    }
+}
+
+/// Element scores for one matrix under a given metric.
+/// `g` must be evaluated at the point the metric calls for (FP weights
+/// for ①②③, quantized weights for ours); `gram_diag` is the diagonal of
+/// this layer-input's XᵀX (only used by ④).
+pub fn element_metric(
+    metric: Metric,
+    w: &Mat,
+    wq: &Mat,
+    g: &Mat,
+    gram_diag: Option<&[f32]>,
+) -> Mat {
+    let mut out = Mat::zeros(w.rows, w.cols);
+    for r in 0..w.rows {
+        for c in 0..w.cols {
+            let i = r * w.cols + c;
+            let dw = w.data[i] - wq.data[i];
+            out.data[i] = match metric {
+                Metric::FpGradTimesDelta | Metric::QuantGradTimesDelta => {
+                    (g.data[i] * dw).abs()
+                }
+                Metric::FpGradDeltaWeight => (g.data[i] * dw * w.data[i]).abs(),
+                Metric::FisherDelta => g.data[i] * g.data[i] * dw * dw,
+                Metric::ActHessianDelta => {
+                    let xj = gram_diag.map(|d| d[c]).unwrap_or(1.0);
+                    dw * dw * xj
+                }
+            };
+        }
+    }
+    out
+}
+
+/// Spearman rank correlation between an estimated sensitivity vector
+/// and ground-truth loss deltas (the fig-3 quality measure).
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let rank = |v: &[f64]| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&x, &y| v[x].partial_cmp(&v[y]).unwrap_or(std::cmp::Ordering::Equal));
+        let mut r = vec![0.0; v.len()];
+        for (pos, &i) in idx.iter().enumerate() {
+            r[i] = pos as f64;
+        }
+        r
+    };
+    let ra = rank(a);
+    let rb = rank(b);
+    let mean = (n as f64 - 1.0) / 2.0;
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for i in 0..n {
+        let xa = ra[i] - mean;
+        let xb = rb[i] - mean;
+        num += xa * xb;
+        da += xa * xa;
+        db += xb * xb;
+    }
+    if da == 0.0 || db == 0.0 {
+        0.0
+    } else {
+        num / (da * db).sqrt()
+    }
+}
+
+/// Sensitivity result loaded into layer granularity (fig 3/5 analogs):
+/// sum of |s_up| over every block of every matrix in a decoder layer.
+pub fn layer_sensitivity(manifest: &Manifest, index: &BlockIndex, s_up: &[f64]) -> Vec<f64> {
+    let mut per_layer = vec![0.0f64; manifest.config.n_layers];
+    for (mi, name) in index.mats.iter().enumerate() {
+        if let (Some(layer), _) = crate::model::split_param_name(name) {
+            let r = index.mat_range(mi);
+            per_layer[layer] += s_up[r].iter().map(|x| x.abs()).sum::<f64>();
+        }
+    }
+    per_layer
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal_f32()).collect()).unwrap()
+    }
+
+    #[test]
+    fn spearman_perfect_and_inverted() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        assert!((spearman(&a, &a) - 1.0).abs() < 1e-12);
+        let b = vec![4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&a, &b) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_transform_invariant() {
+        let a: Vec<f64> = vec![0.1, 0.5, 0.2, 0.9, 0.7];
+        let b: Vec<f64> = a.iter().map(|x| f64::exp(*x) * 100.0).collect();
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concentration_uniform_vs_peaked() {
+        let uniform = vec![1.0f32; 100];
+        let c_u = concentration(&uniform, 0.1);
+        assert!((c_u - 0.1).abs() < 0.02, "{c_u}");
+        let mut peaked = vec![0.01f32; 100];
+        for p in peaked.iter_mut().take(5) {
+            *p = 10.0;
+        }
+        let c_p = concentration(&peaked, 0.1);
+        assert!(c_p > 0.9, "{c_p}");
+    }
+
+    #[test]
+    fn element_sensitivity_zero_when_exact() {
+        let w = rand_mat(4, 4, 1);
+        let g = rand_mat(4, 4, 2);
+        let s = element_sensitivity(&w, &g, &w);
+        assert!(s.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn block_stats_shapes_and_signs() {
+        use std::collections::HashMap;
+        let index = BlockIndex {
+            mats: vec!["m".into()],
+            grids: vec![(2, 2)],
+            offsets: vec![0],
+            block_rows: 32,
+            block_cols: 32,
+            n_blocks: 4,
+        };
+        let mut weights = HashMap::new();
+        weights.insert("m".to_string(), rand_mat(64, 64, 3));
+        let grads = vec![rand_mat(64, 64, 4)];
+        let alloc = BitAlloc::uniform(&index, 3);
+        let st = block_stats(&index, &weights, &grads, &alloc);
+        assert_eq!(st.s_up.len(), 4);
+        assert_eq!(st.s_down.len(), 4);
+        // s_down is a scaled L1 norm => strictly nonnegative
+        assert!(st.s_down.iter().all(|&x| x >= 0.0));
+        // FP blocks have zero delta => zero s_up
+        let alloc_fp = BitAlloc::uniform(&index, 16);
+        let st_fp = block_stats(&index, &weights, &grads, &alloc_fp);
+        assert!(st_fp.s_up.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn s_down_eps_scales_with_bits() {
+        use std::collections::HashMap;
+        let index = BlockIndex {
+            mats: vec!["m".into()],
+            grids: vec![(1, 1)],
+            offsets: vec![0],
+            block_rows: 32,
+            block_cols: 32,
+            n_blocks: 1,
+        };
+        let mut weights = HashMap::new();
+        weights.insert("m".to_string(), rand_mat(32, 32, 5));
+        let grads = vec![rand_mat(32, 32, 6)];
+        let s3 = block_stats(&index, &weights, &grads, &BitAlloc::uniform(&index, 3));
+        let s6 = block_stats(&index, &weights, &grads, &BitAlloc::uniform(&index, 6));
+        // eps halves per extra bit; ||g.wq||_1 changes only mildly
+        assert!(s3.s_down[0] > 3.0 * s6.s_down[0], "{} vs {}", s3.s_down[0], s6.s_down[0]);
+    }
+
+    #[test]
+    fn metric_zoo_produces_nonnegative_scores() {
+        let w = rand_mat(8, 8, 7);
+        let wq = {
+            let mut m = w.clone();
+            crate::quant::fakequant_group(&mut m.data, 3);
+            m
+        };
+        let g = rand_mat(8, 8, 8);
+        let diag = vec![1.0f32; 8];
+        for metric in Metric::all() {
+            let s = element_metric(metric, &w, &wq, &g, Some(&diag));
+            assert!(s.data.iter().all(|&x| x >= 0.0), "{:?}", metric);
+        }
+    }
+}

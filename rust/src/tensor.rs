@@ -1,0 +1,199 @@
+//! Row-major f32 matrix used throughout the coordinator for weights,
+//! gradients and sensitivity maps. Deliberately minimal: the heavy math
+//! runs in the AOT-compiled XLA executables; this type only needs the
+//! CPU-side bookkeeping ops (block views, permutation, reductions).
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Mat> {
+        if data.len() != rows * cols {
+            bail!("Mat::from_vec: {}x{} != {}", rows, cols, data.len());
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy out one (br x bc) block at block coordinates (bi, bj).
+    pub fn block(&self, bi: usize, bj: usize, br: usize, bc: usize) -> Mat {
+        let mut out = Mat::zeros(br, bc);
+        for r in 0..br {
+            let src = (bi * br + r) * self.cols + bj * bc;
+            out.data[r * bc..(r + 1) * bc].copy_from_slice(&self.data[src..src + bc]);
+        }
+        out
+    }
+
+    pub fn set_block(&mut self, bi: usize, bj: usize, blk: &Mat) {
+        for r in 0..blk.rows {
+            let dst = (bi * blk.rows + r) * self.cols + bj * blk.cols;
+            self.data[dst..dst + blk.cols].copy_from_slice(blk.row(r));
+        }
+    }
+
+    /// Apply a row permutation: out[r] = self[perm[r]].
+    pub fn permute_rows(&self, perm: &[usize]) -> Mat {
+        assert_eq!(perm.len(), self.rows);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for (r, &src) in perm.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(src));
+        }
+        out
+    }
+
+    /// Apply a column permutation: out[., c] = self[., perm[c]].
+    pub fn permute_cols(&self, perm: &[usize]) -> Mat {
+        assert_eq!(perm.len(), self.cols);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (c, &s) in perm.iter().enumerate() {
+                dst[c] = src[s];
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Row-wise L1 norms (channel sensitivity aggregation, paper §4.1).
+    pub fn row_l1(&self) -> Vec<f32> {
+        (0..self.rows).map(|r| self.row(r).iter().map(|x| x.abs()).sum()).collect()
+    }
+
+    pub fn col_l1(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (c, x) in self.row(r).iter().enumerate() {
+                out[c] += x.abs();
+            }
+        }
+        out
+    }
+
+    pub fn sq_frobenius(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum()
+    }
+
+    /// Element-wise |a * b| summed per block grid cell — the inner loop
+    /// of the sensitivity reductions.
+    pub fn abs_dot(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (*a as f64 * *b as f64).abs())
+            .sum()
+    }
+}
+
+/// Invert a permutation: out[perm[i]] = i.
+pub fn invert_perm(perm: &[usize]) -> Vec<usize> {
+    let mut out = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        out[p] = i;
+    }
+    out
+}
+
+/// Argsort descending by key.
+pub fn argsort_desc(keys: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..keys.len()).collect();
+    idx.sort_by(|&a, &b| keys[b].partial_cmp(&keys[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_mat(r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|x| x as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let m = seq_mat(4, 6);
+        let b = m.block(1, 2, 2, 2);
+        assert_eq!(b.data, vec![m.at(2, 4), m.at(2, 5), m.at(3, 4), m.at(3, 5)]);
+        let mut m2 = m.clone();
+        m2.set_block(1, 2, &b);
+        assert_eq!(m2, m);
+    }
+
+    #[test]
+    fn permute_rows_cols() {
+        let m = seq_mat(3, 2);
+        let pr = m.permute_rows(&[2, 0, 1]);
+        assert_eq!(pr.row(0), m.row(2));
+        let pc = m.permute_cols(&[1, 0]);
+        assert_eq!(pc.at(0, 0), m.at(0, 1));
+    }
+
+    #[test]
+    fn permute_then_invert_is_identity() {
+        let m = seq_mat(5, 4);
+        let perm = vec![3, 1, 4, 0, 2];
+        let inv = invert_perm(&perm);
+        assert_eq!(m.permute_rows(&perm).permute_rows(&inv), m);
+        let cperm = vec![2, 0, 3, 1];
+        assert_eq!(m.permute_cols(&cperm).permute_cols(&invert_perm(&cperm)), m);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = seq_mat(3, 5);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn l1_reductions() {
+        let m = Mat::from_vec(2, 2, vec![1.0, -2.0, 3.0, -4.0]).unwrap();
+        assert_eq!(m.row_l1(), vec![3.0, 7.0]);
+        assert_eq!(m.col_l1(), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn argsort() {
+        assert_eq!(argsort_desc(&[1.0, 5.0, 3.0]), vec![1, 2, 0]);
+    }
+}

@@ -1,0 +1,155 @@
+//! In-tree property-testing mini-framework (proptest replacement).
+//!
+//! `forall` runs a property over N seeded random cases; on failure it
+//! reports the failing seed so the case is exactly reproducible, and
+//! performs a light "shrink" pass by re-running with smaller size
+//! hints. Generators are plain closures over [`crate::util::rng::Rng`].
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to generators (e.g. max vec length).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0x5ca1eb175, max_size: 64 }
+    }
+}
+
+/// A generation context: rng + size hint.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        self.rng.range(lo as i64, hi as i64 + 1) as i32
+    }
+
+    pub fn f32_normal(&mut self) -> f32 {
+        self.rng.normal_f32()
+    }
+
+    pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal_f32()).collect()
+    }
+
+    pub fn vec_f32_sized(&mut self) -> Vec<f32> {
+        let len = self.usize_in(1, self.size.max(1));
+        self.vec_f32(len)
+    }
+
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut p);
+        p
+    }
+
+    pub fn pick<'b, T>(&mut self, options: &'b [T]) -> &'b T {
+        &options[self.rng.below(options.len())]
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` over `cfg.cases` random cases. Panics (test failure) with
+/// the failing seed + message on the first violation; tries smaller
+/// size hints first to present the simplest failure found.
+pub fn forall<F>(name: &str, cfg: Config, prop: F)
+where
+    F: Fn(&mut Gen) -> CaseResult,
+{
+    let mut failures: Option<(u64, usize, String)> = None;
+    'outer: for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        // ramp size up over the run: early cases are small
+        let size = 1 + (cfg.max_size - 1) * case / cfg.cases.max(1);
+        let mut rng = Rng::new(case_seed);
+        let mut g = Gen { rng: &mut rng, size };
+        if let Err(msg) = prop(&mut g) {
+            // shrink pass: retry the same seed at smaller sizes
+            for s in [1usize, 2, 4, 8, 16] {
+                if s >= size {
+                    break;
+                }
+                let mut rng2 = Rng::new(case_seed);
+                let mut g2 = Gen { rng: &mut rng2, size: s };
+                if let Err(msg2) = prop(&mut g2) {
+                    failures = Some((case_seed, s, msg2));
+                    break 'outer;
+                }
+            }
+            failures = Some((case_seed, size, msg));
+            break 'outer;
+        }
+    }
+    if let Some((seed, size, msg)) = failures {
+        panic!("property {name:?} falsified (seed={seed:#x}, size={size}): {msg}");
+    }
+}
+
+/// Assert helper returning CaseResult.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("sum-commutes", Config::default(), |g| {
+            let v = g.vec_f32_sized();
+            let a: f32 = v.iter().sum();
+            let b: f32 = v.iter().rev().sum();
+            prop_assert!((a - b).abs() <= 1e-3 * v.len() as f32, "{a} vs {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn failing_property_reports_seed() {
+        forall("always-false", Config { cases: 5, ..Config::default() }, |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall("bounds", Config::default(), |g| {
+            let x = g.usize_in(3, 9);
+            prop_assert!((3..=9).contains(&x));
+            let b = g.i32_in(-2, 2);
+            prop_assert!((-2..=2).contains(&b));
+            let p = g.permutation(10);
+            let mut q = p.clone();
+            q.sort_unstable();
+            prop_assert!(q == (0..10).collect::<Vec<_>>());
+            Ok(())
+        });
+    }
+}

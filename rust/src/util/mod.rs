@@ -1,0 +1,13 @@
+//! In-tree substrates (JSON, RNG, CLI, tables, timing, thread pool).
+//!
+//! The offline crate registry only carries the `xla` closure, so these
+//! replace serde_json / rand / clap / criterion / rayon at the scale
+//! this project needs them.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod threadpool;
+pub mod timer;
+pub mod tomlite;

@@ -1,0 +1,97 @@
+//! Scoped data parallelism over std::thread (rayon replacement).
+//!
+//! The hot CPU loops of the coordinator (block reductions, packing,
+//! GPTQ per-layer solves) are embarrassingly parallel over disjoint
+//! chunks; `par_map_chunks` covers that with zero dependencies.
+//! On a single-core testbed this degrades gracefully to a serial loop.
+
+/// Number of worker threads to use (bounded by available parallelism).
+pub fn n_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f(index, item) -> R` to every item, in parallel chunks, and
+/// return results in input order.
+pub fn par_map<T: Send + Sync, R: Send, F>(items: &[T], f: F) -> Vec<R>
+where
+    F: Fn(usize, &T) -> R + Send + Sync,
+{
+    let workers = n_workers().min(items.len().max(1));
+    if workers <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let chunk = items.len().div_ceil(workers);
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let out_chunks: Vec<&mut [Option<R>]> = out.chunks_mut(chunk).collect();
+    std::thread::scope(|scope| {
+        for (ci, out_chunk) in out_chunks.into_iter().enumerate() {
+            let f = &f;
+            let base = ci * chunk;
+            let in_chunk = &items[base..(base + out_chunk.len()).min(items.len())];
+            scope.spawn(move || {
+                for (j, item) in in_chunk.iter().enumerate() {
+                    out_chunk[j] = Some(f(base + j, item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Parallel in-place transform over mutable chunks of a slice.
+/// `f(chunk_start, chunk)` is called once per chunk.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    if data.len() <= chunk || n_workers() <= 1 {
+        let mut start = 0;
+        let len = data.len();
+        while start < len {
+            let end = (start + chunk).min(len);
+            f(start, &mut data[start..end]);
+            start = end;
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (ci, c) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(ci * chunk, c));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, |i, &x| i * 2 + x);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 3);
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[5u32], |_, &x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_all() {
+        let mut v = vec![0u32; 537];
+        par_chunks_mut(&mut v, 64, |start, c| {
+            for (j, x) in c.iter_mut().enumerate() {
+                *x = (start + j) as u32;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+    }
+}

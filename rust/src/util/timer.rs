@@ -1,0 +1,119 @@
+//! Timing + summary statistics substrate (criterion replacement).
+//!
+//! `Bench` runs a closure with warmup, collects per-iteration wall
+//! times, and reports mean / p50 / p95 / min — enough to regenerate the
+//! paper's latency tables with honest variance.
+
+use std::time::{Duration, Instant};
+
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    pub fn micros(&self) -> f64 {
+        self.secs() * 1e6
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+    pub std_us: f64,
+}
+
+impl Stats {
+    pub fn from_samples_us(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pick = |q: f64| samples[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            n,
+            mean_us: mean,
+            p50_us: pick(0.50),
+            p95_us: pick(0.95),
+            min_us: samples[0],
+            max_us: samples[n - 1],
+            std_us: var.sqrt(),
+        }
+    }
+
+    pub fn line(&self, label: &str) -> String {
+        format!(
+            "{label:<32} n={:<4} mean={:>10.1}us p50={:>10.1}us p95={:>10.1}us min={:>10.1}us",
+            self.n, self.mean_us, self.p50_us, self.p95_us, self.min_us
+        )
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    Stats::from_samples_us(samples)
+}
+
+/// Time-budgeted variant: run until `budget` elapses (at least 3 iters).
+pub fn bench_for<F: FnMut()>(warmup: usize, budget: Duration, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while t0.elapsed() < budget || samples.len() < 3 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    Stats::from_samples_us(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_quantiles() {
+        let s = Stats::from_samples_us((1..=100).map(|x| x as f64).collect());
+        assert_eq!(s.n, 100);
+        assert!((s.mean_us - 50.5).abs() < 1e-9);
+        assert!((s.p50_us - 50.0).abs() <= 1.0);
+        assert!(s.p95_us >= 94.0 && s.p95_us <= 96.0);
+        assert_eq!(s.min_us, 1.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_iters() {
+        let mut count = 0;
+        let s = bench(2, 10, || count += 1);
+        assert_eq!(count, 12);
+        assert_eq!(s.n, 10);
+    }
+}

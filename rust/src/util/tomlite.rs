@@ -1,0 +1,214 @@
+//! TOML-subset parser for the config system (`configs/*.toml`).
+//!
+//! Supported grammar — everything the launcher configs need:
+//!   * `[section]` headers (one level),
+//!   * `key = value` with string / float / int / bool values,
+//!   * `#` comments, blank lines.
+//! Arrays/dates/nested tables are intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Num(x) => Ok(*x),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value. Top-level keys live under
+/// the empty-string section.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn read_file(path: &std::path::Path) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        TomlDoc::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.as_f64(),
+        }
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        Ok(self.f64_or(section, key, default as f64)? as usize)
+    }
+
+    pub fn i32_or(&self, section: &str, key: &str, default: i32) -> Result<i32> {
+        Ok(self.f64_or(section, key, default as f64)? as i32)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.as_bool(),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if let Some(s) = v.strip_prefix('"') {
+        let s = s
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string {v:?}"))?;
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    v.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| anyhow!("cannot parse value {v:?}"))
+}
+
+/// Build a SearchConfig from a config file's `[search]` section,
+/// falling back to defaults for absent keys.
+pub fn search_config_from(doc: &TomlDoc) -> Result<crate::search::SearchConfig> {
+    let d = crate::search::SearchConfig::default();
+    Ok(crate::search::SearchConfig {
+        budget: doc.f64_or("search", "budget", d.budget)?,
+        gamma0: doc.f64_or("search", "gamma0", d.gamma0)?,
+        gamma_t: doc.f64_or("search", "gamma_t", d.gamma_t)?,
+        bits_min: doc.i32_or("search", "bits_min", d.bits_min)?,
+        bits_max: doc.i32_or("search", "bits_max", d.bits_max)?,
+        seed: doc.f64_or("search", "seed", d.seed as f64)? as u64,
+        fixed_grads: doc.bool_or("search", "fixed_grads", d.fixed_grads)?,
+        max_iters: doc.usize_or("search", "max_iters", d.max_iters)?,
+        accept_tol: doc.f64_or("search", "accept_tol", d.accept_tol)?,
+        verbose: doc.bool_or("search", "verbose", d.verbose)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# quantization preset
+name = "ultra-low"
+
+[search]
+budget = 2.1
+gamma0 = 0.05
+bits_max = 8
+fixed_grads = false
+
+[reorder]
+enabled = true
+probe_bits = 3
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str().unwrap(), "ultra-low");
+        assert_eq!(doc.f64_or("search", "budget", 0.0).unwrap(), 2.1);
+        assert_eq!(doc.i32_or("search", "bits_max", 0).unwrap(), 8);
+        assert!(doc.bool_or("reorder", "enabled", false).unwrap());
+        // defaults for absent keys
+        assert_eq!(doc.f64_or("search", "missing", 9.5).unwrap(), 9.5);
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let doc = TomlDoc::parse("k = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str().unwrap(), "a # not comment");
+    }
+
+    #[test]
+    fn search_config_roundtrip() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        let cfg = search_config_from(&doc).unwrap();
+        assert_eq!(cfg.budget, 2.1);
+        assert_eq!(cfg.bits_max, 8);
+        assert!(!cfg.fixed_grads);
+        // unspecified keys keep defaults
+        assert_eq!(cfg.bits_min, crate::search::SearchConfig::default().bits_min);
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = @@").is_err());
+    }
+}

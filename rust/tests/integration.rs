@@ -1,0 +1,450 @@
+//! Integration tests over the AOT artifacts + PJRT runtime.
+//!
+//! These need `artifacts/` (run `make artifacts` first); they are the
+//! cross-layer correctness net: rust RTN vs Pallas kernel goldens,
+//! executable signatures, gradient consistency, reordering equivalence,
+//! search invariants, serving round-trip.
+
+use std::path::{Path, PathBuf};
+
+use scalebits::calib::BatchSampler;
+use scalebits::coordinator::Pipeline;
+use scalebits::model::{Manifest, WeightStore};
+use scalebits::quant::{fakequant_mat, quant_group_codes, BitAlloc, BlockIndex};
+use scalebits::runtime::{literal_scalar_f32, literal_to_vec_f32, Engine};
+use scalebits::search::SearchConfig;
+use scalebits::tensor::Mat;
+use scalebits::util::json::Json;
+
+fn artifacts() -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    p
+}
+
+// ---------------------------------------------------------------------
+// golden cross-validation: rust RTN mirror vs the Pallas reference
+
+#[test]
+fn golden_fakequant_matches_python() {
+    let g = Json::read_file(&artifacts().join("golden.json")).unwrap();
+    let fq = g.get("fakequant").unwrap();
+    let rows = fq.get("rows").unwrap().as_usize().unwrap();
+    let cols = fq.get("cols").unwrap().as_usize().unwrap();
+    let w = Mat::from_vec(rows, cols, fq.get("w").unwrap().to_vec_f32().unwrap()).unwrap();
+    let bits = fq.get("bits").unwrap().to_vec_i32().unwrap();
+    let want = fq.get("out").unwrap().to_vec_f32().unwrap();
+    let br = fq.get("block_rows").unwrap().as_usize().unwrap();
+    let bc = fq.get("block_cols").unwrap().as_usize().unwrap();
+    let got = fakequant_mat(&w, &bits, br, bc);
+    for i in 0..want.len() {
+        assert!(
+            (got.data[i] - want[i]).abs() < 1e-5,
+            "elem {i}: rust {} vs python {}",
+            got.data[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn golden_codes_match_python() {
+    let g = Json::read_file(&artifacts().join("golden.json")).unwrap();
+    let c = g.get("codes4").unwrap();
+    let rows = c.get("rows").unwrap().as_usize().unwrap();
+    let cols = c.get("cols").unwrap().as_usize().unwrap();
+    let group = c.get("group").unwrap().as_usize().unwrap();
+    let w = Mat::from_vec(rows, cols, c.get("w").unwrap().to_vec_f32().unwrap()).unwrap();
+    let want_codes = c.get("codes").unwrap().to_vec_i32().unwrap();
+    let want_scales = c.get("scales").unwrap().to_vec_f32().unwrap();
+    let ngroups = cols / group;
+    for r in 0..rows {
+        for gidx in 0..ngroups {
+            let seg: Vec<f32> =
+                (0..group).map(|j| w.at(r, gidx * group + j)).collect();
+            let (codes, scale) = quant_group_codes(&seg, 4);
+            let s_want = want_scales[r * ngroups + gidx];
+            assert!(
+                (scale - s_want).abs() <= 1e-6 * s_want.abs().max(1e-6),
+                "scale ({r},{gidx}): {scale} vs {s_want}"
+            );
+            for j in 0..group {
+                let want = want_codes[r * cols + gidx * group + j] as i8;
+                assert_eq!(codes[j], want, "code ({r},{},{j})", gidx * group + j);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// runtime + executables
+
+#[test]
+fn qloss_fp_is_finite_and_matches_training_regime() {
+    let p = Pipeline::load(&artifacts(), &["qloss"]).unwrap();
+    let mut sampler = p.sampler(7);
+    let tokens = sampler.sample(p.engine.batch_of("qloss").unwrap());
+    let loss = p.ctx().qloss(&tokens, &p.fp_alloc()).unwrap();
+    assert!(loss.is_finite());
+    // trained model: loss well below uniform ln(512)=6.24 and above 0
+    assert!(loss > 0.5 && loss < 5.5, "{loss}");
+}
+
+#[test]
+fn qgrad_loss_consistent_with_qloss() {
+    let p = Pipeline::load(&artifacts(), &["qloss", "qgrad"]).unwrap();
+    let mut sampler = p.sampler(9);
+    let tokens = sampler.sample(8);
+    let alloc = BitAlloc::uniform(&p.index, 3);
+    let l1 = p.ctx().qloss(&tokens, &alloc).unwrap();
+    let (l2, grads) = p.ctx().qgrad(&tokens, &alloc).unwrap();
+    assert!((l1 - l2).abs() < 1e-5, "{l1} vs {l2}");
+    assert_eq!(grads.len(), p.index.mats.len());
+    for (mi, g) in grads.iter().enumerate() {
+        let name = &p.index.mats[mi];
+        let info = p.engine.manifest.param(name).unwrap();
+        assert_eq!((g.rows, g.cols), (info.rows(), info.cols()));
+        assert!(g.data.iter().all(|x| x.is_finite()), "{name}");
+    }
+}
+
+#[test]
+fn quantization_monotone_in_bits_on_device() {
+    let p = Pipeline::load(&artifacts(), &["qloss"]).unwrap();
+    let mut sampler = p.sampler(11);
+    let tokens = sampler.sample(8);
+    let l2 = p.ctx().qloss(&tokens, &BitAlloc::uniform(&p.index, 2)).unwrap();
+    let l8 = p.ctx().qloss(&tokens, &BitAlloc::uniform(&p.index, 8)).unwrap();
+    let lfp = p.ctx().qloss(&tokens, &p.fp_alloc()).unwrap();
+    assert!((l8 - lfp).abs() < 0.05, "8-bit ~ FP: {l8} vs {lfp}");
+    assert!(l2 > lfp + 0.05, "2-bit must hurt: {l2} vs {lfp}");
+}
+
+#[test]
+fn device_fakequant_agrees_with_rust_mirror() {
+    // upload weights pre-quantized by the RUST quantizer with FP
+    // sentinel bits == run the original weights with on-device 3-bit
+    // quantization. This pins the two RTN implementations together
+    // through the actual loss computation.
+    let p = Pipeline::load(&artifacts(), &["qloss"]).unwrap();
+    let mut sampler = p.sampler(13);
+    let tokens = sampler.sample(8);
+    let alloc3 = BitAlloc::uniform(&p.index, 3);
+    let on_device = p.ctx().qloss(&tokens, &alloc3).unwrap();
+
+    let mut store = p.store.clone();
+    for (mi, name) in p.index.mats.iter().enumerate() {
+        let grid = &alloc3.bits[p.index.mat_range(mi)];
+        let wq = fakequant_mat(
+            p.store.get(name).unwrap(),
+            grid,
+            p.index.block_rows,
+            p.index.block_cols,
+        );
+        *store.get_mut(name).unwrap() = wq;
+    }
+    let bufs = p.engine.upload_weights(&store).unwrap();
+    let grids = p.fp_alloc().grids(&p.index);
+    let out = p.engine.run_model("qloss", &tokens, &grids, &bufs).unwrap();
+    let host_side = literal_scalar_f32(&out[0]).unwrap() as f64;
+    assert!(
+        (on_device - host_side).abs() < 1e-4,
+        "device fakequant {on_device} vs rust fakequant {host_side}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// reordering equivalence
+
+#[test]
+fn reordering_preserves_model_function() {
+    let mut p = Pipeline::load(&artifacts(), &["qloss", "qgrad", "qlogits"]).unwrap();
+    let mut sampler = p.sampler(17);
+    let tokens = sampler.sample(8);
+    let fp = p.fp_alloc();
+    let logits_before = {
+        let out = p
+            .engine
+            .run_model("qlogits", &tokens, &fp.grids(&p.index), &p.wbufs)
+            .unwrap();
+        literal_to_vec_f32(&out[0]).unwrap()
+    };
+    let r = p.reorder(3, 42).unwrap();
+    assert!(!r.is_identity(), "reordering should move channels");
+    let logits_after = {
+        let out = p
+            .engine
+            .run_model("qlogits", &tokens, &fp.grids(&p.index), &p.wbufs)
+            .unwrap();
+        literal_to_vec_f32(&out[0]).unwrap()
+    };
+    let mut max_abs = 0.0f32;
+    for (a, b) in logits_before.iter().zip(&logits_after) {
+        max_abs = max_abs.max((a - b).abs());
+    }
+    assert!(max_abs < 2e-3, "logits diverged after reorder: {max_abs}");
+}
+
+// ---------------------------------------------------------------------
+// search invariants on the real engine
+
+#[test]
+fn short_search_respects_invariants() {
+    let p = Pipeline::load(&artifacts(), &["qloss", "qgrad"]).unwrap();
+    let cfg = SearchConfig { budget: 3.0, max_iters: 6, seed: 5, ..Default::default() };
+    let res = p.search(&cfg).unwrap();
+    // bit bounds
+    assert!(res.alloc.bits.iter().all(|&b| (cfg.bits_min..=cfg.bits_max).contains(&b)));
+    // budget never exceeded (warm start == ⌊B⌋, expansion capped)
+    assert!(res.alloc.avg_bits() <= cfg.budget + 1e-9, "{}", res.alloc.avg_bits());
+    // accepted steps never increased the (same-batch) loss
+    for it in &res.iters {
+        if it.accepted {
+            assert!(it.loss_after <= it.loss_before + 1e-9);
+        }
+    }
+    assert!(res.exec_calls >= 2 * res.iters.len() as u64);
+}
+
+#[test]
+fn search_is_deterministic_under_seed() {
+    let p = Pipeline::load(&artifacts(), &["qloss", "qgrad"]).unwrap();
+    let cfg = SearchConfig { budget: 2.5, max_iters: 4, seed: 77, ..Default::default() };
+    let a = p.search(&cfg).unwrap();
+    let b = p.search(&cfg).unwrap();
+    assert_eq!(a.alloc.bits, b.alloc.bits);
+}
+
+// ---------------------------------------------------------------------
+// grams + GPTQ through the real pipeline
+
+#[test]
+fn grams_are_psd_and_sized() {
+    let p = Pipeline::load(&artifacts(), &["grams"]).unwrap();
+    let grams = p.grams(&p.fp_alloc(), 1, 3).unwrap();
+    assert_eq!(grams.len(), p.index.mats.len());
+    for (name, g) in &grams {
+        let info = p.engine.manifest.param(name).unwrap();
+        assert_eq!(g.n, info.cols(), "{name}");
+        // diagonals of X^T X are nonnegative
+        for i in 0..g.n {
+            assert!(g.at(i, i) >= -1e-6, "{name} diag {i}: {}", g.at(i, i));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// serving round-trip
+
+#[test]
+fn server_round_trip() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let alloc = BitAlloc::uniform(&index, 4);
+    let mut server = scalebits::serve::start_server(
+        artifacts(),
+        alloc,
+        std::time::Duration::from_millis(2),
+    )
+    .unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..5 {
+        let tokens = stream.tokens[i * 64..i * 64 + m.config.seq_len].to_vec();
+        rxs.push(server.submit(tokens).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.next_token >= 0 && (resp.next_token as usize) < m.config.vocab);
+        assert!(resp.batch_size >= 1);
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.served, 5);
+}
+
+// ---------------------------------------------------------------------
+// weight store + manifest sanity
+
+#[test]
+fn manifest_and_weights_consistent() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    let store = WeightStore::load(&m).unwrap();
+    assert_eq!(store.order.len(), m.params.len());
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    assert_eq!(index.n_blocks, m.n_blocks);
+    // every quantized matrix tiles exactly
+    for name in &m.quantized {
+        let p = m.param(name).unwrap();
+        assert_eq!(p.rows() % m.config.block_rows, 0);
+        assert_eq!(p.cols() % m.config.block_cols, 0);
+    }
+    // weights are finite and not all zero
+    for (name, mat) in store.in_order() {
+        assert!(mat.data.iter().all(|x| x.is_finite()), "{name}");
+        assert!(mat.sq_frobenius() > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn batch_sampler_stays_in_vocab() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "calib").unwrap();
+    let mut s = BatchSampler::new(stream, m.config.seq_len, 3);
+    let b = s.sample(8);
+    assert!(b.iter().all(|&t| t >= 0 && (t as usize) < m.config.vocab));
+}
+
+// ---------------------------------------------------------------------
+// kernel-bench executables numerics
+
+#[test]
+fn mpq_kernel_exec_matches_host_reference() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    let kb = m.kernel_bench().unwrap();
+    let engine = Engine::load(m, &[]).unwrap();
+    let exe = engine
+        .compile_hlo_file(&engine.manifest.dir.join(&kb.files["mpq"]))
+        .unwrap();
+    let (mm, n, k) = (kb.m, kb.n, kb.k);
+    let (br, bc) = (kb.block_rows, kb.block_cols);
+    let mut rng = scalebits::util::rng::Rng::new(5);
+    let x: Vec<f32> = (0..mm * k).map(|_| rng.normal_f32()).collect();
+    let w = Mat::from_vec(n, k, (0..n * k).map(|_| rng.normal_f32()).collect()).unwrap();
+    let bits = vec![4i32; (n / br) * (k / bc)];
+    let packed = scalebits::quant::PackedMat::quantize(&w, &bits, br, bc);
+    let deq = packed.dequantize();
+    // integer codes + scales as the executable wants them
+    let nbc = k / bc;
+    let mut codes = vec![0i8; n * k];
+    for r in 0..n {
+        for g in 0..nbc {
+            let s = packed.scales[r * nbc + g];
+            for c in 0..bc {
+                let idx = r * k + g * bc + c;
+                codes[idx] = if s > 0.0 { (deq.data[idx] / s).round_ties_even() as i8 } else { 0 };
+            }
+        }
+    }
+    let args = vec![
+        engine.upload_f32(&x, &[mm, k]).unwrap(),
+        engine.upload_i8(&codes, &[n, k]).unwrap(),
+        engine.upload_f32(&packed.scales, &[n, nbc]).unwrap(),
+        engine.upload_i32(&bits, &[n / br, nbc]).unwrap(),
+    ];
+    let out = engine.run_raw(&exe, &args).unwrap();
+    let y = literal_to_vec_f32(&out[0]).unwrap();
+    // host reference: x @ deq^T
+    for r in 0..4 {
+        for c in 0..8 {
+            let mut want = 0.0f64;
+            for j in 0..k {
+                want += x[r * k + j] as f64 * deq.data[c * k + j] as f64;
+            }
+            let got = y[r * n + c] as f64;
+            assert!(
+                (got - want).abs() < 1e-2 * want.abs().max(1.0),
+                "({r},{c}): {got} vs {want}"
+            );
+        }
+    }
+}
+
+fn _assert_path_is_dir(p: &Path) {
+    assert!(p.is_dir());
+}
+
+// ---------------------------------------------------------------------
+// packed model export / load roundtrip
+
+#[test]
+fn packfile_roundtrip_bit_exact() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let store = WeightStore::load(&m).unwrap();
+    let mut rng = scalebits::util::rng::Rng::new(21);
+    let mut alloc = BitAlloc::uniform(&index, 3);
+    for b in alloc.bits.iter_mut() {
+        *b = rng.range(1, 9) as i32;
+    }
+    let path = std::env::temp_dir().join("scalebits_test_model.sbits");
+    let n = scalebits::quant::packfile::write_packfile(&path, &m, &index, &store, &alloc)
+        .unwrap();
+    assert!(n > 0);
+    let (store2, alloc2) =
+        scalebits::quant::packfile::read_packfile(&path, &m, &index).unwrap();
+    assert_eq!(alloc2.bits, alloc.bits);
+    for name in &index.mats {
+        let mi = index.mat_index(name).unwrap();
+        let grid = &alloc.bits[index.mat_range(mi)];
+        let want = fakequant_mat(store.get(name).unwrap(), grid, index.block_rows, index.block_cols);
+        let got = store2.get(name).unwrap();
+        for i in 0..want.data.len() {
+            let tol = 2e-3 * want.data[i].abs().max(1e-3);
+            assert!(
+                (got.data[i] - want.data[i]).abs() <= tol,
+                "{name}[{i}]: {} vs {}",
+                got.data[i],
+                want.data[i]
+            );
+        }
+    }
+    // unquantized params round-trip exactly
+    for p in &m.params {
+        if !p.quantized {
+            assert_eq!(store2.get(&p.name).unwrap().data, store.get(&p.name).unwrap().data);
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn packfile_rejects_corrupt_magic() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let path = std::env::temp_dir().join("scalebits_bad.sbits");
+    std::fs::write(&path, b"NOTSBITSxxxxxxxxxxxx").unwrap();
+    assert!(scalebits::quant::packfile::read_packfile(&path, &m, &index).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// failure injection: the runtime must reject malformed calls loudly
+
+#[test]
+fn runtime_rejects_bad_shapes() {
+    let p = Pipeline::load(&artifacts(), &["qloss"]).unwrap();
+    let alloc = BitAlloc::uniform(&p.index, 3);
+    let grids = alloc.grids(&p.index);
+    // wrong token count
+    let bad_tokens = vec![0i32; 17];
+    assert!(p.engine.run_model("qloss", &bad_tokens, &grids, &p.wbufs).is_err());
+    // wrong grid count
+    let mut sampler = p.sampler(1);
+    let tokens = sampler.sample(8);
+    assert!(p
+        .engine
+        .run_model("qloss", &tokens, &grids[..grids.len() - 1], &p.wbufs)
+        .is_err());
+    // wrong grid shape
+    let mut bad_grids = grids.clone();
+    bad_grids[0].pop();
+    assert!(p.engine.run_model("qloss", &tokens, &bad_grids, &p.wbufs).is_err());
+    // unknown executable
+    assert!(p.engine.run_model("nonexistent", &tokens, &grids, &p.wbufs).is_err());
+}
+
+#[test]
+fn config_presets_parse_and_build_search_configs() {
+    for preset in ["ultra_low", "standard", "fast_fixed_grads"] {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("configs")
+            .join(format!("{preset}.toml"));
+        let doc = scalebits::util::tomlite::TomlDoc::read_file(&path).unwrap();
+        let cfg = scalebits::util::tomlite::search_config_from(&doc).unwrap();
+        assert!(cfg.budget >= 1.0 && cfg.budget <= 8.0, "{preset}");
+        assert!(cfg.bits_min >= 1 && cfg.bits_max <= 8, "{preset}");
+    }
+}
