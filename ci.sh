@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 gate + lint, run from the repo root:
+#   ./ci.sh
+#
+# Matches the ROADMAP tier-1 verify (`cargo build --release &&
+# cargo test -q`) and adds clippy. Integration tests that need AOT
+# artifacts fail loudly if `rust/artifacts/` is missing — run
+# `make artifacts` (python/compile/aot.py) first for the full net; the
+# pure host-side tests (serve::admission/batcher/metrics, quant, util,
+# testkit) run without any artifacts.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release"
+cargo build --release --offline
+
+echo "== cargo test -q"
+cargo test -q --offline
+
+echo "== cargo clippy -- -D warnings"
+# Allow-list: seed-era idioms kept for diff hygiene, not new code style.
+cargo clippy --offline --all-targets -- -D warnings \
+  -A clippy::ptr_arg \
+  -A clippy::too_many_arguments \
+  -A clippy::needless_range_loop \
+  -A clippy::manual_memcpy \
+  -A clippy::type_complexity
+
+echo "CI OK"

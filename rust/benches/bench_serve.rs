@@ -1,20 +1,27 @@
 //! Bench: serving-path throughput/latency (end-to-end Table 4 claim).
 //!
-//! Measures the batching server under closed-loop load with uniform vs
-//! mixed bit grids, plus the raw single-request executable latency
-//! (qlogits_b1) as the no-batching floor.
+//! Three measurements through the rebuilt serving stack:
+//!   1. raw single-request floor (qlogits_b1 through a device-resident
+//!      Session — token-only upload per call),
+//!   2. multi-worker throughput sweep (1/2/4 workers, uniform 4-bit)
+//!      under an offered load well above single-worker capacity,
+//!   3. the §5.3 check at 4 workers: mixed 2/4/8 grids vs uniform must
+//!      show matching latency (the request path never branches on
+//!      precision).
+//!
+//! Emits `BENCH_serve.json` (throughput, p50/p99, occupancy, 4w/1w
+//! speedup) so the perf trajectory is tracked across PRs.
 //!
 //! Run: cargo bench --offline --bench bench_serve
-
-use std::time::Duration;
 
 use scalebits::calib::TokenStream;
 use scalebits::model::Manifest;
 use scalebits::quant::{BitAlloc, BlockIndex};
-use scalebits::runtime::Engine;
-use scalebits::serve::{run_workload, start_server};
+use scalebits::runtime::{Engine, Session};
+use scalebits::serve::{run_workload, Router, ServeConfig};
+use scalebits::util::json::Json;
 use scalebits::util::rng::Rng;
-use scalebits::util::timer::{self, Stats};
+use scalebits::util::timer;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::path::PathBuf::from("artifacts");
@@ -22,21 +29,60 @@ fn main() -> anyhow::Result<()> {
     let index = BlockIndex::from_manifest(&m)?;
     let stream = TokenStream::from_manifest(&m, "eval")?;
     let seq = m.config.seq_len;
+    let mut out = Json::obj();
 
-    // raw single-request floor: qlogits_b1
+    // 1. raw single-request floor: qlogits_b1, weights + grids resident
     {
         let engine = Engine::load(Manifest::load(&artifacts)?, &["qlogits_b1"])?;
         let store = scalebits::model::WeightStore::load(&engine.manifest)?;
-        let wbufs = engine.upload_weights(&store)?;
         let alloc = BitAlloc::uniform(&index, 4);
-        let grids = alloc.grids(&index);
+        let session = Session::new(engine, &store, &alloc.grids(&index))?;
         let tokens: Vec<i32> = stream.tokens[..seq].to_vec();
         let stats = timer::bench(3, 20, || {
-            engine.run_model("qlogits_b1", &tokens, &grids, &wbufs).expect("run");
+            session.run("qlogits_b1", &tokens).expect("run");
         });
         println!("{}", stats.line("qlogits batch=1 (no batching floor)"));
+        out.set("floor_b1_mean_us", Json::Num(stats.mean_us));
     }
 
+    // 2. multi-worker sweep at fixed allocation
+    let n_requests = 48usize;
+    let rate = 400.0; // offered load: keeps every worker's queue non-empty
+    let mut throughput_1w = f64::NAN;
+    for workers in [1usize, 2, 4] {
+        let mut cfg = ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 4));
+        cfg.workers = workers;
+        let mut server = Router::start(cfg)?;
+        // wall excludes per-worker compile/warmup (see WorkloadReport)
+        let wl = run_workload(&mut server, &stream, seq, n_requests, rate, 5)?;
+        let rep = server.shutdown()?;
+        let thr = wl.throughput_rps();
+        if workers == 1 {
+            throughput_1w = thr;
+        }
+        println!(
+            "{} | {:.1} req/s, occupancy {:.2}",
+            rep.total.latency.line(&format!("uniform-4bit x{workers} worker(s)")),
+            thr,
+            rep.total.mean_occupancy()
+        );
+        out.set(
+            &format!("workers_{workers}"),
+            Json::from_pairs(vec![
+                ("throughput_rps", Json::Num(thr)),
+                ("p50_us", Json::Num(rep.total.latency.p50_us())),
+                ("p99_us", Json::Num(rep.total.latency.p99_us())),
+                ("mean_occupancy", Json::Num(rep.total.mean_occupancy())),
+            ]),
+        );
+        if workers == 4 {
+            let speedup = thr / throughput_1w.max(1e-9);
+            println!("  4-worker throughput vs 1 worker: {speedup:.2}x");
+            out.set("speedup_4w_over_1w", Json::Num(speedup));
+        }
+    }
+
+    // 3. §5.3: mixed precision must match uniform latency (4 workers)
     let mut mixed = BitAlloc::uniform(&index, 4);
     let mut rng = Rng::new(2);
     for b in mixed.bits.iter_mut() {
@@ -46,22 +92,31 @@ fn main() -> anyhow::Result<()> {
             _ => 8,
         };
     }
-
-    for (label, alloc) in
-        [("uniform-4bit", BitAlloc::uniform(&index, 4)), ("mixed-2/4/8", mixed)]
-    {
-        let mut server = start_server(artifacts.clone(), alloc, Duration::from_millis(3))?;
-        let t0 = std::time::Instant::now();
-        let lats = run_workload(&mut server, &stream, seq, 24, 200.0, 5)?;
-        let wall = t0.elapsed().as_secs_f64();
-        let stats = server.shutdown()?;
-        let s = Stats::from_samples_us(lats.iter().map(|x| x * 1e6).collect());
+    for (key, label, alloc) in [
+        ("alloc_uniform4", "uniform-4bit", BitAlloc::uniform(&index, 4)),
+        ("alloc_mixed248", "mixed-2/4/8", mixed),
+    ] {
+        let mut cfg = ServeConfig::new(artifacts.clone(), alloc);
+        cfg.workers = 4;
+        let mut server = Router::start(cfg)?;
+        let wl = run_workload(&mut server, &stream, seq, 24, 200.0, 5)?;
+        let rep = server.shutdown()?;
         println!(
             "{} | {:.1} req/s, occupancy {:.2}",
-            s.line(&format!("served {label}")),
-            24.0 / wall,
-            stats.mean_occupancy()
+            rep.total.latency.line(&format!("served {label} x4w")),
+            wl.throughput_rps(),
+            rep.total.mean_occupancy()
+        );
+        out.set(
+            key,
+            Json::from_pairs(vec![
+                ("p50_us", Json::Num(rep.total.latency.p50_us())),
+                ("p99_us", Json::Num(rep.total.latency.p99_us())),
+            ]),
         );
     }
+
+    out.write_file(std::path::Path::new("BENCH_serve.json"))?;
+    println!("wrote BENCH_serve.json");
     Ok(())
 }

@@ -1,6 +1,8 @@
 //! Main-result experiments: Fig 1 (Pareto), Table 2 (method grid),
 //! Table 3 (search cost), Table 4 (kernel latency), Table 5 (MP
-//! baseline grid), Table 6 (instruct-analog task splits).
+//! baseline grid), Table 6 (instruct-analog task splits), plus the
+//! end-to-end serving grid (`serve_e2e`): allocation x worker-count
+//! throughput/latency through the real router/batcher stack.
 //!
 //! Every harness prints the paper-style rows AND writes
 //! `results/<id>.json` with the raw numbers; EXPERIMENTS.md records the
@@ -464,4 +466,70 @@ pub fn tab6(p: &mut Pipeline, seed: u64) -> Result<()> {
     }
     t.print();
     write_result("tab6", out)
+}
+
+// ---------------------------------------------------------------------
+// End-to-end serving: the §5.3 claim through the full router stack
+
+/// Serving grid: {uniform-4bit, mixed-2/4/8} x {1, 4 workers} under a
+/// synthetic Poisson load. Matching per-allocation latencies show mixed
+/// precision adds no request-path overhead; the worker column shows the
+/// throughput scaling the router buys (each worker owns its own PJRT
+/// engine with device-resident weights and bit grids).
+pub fn serve_e2e(artifacts: &std::path::Path, seed: u64) -> Result<()> {
+    use crate::serve::{run_workload, Router, ServeConfig};
+
+    println!("[serve_e2e] end-to-end serving: allocation x workers");
+    let m = crate::model::Manifest::load(artifacts)?;
+    let index = crate::quant::BlockIndex::from_manifest(&m)?;
+    let stream = crate::calib::TokenStream::from_manifest(&m, "eval")?;
+    let seq = m.config.seq_len;
+    let n_requests = 32usize;
+    let rate = 400.0; // offered load well above single-worker capacity
+
+    let mut mixed = BitAlloc::uniform(&index, 4);
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0x5e7e);
+    for b in mixed.bits.iter_mut() {
+        *b = match rng.below(10) {
+            0..=3 => 2,
+            4..=7 => 4,
+            _ => 8,
+        };
+    }
+
+    let mut t = Table::new(
+        "End-to-end serving (PJRT-CPU, synthetic Poisson load)",
+        &["alloc", "workers", "req/s", "p50_us", "p99_us", "occupancy"],
+    );
+    let mut out = Json::obj();
+    for (label, alloc) in [("uniform4", BitAlloc::uniform(&index, 4)), ("mixed248", mixed)] {
+        for workers in [1usize, 4] {
+            let mut cfg = ServeConfig::new(artifacts.to_path_buf(), alloc.clone());
+            cfg.workers = workers;
+            let mut server = Router::start(cfg)?;
+            let wl = run_workload(&mut server, &stream, seq, n_requests, rate, seed)?;
+            let rep = server.shutdown()?;
+            let thr = wl.throughput_rps();
+            t.row(vec![
+                label.into(),
+                format!("{workers}"),
+                f2(thr),
+                f2(rep.total.latency.p50_us()),
+                f2(rep.total.latency.p99_us()),
+                f2(rep.total.mean_occupancy()),
+            ]);
+            out.set(
+                &format!("{label}_w{workers}"),
+                Json::from_pairs(vec![
+                    ("throughput_rps", Json::Num(thr)),
+                    ("p50_us", Json::Num(rep.total.latency.p50_us())),
+                    ("p99_us", Json::Num(rep.total.latency.p99_us())),
+                    ("occupancy", Json::Num(rep.total.mean_occupancy())),
+                    ("blocked_submits", Json::Num(rep.total.blocked_submits as f64)),
+                ]),
+            );
+        }
+    }
+    t.print();
+    write_result("serve_e2e", out)
 }

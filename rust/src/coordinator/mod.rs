@@ -137,7 +137,8 @@ impl Pipeline {
         };
         let loss_after = {
             let grids = fp.grids(&self.index);
-            let out = tmp_ctx.engine.run_model("qloss", &check_tokens, &grids, &new_bufs)?;
+            let out =
+                tmp_ctx.engine.run_model_host_grids("qloss", &check_tokens, &grids, &new_bufs)?;
             literal_scalar_f32(&out[0])? as f64
         };
         if (loss_before - loss_after).abs() > 1e-3 * loss_before.abs().max(1.0) {
@@ -204,7 +205,8 @@ impl Pipeline {
         }
         let mut sampler = self.sampler(seed);
         let batch = self.engine.batch_of("grams")?;
-        let grids = alloc.grids(&self.index);
+        // fixed allocation across the accumulation loop: grids resident
+        let grids = self.engine.upload_grids(&alloc.grids(&self.index))?;
         let sites = &self.engine.manifest.gram_sites;
         let mut acc: Vec<Option<SqMat>> = vec![None; sites.len()];
         for _ in 0..n_batches {

@@ -31,7 +31,9 @@ pub fn perplexity(
 ) -> Result<f64> {
     let batch = engine.batch_of("qloss")?;
     let seq = engine.manifest.config.seq_len;
-    let grids = alloc.grids(index);
+    // The allocation is fixed for the whole evaluation: upload its bit
+    // grids once and run every batch against the resident buffers.
+    let grids = engine.upload_grids(&alloc.grids(index))?;
     let mut it = SequentialBatches::new(stream, seq);
     let mut total = 0.0f64;
     let mut n = 0usize;
@@ -66,7 +68,7 @@ pub fn task_accuracy(
     let seq = engine.manifest.config.seq_len;
     let vocab = engine.manifest.config.vocab;
     assert_eq!(tasks.seq_len, seq, "task seq_len mismatch");
-    let grids = alloc.grids(index);
+    let grids = engine.upload_grids(&alloc.grids(index))?;
 
     let n_tasks = tasks.rows.len().min(max_tasks);
     let mut correct = 0usize;

@@ -11,9 +11,11 @@
 //!   the RTN quantizer and bit-packing, progressive sensitivity
 //!   estimation, bi-directional channel reordering, the scalable greedy
 //!   bitwidth search (the paper's Algorithm 1), baselines (classic
-//!   greedy, GPTQ, SlimLLM-style, heuristics), evaluation, a batching
-//!   inference server, and the experiment harness reproducing every
-//!   table and figure of the paper.
+//!   greedy, GPTQ, SlimLLM-style, heuristics), evaluation, a serving
+//!   subsystem (multi-worker router, deadline batcher, bounded
+//!   admission, latency histograms — see [`serve`]) over device-
+//!   resident [`runtime::Session`]s, and the experiment harness
+//!   reproducing every table and figure of the paper.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! graphs once; the `scalebits` binary is self-contained afterwards.

@@ -6,8 +6,10 @@
 //!   scalebits quantize   --budget 3.0 [--no-reorder] [--out results/alloc.json]
 //!   scalebits eval       --bits 3 | --alloc results/alloc.json
 //!   scalebits exp <id>   (fig1 fig2 fig3 fig5 fig6 fig7 fig10 fig13
-//!                         fig15 fig16 fig17 fig18 tab2 tab3 tab4 tab5 tab6 | all)
-//!   scalebits serve-demo --requests 32 --rate 50
+//!                         fig15 fig16 fig17 fig18 tab2 tab3 tab4 tab5
+//!                         tab6 serve_e2e | all)
+//!   scalebits serve-demo --requests 32 --rate 50 --workers 2
+//!                        --queue-cap 256 --window-ms 3
 //!
 //! Global options: --artifacts <dir> (default: artifacts), --seed <n>.
 
@@ -260,6 +262,7 @@ fn exp(artifacts: &PathBuf, args: &Args, seed: u64) -> Result<()> {
             "fig16" => ab::fig16(&mut Pipeline::load_full(artifacts)?, seed)?,
             "fig17" => ab::fig17(artifacts, seed)?,
             "fig18" => ab::fig18(&mut Pipeline::load_full(artifacts)?, seed)?,
+            "serve_e2e" => em::serve_e2e(artifacts, seed)?,
             other => bail!("unknown experiment {other:?}"),
         }
         println!("[{id}] done in {:.1}s\n", sw.secs());
@@ -268,7 +271,7 @@ fn exp(artifacts: &PathBuf, args: &Args, seed: u64) -> Result<()> {
     if id == "all" {
         for id in [
             "fig2", "fig3", "fig7", "fig13", "fig10", "fig16", "tab4", "tab3", "fig5", "fig6",
-            "fig18", "tab2", "tab5", "tab6", "fig15", "fig17", "fig1",
+            "fig18", "tab2", "tab5", "tab6", "fig15", "fig17", "fig1", "serve_e2e",
         ] {
             run_one(id)?;
         }
@@ -283,28 +286,48 @@ fn serve_demo(artifacts: &PathBuf, args: &Args, seed: u64) -> Result<()> {
     let n_requests = args.usize_or("requests", 32)?;
     let rate = args.f64_or("rate", 50.0)?;
     let bits = args.usize_or("bits", 3)? as i32;
+    let workers = args.usize_or("workers", 1)?;
+    let queue_cap = args.usize_or("queue-cap", scalebits::serve::router::DEFAULT_QUEUE_CAP)?;
+    let window_ms = args.u64_or("window-ms", 3)?;
 
     let m = scalebits::model::Manifest::load(artifacts)?;
     let index = scalebits::quant::BlockIndex::from_manifest(&m)?;
     let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval")?;
     let seq = m.config.seq_len;
 
-    println!("starting batching server (uniform {bits}-bit grids, window 3ms)");
-    let alloc = BitAlloc::uniform(&index, bits);
-    let mut server =
-        scalebits::serve::start_server(artifacts.clone(), alloc, Duration::from_millis(3))?;
-    let lats = scalebits::serve::run_workload(&mut server, &stream, seq, n_requests, rate, seed)?;
-    let stats = server.shutdown()?;
-
-    let s = scalebits::util::timer::Stats::from_samples_us(
-        lats.iter().map(|x| x * 1e6).collect(),
-    );
-    println!("{}", s.line("request latency"));
     println!(
-        "served {} requests in {} batches (mean occupancy {:.2})",
-        stats.served,
-        stats.batches,
-        stats.mean_occupancy()
+        "starting router: {workers} worker(s), queue cap {queue_cap}, \
+         uniform {bits}-bit grids, window {window_ms}ms"
     );
+    let mut cfg =
+        scalebits::serve::ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, bits));
+    cfg.workers = workers;
+    cfg.queue_cap = queue_cap;
+    cfg.batch_window = Duration::from_millis(window_ms);
+    let mut server = scalebits::serve::Router::start(cfg)?;
+    let wl = scalebits::serve::run_workload(&mut server, &stream, seq, n_requests, rate, seed)?;
+    let report = server.shutdown()?;
+
+    let t = &report.total;
+    println!("{}", t.latency.line("request latency"));
+    println!("throughput: {:.1} req/s over {:.3}s (post-warmup)", wl.throughput_rps(), wl.wall_secs);
+    println!(
+        "served {} requests in {} batches (mean occupancy {:.2}, mean queue depth {:.2}, \
+         blocked submits {})",
+        t.served,
+        t.batches,
+        t.mean_occupancy(),
+        t.mean_queue_depth(),
+        t.blocked_submits
+    );
+    for (w, wm) in report.per_worker.iter().enumerate() {
+        println!(
+            "  worker {w}: served {} in {} batches (occupancy {:.2}, exec {:.3}s)",
+            wm.served,
+            wm.batches,
+            wm.mean_occupancy(),
+            wm.exec_secs
+        );
+    }
     Ok(())
 }

@@ -1,14 +1,27 @@
-//! PJRT runtime: loads AOT-lowered HLO-text artifacts and executes them.
+//! PJRT runtime, split into two layers:
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
-//! from_text_file` -> `XlaComputation::from_proto` -> `client.compile`.
+//! * [`Engine`] — compile/load: owns the PJRT client, the compiled
+//!   executables, and the raw buffer-upload helpers. Pattern follows
+//!   /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` ->
+//!   `XlaComputation::from_proto` -> `client.compile`.
+//! * [`Session`] (see [`session`]) — owns device-resident state: the
+//!   full-precision weight buffers AND the per-allocation bit-grid
+//!   buffers, both uploaded once. A `Session::run` call uploads only
+//!   the token batch.
 //!
-//! Hot-path discipline: the full-precision weights are uploaded to
-//! device buffers ONCE (`WeightBuffers`), and each search iteration
-//! re-uploads only the tiny int32 per-block bit grids + the token
-//! batch, then calls `execute_b`. This is what makes the scalable
-//! greedy loop cheap: the multi-MB weight transfer is off the
-//! per-iteration path.
+//! Hot-path discipline: the multi-MB weight transfer happens once at
+//! session creation. The serving path additionally pins the bit grids
+//! on device ([`GridBuffers`]) because the served allocation is fixed;
+//! only the search loop — which mutates the allocation every
+//! iteration — uses the per-call grid-upload path
+//! ([`Engine::run_model_host_grids`]).
+//!
+//! Every host→device upload is counted in [`TransferStats`] so tests
+//! can assert the serve path moves nothing but tokens per batch.
+
+pub mod session;
+
+pub use session::Session;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -28,6 +41,14 @@ pub struct ExecStats {
     pub total_secs: f64,
 }
 
+/// Cumulative host→device transfer counters. One upload == one
+/// `buffer_from_host_buffer` call; `bytes` is the host-side payload.
+#[derive(Debug, Default, Clone)]
+pub struct TransferStats {
+    pub uploads: u64,
+    pub bytes: u64,
+}
+
 /// One compiled executable + its manifest signature.
 pub struct LoadedExec {
     pub name: String,
@@ -42,6 +63,7 @@ pub struct Engine {
     pub manifest: Manifest,
     execs: HashMap<String, LoadedExec>,
     stats: RefCell<HashMap<String, ExecStats>>,
+    transfers: RefCell<TransferStats>,
 }
 
 impl Engine {
@@ -53,6 +75,7 @@ impl Engine {
             manifest,
             execs: HashMap::new(),
             stats: RefCell::new(HashMap::new()),
+            transfers: RefCell::new(TransferStats::default()),
         };
         for name in exec_names {
             engine.compile_exec(name)?;
@@ -98,22 +121,40 @@ impl Engine {
 
     // ---- buffer helpers ------------------------------------------------
 
+    fn note_transfer(&self, bytes: usize) {
+        let mut t = self.transfers.borrow_mut();
+        t.uploads += 1;
+        t.bytes += bytes as u64;
+    }
+
     pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.note_transfer(std::mem::size_of_val(data));
         self.client
             .buffer_from_host_buffer(data, dims, None)
             .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
     }
 
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.note_transfer(std::mem::size_of_val(data));
         self.client
             .buffer_from_host_buffer(data, dims, None)
             .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
     }
 
     pub fn upload_i8(&self, data: &[i8], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.note_transfer(std::mem::size_of_val(data));
         self.client
             .buffer_from_host_buffer(data, dims, None)
             .map_err(|e| anyhow!("upload i8 {dims:?}: {e:?}"))
+    }
+
+    /// Host→device transfer counters since the last reset.
+    pub fn transfer_stats(&self) -> TransferStats {
+        self.transfers.borrow().clone()
+    }
+
+    pub fn reset_transfer_stats(&self) {
+        *self.transfers.borrow_mut() = TransferStats::default();
     }
 
     /// Upload all model weights once; reuse across every execution.
@@ -127,16 +168,35 @@ impl Engine {
         Ok(WeightBuffers { bufs })
     }
 
+    /// Upload one allocation's per-matrix bit grids once; reuse across
+    /// every execution of that allocation (the serving fast path).
+    /// Grids are validated against the manifest block shapes here, so
+    /// the per-call path can skip shape checks entirely.
+    pub fn upload_grids(&self, grids: &[Vec<i32>]) -> Result<GridBuffers> {
+        if grids.len() != self.manifest.quantized.len() {
+            bail!("got {} bit grids, want {}", grids.len(), self.manifest.quantized.len());
+        }
+        let mut bufs = Vec::with_capacity(grids.len());
+        for (gi, grid) in grids.iter().enumerate() {
+            let (gr, gc) = self.manifest.bits_shape(&self.manifest.quantized[gi])?;
+            if grid.len() != gr * gc {
+                bail!("grid {gi}: len {} != {gr}x{gc}", grid.len());
+            }
+            bufs.push(self.upload_i32(grid, &[gr, gc])?);
+        }
+        Ok(GridBuffers { bufs })
+    }
+
     // ---- execution -------------------------------------------------
 
-    /// Run one of the model executables: (tokens, *bits, *params).
-    /// `tokens` is row-major [batch, seq_len]; `grids` one i32 grid per
-    /// quantized matrix in manifest order.
+    /// Run one of the model executables: (tokens, *bits, *params), with
+    /// device-resident bit grids. The ONLY host→device transfer on this
+    /// path is the row-major [batch, seq_len] token batch.
     pub fn run_model(
         &self,
         name: &str,
         tokens: &[i32],
-        grids: &[Vec<i32>],
+        grids: &GridBuffers,
         weights: &WeightBuffers,
     ) -> Result<Vec<Literal>> {
         let le = self.exec_ref(name)?;
@@ -145,19 +205,14 @@ impl Engine {
         if tokens.len() != batch * seq {
             bail!("{name}: tokens len {} != {batch}x{seq}", tokens.len());
         }
-        if grids.len() != self.manifest.quantized.len() {
-            bail!("{name}: got {} bit grids, want {}", grids.len(), self.manifest.quantized.len());
+        if grids.bufs.len() != self.manifest.quantized.len() {
+            bail!("{name}: got {} grid buffers, want {}", grids.bufs.len(), self.manifest.quantized.len());
         }
-        let mut args: Vec<PjRtBuffer> = Vec::with_capacity(1 + grids.len());
-        args.push(self.upload_i32(tokens, &[batch, seq])?);
-        for (gi, grid) in grids.iter().enumerate() {
-            let (gr, gc) = self.manifest.bits_shape(&self.manifest.quantized[gi])?;
-            if grid.len() != gr * gc {
-                bail!("{name}: grid {gi} len {} != {gr}x{gc}", grid.len());
-            }
-            args.push(self.upload_i32(grid, &[gr, gc])?);
-        }
-        let mut refs: Vec<&PjRtBuffer> = args.iter().collect();
+        let tok_buf = self.upload_i32(tokens, &[batch, seq])?;
+        let mut refs: Vec<&PjRtBuffer> =
+            Vec::with_capacity(1 + grids.bufs.len() + weights.bufs.len());
+        refs.push(&tok_buf);
+        refs.extend(grids.bufs.iter());
         refs.extend(weights.bufs.iter());
 
         let t0 = Instant::now();
@@ -182,6 +237,22 @@ impl Engine {
         Ok(parts)
     }
 
+    /// Grid-upload execution path: uploads `grids` (one i32 grid per
+    /// quantized matrix, manifest order) and runs. This is the search
+    /// loop's path — the allocation mutates every iteration, so there
+    /// is nothing to cache. Fixed-allocation callers (serving, eval)
+    /// should `upload_grids` once and use [`Engine::run_model`].
+    pub fn run_model_host_grids(
+        &self,
+        name: &str,
+        tokens: &[i32],
+        grids: &[Vec<i32>],
+        weights: &WeightBuffers,
+    ) -> Result<Vec<Literal>> {
+        let gbufs = self.upload_grids(grids)?;
+        self.run_model(name, tokens, &gbufs, weights)
+    }
+
     /// Raw execution for kernel-bench executables (caller owns layout).
     pub fn run_raw(&self, exe: &PjRtLoadedExecutable, args: &[PjRtBuffer]) -> Result<Vec<Literal>> {
         let refs: Vec<&PjRtBuffer> = args.iter().collect();
@@ -201,6 +272,12 @@ impl Engine {
 
 /// Device-resident full-precision weights (uploaded once).
 pub struct WeightBuffers {
+    pub bufs: Vec<PjRtBuffer>,
+}
+
+/// Device-resident per-allocation bit grids (uploaded once per
+/// allocation; one buffer per quantized matrix, manifest order).
+pub struct GridBuffers {
     pub bufs: Vec<PjRtBuffer>,
 }
 
@@ -232,5 +309,12 @@ mod tests {
         let s = ExecStats::default();
         assert_eq!(s.calls, 0);
         assert_eq!(s.total_secs, 0.0);
+    }
+
+    #[test]
+    fn transfer_stats_default() {
+        let t = TransferStats::default();
+        assert_eq!(t.uploads, 0);
+        assert_eq!(t.bytes, 0);
     }
 }

@@ -1,0 +1,78 @@
+//! Session: device-resident execution state over an [`Engine`].
+//!
+//! A session owns the engine plus everything that is uploaded ONCE and
+//! then reused across calls — the full-precision weight buffers and the
+//! per-allocation bit-grid buffers. After construction, `Session::run`
+//! uploads only the token batch: the per-call host→device traffic of
+//! the serving path shrinks to `batch * seq_len * 4` bytes.
+//!
+//! This is the unit a serving worker owns end-to-end. PJRT handles are
+//! `!Send`, so a `Session` never crosses threads: each worker thread
+//! constructs its own (see `crate::serve::router`).
+//!
+//! The search loop does NOT use a session for its grids — it mutates
+//! the allocation every iteration and goes through
+//! [`Engine::run_model_host_grids`] instead.
+
+use std::path::Path;
+
+use anyhow::Result;
+use xla::Literal;
+
+use super::{Engine, GridBuffers, WeightBuffers};
+use crate::model::{Manifest, WeightStore};
+
+/// Engine + device-resident weights + device-resident bit grids.
+pub struct Session {
+    engine: Engine,
+    weights: WeightBuffers,
+    grids: GridBuffers,
+}
+
+impl Session {
+    /// Wrap an engine: upload `store` and `grids` once.
+    pub fn new(engine: Engine, store: &WeightStore, grids: &[Vec<i32>]) -> Result<Session> {
+        let weights = engine.upload_weights(store)?;
+        let grids = engine.upload_grids(grids)?;
+        Ok(Session { engine, weights, grids })
+    }
+
+    /// One-stop open: load the manifest + weights from `artifacts`,
+    /// compile `exec_names`, and pin `grids` on device.
+    pub fn open(artifacts: &Path, exec_names: &[&str], grids: &[Vec<i32>]) -> Result<Session> {
+        let manifest = Manifest::load(artifacts)?;
+        let engine = Engine::load(manifest, exec_names)?;
+        let store = WeightStore::load(&engine.manifest)?;
+        Session::new(engine, &store, grids)
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.engine.manifest
+    }
+
+    pub fn weights(&self) -> &WeightBuffers {
+        &self.weights
+    }
+
+    /// Swap the served allocation: one grid re-upload, weights untouched.
+    pub fn set_grids(&mut self, grids: &[Vec<i32>]) -> Result<()> {
+        self.grids = self.engine.upload_grids(grids)?;
+        Ok(())
+    }
+
+    /// Swap the weight set (e.g. after reordering): one weight
+    /// re-upload, grids untouched.
+    pub fn set_weights(&mut self, store: &WeightStore) -> Result<()> {
+        self.weights = self.engine.upload_weights(store)?;
+        Ok(())
+    }
+
+    /// Execute with the resident state. Per-call upload: tokens only.
+    pub fn run(&self, name: &str, tokens: &[i32]) -> Result<Vec<Literal>> {
+        self.engine.run_model(name, tokens, &self.grids, &self.weights)
+    }
+}

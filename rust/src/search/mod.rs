@@ -104,16 +104,20 @@ pub struct SearchContext<'a> {
 }
 
 impl<'a> SearchContext<'a> {
+    // The search loop mutates the allocation every iteration, so it
+    // deliberately stays on the grid-upload path (the tiny int32 grids
+    // are the only re-uploaded input); fixed-allocation callers
+    // (serving, eval) pin grids on device instead.
     pub fn qloss(&self, tokens: &[i32], alloc: &BitAlloc) -> Result<f64> {
         let grids = alloc.grids(self.index);
-        let out = self.engine.run_model("qloss", tokens, &grids, self.wbufs)?;
+        let out = self.engine.run_model_host_grids("qloss", tokens, &grids, self.wbufs)?;
         Ok(literal_scalar_f32(&out[0])? as f64)
     }
 
     /// One `qgrad` call: loss + per-matrix gradients at w^Q.
     pub fn qgrad(&self, tokens: &[i32], alloc: &BitAlloc) -> Result<(f64, Vec<Mat>)> {
         let grids = alloc.grids(self.index);
-        let out = self.engine.run_model("qgrad", tokens, &grids, self.wbufs)?;
+        let out = self.engine.run_model_host_grids("qgrad", tokens, &grids, self.wbufs)?;
         let loss = literal_scalar_f32(&out[0])? as f64;
         let mut grads = Vec::with_capacity(self.index.mats.len());
         for (mi, name) in self.index.mats.iter().enumerate() {

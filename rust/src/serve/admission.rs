@@ -1,0 +1,238 @@
+//! Admission control: a bounded MPSC queue with backpressure.
+//!
+//! The seed server used an unbounded `std::sync::mpsc` channel, which
+//! under overload grows without limit and turns every latency number
+//! into a queueing artifact. This queue is bounded: producers either
+//! fail fast (`try_push`, used by the router's spill-over pass) or
+//! block until space frees up (`push`, the backpressure path). After
+//! `close`, producers are rejected but consumers keep draining until
+//! the queue is empty — shutdown never drops an admitted request.
+//!
+//! Implemented on Mutex + Condvar (no external deps, unit-testable
+//! without PJRT).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push did not enqueue. The rejected value is handed back so the
+/// caller can retry elsewhere (router spill-over) without cloning.
+pub enum PushError<T> {
+    Full(T),
+    Closed(T),
+}
+
+/// Outcome of a timed pop.
+pub enum Pop<T> {
+    Item(T),
+    Timeout,
+    /// Queue closed AND drained — the consumer should exit.
+    Closed,
+}
+
+struct State<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded blocking queue. Share via `Arc`.
+pub struct Bounded<T> {
+    cap: usize,
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> Bounded<T> {
+    pub fn new(cap: usize) -> Bounded<T> {
+        assert!(cap > 0, "queue capacity must be positive");
+        Bounded {
+            cap,
+            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Non-blocking push; hands the value back on a full or closed queue.
+    pub fn try_push(&self, v: T) -> Result<(), PushError<T>> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(PushError::Closed(v));
+        }
+        if s.q.len() >= self.cap {
+            return Err(PushError::Full(v));
+        }
+        s.q.push_back(v);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push (backpressure): waits while the queue is full.
+    /// Errors only if the queue is (or becomes) closed.
+    pub fn push(&self, v: T) -> Result<(), PushError<T>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err(PushError::Closed(v));
+            }
+            if s.q.len() < self.cap {
+                s.q.push_back(v);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            s = self.not_full.wait(s).unwrap();
+        }
+    }
+
+    /// Blocking pop. `None` means closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = s.q.pop_front() {
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Pop with a deadline (the batcher's fill-window path).
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = s.q.pop_front() {
+                self.not_full.notify_one();
+                return Pop::Item(v);
+            }
+            if s.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::Timeout;
+            }
+            let (guard, _res) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Stop admitting; wake all waiters. Consumers drain the remainder.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Close AND drop everything still queued. This is the dead-worker
+    /// path: dropping a pending request drops its response sender, so
+    /// blocked clients get a recv error instead of hanging forever.
+    /// Returns how many queued items were discarded.
+    pub fn close_and_drain(&self) -> usize {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        let n = s.q.len();
+        s.q.clear();
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+        n
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Current depth (a point-in-time gauge for metrics).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn try_push_respects_capacity() {
+        let q = Bounded::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        match q.try_push(3) {
+            Err(PushError::Full(v)) => assert_eq!(v, 3),
+            _ => panic!("expected Full"),
+        }
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_rejects_producers_but_drains_consumers() {
+        let q = Bounded::new(8);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        match q.try_push(3) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 3),
+            _ => panic!("expected Closed"),
+        }
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_timeout_times_out_on_empty() {
+        let q: Bounded<i32> = Bounded::new(1);
+        match q.pop_timeout(Duration::from_millis(10)) {
+            Pop::Timeout => {}
+            _ => panic!("expected Timeout"),
+        }
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(Bounded::new(1));
+        q.try_push(0).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(1).map_err(|_| ()).unwrap());
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.len(), 1, "producer must be blocked while full");
+        assert_eq!(q.pop(), Some(0));
+        t.join().unwrap();
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn close_and_drain_drops_pending() {
+        let q = Bounded::new(8);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.close_and_drain(), 2);
+        assert_eq!(q.pop(), None, "drained queue must be empty and closed");
+        assert!(q.try_push(3).is_err());
+    }
+
+    #[test]
+    fn close_unblocks_waiting_producer() {
+        let q = Arc::new(Bounded::new(1));
+        q.try_push(0).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(1).is_err());
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        assert!(t.join().unwrap(), "blocked push must fail once closed");
+    }
+}

@@ -1,0 +1,154 @@
+//! Deadline batching, extracted from the server loop so it is unit-
+//! testable without PJRT artifacts.
+//!
+//! Policy (same as the seed's inline loop): block for the first request
+//! of a batch, then keep draining the queue until either the batch is
+//! full or `window` has elapsed since the first item arrived. Partial
+//! batches dispatch at the deadline — static AOT shapes mean the
+//! executable always runs at its compiled batch size, so the padding
+//! cost of a partial batch is paid on device either way and the window
+//! only trades latency against occupancy.
+//!
+//! Shutdown semantics come from the admission queue: after `close`,
+//! `next_batch` keeps returning batches until every admitted request
+//! has been drained, then returns `None`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::admission::{Bounded, Pop};
+
+/// How a worker groups requests into executable calls.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Compiled batch size of the executable (hard cap).
+    pub max_batch: usize,
+    /// How long to wait for a batch to fill before dispatching partial.
+    pub window: Duration,
+}
+
+/// Pulls batches off a bounded queue under a [`BatchPolicy`].
+pub struct Batcher<T> {
+    queue: Arc<Bounded<T>>,
+    policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(queue: Arc<Bounded<T>>, policy: BatchPolicy) -> Batcher<T> {
+        assert!(policy.max_batch >= 1, "batch size must be positive");
+        Batcher { queue, policy }
+    }
+
+    /// Next batch (1..=max_batch items), or `None` once the queue is
+    /// closed and fully drained.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let first = self.queue.pop()?;
+        let mut batch = Vec::with_capacity(self.policy.max_batch);
+        batch.push(first);
+        let deadline = Instant::now() + self.policy.window;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.queue.pop_timeout(deadline - now) {
+                Pop::Item(v) => batch.push(v),
+                Pop::Timeout | Pop::Closed => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+/// Assemble the padded row-major [batch, seq] token tensor for one
+/// dispatch. Rows beyond `rows.len()` (and positions beyond each row's
+/// length) are zero-padded; rows longer than `seq` are truncated.
+/// Returns (tokens, occupancy).
+pub fn assemble_padded(rows: &[&[i32]], batch: usize, seq: usize) -> (Vec<i32>, usize) {
+    let occupancy = rows.len().min(batch);
+    let mut tokens = vec![0i32; batch * seq];
+    for (b, row) in rows.iter().take(occupancy).enumerate() {
+        let n = row.len().min(seq);
+        tokens[b * seq..b * seq + n].copy_from_slice(&row[..n]);
+    }
+    (tokens, occupancy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queue_of(cap: usize, items: &[i32]) -> Arc<Bounded<i32>> {
+        let q = Arc::new(Bounded::new(cap));
+        for &i in items {
+            q.try_push(i).unwrap();
+        }
+        q
+    }
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let q = queue_of(64, &[1, 2, 3, 4, 5]);
+        let b = Batcher::new(q, BatchPolicy { max_batch: 3, window: Duration::from_millis(5) });
+        assert_eq!(b.next_batch().unwrap(), vec![1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5]);
+    }
+
+    #[test]
+    fn partial_batch_dispatches_at_deadline() {
+        let q = queue_of(64, &[7]);
+        let q2 = q.clone();
+        // A second request arrives well AFTER the window: the first
+        // batch must go out alone.
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(250));
+            let _ = q2.try_push(8);
+        });
+        let b = Batcher::new(q, BatchPolicy { max_batch: 8, window: Duration::from_millis(30) });
+        let start = Instant::now();
+        assert_eq!(b.next_batch().unwrap(), vec![7], "deadline must cut the batch");
+        assert!(start.elapsed() < Duration::from_millis(200));
+        t.join().unwrap();
+        assert_eq!(b.next_batch().unwrap(), vec![8]);
+    }
+
+    #[test]
+    fn shutdown_drains_all_pending() {
+        let q = queue_of(64, &[1, 2, 3, 4, 5]);
+        q.close();
+        let b = Batcher::new(q, BatchPolicy { max_batch: 2, window: Duration::from_millis(5) });
+        let mut drained = Vec::new();
+        let mut batches = 0;
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 2);
+            drained.extend(batch);
+            batches += 1;
+        }
+        assert_eq!(drained, vec![1, 2, 3, 4, 5], "no admitted request may be dropped");
+        assert_eq!(batches, 3);
+    }
+
+    #[test]
+    fn occupancy_counts_only_real_rows() {
+        let rows: Vec<&[i32]> = vec![&[1, 2, 3], &[4, 5]];
+        let (tokens, occ) = assemble_padded(&rows, 4, 3);
+        assert_eq!(occ, 2);
+        assert_eq!(tokens, vec![1, 2, 3, 4, 5, 0, 0, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn padding_truncates_long_rows() {
+        let rows: Vec<&[i32]> = vec![&[9, 9, 9, 9, 9]];
+        let (tokens, occ) = assemble_padded(&rows, 2, 3);
+        assert_eq!(occ, 1);
+        assert_eq!(tokens, vec![9, 9, 9, 0, 0, 0]);
+    }
+
+    #[test]
+    fn overfull_row_set_clamps_occupancy() {
+        let rows: Vec<&[i32]> = vec![&[1], &[2], &[3]];
+        let (tokens, occ) = assemble_padded(&rows, 2, 1);
+        assert_eq!(occ, 2);
+        assert_eq!(tokens, vec![1, 2]);
+    }
+}

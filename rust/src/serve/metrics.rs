@@ -1,0 +1,276 @@
+//! Serving metrics: log-bucketed latency histograms + per-worker
+//! counters, replacing the seed's flat `ServeStats`.
+//!
+//! The histogram uses 8 sub-buckets per octave over microseconds
+//! (≈9% bucket width), so p50/p95/p99 are read off the cumulative
+//! distribution with bounded relative error and O(1) memory — mergeable
+//! across workers, which a sorted-sample vector is not. All of this is
+//! pure host code, unit-testable without PJRT.
+
+use std::time::Duration;
+
+/// Sub-buckets per factor-of-two in latency.
+const SUB: usize = 8;
+/// 40 octaves x 8: covers 1us .. ~2^40us (about 12 days).
+const N_BUCKETS: usize = 40 * SUB;
+
+/// Log-bucketed latency histogram over microseconds.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us < 1.0 {
+            return 0;
+        }
+        ((us.log2() * SUB as f64) as usize).min(N_BUCKETS - 1)
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let us = if us.is_finite() && us > 0.0 { us } else { 0.0 };
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Quantile in microseconds: geometric midpoint of the bucket
+    /// holding the rank (≈±5% at 8 sub-buckets/octave).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        // extremes are tracked exactly; only interior ranks are bucketed
+        if rank == 0 {
+            return self.min_us;
+        }
+        if rank == self.count - 1 {
+            return self.max_us;
+        }
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c > rank {
+                let lo = (2f64).powf(i as f64 / SUB as f64);
+                let hi = (2f64).powf((i + 1) as f64 / SUB as f64);
+                return (lo * hi).sqrt().clamp(self.min_us, self.max_us);
+            }
+            seen += c;
+        }
+        self.max_us
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        self.quantile_us(0.95)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.quantile_us(0.99)
+    }
+
+    /// Merge another histogram into this one (cross-worker aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter_mut().zip(&other.buckets) {
+            *dst += *src;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// One-line summary for demo/bench output.
+    pub fn line(&self, label: &str) -> String {
+        format!(
+            "{label:<32} n={:<5} mean={:>9.1}us p50={:>9.1}us p95={:>9.1}us p99={:>9.1}us",
+            self.count,
+            self.mean_us(),
+            self.p50_us(),
+            self.p95_us(),
+            self.p99_us()
+        )
+    }
+}
+
+/// Per-worker (and, merged, per-server) serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub served: u64,
+    pub batches: u64,
+    pub total_batch_occupancy: u64,
+    /// Submissions that found every worker queue full and had to block
+    /// on the admission queue (router-level; zero on worker metrics).
+    pub blocked_submits: u64,
+    /// Queue depth sampled at each dispatch (backlog gauge).
+    pub queue_depth_sum: u64,
+    pub queue_depth_samples: u64,
+    /// Time spent inside `Session::run` (device occupancy numerator).
+    pub exec_secs: f64,
+    /// End-to-end request latency (queue + batch + execute + post).
+    pub latency: Histogram,
+}
+
+impl ServeMetrics {
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.total_batch_occupancy as f64 / self.batches as f64
+        }
+    }
+
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.queue_depth_samples == 0 {
+            0.0
+        } else {
+            self.queue_depth_sum as f64 / self.queue_depth_samples as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.served += other.served;
+        self.batches += other.batches;
+        self.total_batch_occupancy += other.total_batch_occupancy;
+        self.blocked_submits += other.blocked_submits;
+        self.queue_depth_sum += other.queue_depth_sum;
+        self.queue_depth_samples += other.queue_depth_samples;
+        self.exec_secs += other.exec_secs;
+        self.latency.merge(&other.latency);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.p50_us(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_on_uniform_samples() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean_us() - 500.5).abs() < 1e-6);
+        for (q, want) in [(0.50, 500.0), (0.95, 950.0), (0.99, 990.0)] {
+            let got = h.quantile_us(q);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.15, "q{q}: got {got}, want ~{want} (rel {rel:.3})");
+        }
+        // extremes are exact (clamped to observed min/max)
+        assert_eq!(h.quantile_us(0.0), 1.0);
+        assert_eq!(h.quantile_us(1.0), 1000.0);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording(){
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut both = Histogram::new();
+        for i in 1..=100 {
+            a.record_us(i as f64);
+            both.record_us(i as f64);
+        }
+        for i in 101..=200 {
+            b.record_us(i as f64);
+            both.record_us(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert!((a.p50_us() - both.p50_us()).abs() < 1e-9);
+        assert!((a.p99_us() - both.p99_us()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn submicrosecond_and_garbage_samples_are_safe() {
+        let mut h = Histogram::new();
+        h.record_us(0.0);
+        h.record_us(-5.0);
+        h.record_us(f64::NAN);
+        h.record_us(1e18); // beyond the top bucket: clamped
+        assert_eq!(h.count(), 4);
+        assert!(h.quantile_us(0.5).is_finite());
+    }
+
+    #[test]
+    fn serve_metrics_merge_and_means() {
+        let mut a = ServeMetrics {
+            served: 10,
+            batches: 5,
+            total_batch_occupancy: 20,
+            queue_depth_sum: 15,
+            queue_depth_samples: 5,
+            ..Default::default()
+        };
+        let b = ServeMetrics {
+            served: 6,
+            batches: 3,
+            total_batch_occupancy: 6,
+            queue_depth_sum: 3,
+            queue_depth_samples: 3,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.served, 16);
+        assert_eq!(a.batches, 8);
+        assert!((a.mean_occupancy() - 26.0 / 8.0).abs() < 1e-12);
+        assert!((a.mean_queue_depth() - 18.0 / 8.0).abs() < 1e-12);
+    }
+}

@@ -1,34 +1,63 @@
-//! Mini serving driver: request router + dynamic batcher over the
-//! AOT-compiled `qlogits` executables.
+//! Serving subsystem: admission → router → per-worker batcher →
+//! device-resident session.
 //!
-//! This is the "no runtime overhead" demonstration of §5.3: the same
-//! compiled graph serves FP-sentinel, uniform and mixed-precision bit
-//! grids, so mixed precision adds zero request-path work. The server
-//! also provides the latency/throughput numbers for the Table-4 analog
-//! at the end-to-end level.
+//! This is the "no runtime overhead" demonstration of §5.3 scaled up
+//! from the seed's single runner thread: the same compiled graph serves
+//! FP-sentinel, uniform and mixed-precision bit grids, so mixed
+//! precision adds zero request-path work — and now it does so through a
+//! real serving stack that the end-to-end latency/throughput numbers
+//! (Table-4 analog, `BENCH_serve.json`) are measured against.
 //!
-//! Threading model: PJRT handles are not Send, so the engine lives on a
-//! dedicated runner thread that owns it end-to-end; clients talk to it
-//! over mpsc channels. The batcher drains the queue up to the batch
-//! size of the compiled executable, padding partial batches (static
-//! shapes are the price of AOT).
+//! Layout:
+//!
+//! * [`admission`] — bounded per-worker request queues with
+//!   backpressure (replaces the seed's unbounded mpsc).
+//! * [`batcher`] — the deadline batching loop, extracted so it is
+//!   unit-testable without PJRT.
+//! * [`metrics`] — latency histograms (p50/p95/p99), occupancy, queue
+//!   depth; replaces the flat `ServeStats`.
+//! * [`router`] — round-robin dispatch over N worker threads. Each
+//!   worker owns a complete PJRT [`crate::runtime::Session`] (engine +
+//!   device-resident weights + device-resident bit grids) because PJRT
+//!   handles are `!Send`; the per-dispatch host→device transfer is the
+//!   token batch alone.
+//!
+//! Threading model in one picture:
+//!
+//! ```text
+//! client ── submit ──> Router ──(round-robin, bounded queues)──┬─> worker 0: Batcher -> Session::run -> respond
+//!                                                              ├─> worker 1: ...
+//!                                                              └─> worker N-1: ...
+//! ```
+//!
+//! Shutdown closes every queue; workers drain all admitted requests
+//! before exiting, so nothing accepted is ever dropped.
+
+pub mod admission;
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+
+pub use batcher::{assemble_padded, BatchPolicy, Batcher};
+pub use metrics::{Histogram, ServeMetrics};
+pub use router::{start_server, Router, ServeConfig, ServeReport, ServerHandle};
 
 use std::sync::mpsc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::calib::TokenStream;
-use crate::model::{Manifest, WeightStore};
-use crate::quant::{BitAlloc, BlockIndex};
-use crate::runtime::{literal_to_vec_f32, Engine};
 
 /// A next-token prediction request: a full context window.
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub tx: mpsc::Sender<Response>,
+    /// Count this request in the worker's served/latency metrics.
+    /// Warmup barriers submit with `record: false` so cold-start
+    /// compile waits never contaminate the latency histograms.
+    pub record: bool,
 }
 
 #[derive(Clone, Debug)]
@@ -38,203 +67,77 @@ pub struct Response {
     /// Queue + batch + execute + postprocess, measured server-side.
     pub latency: Duration,
     pub batch_size: usize,
+    /// Which worker served the request (round-robin dispatch).
+    pub worker: usize,
 }
 
-enum Msg {
-    Req(Request, Instant),
-    Shutdown,
+/// What [`run_workload`] measured.
+pub struct WorkloadReport {
+    /// Per-request server-side latencies (seconds), submission order.
+    pub latencies: Vec<f64>,
+    /// First measured submission → last response. Warmup (per-worker
+    /// engine compilation + buffer upload) is excluded, so
+    /// `n / wall_secs` is a serving-throughput number, not a
+    /// cold-start-amortization number.
+    pub wall_secs: f64,
 }
 
-/// Server statistics for the bench harness.
-#[derive(Clone, Debug, Default)]
-pub struct ServeStats {
-    pub served: u64,
-    pub batches: u64,
-    pub total_batch_occupancy: u64,
-}
-
-impl ServeStats {
-    pub fn mean_occupancy(&self) -> f64 {
-        if self.batches == 0 {
-            0.0
-        } else {
-            self.total_batch_occupancy as f64 / self.batches as f64
-        }
+impl WorkloadReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.latencies.len() as f64 / self.wall_secs.max(1e-9)
     }
 }
 
-pub struct ServerHandle {
-    tx: mpsc::Sender<Msg>,
-    join: Option<JoinHandle<Result<ServeStats>>>,
-    next_id: u64,
-}
-
-impl ServerHandle {
-    /// Submit a request; returns a receiver for the response.
-    pub fn submit(&mut self, tokens: Vec<i32>) -> Result<mpsc::Receiver<Response>> {
-        let (tx, rx) = mpsc::channel();
-        let id = self.next_id;
-        self.next_id += 1;
-        self.tx
-            .send(Msg::Req(Request { id, tokens, tx }, Instant::now()))
-            .map_err(|_| anyhow!("server thread gone"))?;
-        Ok(rx)
-    }
-
-    /// Stop the server and collect its statistics.
-    pub fn shutdown(mut self) -> Result<ServeStats> {
-        let _ = self.tx.send(Msg::Shutdown);
-        match self.join.take() {
-            Some(j) => j.join().map_err(|_| anyhow!("server thread panicked"))?,
-            None => Ok(ServeStats::default()),
-        }
-    }
-}
-
-/// Start the serving runner thread.
+/// Synthetic client workload against a running server.
 ///
-/// `alloc` fixes the bit grids served (the quantized model); weights
-/// are uploaded once at startup. `batch_window`: how long the batcher
-/// waits to fill a batch before dispatching a partial one.
-pub fn start_server(
-    artifacts: std::path::PathBuf,
-    alloc: BitAlloc,
-    batch_window: Duration,
-) -> Result<ServerHandle> {
-    let (tx, rx) = mpsc::channel::<Msg>();
-    let join = std::thread::spawn(move || -> Result<ServeStats> {
-        // Engine is constructed ON this thread (PJRT handles are !Send).
-        let manifest = Manifest::load(&artifacts)?;
-        // Prefer the prediction fast path (int32 [B,T] output) when the
-        // artifact set includes it; fall back to full logits.
-        let exec_name =
-            if manifest.executables.contains_key("qpredict") { "qpredict" } else { "qlogits" };
-        let engine = Engine::load(manifest, &[exec_name])?;
-        let store = WeightStore::load(&engine.manifest)?;
-        let wbufs = engine.upload_weights(&store)?;
-        let index = BlockIndex::from_manifest(&engine.manifest)?;
-        let grids = alloc.grids(&index);
-        let batch = engine.batch_of(exec_name)?;
-        let seq = engine.manifest.config.seq_len;
-        let vocab = engine.manifest.config.vocab;
-        let use_pred = exec_name == "qpredict";
-
-        let mut stats = ServeStats::default();
-        let mut pending: Vec<(Request, Instant)> = Vec::new();
-        let mut shutdown = false;
-
-        'outer: loop {
-            // Block for the first request of the next batch.
-            if pending.is_empty() {
-                match rx.recv() {
-                    Ok(Msg::Req(r, t)) => pending.push((r, t)),
-                    Ok(Msg::Shutdown) | Err(_) => break 'outer,
-                }
-            }
-            // Drain up to the batch size within the window.
-            let deadline = Instant::now() + batch_window;
-            while pending.len() < batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(Msg::Req(r, t)) => pending.push((r, t)),
-                    Ok(Msg::Shutdown) => {
-                        shutdown = true;
-                        break;
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        shutdown = true;
-                        break;
-                    }
-                }
-            }
-
-            // Assemble the (padded) batch.
-            let occupancy = pending.len().min(batch);
-            let mut tokens = vec![0i32; batch * seq];
-            for (b, (req, _)) in pending.iter().take(occupancy).enumerate() {
-                let n = req.tokens.len().min(seq);
-                tokens[b * seq..b * seq + n].copy_from_slice(&req.tokens[..n]);
-            }
-            let out = engine.run_model(exec_name, &tokens, &grids, &wbufs)?;
-            // Fast path ships [B, T] int32 predictions; fallback argmaxes
-            // the full logits host-side.
-            let preds: Vec<i32> = if use_pred {
-                out[0].to_vec::<i32>().map_err(|e| anyhow!("pred fetch: {e:?}"))?
-            } else {
-                Vec::new()
-            };
-            let logits: Vec<f32> =
-                if use_pred { Vec::new() } else { literal_to_vec_f32(&out[0])? };
-
-            for (b, (req, t_in)) in pending.drain(..occupancy).enumerate() {
-                let pos = req.tokens.len().clamp(1, seq) - 1;
-                let best = if use_pred {
-                    preds[b * seq + pos] as usize
-                } else {
-                    let base = (b * seq + pos) * vocab;
-                    let row = &logits[base..base + vocab];
-                    let mut best = 0usize;
-                    for (v, &x) in row.iter().enumerate() {
-                        if x > row[best] {
-                            best = v;
-                        }
-                    }
-                    best
-                };
-                let _ = req.tx.send(Response {
-                    id: req.id,
-                    next_token: best as i32,
-                    latency: t_in.elapsed(),
-                    batch_size: occupancy,
-                });
-                stats.served += 1;
-            }
-            stats.batches += 1;
-            stats.total_batch_occupancy += occupancy as u64;
-
-            if shutdown && pending.is_empty() {
-                break;
-            }
-        }
-        Ok(stats)
-    });
-    Ok(ServerHandle { tx, join: Some(join), next_id: 0 })
-}
-
-/// Closed-loop synthetic client workload: `n_requests` windows sampled
-/// from a token stream, submitted with exponential inter-arrival times.
-/// Returns per-request latencies (seconds) in completion order.
+/// Arrival model: OPEN-LOOP Poisson — `n_requests` windows sampled from
+/// a token stream are submitted with exponential inter-arrival gaps at
+/// `rate_per_sec`, and the sampled gap is honored exactly (the seed
+/// clamped gaps at 50 ms, silently turning low-rate workloads into
+/// higher-rate ones). The loop becomes CLOSED only at the admission
+/// bound: when every worker queue is full, `submit` blocks, so the
+/// client cannot outrun the server by more than `workers * queue_cap`
+/// in-flight requests. After the submission phase the client blocks for
+/// all completions.
 pub fn run_workload(
-    server: &mut ServerHandle,
+    server: &mut Router,
     stream: &TokenStream,
     seq_len: usize,
     n_requests: usize,
     rate_per_sec: f64,
     seed: u64,
-) -> Result<Vec<f64>> {
+) -> Result<WorkloadReport> {
+    anyhow::ensure!(rate_per_sec > 0.0, "rate_per_sec must be positive (got {rate_per_sec})");
     let mut rng = crate::util::rng::Rng::new(seed);
     let mut rxs = Vec::with_capacity(n_requests);
     let max_start = stream.len() - seq_len - 1;
-    // Warmup barrier: the server thread compiles its executable lazily;
-    // block on one unmeasured request so cold-start cost doesn't count
-    // as queueing latency for the workload.
-    let warm = server.submit(stream.tokens[..seq_len].to_vec())?;
-    warm.recv().map_err(|_| anyhow!("warmup failed"))?;
+    // Warmup barrier: each worker compiles its executable and uploads
+    // its buffers on its own thread; block on one unmeasured,
+    // unrecorded request per worker so cold-start cost never counts as
+    // queueing latency, throughput, or a histogram sample.
+    // (Round-robin lands one warmup on each worker.)
+    let mut warm = Vec::with_capacity(server.workers());
+    for _ in 0..server.workers() {
+        warm.push(server.submit_warmup(stream.tokens[..seq_len].to_vec())?);
+    }
+    for rx in warm {
+        rx.recv().map_err(|_| anyhow!("warmup failed"))?;
+    }
+    let t0 = std::time::Instant::now();
     for _ in 0..n_requests {
         let start = rng.below(max_start);
         let tokens = stream.tokens[start..start + seq_len].to_vec();
         rxs.push(server.submit(tokens)?);
         let gap = rng.exp(rate_per_sec);
-        std::thread::sleep(Duration::from_secs_f64(gap.min(0.05)));
+        // non-finite gaps can't reach a Duration (from_secs_f64 panics)
+        if gap.is_finite() && gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap));
+        }
     }
     let mut latencies = Vec::with_capacity(n_requests);
     for rx in rxs {
         let resp = rx.recv().map_err(|_| anyhow!("response channel closed"))?;
         latencies.push(resp.latency.as_secs_f64());
     }
-    Ok(latencies)
+    Ok(WorkloadReport { latencies, wall_secs: t0.elapsed().as_secs_f64() })
 }

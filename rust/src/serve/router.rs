@@ -1,0 +1,347 @@
+//! Round-robin router over N serving workers.
+//!
+//! Threading model
+//! ---------------
+//! PJRT handles are `!Send`, so device state can never be shared or
+//! migrated: each worker THREAD owns a complete, independent
+//! [`Session`] (its own PJRT client, compiled executable, weight
+//! buffers and device-resident bit grids), built on the worker thread
+//! at spawn. The router owns only `Send` things: one bounded admission
+//! queue per worker plus the join handles.
+//!
+//! Request path: `Router::submit` picks the next worker round-robin
+//! and `try_push`es into its queue; if that queue is full it spills to
+//! the other workers, and only if EVERY queue is full does it block on
+//! the home queue (backpressure — the client slows down instead of the
+//! server buffering unboundedly). Each worker runs the deadline
+//! [`Batcher`] over its queue, executes the padded batch through its
+//! session (token-only upload), and answers each request over its
+//! per-request response channel.
+//!
+//! Shutdown: `Router::shutdown` closes every queue. Workers drain all
+//! admitted requests (the batcher keeps yielding until its queue is
+//! closed AND empty), return their [`ServeMetrics`], and the router
+//! merges them into a [`ServeReport`].
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::{Manifest, WeightStore};
+use crate::quant::{BitAlloc, BlockIndex};
+use crate::runtime::{literal_to_vec_f32, Engine, Session};
+
+use super::admission::{Bounded, PushError};
+use super::batcher::{assemble_padded, BatchPolicy, Batcher};
+use super::metrics::ServeMetrics;
+use super::{Request, Response};
+
+pub const DEFAULT_QUEUE_CAP: usize = 256;
+pub const DEFAULT_BATCH_WINDOW: Duration = Duration::from_millis(3);
+
+/// Server configuration. `alloc` fixes the bit grids served (the
+/// quantized model); weights and grids are uploaded once per worker at
+/// startup and stay device-resident.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifacts: PathBuf,
+    pub alloc: BitAlloc,
+    /// How long the batcher waits to fill a batch before dispatching a
+    /// partial one.
+    pub batch_window: Duration,
+    /// Worker threads, each with its own engine (PJRT is `!Send`).
+    pub workers: usize,
+    /// Admission queue capacity per worker (backpressure bound).
+    pub queue_cap: usize,
+}
+
+impl ServeConfig {
+    pub fn new(artifacts: PathBuf, alloc: BitAlloc) -> ServeConfig {
+        ServeConfig {
+            artifacts,
+            alloc,
+            batch_window: DEFAULT_BATCH_WINDOW,
+            workers: 1,
+            queue_cap: DEFAULT_QUEUE_CAP,
+        }
+    }
+}
+
+/// Aggregated server statistics returned by `Router::shutdown`.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub workers: usize,
+    pub per_worker: Vec<ServeMetrics>,
+    /// All workers merged; `blocked_submits` is filled in router-side.
+    pub total: ServeMetrics,
+}
+
+type Queued = (Request, Instant);
+
+/// Client-side handle: round-robin dispatcher over the worker queues.
+pub struct Router {
+    queues: Vec<Arc<Bounded<Queued>>>,
+    joins: Vec<JoinHandle<Result<ServeMetrics>>>,
+    rr: usize,
+    next_id: u64,
+    blocked_submits: u64,
+}
+
+/// Historical name for [`Router`], kept for the single-worker API.
+pub type ServerHandle = Router;
+
+impl Router {
+    /// Spawn the workers and return once all threads are launched.
+    /// Workers compile their executables asynchronously; the first
+    /// requests simply queue until a session is ready.
+    pub fn start(cfg: ServeConfig) -> Result<Router> {
+        if cfg.workers == 0 {
+            bail!("need at least one worker");
+        }
+        // Grids are derived host-side once; every worker uploads them to
+        // its own device at startup and they stay resident thereafter.
+        let manifest = Manifest::load(&cfg.artifacts)?;
+        let index = BlockIndex::from_manifest(&manifest)?;
+        if cfg.alloc.bits.len() != index.n_blocks {
+            bail!("allocation has {} blocks, model has {}", cfg.alloc.bits.len(), index.n_blocks);
+        }
+        let grids = cfg.alloc.grids(&index);
+        drop(manifest);
+
+        let mut queues = Vec::with_capacity(cfg.workers);
+        let mut joins = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let queue = Arc::new(Bounded::new(cfg.queue_cap));
+            let worker_queue = queue.clone();
+            let artifacts = cfg.artifacts.clone();
+            let worker_grids = grids.clone();
+            let window = cfg.batch_window;
+            let join = std::thread::Builder::new()
+                .name(format!("scalebits-worker-{w}"))
+                .spawn(move || {
+                    // Whatever way this worker exits — clean shutdown,
+                    // error, or panic — its queue must close and drop
+                    // any still-pending requests, so waiting clients
+                    // see a channel error instead of hanging forever.
+                    let _guard = CloseOnExit(worker_queue.clone());
+                    worker_loop(w, artifacts, worker_grids, worker_queue, window)
+                })
+                .map_err(|e| anyhow!("spawn worker {w}: {e}"))?;
+            queues.push(queue);
+            joins.push(join);
+        }
+        Ok(Router { queues, joins, rr: 0, next_id: 0, blocked_submits: 0 })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Point-in-time backlog per worker queue.
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.queues.iter().map(|q| q.len()).collect()
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    ///
+    /// Dispatch: round-robin home worker, spill-over to any worker with
+    /// space, and — only when every live queue is full — a blocking
+    /// push on the first live queue (admission backpressure). A closed
+    /// queue (dead worker) is skipped like a full one; submission fails
+    /// only when every worker is gone.
+    pub fn submit(&mut self, tokens: Vec<i32>) -> Result<mpsc::Receiver<Response>> {
+        self.submit_inner(tokens, true)
+    }
+
+    /// Submit a request that is served normally but excluded from the
+    /// worker metrics (used by warmup barriers, whose "latency" is the
+    /// worker's one-time engine compilation).
+    pub fn submit_warmup(&mut self, tokens: Vec<i32>) -> Result<mpsc::Receiver<Response>> {
+        self.submit_inner(tokens, false)
+    }
+
+    fn submit_inner(
+        &mut self,
+        tokens: Vec<i32>,
+        record: bool,
+    ) -> Result<mpsc::Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id;
+        self.next_id += 1;
+        let n = self.queues.len();
+        let home = self.rr % n;
+        self.rr = (self.rr + 1) % n;
+        let mut msg: Queued = (Request { id, tokens, tx, record }, Instant::now());
+        let mut any_live = false;
+        for k in 0..n {
+            match self.queues[(home + k) % n].try_push(msg) {
+                Ok(()) => return Ok(rx),
+                Err(PushError::Full(m)) => {
+                    any_live = true;
+                    msg = m;
+                }
+                Err(PushError::Closed(m)) => msg = m,
+            }
+        }
+        if !any_live {
+            bail!("server is shut down");
+        }
+        self.blocked_submits += 1;
+        for k in 0..n {
+            let q = &self.queues[(home + k) % n];
+            if q.is_closed() {
+                continue;
+            }
+            match q.push(msg) {
+                Ok(()) => return Ok(rx),
+                // raced with a shutdown/death — try the next queue
+                Err(PushError::Closed(m)) | Err(PushError::Full(m)) => msg = m,
+            }
+        }
+        bail!("server is shut down")
+    }
+
+    /// Stop admission, drain every pending request, join the workers
+    /// and aggregate their metrics.
+    pub fn shutdown(mut self) -> Result<ServeReport> {
+        for q in &self.queues {
+            q.close();
+        }
+        let mut per_worker = Vec::with_capacity(self.joins.len());
+        for j in self.joins.drain(..) {
+            per_worker.push(j.join().map_err(|_| anyhow!("worker thread panicked"))??);
+        }
+        let mut total = ServeMetrics::default();
+        for m in &per_worker {
+            total.merge(m);
+        }
+        total.blocked_submits = self.blocked_submits;
+        Ok(ServeReport { workers: per_worker.len(), per_worker, total })
+    }
+}
+
+impl Drop for Router {
+    /// A dropped (not shut down) router must not leave workers blocked
+    /// on their queues forever.
+    fn drop(&mut self) {
+        for q in &self.queues {
+            q.close();
+        }
+    }
+}
+
+/// Closes (and drains) a worker queue when the worker exits — on the
+/// clean path the queue is already empty, on the error/panic path the
+/// pending requests are dropped so their clients unblock with an error.
+struct CloseOnExit(Arc<Bounded<Queued>>);
+
+impl Drop for CloseOnExit {
+    fn drop(&mut self) {
+        self.0.close_and_drain();
+    }
+}
+
+/// One worker: builds its own engine + session on this thread (PJRT
+/// handles are `!Send`), then serves batches until shutdown.
+fn worker_loop(
+    worker: usize,
+    artifacts: PathBuf,
+    grids: Vec<Vec<i32>>,
+    queue: Arc<Bounded<Queued>>,
+    window: Duration,
+) -> Result<ServeMetrics> {
+    let manifest = Manifest::load(&artifacts)?;
+    // Prefer the prediction fast path (int32 [B,T] output) when the
+    // artifact set includes it; fall back to full logits.
+    let exec_name =
+        if manifest.executables.contains_key("qpredict") { "qpredict" } else { "qlogits" };
+    let engine = Engine::load(manifest, &[exec_name])?;
+    let store = WeightStore::load(&engine.manifest)?;
+    let batch = engine.batch_of(exec_name)?;
+    let seq = engine.manifest.config.seq_len;
+    let vocab = engine.manifest.config.vocab;
+    let use_pred = exec_name == "qpredict";
+    // Weights AND bit grids go device-resident here, once. From now on
+    // each dispatch uploads exactly one buffer: the token batch.
+    let session = Session::new(engine, &store, &grids)?;
+    drop(store);
+
+    let batcher = Batcher::new(queue.clone(), BatchPolicy { max_batch: batch, window });
+    let mut metrics = ServeMetrics::default();
+    while let Some(items) = batcher.next_batch() {
+        // Sampled at dispatch; only credited to the metrics below if
+        // this batch contains recorded (non-warmup) requests.
+        let depth = queue.len() as u64;
+        let mut recorded = 0u64;
+
+        let rows: Vec<&[i32]> = items.iter().map(|(r, _)| r.tokens.as_slice()).collect();
+        let (tokens, occupancy) = assemble_padded(&rows, batch, seq);
+        let t0 = Instant::now();
+        let out = session.run(exec_name, &tokens)?;
+        let exec_dt = t0.elapsed().as_secs_f64();
+
+        // Fast path ships [B, T] int32 predictions; fallback argmaxes
+        // the full logits host-side.
+        let preds: Vec<i32> = if use_pred {
+            out[0].to_vec::<i32>().map_err(|e| anyhow!("pred fetch: {e:?}"))?
+        } else {
+            Vec::new()
+        };
+        let logits: Vec<f32> = if use_pred { Vec::new() } else { literal_to_vec_f32(&out[0])? };
+
+        for (b, (req, t_in)) in items.into_iter().enumerate() {
+            let pos = req.tokens.len().clamp(1, seq) - 1;
+            let best = if use_pred {
+                preds[b * seq + pos] as usize
+            } else {
+                let base = (b * seq + pos) * vocab;
+                let row = &logits[base..base + vocab];
+                let mut best = 0usize;
+                for (v, &x) in row.iter().enumerate() {
+                    if x > row[best] {
+                        best = v;
+                    }
+                }
+                best
+            };
+            let latency = t_in.elapsed();
+            if req.record {
+                metrics.latency.record(latency);
+                metrics.served += 1;
+                recorded += 1;
+            }
+            let _ = req.tx.send(Response {
+                id: req.id,
+                next_token: best as i32,
+                latency,
+                batch_size: occupancy,
+                worker,
+            });
+        }
+        // Warmup-only batches stay out of the batch/occupancy/queue
+        // statistics too — they measure engine cold start, not serving.
+        if recorded > 0 {
+            metrics.batches += 1;
+            metrics.total_batch_occupancy += occupancy as u64;
+            metrics.queue_depth_sum += depth;
+            metrics.queue_depth_samples += 1;
+            metrics.exec_secs += exec_dt;
+        }
+    }
+    Ok(metrics)
+}
+
+/// Single-worker compatibility constructor (the seed API).
+pub fn start_server(
+    artifacts: PathBuf,
+    alloc: BitAlloc,
+    batch_window: Duration,
+) -> Result<Router> {
+    let mut cfg = ServeConfig::new(artifacts, alloc);
+    cfg.batch_window = batch_window;
+    Router::start(cfg)
+}

@@ -148,7 +148,7 @@ fn device_fakequant_agrees_with_rust_mirror() {
     }
     let bufs = p.engine.upload_weights(&store).unwrap();
     let grids = p.fp_alloc().grids(&p.index);
-    let out = p.engine.run_model("qloss", &tokens, &grids, &bufs).unwrap();
+    let out = p.engine.run_model_host_grids("qloss", &tokens, &grids, &bufs).unwrap();
     let host_side = literal_scalar_f32(&out[0]).unwrap() as f64;
     assert!(
         (on_device - host_side).abs() < 1e-4,
@@ -168,7 +168,7 @@ fn reordering_preserves_model_function() {
     let logits_before = {
         let out = p
             .engine
-            .run_model("qlogits", &tokens, &fp.grids(&p.index), &p.wbufs)
+            .run_model_host_grids("qlogits", &tokens, &fp.grids(&p.index), &p.wbufs)
             .unwrap();
         literal_to_vec_f32(&out[0]).unwrap()
     };
@@ -177,7 +177,7 @@ fn reordering_preserves_model_function() {
     let logits_after = {
         let out = p
             .engine
-            .run_model("qlogits", &tokens, &fp.grids(&p.index), &p.wbufs)
+            .run_model_host_grids("qlogits", &tokens, &fp.grids(&p.index), &p.wbufs)
             .unwrap();
         literal_to_vec_f32(&out[0]).unwrap()
     };
@@ -260,9 +260,70 @@ fn server_round_trip() {
         let resp = rx.recv().unwrap();
         assert!(resp.next_token >= 0 && (resp.next_token as usize) < m.config.vocab);
         assert!(resp.batch_size >= 1);
+        assert_eq!(resp.worker, 0);
     }
-    let stats = server.shutdown().unwrap();
-    assert_eq!(stats.served, 5);
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.workers, 1);
+    assert_eq!(report.total.served, 5);
+    assert_eq!(report.total.latency.count(), 5);
+}
+
+#[test]
+fn multi_worker_router_round_trip() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut cfg =
+        scalebits::serve::ServeConfig::new(artifacts(), BitAlloc::uniform(&index, 4));
+    cfg.workers = 2;
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..8 {
+        let tokens = stream.tokens[i * 32..i * 32 + m.config.seq_len].to_vec();
+        rxs.push(server.submit(tokens).unwrap());
+    }
+    let mut seen_workers = std::collections::HashSet::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.next_token >= 0 && (resp.next_token as usize) < m.config.vocab);
+        seen_workers.insert(resp.worker);
+    }
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.total.served, 8);
+    assert_eq!(report.per_worker.len(), 2);
+    // round-robin over dedicated queues: both workers must have served
+    assert_eq!(seen_workers.len(), 2, "dispatch must spread across workers");
+    assert_eq!(
+        report.per_worker.iter().map(|w| w.served).sum::<u64>(),
+        report.total.served
+    );
+}
+
+/// The acceptance check for grid residency: once a Session is built,
+/// the serve path's only host→device transfer per batch is the token
+/// batch itself (weights AND bit grids stay resident).
+#[test]
+fn serve_path_uploads_tokens_only() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let engine = Engine::load(m, &["qloss"]).unwrap();
+    let store = WeightStore::load(&engine.manifest).unwrap();
+    let alloc = BitAlloc::uniform(&index, 4);
+    let session = scalebits::runtime::Session::new(engine, &store, &alloc.grids(&index)).unwrap();
+    let batch = session.engine().batch_of("qloss").unwrap();
+    let seq = session.manifest().config.seq_len;
+    let stream =
+        scalebits::calib::TokenStream::from_manifest(session.manifest(), "eval").unwrap();
+    let tokens: Vec<i32> = stream.tokens[..batch * seq].to_vec();
+
+    session.run("qloss", &tokens).unwrap(); // warm
+    session.engine().reset_transfer_stats();
+    for _ in 0..3 {
+        session.run("qloss", &tokens).unwrap();
+    }
+    let t = session.engine().transfer_stats();
+    assert_eq!(t.uploads, 3, "per-batch transfers must be the token batch only");
+    assert_eq!(t.bytes, 3 * (batch * seq * 4) as u64);
 }
 
 // ---------------------------------------------------------------------
@@ -420,20 +481,20 @@ fn runtime_rejects_bad_shapes() {
     let grids = alloc.grids(&p.index);
     // wrong token count
     let bad_tokens = vec![0i32; 17];
-    assert!(p.engine.run_model("qloss", &bad_tokens, &grids, &p.wbufs).is_err());
+    assert!(p.engine.run_model_host_grids("qloss", &bad_tokens, &grids, &p.wbufs).is_err());
     // wrong grid count
     let mut sampler = p.sampler(1);
     let tokens = sampler.sample(8);
     assert!(p
         .engine
-        .run_model("qloss", &tokens, &grids[..grids.len() - 1], &p.wbufs)
+        .run_model_host_grids("qloss", &tokens, &grids[..grids.len() - 1], &p.wbufs)
         .is_err());
     // wrong grid shape
     let mut bad_grids = grids.clone();
     bad_grids[0].pop();
-    assert!(p.engine.run_model("qloss", &tokens, &bad_grids, &p.wbufs).is_err());
+    assert!(p.engine.run_model_host_grids("qloss", &tokens, &bad_grids, &p.wbufs).is_err());
     // unknown executable
-    assert!(p.engine.run_model("nonexistent", &tokens, &grids, &p.wbufs).is_err());
+    assert!(p.engine.run_model_host_grids("nonexistent", &tokens, &grids, &p.wbufs).is_err());
 }
 
 #[test]
