@@ -1,20 +1,46 @@
 #!/usr/bin/env bash
 # Tier-1 gate + lint, run from the repo root:
-#   ./ci.sh
+#   ./ci.sh                  # default lane
+#   ./ci.sh --no-artifacts   # force the interpreter backend everywhere
 #
 # Matches the ROADMAP tier-1 verify (`cargo build --release &&
-# cargo test -q`) and adds clippy. Integration tests that need AOT
-# artifacts fail loudly if `rust/artifacts/` is missing — run
-# `make artifacts` (python/compile/aot.py) first for the full net; the
-# pure host-side tests (serve::admission/batcher/metrics, quant, util,
-# testkit) run without any artifacts.
+# cargo test -q`) and adds rustfmt + clippy.
+#
+# Artifact-less coverage: integration tests no longer assert when
+# `rust/artifacts/` is missing — they auto-fall back to the pure-Rust
+# interpreter backend over a synthetic artifact set, so the FULL
+# cross-layer net (search invariants, serving round-trip, transfer
+# accounting, reordering equivalence) runs in this container with zero
+# AOT artifacts and zero PJRT executions. Run `make artifacts`
+# (python/compile/aot.py) first to additionally exercise the PJRT-only
+# tests (Pallas goldens, kernel executables). The `--no-artifacts`
+# lane sets SCALEBITS_BACKEND=interp to force the interpreter even
+# when artifacts exist, so both backends stay green.
 set -euo pipefail
 cd "$(dirname "$0")/rust"
+
+LANE="default"
+if [[ "${1:-}" == "--no-artifacts" ]]; then
+  LANE="no-artifacts"
+  export SCALEBITS_BACKEND=interp
+fi
+
+echo "== cargo fmt --check"
+# Not yet gating: the seed predates the fmt gate and is hand-formatted.
+# Flip FMT_STRICT=1 once the tree has been `cargo fmt`ed wholesale.
+if ! cargo fmt --version >/dev/null 2>&1; then
+  echo "warning: rustfmt component not installed; skipping fmt check"
+elif ! cargo fmt --check; then
+  if [[ "${FMT_STRICT:-0}" == "1" ]]; then
+    echo "rustfmt drift (FMT_STRICT=1)"; exit 1
+  fi
+  echo "warning: rustfmt drift (non-gating; set FMT_STRICT=1 to enforce)"
+fi
 
 echo "== cargo build --release"
 cargo build --release --offline
 
-echo "== cargo test -q"
+echo "== cargo test -q (${LANE} lane)"
 cargo test -q --offline
 
 echo "== cargo clippy -- -D warnings"
@@ -26,4 +52,4 @@ cargo clippy --offline --all-targets -- -D warnings \
   -A clippy::manual_memcpy \
   -A clippy::type_complexity
 
-echo "CI OK"
+echo "CI OK (${LANE})"

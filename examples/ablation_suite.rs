@@ -4,11 +4,12 @@
 //! Run: cargo run --release --offline --example ablation_suite
 
 use scalebits::coordinator::{experiments_ablation as ab, Pipeline};
+use scalebits::runtime::BackendKind;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::path::PathBuf::from("artifacts");
     println!("== ablation: adaptive gradients + channel reordering (Fig 15) ==");
-    ab::fig15(&artifacts, 42)?;
+    ab::fig15(&artifacts, BackendKind::Auto, 42)?;
     println!("\n== ablation: sensitivity statistics for one-sided updates (Fig 16) ==");
     let mut p = Pipeline::load_full(&artifacts)?;
     ab::fig16(&mut p, 42)?;

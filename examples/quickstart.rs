@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("[load] compiling AOT executables (qloss/qgrad/qlogits) ...");
     let mut p = Pipeline::load_full(&artifacts)?;
-    let c = &p.engine.manifest.config;
+    let c = p.manifest().config.clone();
     println!(
         "  MiniLlama: {} layers, d_model {}, {} quantizable blocks\n",
         c.n_layers, c.d_model, p.index.n_blocks

@@ -1,0 +1,276 @@
+"""Golden generator for the pure-Rust interpreter backend.
+
+Mirrors, bit-for-bit, the synthetic model that `model::synth` builds on
+the rust side (same Xoshiro256++/SplitMix64 RNG, same transcendental-
+free uniform weight init, same token streams), fake-quantizes in
+float32 exactly like the rust RTN mirror, runs the MiniLlama forward
+pass in float64 numpy, and records the cross-entropy losses to
+`rust/tests/data/interp_golden.json`.
+
+The rust test `interp_qloss_matches_python_golden` rebuilds the same
+synthetic model from the spec in the JSON and asserts the interpreter
+loss matches within 1e-4 (observed agreement is ~1e-10; the tolerance
+only absorbs f32 rounding of the returned scalar and summation-order
+differences between numpy's BLAS and the interpreter's loops).
+
+Run: cd python && python -m compile.interp_golden
+(needs numpy only — no JAX, no artifacts)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+# Recorded into the golden JSON as "token_seed_xor"; the rust test
+# reads it from there, so this constant is the single source of truth.
+GOLDEN_TOKENS_XOR = 0x601D
+
+SPEC = {
+    "vocab": 64,
+    "d_model": 32,
+    "n_layers": 2,
+    "n_heads": 2,
+    "d_ff": 64,
+    "seq_len": 32,
+    "block_rows": 16,
+    "block_cols": 16,
+    "batch": 4,
+    "seed": 7,
+}
+
+ROPE_THETA = 10000.0
+RMS_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------
+# rust RNG mirror (util/rng.rs): SplitMix64 -> Xoshiro256++
+
+
+class Rng:
+    def __init__(self, seed: int):
+        state = seed & MASK64
+        s = []
+        for _ in range(4):
+            state = (state + 0x9E3779B97F4A7C15) & MASK64
+            z = state
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    @staticmethod
+    def _rotl(x: int, k: int) -> int:
+        return ((x << k) | (x >> (64 - k))) & MASK64
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (self._rotl((s[0] + s[3]) & MASK64, 23) + s[0]) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n: int) -> int:
+        """Lemire's unbiased bounded integer (mirror of Rng::below)."""
+        x = self.next_u64()
+        m = x * n
+        lo = m & MASK64
+        if lo < n:
+            t = (1 << 64) % n
+            while lo < t:
+                x = self.next_u64()
+                m = x * n
+                lo = m & MASK64
+        return m >> 64
+
+
+# ---------------------------------------------------------------------
+# synthetic model mirror (model/synth.rs)
+
+
+def param_names(spec):
+    names = ["embed"]
+    for i in range(spec["n_layers"]):
+        for leaf in ("attn_norm", "wq", "wk", "wv", "wo",
+                     "mlp_norm", "w_gate", "w_up", "w_down"):
+            names.append(f"layers.{i}.{leaf}")
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def param_shape(spec, name):
+    v, d, f = spec["vocab"], spec["d_model"], spec["d_ff"]
+    leaf = name.rsplit(".", 1)[-1]
+    return {
+        "embed": (v, d), "lm_head": (v, d),
+        "attn_norm": (d,), "mlp_norm": (d,), "final_norm": (d,),
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "w_gate": (f, d), "w_up": (f, d), "w_down": (d, f),
+    }[leaf]
+
+
+QUANT_LEAVES = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"}
+
+
+def weight_store(spec):
+    rng = Rng(spec["seed"])
+    params = {}
+    for name in param_names(spec):
+        shape = param_shape(spec, name)
+        if len(shape) == 1:
+            params[name] = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[-1]
+            a = np.sqrt(3.0 / fan_in)  # python float == f64, like rust
+            n = int(np.prod(shape))
+            vals = np.empty(n, np.float32)
+            for i in range(n):
+                vals[i] = np.float32((rng.f64() * 2.0 - 1.0) * a)
+            params[name] = vals.reshape(shape)
+    return params
+
+
+def token_stream(n, vocab, seed):
+    rng = Rng(seed)
+    return np.array([rng.below(vocab) for _ in range(n)], np.int32)
+
+
+# ---------------------------------------------------------------------
+# float32 RTN fake-quant (mirror of quant::fakequant_group, bits >= 2)
+
+
+def fakequant(w, bits, block_cols):
+    if bits >= 9:
+        return w.copy()
+    if bits <= 0:
+        return np.zeros_like(w)
+    assert bits >= 2, "1-bit golden not generated (summation-order sensitive)"
+    r, c = w.shape
+    g = w.reshape(r, c // block_cols, block_cols)
+    qmax = np.float32(2.0 ** (bits - 1) - 1.0)
+    amax = np.max(np.abs(g), axis=-1, keepdims=True)
+    scale = (amax / max(qmax, np.float32(1.0))).astype(np.float32)
+    safe = np.where(scale > 0, scale, np.float32(1.0))
+    q = np.clip(np.round(g / safe), -qmax, qmax).astype(np.float32)
+    return (q * scale).astype(np.float32).reshape(r, c)
+
+
+# ---------------------------------------------------------------------
+# float64 MiniLlama forward (mirror of runtime/interp.rs)
+
+
+def rmsnorm(x, g):
+    var = np.mean(x * x, axis=-1, keepdims=True)
+    return x / np.sqrt(var + RMS_EPS) * g
+
+
+def rope(x):
+    b, t, h, hd = x.shape
+    half = hd // 2
+    freqs = ROPE_THETA ** (-np.arange(half, dtype=np.float64) / half)
+    ang = np.arange(t, dtype=np.float64)[:, None] * freqs[None, :]
+    cos, sin = np.cos(ang), np.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    rx1 = x1 * cos[None, :, None, :] - x2 * sin[None, :, None, :]
+    rx2 = x1 * sin[None, :, None, :] + x2 * cos[None, :, None, :]
+    return np.concatenate([rx1, rx2], axis=-1)
+
+
+def softmax(a, axis=-1):
+    a = a - a.max(axis=axis, keepdims=True)
+    e = np.exp(a)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+def silu(z):
+    return z / (1.0 + np.exp(-z))
+
+
+def forward(spec, params, tokens):
+    b, t = tokens.shape
+    d, h = spec["d_model"], spec["n_heads"]
+    hd = d // h
+    x = params["embed"][tokens]  # [B, T, D] float64
+    for i in range(spec["n_layers"]):
+        p = f"layers.{i}."
+        hh = rmsnorm(x, params[p + "attn_norm"])
+        q = (hh @ params[p + "wq"].T).reshape(b, t, h, hd)
+        k = (hh @ params[p + "wk"].T).reshape(b, t, h, hd)
+        v = (hh @ params[p + "wv"].T).reshape(b, t, h, hd)
+        q, k = rope(q), rope(k)
+        att = np.einsum("bthd,bshd->bhts", q, k) / np.sqrt(hd)
+        mask = np.tril(np.ones((t, t), bool))
+        att = np.where(mask[None, None], att, -1e30)
+        att = softmax(att, axis=-1)
+        out = np.einsum("bhts,bshd->bthd", att, v).reshape(b, t, d)
+        x = x + out @ params[p + "wo"].T
+        hh = rmsnorm(x, params[p + "mlp_norm"])
+        hp = silu(hh @ params[p + "w_gate"].T) * (hh @ params[p + "w_up"].T)
+        x = x + hp @ params[p + "w_down"].T
+    x = rmsnorm(x, params["final_norm"])
+    return x @ params["lm_head"].T
+
+
+def ce_loss(logits, tokens):
+    lx = logits[:, :-1].astype(np.float64)
+    m = lx.max(axis=-1, keepdims=True)
+    lse = m[..., 0] + np.log(np.exp(lx - m).sum(axis=-1))
+    tgt = tokens[:, 1:]
+    picked = np.take_along_axis(lx, tgt[..., None].astype(np.int64), axis=-1)[..., 0]
+    return float(np.mean(lse - picked))
+
+
+# ---------------------------------------------------------------------
+
+
+def main():
+    spec = SPEC
+    store = weight_store(spec)
+    tokens = token_stream(
+        spec["batch"] * spec["seq_len"], spec["vocab"],
+        spec["seed"] ^ GOLDEN_TOKENS_XOR,
+    ).reshape(spec["batch"], spec["seq_len"])
+
+    cases = []
+    for bits in (3, 4, 16):
+        params = {}
+        for name, w in store.items():
+            leaf = name.rsplit(".", 1)[-1]
+            if leaf in QUANT_LEAVES:
+                wq = fakequant(w, bits, spec["block_cols"])
+            else:
+                wq = w
+            params[name] = wq.astype(np.float64)
+        logits = forward(spec, params, tokens)
+        loss = ce_loss(logits, tokens)
+        cases.append({"bits": bits, "loss": loss})
+        print(f"bits={bits:2d}  qloss={loss:.12f}")
+
+    out = {
+        "spec": spec,
+        "token_seed_xor": GOLDEN_TOKENS_XOR,
+        "cases": cases,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "rust", "tests", "data", "interp_golden.json")
+    path = os.path.normpath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

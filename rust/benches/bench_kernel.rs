@@ -74,14 +74,14 @@ fn main() -> anyhow::Result<()> {
             engine.upload_i32(&grid, &[n / br, k / bc])?,
         ];
         let stats = timer::bench(5, 40, || {
-            engine.run_raw(&mpq, &args).expect("run");
+            engine.run_raw("mpq", &mpq, &args).expect("run");
         });
         println!("{}", stats.line(&format!("mpq {label}")));
     }
 
     let args = vec![engine.upload_f32(&x, &[mm, k])?, engine.upload_f32(&w.data, &[n, k])?];
     let stats = timer::bench(5, 40, || {
-        engine.run_raw(&dense, &args).expect("run");
+        engine.run_raw("dense", &dense, &args).expect("run");
     });
     println!("{}", stats.line("dense f32 (BF16 analog)"));
 
@@ -102,7 +102,7 @@ fn main() -> anyhow::Result<()> {
         engine.upload_f32(&vals, &[n_out])?,
     ];
     let stats = timer::bench(5, 40, || {
-        engine.run_raw(&elemmp, &args).expect("run");
+        engine.run_raw("elemmp", &elemmp, &args).expect("run");
     });
     println!("{}", stats.line("element-MP scatter (SpQR-like)"));
     println!("\nshape claim (paper Table 4): all mpq rows within noise of each other;");

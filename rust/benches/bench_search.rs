@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     let p = Pipeline::load(&artifacts, &["qloss", "qgrad"])?;
     let alloc = BitAlloc::uniform(&p.index, 3);
     let mut sampler = p.sampler(3);
-    let batch = p.engine.batch_of("qgrad")?;
+    let batch = p.batch_of("qgrad")?;
     let tokens = sampler.sample(batch);
 
     println!("search-iteration component costs (N = {} blocks)", p.index.n_blocks);

@@ -15,7 +15,11 @@ use crate::util::table::{f2, ppl, Table};
 // ---------------------------------------------------------------------
 // Fig 15: adaptive gradient updates + channel reordering ablations
 
-pub fn fig15(artifacts: &std::path::Path, seed: u64) -> Result<()> {
+pub fn fig15(
+    artifacts: &std::path::Path,
+    backend: crate::runtime::BackendKind,
+    seed: u64,
+) -> Result<()> {
     println!("[fig15] ablations: adaptive gradients / channel reordering");
     let budget = 3.0;
     let mut t = Table::new(
@@ -26,7 +30,7 @@ pub fn fig15(artifacts: &std::path::Path, seed: u64) -> Result<()> {
 
     // (a) no reorder, adaptive grads
     {
-        let p = Pipeline::load_full(artifacts)?;
+        let p = Pipeline::load_full_with(backend, artifacts)?;
         let cfg = SearchConfig { budget, seed, ..Default::default() };
         let res = p.search(&cfg)?;
         let r = p.eval_alloc(&res.alloc)?;
@@ -35,7 +39,7 @@ pub fn fig15(artifacts: &std::path::Path, seed: u64) -> Result<()> {
     }
     // (b) reorder + FIXED iteration-0 gradients
     {
-        let mut p = Pipeline::load_full(artifacts)?;
+        let mut p = Pipeline::load_full_with(backend, artifacts)?;
         p.reorder(3, seed)?;
         let cfg = SearchConfig { budget, seed, fixed_grads: true, ..Default::default() };
         let res = p.search(&cfg)?;
@@ -45,7 +49,7 @@ pub fn fig15(artifacts: &std::path::Path, seed: u64) -> Result<()> {
     }
     // (c) full method: reorder + adaptive
     {
-        let mut p = Pipeline::load_full(artifacts)?;
+        let mut p = Pipeline::load_full_with(backend, artifacts)?;
         p.reorder(3, seed)?;
         let cfg = SearchConfig { budget, seed, ..Default::default() };
         let res = p.search(&cfg)?;
@@ -65,7 +69,7 @@ pub fn fig16(p: &mut Pipeline, seed: u64) -> Result<()> {
     let base = 3;
     let alloc = BitAlloc::uniform(&p.index, base);
     let mut sampler = p.sampler(seed);
-    let batch = p.engine.batch_of("qgrad")?;
+    let batch = p.batch_of("qgrad")?;
     let tokens = sampler.sample(batch);
     let (loss0, grads) = p.ctx().qgrad(&tokens, &alloc)?;
 
@@ -156,7 +160,11 @@ pub fn fig16(p: &mut Pipeline, seed: u64) -> Result<()> {
 // ---------------------------------------------------------------------
 // Fig 17: hyperparameter sweeps (gamma, search space)
 
-pub fn fig17(artifacts: &std::path::Path, seed: u64) -> Result<()> {
+pub fn fig17(
+    artifacts: &std::path::Path,
+    backend: crate::runtime::BackendKind,
+    seed: u64,
+) -> Result<()> {
     println!("[fig17] hyperparameter ablations");
     let mut t = Table::new(
         "Fig 17 analog: budget-3.0 search under hyperparameter variants",
@@ -165,7 +173,7 @@ pub fn fig17(artifacts: &std::path::Path, seed: u64) -> Result<()> {
     let mut out = Json::obj();
 
     let mut run = |label: &str, cfg: SearchConfig, out: &mut Json| -> Result<()> {
-        let mut p = Pipeline::load_full(artifacts)?;
+        let mut p = Pipeline::load_full_with(backend, artifacts)?;
         p.reorder(3, seed)?;
         let res = p.search(&cfg)?;
         let r = p.eval_alloc(&res.alloc)?;
@@ -212,7 +220,7 @@ pub fn fig18(p: &mut Pipeline, seed: u64) -> Result<()> {
     let cfg = SearchConfig { budget: 3.0, seed, ..Default::default() };
     let res = p.search(&cfg)?;
 
-    let n_layers = p.engine.manifest.config.n_layers;
+    let n_layers = p.manifest().config.n_layers;
     let mut per_layer = vec![(0.0f64, 0usize); n_layers];
     let mut per_proj: std::collections::BTreeMap<String, (f64, usize)> = Default::default();
     for (mi, name) in p.index.mats.iter().enumerate() {

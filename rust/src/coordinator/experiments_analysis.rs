@@ -32,7 +32,7 @@ pub fn fig3(p: &mut Pipeline, seed: u64) -> Result<()> {
     let base_bits = 3;
     let alloc = BitAlloc::uniform(&p.index, base_bits);
     let mut sampler = p.sampler(seed);
-    let batch = p.engine.batch_of("qloss")?;
+    let batch = p.batch_of("qloss")?;
     let tokens = sampler.sample(batch);
 
     // Ground truth: loss recovery from restoring one matrix to FP in an
@@ -169,19 +169,19 @@ pub fn fig5(p: &mut Pipeline, seed: u64) -> Result<()> {
     println!("[fig5] layer sensitivity: uniform vs learned mixed precision");
     p.reorder(3, seed)?;
     let mut sampler = p.sampler(seed);
-    let batch = p.engine.batch_of("qgrad")?;
+    let batch = p.batch_of("qgrad")?;
     let tokens = sampler.sample(batch);
 
     let uniform = BitAlloc::uniform(&p.index, 3);
     let (_, g_u) = grads_at(p, &uniform, &tokens)?;
     let st_u = p.ctx().stats(&g_u, &uniform);
-    let before = layer_sensitivity(&p.engine.manifest, &p.index, &st_u.s_up);
+    let before = layer_sensitivity(p.manifest(), &p.index, &st_u.s_up);
 
     let cfg = SearchConfig { budget: 3.0, seed, ..Default::default() };
     let res = p.search(&cfg)?;
     let (_, g_m) = grads_at(p, &res.alloc, &tokens)?;
     let st_m = p.ctx().stats(&g_m, &res.alloc);
-    let after = layer_sensitivity(&p.engine.manifest, &p.index, &st_m.s_up);
+    let after = layer_sensitivity(p.manifest(), &p.index, &st_m.s_up);
 
     let mut t = Table::new(
         "Fig 5 analog: per-layer |s_up| mass",
@@ -215,8 +215,8 @@ pub fn fig6(p: &mut Pipeline, seed: u64) -> Result<()> {
     let cfg = SearchConfig { budget: 3.0, seed, ..Default::default() };
     let res = p.search(&cfg)?;
 
-    let mid = format!("layers.{}.w_down", p.engine.manifest.config.n_layers / 2);
-    let last = format!("layers.{}.w_down", p.engine.manifest.config.n_layers - 1);
+    let mid = format!("layers.{}.w_down", p.manifest().config.n_layers / 2);
+    let last = format!("layers.{}.w_down", p.manifest().config.n_layers - 1);
     let mut out = Json::obj();
     for name in [&mid, &last] {
         let mi = p.index.mat_index(name).unwrap();
@@ -276,7 +276,7 @@ pub fn fig7(p: &mut Pipeline, seed: u64) -> Result<()> {
     println!("[fig7] empirical monotonicity / diminishing-returns check");
     let mut rng = crate::util::rng::Rng::new(seed);
     let mut sampler = p.sampler(seed);
-    let batch = p.engine.batch_of("qloss")?;
+    let batch = p.batch_of("qloss")?;
     let tokens = sampler.sample(batch);
     let n_mats = p.index.mats.len();
 
@@ -357,7 +357,7 @@ pub fn fig10(p: &mut Pipeline, seed: u64) -> Result<()> {
     let base = 2;
     let alloc = BitAlloc::uniform(&p.index, base);
     let mut sampler = p.sampler(seed);
-    let batch = p.engine.batch_of("qgrad")?;
+    let batch = p.batch_of("qgrad")?;
     let tokens = sampler.sample(batch);
 
     let (_, grads_q) = grads_at(p, &alloc, &tokens)?;
@@ -427,7 +427,7 @@ pub fn fig13(p: &mut Pipeline, seed: u64) -> Result<()> {
     // BEFORE: block-level |s_up| mass concentration at uniform 3-bit.
     let alloc = BitAlloc::uniform(&p.index, 3);
     let mut sampler = p.sampler(seed);
-    let batch = p.engine.batch_of("qgrad")?;
+    let batch = p.batch_of("qgrad")?;
     let tokens = sampler.sample(batch);
     let (_, g0) = grads_at(p, &alloc, &tokens)?;
     let st0 = p.ctx().stats(&g0, &alloc);
@@ -435,7 +435,7 @@ pub fn fig13(p: &mut Pipeline, seed: u64) -> Result<()> {
 
     // Mean normalized position of the top-1% sensitive RESIDUAL channels
     let sens0 = p.sensitivity_maps(3, seed)?;
-    let mut residual0 = vec![0.0f32; p.engine.manifest.config.d_model];
+    let mut residual0 = vec![0.0f32; p.manifest().config.d_model];
     for (name, s) in &sens0 {
         let (_, leaf) = crate::model::split_param_name(name);
         let v = match leaf {
@@ -456,7 +456,7 @@ pub fn fig13(p: &mut Pipeline, seed: u64) -> Result<()> {
     let abs1: Vec<f64> = st1.s_up.iter().map(|x| x.abs()).collect();
 
     let sens1 = p.sensitivity_maps(3, seed)?;
-    let mut residual1 = vec![0.0f32; p.engine.manifest.config.d_model];
+    let mut residual1 = vec![0.0f32; p.manifest().config.d_model];
     for (name, s) in &sens1 {
         let (_, leaf) = crate::model::split_param_name(name);
         let v = match leaf {

@@ -23,7 +23,7 @@ use crate::util::timer;
 fn salience_scores(p: &Pipeline, base_bits: i32, seed: u64) -> Result<Vec<f64>> {
     let alloc = BitAlloc::uniform(&p.index, base_bits);
     let mut sampler = p.sampler(seed);
-    let batch = p.engine.batch_of("qgrad")?;
+    let batch = p.batch_of("qgrad")?;
     let tokens = sampler.sample(batch);
     let (_, grads) = p.ctx().qgrad(&tokens, &alloc)?;
     let stats = p.ctx().stats(&grads, &alloc);
@@ -172,7 +172,7 @@ pub fn tab3(p: &mut Pipeline, seed: u64) -> Result<()> {
 
     // Classic greedy at matrix granularity (tractable stand-in).
     let mut sampler = p.sampler(seed + 1);
-    let batch = p.engine.batch_of("qloss")?;
+    let batch = p.batch_of("qloss")?;
     let classic = crate::search::classic_greedy(&p.ctx(), &mut sampler, batch, 3.0, 1, 8, false)?;
 
     // Extrapolations: classic greedy at BLOCK granularity needs
@@ -228,11 +228,20 @@ pub fn tab3(p: &mut Pipeline, seed: u64) -> Result<()> {
 
 pub fn tab4(p: &mut Pipeline, iters: usize) -> Result<()> {
     println!("[tab4] fused mpq_matmul latency: uniform vs mixed precision");
-    let kb = p.engine.manifest.kernel_bench()?;
-    let dir = p.engine.manifest.dir.clone();
-    let mpq = p.engine.compile_hlo_file(&dir.join(&kb.files["mpq"]))?;
-    let dense = p.engine.compile_hlo_file(&dir.join(&kb.files["dense"]))?;
-    let elemmp = p.engine.compile_hlo_file(&dir.join(&kb.files["elemmp"]))?;
+    // Kernel benches run compiled HLO — PJRT only. Skip (don't fail)
+    // on other backends so `exp all` survives artifact-less runs.
+    let engine = match p.pjrt() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("[tab4] skipped: {e}");
+            return Ok(());
+        }
+    };
+    let kb = engine.manifest.kernel_bench()?;
+    let dir = engine.manifest.dir.clone();
+    let mpq = engine.compile_hlo_file(&dir.join(&kb.files["mpq"]))?;
+    let dense = engine.compile_hlo_file(&dir.join(&kb.files["dense"]))?;
+    let elemmp = engine.compile_hlo_file(&dir.join(&kb.files["elemmp"]))?;
 
     let (m, n, k) = (kb.m, kb.n, kb.k);
     let (br, bc) = (kb.block_rows, kb.block_cols);
@@ -286,13 +295,13 @@ pub fn tab4(p: &mut Pipeline, iters: usize) -> Result<()> {
     for (label, grid) in [("mpq uniform-4bit", &uniform4), ("mpq mixed 40/40/20", &mixed)] {
         let (codes, scales) = build(grid);
         let args = vec![
-            p.engine.upload_f32(&x, &[m, k])?,
-            p.engine.upload_i8(&codes, &[n, k])?,
-            p.engine.upload_f32(&scales, &[n, k / bc])?,
-            p.engine.upload_i32(grid, &[nbr, nbc])?,
+            engine.upload_f32(&x, &[m, k])?,
+            engine.upload_i8(&codes, &[n, k])?,
+            engine.upload_f32(&scales, &[n, k / bc])?,
+            engine.upload_i32(grid, &[nbr, nbc])?,
         ];
         let stats = timer::bench(3, iters, || {
-            p.engine.run_raw(&mpq, &args).expect("mpq run");
+            engine.run_raw("mpq", &mpq, &args).expect("mpq run");
         });
         println!("  {}", stats.line(label));
         t.row(vec![
@@ -311,11 +320,11 @@ pub fn tab4(p: &mut Pipeline, iters: usize) -> Result<()> {
     // dense f32 baseline (the BF16/CUTLASS analog)
     {
         let args = vec![
-            p.engine.upload_f32(&x, &[m, k])?,
-            p.engine.upload_f32(&w.data, &[n, k])?,
+            engine.upload_f32(&x, &[m, k])?,
+            engine.upload_f32(&w.data, &[n, k])?,
         ];
         let stats = timer::bench(3, iters, || {
-            p.engine.run_raw(&dense, &args).expect("dense run");
+            engine.run_raw("dense", &dense, &args).expect("dense run");
         });
         println!("  {}", stats.line("dense f32 (BF16 analog)"));
         t.row(vec!["dense f32".into(), "-".into(), f2(stats.mean_us), f2(stats.p50_us), f2(stats.p95_us)]);
@@ -337,13 +346,13 @@ pub fn tab4(p: &mut Pipeline, iters: usize) -> Result<()> {
         let (_, _) = build(&uniform4);
         let wq4 = PackedMat::quantize(&w, &uniform4, br, bc).dequantize();
         let args = vec![
-            p.engine.upload_f32(&x, &[m, k])?,
-            p.engine.upload_f32(&wq4.data, &[n, k])?,
-            p.engine.upload_i32(&idx, &[n_out, 2])?,
-            p.engine.upload_f32(&vals, &[n_out])?,
+            engine.upload_f32(&x, &[m, k])?,
+            engine.upload_f32(&wq4.data, &[n, k])?,
+            engine.upload_i32(&idx, &[n_out, 2])?,
+            engine.upload_f32(&vals, &[n_out])?,
         ];
         let stats = timer::bench(3, iters, || {
-            p.engine.run_raw(&elemmp, &args).expect("elemmp run");
+            engine.run_raw("elemmp", &elemmp, &args).expect("elemmp run");
         });
         println!("  {}", stats.line("element-MP scatter (SpQR-like)"));
         t.row(vec![
@@ -429,7 +438,7 @@ pub fn tab6(p: &mut Pipeline, seed: u64) -> Result<()> {
             .take(64)
             .collect();
         let tasks = crate::calib::ProbeTasks { rows, seq_len: p.tasks.seq_len };
-        crate::eval::task_accuracy(&p.engine, &p.wbufs, &p.index, alloc, &tasks, 64)
+        crate::eval::task_accuracy(p.backend.as_ref(), &p.wbufs, &p.index, alloc, &tasks, 64)
     };
 
     let mut t = Table::new(
@@ -476,10 +485,14 @@ pub fn tab6(p: &mut Pipeline, seed: u64) -> Result<()> {
 /// precision adds no request-path overhead; the worker column shows the
 /// throughput scaling the router buys (each worker owns its own PJRT
 /// engine with device-resident weights and bit grids).
-pub fn serve_e2e(artifacts: &std::path::Path, seed: u64) -> Result<()> {
+pub fn serve_e2e(
+    artifacts: &std::path::Path,
+    backend: crate::runtime::BackendKind,
+    seed: u64,
+) -> Result<()> {
     use crate::serve::{run_workload, Router, ServeConfig};
 
-    println!("[serve_e2e] end-to-end serving: allocation x workers");
+    println!("[serve_e2e] end-to-end serving: allocation x workers ({})", backend.name());
     let m = crate::model::Manifest::load(artifacts)?;
     let index = crate::quant::BlockIndex::from_manifest(&m)?;
     let stream = crate::calib::TokenStream::from_manifest(&m, "eval")?;
@@ -505,6 +518,7 @@ pub fn serve_e2e(artifacts: &std::path::Path, seed: u64) -> Result<()> {
     for (label, alloc) in [("uniform4", BitAlloc::uniform(&index, 4)), ("mixed248", mixed)] {
         for workers in [1usize, 4] {
             let mut cfg = ServeConfig::new(artifacts.to_path_buf(), alloc.clone());
+            cfg.backend = backend;
             cfg.workers = workers;
             let mut server = Router::start(cfg)?;
             let wl = run_workload(&mut server, &stream, seq, n_requests, rate, seed)?;

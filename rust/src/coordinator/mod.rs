@@ -18,7 +18,7 @@ use crate::linalg::SqMat;
 use crate::model::{Manifest, WeightStore};
 use crate::quant::{BitAlloc, BlockIndex, FP_SENTINEL_BITS};
 use crate::reorder::{apply_reordering, compute_reordering, Reordering};
-use crate::runtime::{literal_scalar_f32, literal_to_mat, Engine, WeightBuffers};
+use crate::runtime::{open_backend, BackendKind, DeviceWeights, Engine, ExecBackend};
 use crate::search::{scalable_greedy, SearchConfig, SearchContext, SearchResult};
 use crate::sensitivity::element_sensitivity;
 use crate::tensor::Mat;
@@ -29,10 +29,11 @@ pub const EVAL_BATCHES: usize = 12;
 pub const EVAL_TASKS: usize = 128;
 
 pub struct Pipeline {
-    pub engine: Engine,
+    /// Execution backend (PJRT or interpreter; see `runtime::backend`).
+    pub backend: Box<dyn ExecBackend>,
     /// Current (possibly reordered) full-precision weights.
     pub store: WeightStore,
-    pub wbufs: WeightBuffers,
+    pub wbufs: DeviceWeights,
     pub index: BlockIndex,
     pub calib: TokenStream,
     pub eval_stream: TokenStream,
@@ -41,18 +42,24 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
-    /// Load artifacts and compile the requested executables.
+    /// Load artifacts and prepare the requested executables on the
+    /// backend `Auto` resolves to for this artifact set.
     pub fn load(artifacts: &Path, execs: &[&str]) -> Result<Pipeline> {
+        Pipeline::load_with(BackendKind::Auto, artifacts, execs)
+    }
+
+    /// [`Pipeline::load`] with an explicit backend choice.
+    pub fn load_with(kind: BackendKind, artifacts: &Path, execs: &[&str]) -> Result<Pipeline> {
         let manifest = Manifest::load(artifacts)?;
-        let engine = Engine::load(manifest, execs)?;
-        let store = WeightStore::load(&engine.manifest)?;
-        let wbufs = engine.upload_weights(&store)?;
-        let index = BlockIndex::from_manifest(&engine.manifest)?;
-        let calib = TokenStream::from_manifest(&engine.manifest, "calib")?;
-        let eval_stream = TokenStream::from_manifest(&engine.manifest, "eval")?;
-        let tasks = ProbeTasks::load(&engine.manifest)?;
+        let backend = open_backend(kind, manifest, execs)?;
+        let store = WeightStore::load(backend.manifest())?;
+        let wbufs = backend.upload_weights(&store)?;
+        let index = BlockIndex::from_manifest(backend.manifest())?;
+        let calib = TokenStream::from_manifest(backend.manifest(), "calib")?;
+        let eval_stream = TokenStream::from_manifest(backend.manifest(), "eval")?;
+        let tasks = ProbeTasks::load(backend.manifest())?;
         Ok(Pipeline {
-            engine,
+            backend,
             store,
             wbufs,
             index,
@@ -68,9 +75,33 @@ impl Pipeline {
         Pipeline::load(artifacts, &["qloss", "qgrad", "qlogits", "qpredict"])
     }
 
+    /// [`Pipeline::load_full`] with an explicit backend choice.
+    pub fn load_full_with(kind: BackendKind, artifacts: &Path) -> Result<Pipeline> {
+        Pipeline::load_with(kind, artifacts, &["qloss", "qgrad", "qlogits", "qpredict"])
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.backend.manifest()
+    }
+
+    pub fn batch_of(&self, name: &str) -> Result<usize> {
+        self.backend.batch_of(name)
+    }
+
+    /// The concrete PJRT engine, for paths that need compiled kernel
+    /// executables (the Table-4 kernel bench). Errors on other backends.
+    pub fn pjrt(&self) -> Result<&Engine> {
+        self.backend.as_any().downcast_ref::<Engine>().ok_or_else(|| {
+            anyhow!(
+                "this path needs the PJRT backend (compiled kernel executables); \
+                 rerun with --backend pjrt-cpu and real artifacts"
+            )
+        })
+    }
+
     pub fn ctx(&self) -> SearchContext<'_> {
         SearchContext {
-            engine: &self.engine,
+            backend: self.backend.as_ref(),
             index: &self.index,
             store: &self.store,
             wbufs: &self.wbufs,
@@ -78,7 +109,7 @@ impl Pipeline {
     }
 
     pub fn sampler(&self, seed: u64) -> BatchSampler {
-        BatchSampler::new(self.calib.clone(), self.engine.manifest.config.seq_len, seed)
+        BatchSampler::new(self.calib.clone(), self.manifest().config.seq_len, seed)
     }
 
     pub fn fp_alloc(&self) -> BitAlloc {
@@ -96,7 +127,7 @@ impl Pipeline {
     ) -> Result<HashMap<String, Mat>> {
         let alloc = BitAlloc::uniform(&self.index, probe_bits);
         let mut sampler = self.sampler(seed);
-        let batch = self.engine.batch_of("qgrad")?;
+        let batch = self.batch_of("qgrad")?;
         let tokens = sampler.sample(batch);
         let (_, grads) = self.ctx().qgrad(&tokens, &alloc)?;
         let mut out = HashMap::new();
@@ -120,26 +151,20 @@ impl Pipeline {
     pub fn reorder(&mut self, probe_bits: i32, seed: u64) -> Result<&Reordering> {
         let fp = self.fp_alloc();
         let mut sampler = self.sampler(seed ^ 0xabcd);
-        let batch = self.engine.batch_of("qloss")?;
+        let batch = self.batch_of("qloss")?;
         let check_tokens = sampler.sample(batch);
         let loss_before = self.ctx().qloss(&check_tokens, &fp)?;
 
         let sens = self.sensitivity_maps(probe_bits, seed)?;
-        let r = compute_reordering(&self.engine.manifest, &sens)?;
-        let new_store = apply_reordering(&self.engine.manifest, &self.store, &r)?;
-        let new_bufs = self.engine.upload_weights(&new_store)?;
+        let r = compute_reordering(self.manifest(), &sens)?;
+        let new_store = apply_reordering(self.manifest(), &self.store, &r)?;
+        let new_bufs = self.backend.upload_weights(&new_store)?;
         // equivalence check against the reordered weights
-        let tmp_ctx = SearchContext {
-            engine: &self.engine,
-            index: &self.index,
-            store: &new_store,
-            wbufs: &new_bufs,
-        };
         let loss_after = {
             let grids = fp.grids(&self.index);
             let out =
-                tmp_ctx.engine.run_model_host_grids("qloss", &check_tokens, &grids, &new_bufs)?;
-            literal_scalar_f32(&out[0])? as f64
+                self.backend.run_model_host_grids("qloss", &check_tokens, &grids, &new_bufs)?;
+            out[0].scalar_f32()? as f64
         };
         if (loss_before - loss_after).abs() > 1e-3 * loss_before.abs().max(1.0) {
             bail!(
@@ -156,13 +181,13 @@ impl Pipeline {
 
     pub fn search(&self, cfg: &SearchConfig) -> Result<SearchResult> {
         let mut sampler = self.sampler(cfg.seed);
-        let batch = self.engine.batch_of("qgrad")?;
+        let batch = self.batch_of("qgrad")?;
         scalable_greedy(&self.ctx(), &mut sampler, batch, cfg)
     }
 
     pub fn eval_alloc(&self, alloc: &BitAlloc) -> Result<EvalReport> {
         evaluate(
-            &self.engine,
+            self.backend.as_ref(),
             &self.wbufs,
             &self.index,
             alloc,
@@ -177,10 +202,10 @@ impl Pipeline {
     /// the modified store and run with the FP sentinel so the on-device
     /// fake-quant passes them through unchanged.
     pub fn eval_weights(&self, store: &WeightStore, reported_bits: f64) -> Result<EvalReport> {
-        let bufs = self.engine.upload_weights(store)?;
+        let bufs = self.backend.upload_weights(store)?;
         let alloc = BitAlloc::uniform(&self.index, FP_SENTINEL_BITS + 7);
         let mut report = evaluate(
-            &self.engine,
+            self.backend.as_ref(),
             &bufs,
             &self.index,
             &alloc,
@@ -200,21 +225,21 @@ impl Pipeline {
     /// Input Grams XᵀX for every quantized matrix, accumulated over
     /// `n_batches` calibration batches at the given allocation state.
     pub fn grams(&self, alloc: &BitAlloc, n_batches: usize, seed: u64) -> Result<HashMap<String, SqMat>> {
-        if !self.engine.has_exec("grams") {
+        if !self.backend.has_exec("grams") {
             bail!("grams executable not loaded");
         }
         let mut sampler = self.sampler(seed);
-        let batch = self.engine.batch_of("grams")?;
+        let batch = self.batch_of("grams")?;
         // fixed allocation across the accumulation loop: grids resident
-        let grids = self.engine.upload_grids(&alloc.grids(&self.index))?;
-        let sites = &self.engine.manifest.gram_sites;
+        let grids = self.backend.upload_grids(&alloc.grids(&self.index))?;
+        let sites = &self.manifest().gram_sites;
         let mut acc: Vec<Option<SqMat>> = vec![None; sites.len()];
         for _ in 0..n_batches {
             let tokens = sampler.sample(batch);
-            let out = self.engine.run_model("grams", &tokens, &grids, &self.wbufs)?;
+            let out = self.backend.run_model("grams", &tokens, &grids, &self.wbufs)?;
             // out[0] is the loss (kept to stop XLA pruning params).
             for (si, site) in sites.iter().enumerate() {
-                let m = literal_to_mat(&out[1 + si], site.dim, site.dim)?;
+                let m = out[1 + si].to_mat(site.dim, site.dim)?;
                 match &mut acc[si] {
                     None => acc[si] = Some(SqMat::from_f32(site.dim, &m.data)),
                     Some(a) => {

@@ -5,12 +5,15 @@
 //! position of the synthetic cloze tasks) is the zero-shot-suite
 //! analog: it degrades with quantization and recovers with better
 //! allocation, which is the signal Table 2's accuracy columns carry.
+//!
+//! Backend-agnostic: everything runs through [`ExecBackend`], so the
+//! same harness evaluates on PJRT or the artifact-less interpreter.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::calib::{ProbeTasks, SequentialBatches, TokenStream};
 use crate::quant::{BitAlloc, BlockIndex};
-use crate::runtime::{literal_scalar_f32, literal_to_vec_f32, Engine, WeightBuffers};
+use crate::runtime::{DeviceWeights, ExecBackend};
 
 #[derive(Clone, Debug)]
 pub struct EvalReport {
@@ -20,39 +23,48 @@ pub struct EvalReport {
     pub effective_bits: f64,
 }
 
-/// Perplexity of the quantized model on a token stream.
+/// Perplexity of the quantized model on a token stream. Errors if the
+/// stream is too short for even one `[batch, seq_len]` window — the
+/// seed silently returned exp(0) = 1.0 there, which reads as a perfect
+/// model instead of a broken evaluation.
 pub fn perplexity(
-    engine: &Engine,
-    wbufs: &WeightBuffers,
+    backend: &dyn ExecBackend,
+    wbufs: &DeviceWeights,
     index: &BlockIndex,
     alloc: &BitAlloc,
     stream: &TokenStream,
     max_batches: usize,
 ) -> Result<f64> {
-    let batch = engine.batch_of("qloss")?;
-    let seq = engine.manifest.config.seq_len;
+    let batch = backend.batch_of("qloss")?;
+    let seq = backend.manifest().config.seq_len;
     // The allocation is fixed for the whole evaluation: upload its bit
     // grids once and run every batch against the resident buffers.
-    let grids = engine.upload_grids(&alloc.grids(index))?;
+    let grids = backend.upload_grids(&alloc.grids(index))?;
     let mut it = SequentialBatches::new(stream, seq);
     let mut total = 0.0f64;
     let mut n = 0usize;
     while let Some(tokens) = it.next_batch(batch) {
-        let out = engine.run_model("qloss", &tokens, &grids, wbufs)?;
-        total += literal_scalar_f32(&out[0])? as f64;
+        let out = backend.run_model("qloss", &tokens, &grids, wbufs)?;
+        total += out[0].scalar_f32()? as f64;
         n += 1;
         if n >= max_batches {
             break;
         }
     }
-    Ok((total / n.max(1) as f64).exp())
+    if n == 0 {
+        bail!(
+            "perplexity: stream of {} tokens is too short for one [batch={batch}, seq={seq}] window",
+            stream.len()
+        );
+    }
+    Ok((total / n as f64).exp())
 }
 
 /// Probe-task accuracy: top-1 prediction at position L−2 must equal the
 /// answer token at position L−1.
 pub fn task_accuracy(
-    engine: &Engine,
-    wbufs: &WeightBuffers,
+    backend: &dyn ExecBackend,
+    wbufs: &DeviceWeights,
     index: &BlockIndex,
     alloc: &BitAlloc,
     tasks: &ProbeTasks,
@@ -61,14 +73,14 @@ pub fn task_accuracy(
     // Fast path: `qpredict` ships [B, T] int32 predictions instead of
     // the full [B, T, V] f32 logits (512x less device->host traffic —
     // EXPERIMENTS.md §Perf). Falls back to qlogits for engines that
-    // only compiled the logits graph.
-    let use_pred = engine.has_exec("qpredict");
+    // only prepared the logits graph.
+    let use_pred = backend.has_exec("qpredict");
     let exec_name = if use_pred { "qpredict" } else { "qlogits" };
-    let batch = engine.batch_of(exec_name)?;
-    let seq = engine.manifest.config.seq_len;
-    let vocab = engine.manifest.config.vocab;
+    let batch = backend.batch_of(exec_name)?;
+    let seq = backend.manifest().config.seq_len;
+    let vocab = backend.manifest().config.vocab;
     assert_eq!(tasks.seq_len, seq, "task seq_len mismatch");
-    let grids = engine.upload_grids(&alloc.grids(index))?;
+    let grids = backend.upload_grids(&alloc.grids(index))?;
 
     let n_tasks = tasks.rows.len().min(max_tasks);
     let mut correct = 0usize;
@@ -80,11 +92,9 @@ pub fn task_accuracy(
             let row = &tasks.rows[(done + b.min(take - 1)).min(n_tasks - 1)];
             tokens.extend_from_slice(row);
         }
-        let out = engine.run_model(exec_name, &tokens, &grids, wbufs)?;
+        let out = backend.run_model(exec_name, &tokens, &grids, wbufs)?;
         if use_pred {
-            let preds = out[0]
-                .to_vec::<i32>()
-                .map_err(|e| anyhow::anyhow!("pred fetch: {e:?}"))?;
+            let preds = out[0].to_vec_i32()?;
             for b in 0..take {
                 let answer = tokens[b * seq + seq - 1];
                 if preds[b * seq + seq - 2] == answer {
@@ -92,7 +102,7 @@ pub fn task_accuracy(
                 }
             }
         } else {
-            let logits = literal_to_vec_f32(&out[0])?; // [batch, seq, vocab]
+            let logits = out[0].to_vec_f32()?; // [batch, seq, vocab]
             for b in 0..take {
                 let answer = tokens[b * seq + seq - 1];
                 let base = (b * seq + (seq - 2)) * vocab;
@@ -115,8 +125,8 @@ pub fn task_accuracy(
 
 /// Full evaluation of one allocation.
 pub fn evaluate(
-    engine: &Engine,
-    wbufs: &WeightBuffers,
+    backend: &dyn ExecBackend,
+    wbufs: &DeviceWeights,
     index: &BlockIndex,
     alloc: &BitAlloc,
     stream: &TokenStream,
@@ -125,8 +135,8 @@ pub fn evaluate(
     max_tasks: usize,
 ) -> Result<EvalReport> {
     Ok(EvalReport {
-        perplexity: perplexity(engine, wbufs, index, alloc, stream, max_batches)?,
-        task_accuracy: task_accuracy(engine, wbufs, index, alloc, tasks, max_tasks)?,
+        perplexity: perplexity(backend, wbufs, index, alloc, stream, max_batches)?,
+        task_accuracy: task_accuracy(backend, wbufs, index, alloc, tasks, max_tasks)?,
         avg_bits: alloc.avg_bits(),
         effective_bits: alloc.effective_bits(index.block_cols),
     })

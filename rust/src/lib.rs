@@ -7,7 +7,9 @@
 //!   fake-quantization and the fused mixed-precision dequant+matmul.
 //! * **L2** (`python/compile/model.py`) — the JAX transformer whose
 //!   quantized loss/gradient/logit graphs are AOT-lowered to HLO text.
-//! * **L3** (this crate) — everything at runtime: the PJRT runtime,
+//! * **L3** (this crate) — everything at runtime: a multi-backend
+//!   execution runtime (the [`runtime::ExecBackend`] trait over the
+//!   PJRT engine AND a pure-Rust interpreter for artifact-less runs),
 //!   the RTN quantizer and bit-packing, progressive sensitivity
 //!   estimation, bi-directional channel reordering, the scalable greedy
 //!   bitwidth search (the paper's Algorithm 1), baselines (classic
@@ -19,6 +21,8 @@
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! graphs once; the `scalebits` binary is self-contained afterwards.
+//! Without artifacts the same binary still runs end-to-end on the
+//! interpreter backend over a synthetic model (`--backend interp`).
 //!
 //! Offline-environment note: the crates.io mirror only carries the
 //! `xla` closure, so common substrates (JSON, RNG, CLI parsing,

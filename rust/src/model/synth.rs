@@ -1,0 +1,425 @@
+//! Synthetic artifact generation: a deterministic MiniLlama manifest +
+//! weight set + token streams built entirely in-process, so the
+//! interpreter backend (and therefore the whole search/eval/serve
+//! pipeline) runs with `rust/artifacts/` absent.
+//!
+//! The parameter registry mirrors `python/compile/model.py` exactly
+//! (same names, shapes, order, quantized set, gram sites). Weights are
+//! drawn from a uniform distribution with 1/fan_in variance using only
+//! [`Rng`] bit-twiddling and IEEE +/-/*/sqrt — no transcendentals — so
+//! the Python golden generator (`python/compile/interp_golden.py`)
+//! reproduces every f32 bit exactly from the same seed.
+//!
+//! Two entry points:
+//! * [`manifest`] / [`weight_store`] / [`token_stream`] — in-memory,
+//!   for unit tests and the golden cross-check;
+//! * [`write_artifacts`] — serializes the same data as a real artifact
+//!   directory (`manifest.json`, `weights.bin`, `calib.bin`,
+//!   `eval.bin`, `tasks.bin`, no HLO), so every file-loading path
+//!   (serve router workers, `Pipeline::load`, the CLI) works unchanged.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{DatasetInfo, ExecInfo, GramSite, Manifest, ModelConfig, ParamInfo, WeightStore};
+use crate::calib::TokenStream;
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Seed offsets for the derived dataset streams. The Python golden
+/// generator does not consume these — it draws its own token stream
+/// whose seed-xor is recorded in `rust/tests/data/interp_golden.json`
+/// and read back by the golden test, so the cross-language contract is
+/// the recorded file, not a pair of constants.
+pub const CALIB_SEED_XOR: u64 = 0xca11b;
+pub const EVAL_SEED_XOR: u64 = 0xe7a1;
+pub const TASKS_SEED_XOR: u64 = 0x7a5c;
+
+/// Shape of the synthetic model + datasets.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub block_rows: usize,
+    pub block_cols: usize,
+    /// Static batch of every executable except `qlogits_b1`.
+    pub batch: usize,
+    pub seed: u64,
+    pub calib_tokens: usize,
+    pub eval_tokens: usize,
+    pub n_tasks: usize,
+}
+
+impl Default for SynthSpec {
+    fn default() -> SynthSpec {
+        SynthSpec {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            seq_len: 32,
+            block_rows: 16,
+            block_cols: 16,
+            batch: 4,
+            seed: 7,
+            calib_tokens: 4096,
+            eval_tokens: 2048,
+            n_tasks: 32,
+        }
+    }
+}
+
+/// Parameter names in canonical manifest order (the L2 registry).
+fn param_names(spec: &SynthSpec) -> Vec<String> {
+    let mut names = vec!["embed".to_string()];
+    for i in 0..spec.n_layers {
+        for leaf in ["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down"] {
+            names.push(format!("layers.{i}.{leaf}"));
+        }
+    }
+    names.push("final_norm".to_string());
+    names.push("lm_head".to_string());
+    names
+}
+
+fn param_shape(spec: &SynthSpec, name: &str) -> Vec<usize> {
+    let (v, d, f) = (spec.vocab, spec.d_model, spec.d_ff);
+    let leaf = name.rsplit('.').next().unwrap_or(name);
+    match leaf {
+        "embed" | "lm_head" => vec![v, d],
+        "attn_norm" | "mlp_norm" | "final_norm" => vec![d],
+        "wq" | "wk" | "wv" | "wo" => vec![d, d],
+        "w_gate" | "w_up" => vec![f, d],
+        "w_down" => vec![d, f],
+        other => unreachable!("unknown param leaf {other}"),
+    }
+}
+
+fn is_quantized(name: &str) -> bool {
+    let leaf = name.rsplit('.').next().unwrap_or(name);
+    matches!(leaf, "wq" | "wk" | "wv" | "wo" | "w_gate" | "w_up" | "w_down")
+}
+
+/// Build the in-memory manifest. `dir` is recorded as the artifact
+/// directory (used only by file-loading paths; the in-memory pipeline
+/// never touches it).
+pub fn manifest(spec: &SynthSpec, dir: &Path) -> Manifest {
+    let config = ModelConfig {
+        vocab: spec.vocab,
+        d_model: spec.d_model,
+        n_layers: spec.n_layers,
+        n_heads: spec.n_heads,
+        d_ff: spec.d_ff,
+        seq_len: spec.seq_len,
+        block_rows: spec.block_rows,
+        block_cols: spec.block_cols,
+    };
+    let names = param_names(spec);
+    let mut params = Vec::with_capacity(names.len());
+    let mut offset = 0usize;
+    for name in &names {
+        let shape = param_shape(spec, name);
+        let numel: usize = shape.iter().product();
+        params.push(ParamInfo {
+            name: name.clone(),
+            shape,
+            offset,
+            quantized: is_quantized(name),
+        });
+        offset += numel;
+    }
+    let quantized: Vec<String> = names.iter().filter(|n| is_quantized(n)).cloned().collect();
+    let n_blocks: usize = quantized
+        .iter()
+        .map(|n| {
+            let s = param_shape(spec, n);
+            (s[0] / spec.block_rows) * (s[1] / spec.block_cols)
+        })
+        .sum();
+
+    let sig: Vec<String> = std::iter::once("tokens".to_string())
+        .chain(quantized.iter().map(|n| format!("bits:{n}")))
+        .chain(names.iter().map(|n| format!("param:{n}")))
+        .collect();
+    let mut gram_sites = Vec::with_capacity(4 * spec.n_layers);
+    for i in 0..spec.n_layers {
+        gram_sites.push(GramSite {
+            site: format!("layers.{i}.attn_in"),
+            dim: spec.d_model,
+            consumers: ["wq", "wk", "wv"].iter().map(|w| format!("layers.{i}.{w}")).collect(),
+        });
+        gram_sites.push(GramSite {
+            site: format!("layers.{i}.wo_in"),
+            dim: spec.d_model,
+            consumers: vec![format!("layers.{i}.wo")],
+        });
+        gram_sites.push(GramSite {
+            site: format!("layers.{i}.mlp_in"),
+            dim: spec.d_model,
+            consumers: vec![format!("layers.{i}.w_gate"), format!("layers.{i}.w_up")],
+        });
+        gram_sites.push(GramSite {
+            site: format!("layers.{i}.down_in"),
+            dim: spec.d_ff,
+            consumers: vec![format!("layers.{i}.w_down")],
+        });
+    }
+
+    let mut executables = HashMap::new();
+    let mut add_exec = |name: &str, batch: usize, outputs: Vec<String>| {
+        executables.insert(
+            name.to_string(),
+            ExecInfo {
+                file: format!("{name}.hlo.txt"),
+                batch,
+                inputs: sig.clone(),
+                outputs,
+            },
+        );
+    };
+    add_exec("qloss", spec.batch, vec!["loss".into()]);
+    add_exec(
+        "qgrad",
+        spec.batch,
+        std::iter::once("loss".to_string())
+            .chain(quantized.iter().map(|n| format!("grad:{n}")))
+            .collect(),
+    );
+    add_exec("qlogits", spec.batch, vec!["logits".into()]);
+    add_exec("qlogits_b1", 1, vec!["logits".into()]);
+    add_exec("qpredict", spec.batch, vec!["pred".into()]);
+    add_exec(
+        "grams",
+        spec.batch,
+        std::iter::once("loss".to_string())
+            .chain(gram_sites.iter().map(|g| g.site.clone()))
+            .collect(),
+    );
+
+    let mut datasets = HashMap::new();
+    datasets.insert(
+        "calib".to_string(),
+        DatasetInfo { file: "calib.bin".into(), n_tokens: spec.calib_tokens },
+    );
+    datasets.insert(
+        "eval".to_string(),
+        DatasetInfo { file: "eval.bin".into(), n_tokens: spec.eval_tokens },
+    );
+
+    Manifest {
+        dir: dir.to_path_buf(),
+        config,
+        params,
+        quantized,
+        n_blocks,
+        executables,
+        gram_sites,
+        datasets,
+        tasks_n: spec.n_tasks,
+        tasks_seq_len: spec.seq_len,
+        synthetic: true,
+    }
+}
+
+/// Deterministic weights: 1-D params are ones; matrices are uniform in
+/// ±sqrt(3/fan_in) (unit-variance-scaled, transcendental-free so the
+/// Python mirror is bit-exact). One RNG stream, manifest order.
+pub fn weight_store(m: &Manifest, seed: u64) -> WeightStore {
+    let mut rng = Rng::new(seed);
+    let mut mats = HashMap::new();
+    let mut order = Vec::new();
+    for p in &m.params {
+        let data: Vec<f32> = if p.shape.len() == 1 {
+            vec![1.0f32; p.numel()]
+        } else {
+            let a = (3.0f64 / p.cols() as f64).sqrt();
+            (0..p.numel()).map(|_| ((rng.f64() * 2.0 - 1.0) * a) as f32).collect()
+        };
+        mats.insert(p.name.clone(), Mat::from_vec(p.rows(), p.cols(), data).expect("shape"));
+        order.push(p.name.clone());
+    }
+    WeightStore { mats, order }
+}
+
+/// Deterministic uniform token stream over `[0, vocab)`.
+pub fn token_stream(n: usize, vocab: usize, seed: u64) -> TokenStream {
+    let mut rng = Rng::new(seed);
+    TokenStream { tokens: (0..n).map(|_| rng.below(vocab) as i32).collect() }
+}
+
+/// Write a complete artifact directory (minus HLO files) so every
+/// file-loading path works against the interpreter backend.
+pub fn write_artifacts(dir: &Path, spec: &SynthSpec) -> Result<Manifest> {
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+    let m = manifest(spec, dir);
+    let store = weight_store(&m, spec.seed);
+
+    // weights.bin: f32 little-endian, manifest order.
+    let total: usize = m.params.iter().map(|p| p.numel()).sum();
+    let mut bytes = Vec::with_capacity(total * 4);
+    for p in &m.params {
+        for &x in &store.get(&p.name)?.data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    std::fs::write(dir.join("weights.bin"), &bytes)?;
+
+    let write_tokens = |file: &str, n: usize, seed: u64| -> Result<()> {
+        let ts = token_stream(n, spec.vocab, seed);
+        let mut b = Vec::with_capacity(n * 4);
+        for &t in &ts.tokens {
+            b.extend_from_slice(&t.to_le_bytes());
+        }
+        std::fs::write(dir.join(file), &b)?;
+        Ok(())
+    };
+    write_tokens("calib.bin", spec.calib_tokens, spec.seed ^ CALIB_SEED_XOR)?;
+    write_tokens("eval.bin", spec.eval_tokens, spec.seed ^ EVAL_SEED_XOR)?;
+    write_tokens("tasks.bin", spec.n_tasks * spec.seq_len, spec.seed ^ TASKS_SEED_XOR)?;
+
+    // manifest.json, in the exact shape Manifest::load parses.
+    let mut params_j = Vec::with_capacity(m.params.len());
+    for p in &m.params {
+        params_j.push(Json::from_pairs(vec![
+            ("name", Json::Str(p.name.clone())),
+            ("shape", Json::arr_usize(&p.shape)),
+            ("offset", Json::Num(p.offset as f64)),
+            ("quantized", Json::Bool(p.quantized)),
+        ]));
+    }
+    let mut execs_j = Json::obj();
+    for (name, e) in &m.executables {
+        execs_j.set(
+            name,
+            Json::from_pairs(vec![
+                ("file", Json::Str(e.file.clone())),
+                ("batch", Json::Num(e.batch as f64)),
+                ("inputs", Json::arr_str(&e.inputs)),
+                ("outputs", Json::arr_str(&e.outputs)),
+            ]),
+        );
+    }
+    let mut sites_j = Vec::with_capacity(m.gram_sites.len());
+    for g in &m.gram_sites {
+        sites_j.push(Json::from_pairs(vec![
+            ("site", Json::Str(g.site.clone())),
+            ("dim", Json::Num(g.dim as f64)),
+            ("consumers", Json::arr_str(&g.consumers)),
+        ]));
+    }
+    let datasets_j = Json::from_pairs(vec![
+        (
+            "calib",
+            Json::from_pairs(vec![
+                ("file", Json::Str("calib.bin".into())),
+                ("n_tokens", Json::Num(spec.calib_tokens as f64)),
+            ]),
+        ),
+        (
+            "eval",
+            Json::from_pairs(vec![
+                ("file", Json::Str("eval.bin".into())),
+                ("n_tokens", Json::Num(spec.eval_tokens as f64)),
+            ]),
+        ),
+        (
+            "tasks",
+            Json::from_pairs(vec![
+                ("file", Json::Str("tasks.bin".into())),
+                ("n", Json::Num(spec.n_tasks as f64)),
+                ("seq_len", Json::Num(spec.seq_len as f64)),
+            ]),
+        ),
+    ]);
+    let manifest_j = Json::from_pairs(vec![
+        (
+            "config",
+            Json::from_pairs(vec![
+                ("vocab", Json::Num(spec.vocab as f64)),
+                ("d_model", Json::Num(spec.d_model as f64)),
+                ("n_layers", Json::Num(spec.n_layers as f64)),
+                ("n_heads", Json::Num(spec.n_heads as f64)),
+                ("d_ff", Json::Num(spec.d_ff as f64)),
+                ("seq_len", Json::Num(spec.seq_len as f64)),
+                ("block_rows", Json::Num(spec.block_rows as f64)),
+                ("block_cols", Json::Num(spec.block_cols as f64)),
+            ]),
+        ),
+        ("params", Json::Arr(params_j)),
+        ("quantized", Json::arr_str(&m.quantized)),
+        ("n_blocks", Json::Num(m.n_blocks as f64)),
+        ("executables", execs_j),
+        ("gram_sites", Json::Arr(sites_j)),
+        ("datasets", datasets_j),
+        ("synthetic", Json::Bool(true)),
+    ]);
+    manifest_j.write_file(&dir.join("manifest.json"))?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::BlockIndex;
+
+    #[test]
+    fn synthetic_manifest_is_self_consistent() {
+        let spec = SynthSpec::default();
+        let m = manifest(&spec, Path::new("unused"));
+        let index = BlockIndex::from_manifest(&m).unwrap();
+        assert_eq!(index.n_blocks, m.n_blocks);
+        assert_eq!(m.quantized.len(), 7 * spec.n_layers);
+        let store = weight_store(&m, spec.seed);
+        assert_eq!(store.order.len(), m.params.len());
+        for p in &m.params {
+            let mat = store.get(&p.name).unwrap();
+            assert_eq!(mat.data.len(), p.numel(), "{}", p.name);
+            assert!(mat.data.iter().all(|x| x.is_finite()));
+        }
+        // norms are ones, matrices are bounded by +/-sqrt(3/fan_in)
+        assert!(store.get("final_norm").unwrap().data.iter().all(|&x| x == 1.0));
+        let wq = store.get("layers.0.wq").unwrap();
+        let bound = (3.0f64 / spec.d_model as f64).sqrt() as f32 + 1e-6;
+        assert!(wq.data.iter().all(|&x| x.abs() <= bound));
+    }
+
+    #[test]
+    fn written_artifacts_reload_identically() {
+        let spec = SynthSpec::default();
+        let dir = std::env::temp_dir().join(format!("scalebits-synth-test-{}", std::process::id()));
+        let m = write_artifacts(&dir, &spec).unwrap();
+        let loaded = Manifest::load(&dir).unwrap();
+        assert_eq!(loaded.n_blocks, m.n_blocks);
+        assert_eq!(loaded.quantized, m.quantized);
+        assert_eq!(loaded.params.len(), m.params.len());
+        assert_eq!(loaded.config.seq_len, m.config.seq_len);
+        let store_mem = weight_store(&m, spec.seed);
+        let store_disk = WeightStore::load(&loaded).unwrap();
+        for p in &m.params {
+            assert_eq!(
+                store_mem.get(&p.name).unwrap().data,
+                store_disk.get(&p.name).unwrap().data,
+                "{}",
+                p.name
+            );
+        }
+        let ts_mem = token_stream(spec.eval_tokens, spec.vocab, spec.seed ^ EVAL_SEED_XOR);
+        let ts_disk = TokenStream::from_manifest(&loaded, "eval").unwrap();
+        assert_eq!(ts_mem.tokens, ts_disk.tokens);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn token_stream_stays_in_vocab() {
+        let ts = token_stream(1000, 64, 3);
+        assert!(ts.tokens.iter().all(|&t| (0..64).contains(&t)));
+    }
+}

@@ -1,0 +1,389 @@
+//! The engine backend abstraction: everything above the runtime talks
+//! to [`ExecBackend`], never to a concrete engine.
+//!
+//! Two implementations ship in-tree:
+//!
+//! * [`crate::runtime::pjrt::Engine`] — the PJRT-CPU backend: compiles
+//!   the AOT-lowered HLO artifacts and executes them on an XLA client.
+//!   This is the production path and the only one whose numbers mean
+//!   anything for performance claims.
+//! * [`crate::runtime::interp::InterpBackend`] — a pure-Rust
+//!   interpreter that evaluates the same graphs (`qloss`, `qgrad`,
+//!   `qlogits`, `qpredict`, `grams`) directly from the manifest using
+//!   the in-tree `linalg`/`model`/`quant` code. It needs no artifacts
+//!   beyond `manifest.json` + `weights.bin` and no PJRT, which is what
+//!   lets the cross-layer integration net (search invariants, serving
+//!   round-trip, transfer accounting) run in artifact-less CI.
+//!
+//! Device-resident state is passed through the opaque handles
+//! [`DeviceWeights`] / [`DeviceGrids`]: each backend stores its own
+//! representation (PJRT buffers vs host copies) behind `Any`, and a
+//! handle created by one backend is rejected by the other at runtime.
+//! Outputs come back as [`ExecOut`], which either wraps an XLA literal
+//! (fetched lazily) or a host vector.
+//!
+//! Both backends maintain the same [`TransferStats`] ledger — the
+//! interpreter counts the uploads it *would* perform — so the serving
+//! invariant "one token-batch upload per dispatch" is asserted
+//! identically on either backend.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+use crate::model::{Manifest, WeightStore};
+use crate::tensor::Mat;
+
+/// Cumulative execution counters (Table 3 cost accounting). Every
+/// execution path — `run_model` on either backend AND the kernel-bench
+/// `run_raw` path — records one entry per named executable.
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// Cumulative host→device transfer counters. One upload == one
+/// `buffer_from_host_buffer` call (or its interpreter-side simulation);
+/// `bytes` is the host-side payload.
+#[derive(Debug, Default, Clone)]
+pub struct TransferStats {
+    pub uploads: u64,
+    pub bytes: u64,
+}
+
+/// The execution + transfer accounting every backend keeps. ONE shared
+/// implementation, embedded by both engines, so the ledgers — which
+/// tests assert are identical across backends — cannot diverge.
+#[derive(Default)]
+pub struct Ledger {
+    stats: RefCell<HashMap<String, ExecStats>>,
+    transfers: RefCell<TransferStats>,
+}
+
+impl Ledger {
+    pub fn note_exec(&self, name: &str, secs: f64) {
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total_secs += secs;
+    }
+
+    pub fn note_transfer(&self, bytes: usize) {
+        let mut t = self.transfers.borrow_mut();
+        t.uploads += 1;
+        t.bytes += bytes as u64;
+    }
+
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+
+    pub fn transfer_stats(&self) -> TransferStats {
+        self.transfers.borrow().clone()
+    }
+
+    pub fn reset_transfer_stats(&self) {
+        *self.transfers.borrow_mut() = TransferStats::default();
+    }
+}
+
+// ---------------------------------------------------------------------
+// backend selection
+
+/// Which engine implementation a session/worker/pipeline uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pick per artifact set: PJRT when the lowered HLO files are
+    /// present next to the manifest, interpreter otherwise.
+    Auto,
+    /// Compiled HLO on the PJRT CPU client.
+    PjrtCpu,
+    /// Pure-Rust interpreter (no artifacts, no PJRT).
+    Interp,
+}
+
+impl BackendKind {
+    /// Parse a `--backend` flag value.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "pjrt-cpu" | "pjrt" => Ok(BackendKind::PjrtCpu),
+            "interp" | "interpreter" => Ok(BackendKind::Interp),
+            other => bail!("unknown backend {other:?}; expected auto|pjrt-cpu|interp"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::PjrtCpu => "pjrt-cpu",
+            BackendKind::Interp => "interp",
+        }
+    }
+
+    /// Resolve `Auto` against an artifact set: PJRT if the manifest's
+    /// HLO files are actually on disk, interpreter otherwise.
+    pub fn resolve(self, manifest: &Manifest) -> BackendKind {
+        match self {
+            BackendKind::Auto => {
+                let has_hlo = manifest
+                    .executables
+                    .values()
+                    .any(|e| manifest.dir.join(&e.file).exists());
+                if has_hlo {
+                    BackendKind::PjrtCpu
+                } else {
+                    BackendKind::Interp
+                }
+            }
+            k => k,
+        }
+    }
+}
+
+/// Validate one allocation's per-matrix bit grids against the manifest
+/// block shapes (shared by every backend's `upload_grids`, so the
+/// serving-path contract cannot diverge between them).
+pub fn validate_grids(manifest: &Manifest, grids: &[Vec<i32>]) -> Result<()> {
+    if grids.len() != manifest.quantized.len() {
+        bail!("got {} bit grids, want {}", grids.len(), manifest.quantized.len());
+    }
+    for (gi, grid) in grids.iter().enumerate() {
+        let (gr, gc) = manifest.bits_shape(&manifest.quantized[gi])?;
+        if grid.len() != gr * gc {
+            bail!("grid {gi}: len {} != {gr}x{gc}", grid.len());
+        }
+    }
+    Ok(())
+}
+
+/// Construct a backend of the given kind over a parsed manifest,
+/// preparing (compiling, for PJRT) the named executables.
+pub fn open_backend(
+    kind: BackendKind,
+    manifest: Manifest,
+    exec_names: &[&str],
+) -> Result<Box<dyn ExecBackend>> {
+    match kind.resolve(&manifest) {
+        BackendKind::PjrtCpu => Ok(Box::new(super::pjrt::Engine::load(manifest, exec_names)?)),
+        BackendKind::Interp => {
+            Ok(Box::new(super::interp::InterpBackend::new(manifest, exec_names)?))
+        }
+        BackendKind::Auto => unreachable!("resolve never returns Auto"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// opaque device handles
+
+/// Backend-owned device-resident weights (uploaded once, reused across
+/// every execution). Created by [`ExecBackend::upload_weights`].
+pub struct DeviceWeights(Box<dyn Any>);
+
+impl DeviceWeights {
+    pub fn new<T: 'static>(inner: T) -> DeviceWeights {
+        DeviceWeights(Box::new(inner))
+    }
+
+    /// Borrow the concrete representation; errors if this handle was
+    /// created by a different backend.
+    pub fn downcast<T: 'static>(&self) -> Result<&T> {
+        self.0
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow!("weight handle belongs to a different backend"))
+    }
+}
+
+/// Backend-owned device-resident bit grids (one per quantized matrix,
+/// manifest order). Created by [`ExecBackend::upload_grids`].
+pub struct DeviceGrids(Box<dyn Any>);
+
+impl DeviceGrids {
+    pub fn new<T: 'static>(inner: T) -> DeviceGrids {
+        DeviceGrids(Box::new(inner))
+    }
+
+    pub fn downcast<T: 'static>(&self) -> Result<&T> {
+        self.0
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow!("grid handle belongs to a different backend"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// execution outputs
+
+/// One output of a model execution. The PJRT backend returns device
+/// literals (converted on demand, exactly like the pre-trait code); the
+/// interpreter returns host vectors directly.
+pub enum ExecOut {
+    Literal(Literal),
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl ExecOut {
+    /// First element as f32 (scalar outputs: losses).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            ExecOut::Literal(l) => l
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("literal scalar: {e:?}")),
+            ExecOut::F32(v) => {
+                v.first().copied().ok_or_else(|| anyhow!("empty f32 output"))
+            }
+            ExecOut::I32(_) => bail!("scalar_f32 on an i32 output"),
+        }
+    }
+
+    pub fn to_vec_f32(&self) -> Result<Vec<f32>> {
+        match self {
+            ExecOut::Literal(l) => {
+                l.to_vec::<f32>().map_err(|e| anyhow!("literal vec f32: {e:?}"))
+            }
+            ExecOut::F32(v) => Ok(v.clone()),
+            ExecOut::I32(_) => bail!("to_vec_f32 on an i32 output"),
+        }
+    }
+
+    pub fn to_vec_i32(&self) -> Result<Vec<i32>> {
+        match self {
+            ExecOut::Literal(l) => {
+                l.to_vec::<i32>().map_err(|e| anyhow!("literal vec i32: {e:?}"))
+            }
+            ExecOut::I32(v) => Ok(v.clone()),
+            ExecOut::F32(_) => bail!("to_vec_i32 on an f32 output"),
+        }
+    }
+
+    pub fn to_mat(&self, rows: usize, cols: usize) -> Result<Mat> {
+        Mat::from_vec(rows, cols, self.to_vec_f32()?)
+    }
+}
+
+// ---------------------------------------------------------------------
+// the trait
+
+/// A model-execution engine: owns the manifest and the prepared
+/// executables, uploads weights/grids once into backend-owned handles,
+/// and runs named graphs against them. All mutability is interior
+/// (counters), so the whole pipeline can share one `&dyn ExecBackend`.
+pub trait ExecBackend {
+    /// Which concrete implementation this is.
+    fn kind(&self) -> BackendKind;
+
+    fn manifest(&self) -> &Manifest;
+
+    /// Is the named executable prepared and runnable on this backend?
+    fn has_exec(&self, name: &str) -> bool;
+
+    /// Static batch dimension of a prepared executable.
+    fn batch_of(&self, name: &str) -> Result<usize>;
+
+    /// Upload all model weights once; reuse across every execution.
+    fn upload_weights(&self, store: &WeightStore) -> Result<DeviceWeights>;
+
+    /// Upload one allocation's per-matrix bit grids once (validated
+    /// against the manifest block shapes); reuse across every execution
+    /// of that allocation. This is the serving fast path.
+    fn upload_grids(&self, grids: &[Vec<i32>]) -> Result<DeviceGrids>;
+
+    /// Run a model executable `(tokens, *bits, *params)` against
+    /// resident grids + weights. The ONLY per-call host→device
+    /// transfer is the row-major `[batch, seq_len]` token batch.
+    fn run_model(
+        &self,
+        name: &str,
+        tokens: &[i32],
+        grids: &DeviceGrids,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<ExecOut>>;
+
+    /// Grid-upload execution path: uploads `grids` and runs. This is
+    /// the search loop's path — the allocation mutates every iteration,
+    /// so there is nothing to cache.
+    fn run_model_host_grids(
+        &self,
+        name: &str,
+        tokens: &[i32],
+        grids: &[Vec<i32>],
+        weights: &DeviceWeights,
+    ) -> Result<Vec<ExecOut>> {
+        let g = self.upload_grids(grids)?;
+        self.run_model(name, tokens, &g, weights)
+    }
+
+    /// Per-executable execution counters since the last reset.
+    fn stats(&self) -> HashMap<String, ExecStats>;
+
+    fn reset_stats(&self);
+
+    /// Host→device transfer counters since the last reset.
+    fn transfer_stats(&self) -> TransferStats;
+
+    fn reset_transfer_stats(&self);
+
+    /// Escape hatch for backend-specific paths (kernel benches need
+    /// the concrete PJRT engine).
+    fn as_any(&self) -> &dyn Any;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_stats_default() {
+        let s = ExecStats::default();
+        assert_eq!(s.calls, 0);
+        assert_eq!(s.total_secs, 0.0);
+    }
+
+    #[test]
+    fn transfer_stats_default() {
+        let t = TransferStats::default();
+        assert_eq!(t.uploads, 0);
+        assert_eq!(t.bytes, 0);
+    }
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        for k in [BackendKind::Auto, BackendKind::PjrtCpu, BackendKind::Interp] {
+            assert_eq!(BackendKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(BackendKind::parse("interpreter").unwrap(), BackendKind::Interp);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::PjrtCpu);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn exec_out_host_variants() {
+        let f = ExecOut::F32(vec![1.5, 2.0]);
+        assert_eq!(f.scalar_f32().unwrap(), 1.5);
+        assert_eq!(f.to_vec_f32().unwrap(), vec![1.5, 2.0]);
+        assert!(f.to_vec_i32().is_err());
+        let i = ExecOut::I32(vec![3, 4]);
+        assert_eq!(i.to_vec_i32().unwrap(), vec![3, 4]);
+        assert!(i.scalar_f32().is_err());
+        let m = f.to_mat(1, 2).unwrap();
+        assert_eq!((m.rows, m.cols), (1, 2));
+    }
+
+    #[test]
+    fn device_handles_reject_foreign_types() {
+        let w = DeviceWeights::new(42usize);
+        assert_eq!(*w.downcast::<usize>().unwrap(), 42);
+        assert!(w.downcast::<String>().is_err());
+        let g = DeviceGrids::new("x".to_string());
+        assert!(g.downcast::<usize>().is_err());
+        assert_eq!(g.downcast::<String>().unwrap(), "x");
+    }
+}

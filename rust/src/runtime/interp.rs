@@ -1,0 +1,999 @@
+//! Pure-Rust interpreter backend: evaluates the exported graphs
+//! (`qloss`, `qgrad`, `qlogits`, `qlogits_b1`, `qpredict`, `grams`)
+//! directly from the manifest, with zero artifacts beyond
+//! `manifest.json` + `weights.bin` and zero PJRT.
+//!
+//! The model is the same MiniLlama the L2 JAX code lowers (RMSNorm,
+//! RoPE, causal MHA, SwiGLU — see `python/compile/model.py` for the
+//! canonical parameter registry), and quantization is applied exactly
+//! like the on-device path: the rust RTN mirror
+//! ([`crate::quant::fakequant_mat`]) fake-quantizes every quantized
+//! matrix under its bit grid before the forward pass, and `qgrad`
+//! differentiates AT the quantized point w^Q (paper Eq. 3) via a
+//! hand-written reverse pass.
+//!
+//! Numerics: weights and fake-quantization stay in f32 (bit-exact with
+//! the Pallas kernel mirror); all forward/backward arithmetic runs in
+//! f64 so the interpreter agrees with the recorded float64 Python
+//! golden (`rust/tests/data/interp_golden.json`) to ~1e-10 and with
+//! the PJRT f32 executables to f32 tolerance.
+//!
+//! Transfer accounting mirrors the PJRT backend one-for-one (one
+//! "upload" per parameter / grid / token batch), so the serving
+//! invariant — token-batch-only traffic per dispatch — is asserted
+//! identically on either backend.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::backend::{
+    BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut, ExecStats, Ledger,
+    TransferStats,
+};
+use crate::model::{Manifest, WeightStore};
+use crate::quant::fakequant_mat;
+use crate::tensor::Mat;
+
+/// Unique ids for weight/grid handles (cache keys for the memoized
+/// quantized parameter set).
+static HANDLE_IDS: AtomicU64 = AtomicU64::new(1);
+
+fn next_handle_id() -> u64 {
+    HANDLE_IDS.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Rotary-embedding base, pinned by the L2 model (`rope_theta`).
+pub const ROPE_THETA: f64 = 10000.0;
+/// RMSNorm epsilon, pinned by the L2 model.
+pub const RMS_EPS: f64 = 1e-5;
+
+/// Executables the interpreter implements.
+pub const SUPPORTED_EXECS: &[&str] =
+    &["qloss", "qgrad", "qlogits", "qlogits_b1", "qpredict", "grams"];
+
+/// The interpreter backend: manifest + counters. Stateless between
+/// calls apart from the accounting ledgers.
+pub struct InterpBackend {
+    pub manifest: Manifest,
+    /// Executables named at construction. The interpreter needs no
+    /// compilation, but gating on this list keeps the ExecBackend
+    /// contract identical to PJRT: running an un-prepared executable
+    /// fails the same way on both backends.
+    prepared: Vec<String>,
+    ledger: Ledger,
+    /// Memoized fake-quantized f64 parameter set for the last
+    /// (weights, grids) handle pair — the serving fast path runs the
+    /// same resident pair every dispatch, so per-call work stays
+    /// proportional to the token batch, matching the session contract.
+    qcache: RefCell<Option<(u64, u64, Rc<HashMap<String, Vec<f64>>>)>>,
+}
+
+/// "Device" weights for the interpreter: one pristine f32 copy per
+/// parameter, keyed by name.
+pub struct InterpWeights {
+    id: u64,
+    mats: HashMap<String, Mat>,
+}
+
+/// "Device" grids for the interpreter: one i32 grid per quantized
+/// matrix, manifest order, shape-validated at upload.
+pub struct InterpGrids {
+    id: u64,
+    grids: Vec<Vec<i32>>,
+}
+
+impl InterpBackend {
+    /// Build an interpreter over a manifest. `exec_names` mirrors the
+    /// PJRT compile list: each must exist in the manifest and be one of
+    /// the graphs the interpreter implements.
+    pub fn new(manifest: Manifest, exec_names: &[&str]) -> Result<InterpBackend> {
+        let cfg = &manifest.config;
+        if cfg.n_heads == 0 || cfg.d_model % cfg.n_heads != 0 {
+            bail!("interp: d_model {} not divisible by n_heads {}", cfg.d_model, cfg.n_heads);
+        }
+        if cfg.head_dim() % 2 != 0 {
+            bail!("interp: head_dim {} must be even for RoPE", cfg.head_dim());
+        }
+        for name in exec_names {
+            manifest.exec(name)?;
+            if !SUPPORTED_EXECS.contains(name) {
+                bail!("interpreter backend does not implement executable {name:?}");
+            }
+        }
+        Ok(InterpBackend {
+            manifest,
+            prepared: exec_names.iter().map(|s| s.to_string()).collect(),
+            ledger: Ledger::default(),
+            qcache: RefCell::new(None),
+        })
+    }
+
+    fn prepared(&self, name: &str) -> bool {
+        self.prepared.iter().any(|p| p == name)
+    }
+
+    /// Fake-quantize every quantized matrix under its grid and convert
+    /// the full parameter set to f64 — the model state the graphs see.
+    /// Memoized on the (weights, grids) handle pair: the serving path
+    /// reruns the same resident pair every dispatch, while the search
+    /// loop uploads fresh grids per call and naturally misses.
+    fn quantized_params(
+        &self,
+        weights: &InterpWeights,
+        grids: &InterpGrids,
+    ) -> Result<Rc<HashMap<String, Vec<f64>>>> {
+        if let Some((wid, gid, cached)) = self.qcache.borrow().as_ref() {
+            if *wid == weights.id && *gid == grids.id {
+                return Ok(cached.clone());
+            }
+        }
+        let cfg = &self.manifest.config;
+        let mut out = HashMap::with_capacity(self.manifest.params.len());
+        for p in &self.manifest.params {
+            let w = weights
+                .mats
+                .get(&p.name)
+                .ok_or_else(|| anyhow!("interp weights missing {:?}", p.name))?;
+            let qi = self.manifest.quantized.iter().position(|n| n == &p.name);
+            let data: Vec<f64> = match qi {
+                Some(gi) => {
+                    let wq = fakequant_mat(w, &grids.grids[gi], cfg.block_rows, cfg.block_cols);
+                    wq.data.iter().map(|&x| x as f64).collect()
+                }
+                None => w.data.iter().map(|&x| x as f64).collect(),
+            };
+            out.insert(p.name.clone(), data);
+        }
+        let out = Rc::new(out);
+        *self.qcache.borrow_mut() = Some((weights.id, grids.id, out.clone()));
+        Ok(out)
+    }
+}
+
+impl ExecBackend for InterpBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Interp
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn has_exec(&self, name: &str) -> bool {
+        self.prepared(name) && self.manifest.executables.contains_key(name)
+    }
+
+    fn batch_of(&self, name: &str) -> Result<usize> {
+        if !self.prepared(name) {
+            bail!("executable {name:?} not loaded");
+        }
+        Ok(self.manifest.exec(name)?.batch)
+    }
+
+    fn upload_weights(&self, store: &WeightStore) -> Result<DeviceWeights> {
+        let mut mats = HashMap::with_capacity(self.manifest.params.len());
+        for p in &self.manifest.params {
+            let mat = store.get(&p.name)?;
+            if mat.data.len() != p.numel() {
+                bail!("{}: {} elements, manifest says {}", p.name, mat.data.len(), p.numel());
+            }
+            self.ledger.note_transfer(mat.data.len() * 4);
+            mats.insert(p.name.clone(), mat.clone());
+        }
+        Ok(DeviceWeights::new(InterpWeights { id: next_handle_id(), mats }))
+    }
+
+    fn upload_grids(&self, grids: &[Vec<i32>]) -> Result<DeviceGrids> {
+        super::backend::validate_grids(&self.manifest, grids)?;
+        for grid in grids {
+            self.ledger.note_transfer(grid.len() * 4);
+        }
+        Ok(DeviceGrids::new(InterpGrids { id: next_handle_id(), grids: grids.to_vec() }))
+    }
+
+    fn run_model(
+        &self,
+        name: &str,
+        tokens: &[i32],
+        grids: &DeviceGrids,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<ExecOut>> {
+        if !self.prepared(name) {
+            bail!("executable {name:?} not loaded");
+        }
+        let info = self.manifest.exec(name)?;
+        let batch = info.batch;
+        let cfg = &self.manifest.config;
+        let seq = cfg.seq_len;
+        if tokens.len() != batch * seq {
+            bail!("{name}: tokens len {} != {batch}x{seq}", tokens.len());
+        }
+        for &t in tokens {
+            if t < 0 || t as usize >= cfg.vocab {
+                bail!("{name}: token {t} outside vocab {}", cfg.vocab);
+            }
+        }
+        let g = grids.downcast::<InterpGrids>()?;
+        let w = weights.downcast::<InterpWeights>()?;
+        // The per-call "upload": the token batch, like the PJRT path.
+        self.ledger.note_transfer(std::mem::size_of_val(tokens));
+
+        let t0 = Instant::now();
+        let params = self.quantized_params(w, g)?;
+        let model = Model::new(&self.manifest, batch, &params);
+        let out = match name {
+            "qloss" => {
+                let fwd = model.forward(tokens);
+                let (loss, _) = model.ce_loss(&fwd.logits, tokens, false);
+                vec![ExecOut::F32(vec![loss as f32])]
+            }
+            "qlogits" | "qlogits_b1" => {
+                let fwd = model.forward(tokens);
+                vec![ExecOut::F32(fwd.logits.iter().map(|&x| x as f32).collect())]
+            }
+            "qpredict" => {
+                let fwd = model.forward(tokens);
+                let v = model.dims.v;
+                let mut preds = Vec::with_capacity(batch * seq);
+                for row in fwd.logits.chunks_exact(v) {
+                    let mut best = 0usize;
+                    for (i, &x) in row.iter().enumerate() {
+                        if x > row[best] {
+                            best = i;
+                        }
+                    }
+                    preds.push(best as i32);
+                }
+                vec![ExecOut::I32(preds)]
+            }
+            "qgrad" => {
+                let fwd = model.forward(tokens);
+                let (loss, dlogits) = model.ce_loss(&fwd.logits, tokens, true);
+                let grads = model.backward(tokens, &fwd, &dlogits);
+                let mut out = Vec::with_capacity(1 + self.manifest.quantized.len());
+                out.push(ExecOut::F32(vec![loss as f32]));
+                for qname in &self.manifest.quantized {
+                    let g = grads
+                        .get(qname)
+                        .ok_or_else(|| anyhow!("missing gradient for {qname}"))?;
+                    out.push(ExecOut::F32(g.iter().map(|&x| x as f32).collect()));
+                }
+                out
+            }
+            "grams" => {
+                let fwd = model.forward(tokens);
+                let (loss, _) = model.ce_loss(&fwd.logits, tokens, false);
+                let mut out = Vec::with_capacity(1 + self.manifest.gram_sites.len());
+                out.push(ExecOut::F32(vec![loss as f32]));
+                for site in &self.manifest.gram_sites {
+                    let flat = model.site_activation(&fwd, site)?;
+                    if site.dim * model.dims.m() != flat.len() {
+                        bail!("gram site {}: dim {} mismatch", site.site, site.dim);
+                    }
+                    out.push(ExecOut::F32(gram(flat, site.dim)));
+                }
+                out
+            }
+            _ => unreachable!("SUPPORTED_EXECS is exhaustive"),
+        };
+        self.ledger.note_exec(name, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    fn stats(&self) -> HashMap<String, ExecStats> {
+        self.ledger.stats()
+    }
+
+    fn reset_stats(&self) {
+        self.ledger.reset_stats()
+    }
+
+    fn transfer_stats(&self) -> TransferStats {
+        self.ledger.transfer_stats()
+    }
+
+    fn reset_transfer_stats(&self) {
+        self.ledger.reset_transfer_stats()
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// model evaluation (f64)
+
+#[derive(Clone, Copy)]
+struct Dims {
+    b: usize,
+    t: usize,
+    v: usize,
+    d: usize,
+    h: usize,
+    hd: usize,
+    f: usize,
+    l: usize,
+}
+
+impl Dims {
+    /// Flattened row count: batch * seq.
+    fn m(&self) -> usize {
+        self.b * self.t
+    }
+}
+
+/// One transformer evaluation: dims + the (already fake-quantized) f64
+/// parameter set.
+struct Model<'a> {
+    dims: Dims,
+    params: &'a HashMap<String, Vec<f64>>,
+    /// cos/sin tables, `[seq, head_dim/2]`.
+    rope_cos: Vec<f64>,
+    rope_sin: Vec<f64>,
+}
+
+/// Per-layer forward cache (everything the reverse pass needs).
+struct LayerCache {
+    /// Residual stream entering the attention block, [M, D].
+    x_attn_in: Vec<f64>,
+    /// Post-attn_norm activations (input of wq/wk/wv), [M, D].
+    h_attn: Vec<f64>,
+    /// Inverse RMS per row for the attn norm, [M].
+    r_attn: Vec<f64>,
+    /// Post-RoPE projections, [M, D] with column h*Hd+d.
+    q: Vec<f64>,
+    k: Vec<f64>,
+    v: Vec<f64>,
+    /// Softmax attention weights, [B, H, T, T] (zero above diagonal).
+    att: Vec<f64>,
+    /// Attention output before wo (input of wo), [M, D].
+    ctx: Vec<f64>,
+    /// Residual stream entering the MLP block, [M, D].
+    x_mlp_in: Vec<f64>,
+    /// Post-mlp_norm activations (input of w_gate/w_up), [M, D].
+    h_mlp: Vec<f64>,
+    r_mlp: Vec<f64>,
+    /// Pre-activation gate / up projections, [M, F].
+    gate: Vec<f64>,
+    up: Vec<f64>,
+    /// silu(gate) * up (input of w_down), [M, F].
+    hprod: Vec<f64>,
+}
+
+struct Forward {
+    layers: Vec<LayerCache>,
+    /// Residual stream entering the final norm, [M, D].
+    x_final_in: Vec<f64>,
+    r_final: Vec<f64>,
+    /// [M, V].
+    logits: Vec<f64>,
+}
+
+impl<'a> Model<'a> {
+    fn new(manifest: &Manifest, batch: usize, params: &'a HashMap<String, Vec<f64>>) -> Model<'a> {
+        let c = &manifest.config;
+        let dims = Dims {
+            b: batch,
+            t: c.seq_len,
+            v: c.vocab,
+            d: c.d_model,
+            h: c.n_heads,
+            hd: c.head_dim(),
+            f: c.d_ff,
+            l: c.n_layers,
+        };
+        let half = dims.hd / 2;
+        let mut rope_cos = vec![0.0; dims.t * half];
+        let mut rope_sin = vec![0.0; dims.t * half];
+        for t in 0..dims.t {
+            for i in 0..half {
+                let freq = ROPE_THETA.powf(-(i as f64) / half as f64);
+                let ang = t as f64 * freq;
+                rope_cos[t * half + i] = ang.cos();
+                rope_sin[t * half + i] = ang.sin();
+            }
+        }
+        Model { dims, params, rope_cos, rope_sin }
+    }
+
+    fn p(&self, name: &str) -> &[f64] {
+        &self.params[name]
+    }
+
+    fn pl(&self, layer: usize, leaf: &str) -> &[f64] {
+        &self.params[&format!("layers.{layer}.{leaf}")]
+    }
+
+    /// Rotate pairs (i, half+i) of every head by the position angle.
+    /// `inverse` applies the transpose rotation (the RoPE backward).
+    fn rope(&self, x: &mut [f64], inverse: bool) {
+        let Dims { b, t, d, h, hd, .. } = self.dims;
+        let half = hd / 2;
+        for bi in 0..b {
+            for ti in 0..t {
+                let row = (bi * t + ti) * d;
+                for hi in 0..h {
+                    let base = row + hi * hd;
+                    for i in 0..half {
+                        let c = self.rope_cos[ti * half + i];
+                        let mut s = self.rope_sin[ti * half + i];
+                        if inverse {
+                            s = -s;
+                        }
+                        let x1 = x[base + i];
+                        let x2 = x[base + half + i];
+                        x[base + i] = x1 * c - x2 * s;
+                        x[base + half + i] = x1 * s + x2 * c;
+                    }
+                }
+            }
+        }
+    }
+
+    fn forward(&self, tokens: &[i32]) -> Forward {
+        let Dims { t, v: _, d, h, hd, f, l, .. } = self.dims;
+        let m = self.dims.m();
+        let embed = self.p("embed");
+        let mut x = vec![0.0f64; m * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let src = tok as usize * d;
+            x[i * d..(i + 1) * d].copy_from_slice(&embed[src..src + d]);
+        }
+
+        let scale = 1.0 / (hd as f64).sqrt();
+        let mut layers = Vec::with_capacity(l);
+        for li in 0..l {
+            let x_attn_in = x.clone();
+            let (h_attn, r_attn) = rmsnorm_fwd(&x, self.pl(li, "attn_norm"), d);
+
+            let mut q = matmul_nt(&h_attn, self.pl(li, "wq"), m, d, d);
+            let mut k = matmul_nt(&h_attn, self.pl(li, "wk"), m, d, d);
+            let v = matmul_nt(&h_attn, self.pl(li, "wv"), m, d, d);
+            self.rope(&mut q, false);
+            self.rope(&mut k, false);
+
+            let mut att = vec![0.0f64; self.dims.b * h * t * t];
+            let mut ctx = vec![0.0f64; m * d];
+            let mut sc = vec![0.0f64; t];
+            for bi in 0..self.dims.b {
+                for hi in 0..h {
+                    for ti in 0..t {
+                        let qoff = ((bi * t + ti) * d) + hi * hd;
+                        let mut maxv = f64::NEG_INFINITY;
+                        for s in 0..=ti {
+                            let koff = ((bi * t + s) * d) + hi * hd;
+                            let mut dot = 0.0;
+                            for dd in 0..hd {
+                                dot += q[qoff + dd] * k[koff + dd];
+                            }
+                            let val = dot * scale;
+                            sc[s] = val;
+                            if val > maxv {
+                                maxv = val;
+                            }
+                        }
+                        let mut denom = 0.0;
+                        for s in 0..=ti {
+                            let e = (sc[s] - maxv).exp();
+                            sc[s] = e;
+                            denom += e;
+                        }
+                        let abase = ((bi * h + hi) * t + ti) * t;
+                        for s in 0..=ti {
+                            let a = sc[s] / denom;
+                            att[abase + s] = a;
+                            let voff = ((bi * t + s) * d) + hi * hd;
+                            let coff = ((bi * t + ti) * d) + hi * hd;
+                            for dd in 0..hd {
+                                ctx[coff + dd] += a * v[voff + dd];
+                            }
+                        }
+                    }
+                }
+            }
+
+            let y = matmul_nt(&ctx, self.pl(li, "wo"), m, d, d);
+            for i in 0..m * d {
+                x[i] += y[i];
+            }
+
+            let x_mlp_in = x.clone();
+            let (h_mlp, r_mlp) = rmsnorm_fwd(&x, self.pl(li, "mlp_norm"), d);
+            let gate = matmul_nt(&h_mlp, self.pl(li, "w_gate"), m, d, f);
+            let up = matmul_nt(&h_mlp, self.pl(li, "w_up"), m, d, f);
+            let mut hprod = vec![0.0f64; m * f];
+            for i in 0..m * f {
+                hprod[i] = silu(gate[i]) * up[i];
+            }
+            let y = matmul_nt(&hprod, self.pl(li, "w_down"), m, f, d);
+            for i in 0..m * d {
+                x[i] += y[i];
+            }
+
+            layers.push(LayerCache {
+                x_attn_in,
+                h_attn,
+                r_attn,
+                q,
+                k,
+                v,
+                att,
+                ctx,
+                x_mlp_in,
+                h_mlp,
+                r_mlp,
+                gate,
+                up,
+                hprod,
+            });
+        }
+
+        let x_final_in = x.clone();
+        let (xf, r_final) = rmsnorm_fwd(&x, self.p("final_norm"), d);
+        let logits = matmul_nt(&xf, self.p("lm_head"), m, d, self.dims.v);
+        Forward { layers, x_final_in, r_final, logits }
+    }
+
+    /// Next-token cross entropy, mean over the B*(T-1) predicted
+    /// positions; optionally its gradient wrt the logits.
+    fn ce_loss(&self, logits: &[f64], tokens: &[i32], want_grad: bool) -> (f64, Vec<f64>) {
+        let Dims { b, t, v, .. } = self.dims;
+        let denom = (b * (t - 1)) as f64;
+        let mut loss = 0.0;
+        let mut dlogits = if want_grad { vec![0.0f64; b * t * v] } else { Vec::new() };
+        for bi in 0..b {
+            for ti in 0..t - 1 {
+                let row = &logits[(bi * t + ti) * v..(bi * t + ti + 1) * v];
+                let mut maxv = f64::NEG_INFINITY;
+                for &x in row {
+                    if x > maxv {
+                        maxv = x;
+                    }
+                }
+                let mut sum = 0.0;
+                for &x in row {
+                    sum += (x - maxv).exp();
+                }
+                let lse = maxv + sum.ln();
+                let tgt = tokens[bi * t + ti + 1] as usize;
+                loss += (lse - row[tgt]) / denom;
+                if want_grad {
+                    let drow = &mut dlogits[(bi * t + ti) * v..(bi * t + ti + 1) * v];
+                    for (j, &x) in row.iter().enumerate() {
+                        drow[j] = (x - lse).exp() / denom;
+                    }
+                    drow[tgt] -= 1.0 / denom;
+                }
+            }
+        }
+        (loss, dlogits)
+    }
+
+    /// Reverse pass: gradients of the loss wrt every QUANTIZED matrix
+    /// (at the quantized point — the forward already runs on w^Q).
+    fn backward(
+        &self,
+        _tokens: &[i32],
+        fwd: &Forward,
+        dlogits: &[f64],
+    ) -> HashMap<String, Vec<f64>> {
+        let Dims { t, d, h, hd, f, l, .. } = self.dims;
+        let m = self.dims.m();
+        let scale = 1.0 / (hd as f64).sqrt();
+        let mut grads: HashMap<String, Vec<f64>> = HashMap::new();
+
+        // logits = xf @ lm_head^T
+        let mut dxf = vec![0.0f64; m * d];
+        matmul_nn_acc(dlogits, self.p("lm_head"), m, self.dims.v, d, &mut dxf);
+        let mut dx = rmsnorm_bwd(&dxf, &fwd.x_final_in, self.p("final_norm"), &fwd.r_final, d);
+
+        for li in (0..l).rev() {
+            let lc = &fwd.layers[li];
+
+            // ---- MLP block: x_out = x_mlp_in + hprod @ w_down^T ----
+            let mut dhprod = vec![0.0f64; m * f];
+            matmul_nn_acc(&dx, self.pl(li, "w_down"), m, d, f, &mut dhprod);
+            let mut dwd = vec![0.0f64; d * f];
+            accum_wgrad(&dx, &lc.hprod, m, d, f, &mut dwd);
+            grads.insert(format!("layers.{li}.w_down"), dwd);
+
+            let mut dgate = vec![0.0f64; m * f];
+            let mut dup = vec![0.0f64; m * f];
+            for i in 0..m * f {
+                let s = silu(lc.gate[i]);
+                dup[i] = dhprod[i] * s;
+                dgate[i] = dhprod[i] * lc.up[i] * silu_grad(lc.gate[i]);
+            }
+            let mut dwg = vec![0.0f64; f * d];
+            accum_wgrad(&dgate, &lc.h_mlp, m, f, d, &mut dwg);
+            grads.insert(format!("layers.{li}.w_gate"), dwg);
+            let mut dwu = vec![0.0f64; f * d];
+            accum_wgrad(&dup, &lc.h_mlp, m, f, d, &mut dwu);
+            grads.insert(format!("layers.{li}.w_up"), dwu);
+
+            let mut dh_mlp = vec![0.0f64; m * d];
+            matmul_nn_acc(&dgate, self.pl(li, "w_gate"), m, f, d, &mut dh_mlp);
+            matmul_nn_acc(&dup, self.pl(li, "w_up"), m, f, d, &mut dh_mlp);
+            let dnorm = rmsnorm_bwd(&dh_mlp, &lc.x_mlp_in, self.pl(li, "mlp_norm"), &lc.r_mlp, d);
+            // residual: dx (skip path) + dnorm (through the block)
+            for i in 0..m * d {
+                dx[i] += dnorm[i];
+            }
+
+            // ---- attention block: x_mid = x_attn_in + ctx @ wo^T ----
+            let mut dctx = vec![0.0f64; m * d];
+            matmul_nn_acc(&dx, self.pl(li, "wo"), m, d, d, &mut dctx);
+            let mut dwo = vec![0.0f64; d * d];
+            accum_wgrad(&dx, &lc.ctx, m, d, d, &mut dwo);
+            grads.insert(format!("layers.{li}.wo"), dwo);
+
+            let mut dq = vec![0.0f64; m * d];
+            let mut dk = vec![0.0f64; m * d];
+            let mut dv = vec![0.0f64; m * d];
+            let mut datt = vec![0.0f64; t];
+            for bi in 0..self.dims.b {
+                for hi in 0..h {
+                    for ti in 0..t {
+                        let abase = ((bi * h + hi) * t + ti) * t;
+                        let coff = ((bi * t + ti) * d) + hi * hd;
+                        // datt[s] = <dctx[t], v[s]>; dv[s] += att[t,s] dctx[t]
+                        let mut sdot = 0.0;
+                        for s in 0..=ti {
+                            let voff = ((bi * t + s) * d) + hi * hd;
+                            let a = lc.att[abase + s];
+                            let mut dot = 0.0;
+                            for dd in 0..hd {
+                                dot += dctx[coff + dd] * lc.v[voff + dd];
+                                dv[voff + dd] += a * dctx[coff + dd];
+                            }
+                            datt[s] = dot;
+                            sdot += dot * a;
+                        }
+                        // softmax backward + score scale
+                        let qoff = coff;
+                        for s in 0..=ti {
+                            let a = lc.att[abase + s];
+                            let ds = a * (datt[s] - sdot) * scale;
+                            if ds != 0.0 {
+                                let koff = ((bi * t + s) * d) + hi * hd;
+                                for dd in 0..hd {
+                                    dq[qoff + dd] += ds * lc.k[koff + dd];
+                                    dk[koff + dd] += ds * lc.q[qoff + dd];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // RoPE is a per-position rotation: backward = inverse rotation.
+            self.rope(&mut dq, true);
+            self.rope(&mut dk, true);
+
+            let mut dwq = vec![0.0f64; d * d];
+            accum_wgrad(&dq, &lc.h_attn, m, d, d, &mut dwq);
+            grads.insert(format!("layers.{li}.wq"), dwq);
+            let mut dwk = vec![0.0f64; d * d];
+            accum_wgrad(&dk, &lc.h_attn, m, d, d, &mut dwk);
+            grads.insert(format!("layers.{li}.wk"), dwk);
+            let mut dwv = vec![0.0f64; d * d];
+            accum_wgrad(&dv, &lc.h_attn, m, d, d, &mut dwv);
+            grads.insert(format!("layers.{li}.wv"), dwv);
+
+            let mut dh_attn = vec![0.0f64; m * d];
+            matmul_nn_acc(&dq, self.pl(li, "wq"), m, d, d, &mut dh_attn);
+            matmul_nn_acc(&dk, self.pl(li, "wk"), m, d, d, &mut dh_attn);
+            matmul_nn_acc(&dv, self.pl(li, "wv"), m, d, d, &mut dh_attn);
+            let dnorm =
+                rmsnorm_bwd(&dh_attn, &lc.x_attn_in, self.pl(li, "attn_norm"), &lc.r_attn, d);
+            for i in 0..m * d {
+                dx[i] += dnorm[i];
+            }
+        }
+        grads
+    }
+
+    /// Activation entering a linear-input gram site, looked up by the
+    /// site NAME from the manifest (`layers.<i>.{attn_in,wo_in,mlp_in,
+    /// down_in}`) — index arithmetic would silently permute Grams if a
+    /// manifest ever changed its site ordering.
+    fn site_activation<'f>(
+        &self,
+        fwd: &'f Forward,
+        site: &crate::model::GramSite,
+    ) -> Result<&'f [f64]> {
+        let (layer, leaf) = crate::model::split_param_name(&site.site);
+        let li = layer.ok_or_else(|| anyhow!("gram site {:?}: no layer index", site.site))?;
+        let lc = fwd
+            .layers
+            .get(li)
+            .ok_or_else(|| anyhow!("gram site {:?}: layer {li} out of range", site.site))?;
+        Ok(match leaf {
+            "attn_in" => &lc.h_attn,
+            "wo_in" => &lc.ctx,
+            "mlp_in" => &lc.h_mlp,
+            "down_in" => &lc.hprod,
+            other => bail!("gram site {:?}: unknown kind {other:?}", site.site),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// dense helpers (f64, row-major)
+
+/// y[m, dout] = x[m, din] @ w[dout, din]^T.
+fn matmul_nt(x: &[f64], w: &[f64], m: usize, din: usize, dout: usize) -> Vec<f64> {
+    debug_assert_eq!(x.len(), m * din);
+    debug_assert_eq!(w.len(), dout * din);
+    let mut y = vec![0.0f64; m * dout];
+    for i in 0..m {
+        let xr = &x[i * din..(i + 1) * din];
+        let yr = &mut y[i * dout..(i + 1) * dout];
+        for (o, yo) in yr.iter_mut().enumerate() {
+            let wr = &w[o * din..(o + 1) * din];
+            let mut acc = 0.0;
+            for j in 0..din {
+                acc += xr[j] * wr[j];
+            }
+            *yo = acc;
+        }
+    }
+    y
+}
+
+/// dx[m, din] += dy[m, dout] @ w[dout, din].
+fn matmul_nn_acc(dy: &[f64], w: &[f64], m: usize, dout: usize, din: usize, dx: &mut [f64]) {
+    debug_assert_eq!(dy.len(), m * dout);
+    debug_assert_eq!(w.len(), dout * din);
+    debug_assert_eq!(dx.len(), m * din);
+    for i in 0..m {
+        let dyr = &dy[i * dout..(i + 1) * dout];
+        let dxr = &mut dx[i * din..(i + 1) * din];
+        for (o, &g) in dyr.iter().enumerate() {
+            if g != 0.0 {
+                let wr = &w[o * din..(o + 1) * din];
+                for j in 0..din {
+                    dxr[j] += g * wr[j];
+                }
+            }
+        }
+    }
+}
+
+/// dw[dout, din] += dy[m, dout]^T @ x[m, din].
+fn accum_wgrad(dy: &[f64], x: &[f64], m: usize, dout: usize, din: usize, dw: &mut [f64]) {
+    debug_assert_eq!(dy.len(), m * dout);
+    debug_assert_eq!(x.len(), m * din);
+    debug_assert_eq!(dw.len(), dout * din);
+    for i in 0..m {
+        let xr = &x[i * din..(i + 1) * din];
+        let dyr = &dy[i * dout..(i + 1) * dout];
+        for (o, &g) in dyr.iter().enumerate() {
+            if g != 0.0 {
+                let dwr = &mut dw[o * din..(o + 1) * din];
+                for j in 0..din {
+                    dwr[j] += g * xr[j];
+                }
+            }
+        }
+    }
+}
+
+/// y = x * rsqrt(mean(x^2) + eps) * g per row; returns (y, inv_rms).
+fn rmsnorm_fwd(x: &[f64], g: &[f64], d: usize) -> (Vec<f64>, Vec<f64>) {
+    let rows = x.len() / d;
+    let mut out = vec![0.0f64; x.len()];
+    let mut inv = vec![0.0f64; rows];
+    for i in 0..rows {
+        let xr = &x[i * d..(i + 1) * d];
+        let mut ms = 0.0;
+        for &v in xr {
+            ms += v * v;
+        }
+        let r = 1.0 / (ms / d as f64 + RMS_EPS).sqrt();
+        inv[i] = r;
+        let yr = &mut out[i * d..(i + 1) * d];
+        for j in 0..d {
+            yr[j] = xr[j] * r * g[j];
+        }
+    }
+    (out, inv)
+}
+
+/// dx for y = x * r * g with r = (mean(x^2)+eps)^{-1/2}:
+/// dx_k = r g_k dy_k − x_k r^3 / d · Σ_j dy_j g_j x_j.
+fn rmsnorm_bwd(dy: &[f64], x: &[f64], g: &[f64], inv: &[f64], d: usize) -> Vec<f64> {
+    let rows = x.len() / d;
+    let mut dx = vec![0.0f64; x.len()];
+    for i in 0..rows {
+        let xr = &x[i * d..(i + 1) * d];
+        let dyr = &dy[i * d..(i + 1) * d];
+        let r = inv[i];
+        let mut dot = 0.0;
+        for j in 0..d {
+            dot += dyr[j] * g[j] * xr[j];
+        }
+        let c = r * r * r / d as f64 * dot;
+        let dxr = &mut dx[i * d..(i + 1) * d];
+        for j in 0..d {
+            dxr[j] = r * g[j] * dyr[j] - xr[j] * c;
+        }
+    }
+    dx
+}
+
+fn silu(z: f64) -> f64 {
+    z / (1.0 + (-z).exp())
+}
+
+fn silu_grad(z: f64) -> f64 {
+    let s = 1.0 / (1.0 + (-z).exp());
+    s * (1.0 + z * (1.0 - s))
+}
+
+/// X^T X over a [rows, d] activation, flattened [d, d] f32.
+fn gram(flat: &[f64], d: usize) -> Vec<f32> {
+    let rows = flat.len() / d;
+    let mut out = vec![0.0f64; d * d];
+    for i in 0..rows {
+        let xr = &flat[i * d..(i + 1) * d];
+        for a in 0..d {
+            let xa = xr[a];
+            if xa != 0.0 {
+                let or = &mut out[a * d..(a + 1) * d];
+                for b in 0..d {
+                    or[b] += xa * xr[b];
+                }
+            }
+        }
+    }
+    out.iter().map(|&x| x as f32).collect()
+}
+
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synth::{self, SynthSpec};
+    use crate::quant::{BitAlloc, BlockIndex};
+    use crate::runtime::backend::ExecBackend;
+
+    fn tiny_spec() -> SynthSpec {
+        SynthSpec {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 8,
+            block_rows: 8,
+            block_cols: 8,
+            batch: 2,
+            seed: 11,
+            calib_tokens: 512,
+            eval_tokens: 512,
+            n_tasks: 8,
+        }
+    }
+
+    fn tiny_backend() -> (InterpBackend, crate::model::WeightStore, Vec<i32>) {
+        let spec = tiny_spec();
+        let manifest = synth::manifest(&spec, std::path::Path::new("unused"));
+        let store = synth::weight_store(&manifest, spec.seed);
+        let tokens = synth::token_stream(spec.batch * spec.seq_len, spec.vocab, 99).tokens;
+        let be = InterpBackend::new(manifest, &["qloss", "qgrad", "qlogits", "qpredict"]).unwrap();
+        (be, store, tokens)
+    }
+
+    #[test]
+    fn qloss_matches_qgrad_loss_and_is_finite() {
+        let (be, store, tokens) = tiny_backend();
+        let index = BlockIndex::from_manifest(&be.manifest).unwrap();
+        let w = be.upload_weights(&store).unwrap();
+        let g = be.upload_grids(&BitAlloc::uniform(&index, 3).grids(&index)).unwrap();
+        let l1 = be.run_model("qloss", &tokens, &g, &w).unwrap()[0].scalar_f32().unwrap();
+        let out = be.run_model("qgrad", &tokens, &g, &w).unwrap();
+        let l2 = out[0].scalar_f32().unwrap();
+        assert!(l1.is_finite() && l1 > 0.0, "{l1}");
+        assert!((l1 - l2).abs() < 1e-6, "{l1} vs {l2}");
+        assert_eq!(out.len(), 1 + be.manifest.quantized.len());
+    }
+
+    #[test]
+    fn qpredict_is_argmax_of_qlogits() {
+        let (be, store, tokens) = tiny_backend();
+        let index = BlockIndex::from_manifest(&be.manifest).unwrap();
+        let w = be.upload_weights(&store).unwrap();
+        let g = be.upload_grids(&BitAlloc::uniform(&index, 4).grids(&index)).unwrap();
+        let logits = be.run_model("qlogits", &tokens, &g, &w).unwrap()[0].to_vec_f32().unwrap();
+        let preds = be.run_model("qpredict", &tokens, &g, &w).unwrap()[0].to_vec_i32().unwrap();
+        let v = be.manifest.config.vocab;
+        for (i, row) in logits.chunks_exact(v).enumerate() {
+            let mut best = 0usize;
+            for (j, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = j;
+                }
+            }
+            assert_eq!(preds[i], best as i32, "position {i}");
+        }
+    }
+
+    /// The load-bearing correctness net for the hand-written reverse
+    /// pass: analytic gradients vs central finite differences of the
+    /// f64 loss, at the FP sentinel (so perturbing the raw weight IS
+    /// perturbing the quantized point).
+    #[test]
+    fn qgrad_matches_finite_differences() {
+        let (be, store, tokens) = tiny_backend();
+        let index = BlockIndex::from_manifest(&be.manifest).unwrap();
+        let fp = BitAlloc::uniform(&index, 16);
+        let w = be.upload_weights(&store).unwrap();
+        let g = be.upload_grids(&fp.grids(&index)).unwrap();
+        let out = be.run_model("qgrad", &tokens, &g, &w).unwrap();
+
+        let iw = w.downcast::<InterpWeights>().unwrap();
+        let ig = g.downcast::<InterpGrids>().unwrap();
+        let loss_at = |params: &HashMap<String, Vec<f64>>| -> f64 {
+            let model = Model::new(&be.manifest, be.manifest.exec("qloss").unwrap().batch, params);
+            let fwd = model.forward(&tokens);
+            model.ce_loss(&fwd.logits, &tokens, false).0
+        };
+        let base_params = be.quantized_params(iw, ig).unwrap();
+
+        // Check the largest-|grad| elements of every quantized matrix
+        // (largest = best signal-to-noise for the FD comparison).
+        let h = 1e-5;
+        for (qi, qname) in be.manifest.quantized.iter().enumerate() {
+            let grad = out[1 + qi].to_vec_f32().unwrap();
+            let mut order: Vec<usize> = (0..grad.len()).collect();
+            order.sort_by(|&a, &b| {
+                grad[b].abs().partial_cmp(&grad[a].abs()).unwrap()
+            });
+            for &idx in order.iter().take(3) {
+                let mut p = (*base_params).clone();
+                p.get_mut(qname).unwrap()[idx] += h;
+                let lp = loss_at(&p);
+                p.get_mut(qname).unwrap()[idx] -= 2.0 * h;
+                let lm = loss_at(&p);
+                let fd = (lp - lm) / (2.0 * h);
+                let an = grad[idx] as f64;
+                assert!(
+                    (fd - an).abs() <= 1e-4 + 1e-2 * fd.abs().max(an.abs()),
+                    "{qname}[{idx}]: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_calls() {
+        let (be, store, tokens) = tiny_backend();
+        let index = BlockIndex::from_manifest(&be.manifest).unwrap();
+        let alloc = BitAlloc::uniform(&index, 3);
+        let w = be.upload_weights(&store).unwrap();
+        // wrong grid count
+        let grids = alloc.grids(&index);
+        assert!(be.upload_grids(&grids[..grids.len() - 1]).is_err());
+        // wrong grid shape
+        let mut bad = grids.clone();
+        bad[0].pop();
+        assert!(be.upload_grids(&bad).is_err());
+        let g = be.upload_grids(&grids).unwrap();
+        // wrong token count
+        assert!(be.run_model("qloss", &tokens[..tokens.len() - 1], &g, &w).is_err());
+        // out-of-vocab token
+        let mut t2 = tokens.clone();
+        t2[0] = be.manifest.config.vocab as i32;
+        assert!(be.run_model("qloss", &t2, &g, &w).is_err());
+        // unknown executable
+        assert!(be.run_model("nonexistent", &tokens, &g, &w).is_err());
+    }
+}

@@ -1,320 +1,47 @@
-//! PJRT runtime, split into two layers:
+//! Runtime layer, split into a backend abstraction + two engines +
+//! device-resident sessions:
 //!
-//! * [`Engine`] — compile/load: owns the PJRT client, the compiled
-//!   executables, and the raw buffer-upload helpers. Pattern follows
-//!   /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` ->
-//!   `XlaComputation::from_proto` -> `client.compile`.
-//! * [`Session`] (see [`session`]) — owns device-resident state: the
-//!   full-precision weight buffers AND the per-allocation bit-grid
-//!   buffers, both uploaded once. A `Session::run` call uploads only
-//!   the token batch.
+//! * [`backend`] — the [`ExecBackend`] trait every layer above talks
+//!   to: prepare executables, upload weights/bit-grids once into
+//!   opaque [`DeviceWeights`]/[`DeviceGrids`] handles, run the model
+//!   graphs, and account every execution ([`ExecStats`]) and every
+//!   host→device upload ([`TransferStats`]).
+//! * [`pjrt`] — the production backend: [`Engine`] compiles the
+//!   AOT-lowered HLO artifacts onto the PJRT CPU client (pattern
+//!   follows /opt/xla-example/load_hlo).
+//! * [`interp`] — a pure-Rust interpreter evaluating the same graphs
+//!   directly from the manifest (no artifacts, no PJRT); it keeps the
+//!   cross-layer net runnable in artifact-less CI and is the fallback
+//!   `BackendKind::Auto` resolves to when HLO files are absent.
+//! * [`session`] — [`Session`]: a backend plus everything uploaded
+//!   ONCE (full-precision weights AND per-allocation bit grids). After
+//!   construction, `Session::run` uploads only the token batch.
 //!
-//! Hot-path discipline: the multi-MB weight transfer happens once at
-//! session creation. The serving path additionally pins the bit grids
-//! on device ([`GridBuffers`]) because the served allocation is fixed;
-//! only the search loop — which mutates the allocation every
-//! iteration — uses the per-call grid-upload path
-//! ([`Engine::run_model_host_grids`]).
+//! Hot-path discipline (unchanged by the trait split): the multi-MB
+//! weight transfer happens once at session creation. The serving path
+//! additionally pins the bit grids on device because the served
+//! allocation is fixed; only the search loop — which mutates the
+//! allocation every iteration — uses the per-call grid-upload path
+//! ([`ExecBackend::run_model_host_grids`]).
 //!
-//! Every host→device upload is counted in [`TransferStats`] so tests
-//! can assert the serve path moves nothing but tokens per batch.
+//! Backend selection: workers/pipelines take a [`BackendKind`]
+//! (`--backend {auto,pjrt-cpu,interp}` on the CLI). `Auto` resolves
+//! per artifact set — PJRT when the HLO files exist, interpreter
+//! otherwise — so one binary serves both the production and the
+//! artifact-less configuration.
 
+pub mod backend;
+pub mod interp;
+pub mod pjrt;
 pub mod session;
 
+pub use backend::{
+    open_backend, BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut, ExecStats,
+    TransferStats,
+};
+pub use interp::InterpBackend;
+pub use pjrt::{
+    literal_scalar_f32, literal_to_mat, literal_to_vec_f32, Engine, GridBuffers, LoadedExec,
+    WeightBuffers,
+};
 pub use session::Session;
-
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
-use std::time::Instant;
-
-use anyhow::{anyhow, bail, Result};
-use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
-
-use crate::model::{Manifest, WeightStore};
-use crate::tensor::Mat;
-
-/// Cumulative execution counters (Table 3 cost accounting).
-#[derive(Debug, Default, Clone)]
-pub struct ExecStats {
-    pub calls: u64,
-    pub total_secs: f64,
-}
-
-/// Cumulative host→device transfer counters. One upload == one
-/// `buffer_from_host_buffer` call; `bytes` is the host-side payload.
-#[derive(Debug, Default, Clone)]
-pub struct TransferStats {
-    pub uploads: u64,
-    pub bytes: u64,
-}
-
-/// One compiled executable + its manifest signature.
-pub struct LoadedExec {
-    pub name: String,
-    pub exe: PjRtLoadedExecutable,
-    pub batch: usize,
-    pub n_outputs: usize,
-}
-
-/// The PJRT engine: client + compiled executables + counters.
-pub struct Engine {
-    pub client: PjRtClient,
-    pub manifest: Manifest,
-    execs: HashMap<String, LoadedExec>,
-    stats: RefCell<HashMap<String, ExecStats>>,
-    transfers: RefCell<TransferStats>,
-}
-
-impl Engine {
-    /// Create a CPU engine and compile the named executables.
-    pub fn load(manifest: Manifest, exec_names: &[&str]) -> Result<Engine> {
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let mut engine = Engine {
-            client,
-            manifest,
-            execs: HashMap::new(),
-            stats: RefCell::new(HashMap::new()),
-            transfers: RefCell::new(TransferStats::default()),
-        };
-        for name in exec_names {
-            engine.compile_exec(name)?;
-        }
-        Ok(engine)
-    }
-
-    /// Compile (or re-compile) one executable from its HLO text file.
-    pub fn compile_exec(&mut self, name: &str) -> Result<()> {
-        let info = self.manifest.exec(name)?.clone();
-        let path = self.manifest.dir.join(&info.file);
-        let exe = self.compile_hlo_file(&path)?;
-        self.execs.insert(
-            name.to_string(),
-            LoadedExec { name: name.to_string(), exe, batch: info.batch, n_outputs: info.outputs.len() },
-        );
-        Ok(())
-    }
-
-    /// Compile an arbitrary HLO text file (kernel benches use this).
-    pub fn compile_hlo_file(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
-        let proto = HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
-    }
-
-    pub fn has_exec(&self, name: &str) -> bool {
-        self.execs.contains_key(name)
-    }
-
-    pub fn batch_of(&self, name: &str) -> Result<usize> {
-        Ok(self.exec_ref(name)?.batch)
-    }
-
-    fn exec_ref(&self, name: &str) -> Result<&LoadedExec> {
-        self.execs
-            .get(name)
-            .ok_or_else(|| anyhow!("executable {name:?} not loaded"))
-    }
-
-    // ---- buffer helpers ------------------------------------------------
-
-    fn note_transfer(&self, bytes: usize) {
-        let mut t = self.transfers.borrow_mut();
-        t.uploads += 1;
-        t.bytes += bytes as u64;
-    }
-
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
-        self.note_transfer(std::mem::size_of_val(data));
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
-    }
-
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
-        self.note_transfer(std::mem::size_of_val(data));
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
-    }
-
-    pub fn upload_i8(&self, data: &[i8], dims: &[usize]) -> Result<PjRtBuffer> {
-        self.note_transfer(std::mem::size_of_val(data));
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("upload i8 {dims:?}: {e:?}"))
-    }
-
-    /// Host→device transfer counters since the last reset.
-    pub fn transfer_stats(&self) -> TransferStats {
-        self.transfers.borrow().clone()
-    }
-
-    pub fn reset_transfer_stats(&self) {
-        *self.transfers.borrow_mut() = TransferStats::default();
-    }
-
-    /// Upload all model weights once; reuse across every execution.
-    pub fn upload_weights(&self, store: &WeightStore) -> Result<WeightBuffers> {
-        let mut bufs = Vec::with_capacity(store.order.len());
-        for p in &self.manifest.params {
-            let mat = store.get(&p.name)?;
-            let dims: Vec<usize> = p.shape.clone();
-            bufs.push(self.upload_f32(&mat.data, &dims)?);
-        }
-        Ok(WeightBuffers { bufs })
-    }
-
-    /// Upload one allocation's per-matrix bit grids once; reuse across
-    /// every execution of that allocation (the serving fast path).
-    /// Grids are validated against the manifest block shapes here, so
-    /// the per-call path can skip shape checks entirely.
-    pub fn upload_grids(&self, grids: &[Vec<i32>]) -> Result<GridBuffers> {
-        if grids.len() != self.manifest.quantized.len() {
-            bail!("got {} bit grids, want {}", grids.len(), self.manifest.quantized.len());
-        }
-        let mut bufs = Vec::with_capacity(grids.len());
-        for (gi, grid) in grids.iter().enumerate() {
-            let (gr, gc) = self.manifest.bits_shape(&self.manifest.quantized[gi])?;
-            if grid.len() != gr * gc {
-                bail!("grid {gi}: len {} != {gr}x{gc}", grid.len());
-            }
-            bufs.push(self.upload_i32(grid, &[gr, gc])?);
-        }
-        Ok(GridBuffers { bufs })
-    }
-
-    // ---- execution -------------------------------------------------
-
-    /// Run one of the model executables: (tokens, *bits, *params), with
-    /// device-resident bit grids. The ONLY host→device transfer on this
-    /// path is the row-major [batch, seq_len] token batch.
-    pub fn run_model(
-        &self,
-        name: &str,
-        tokens: &[i32],
-        grids: &GridBuffers,
-        weights: &WeightBuffers,
-    ) -> Result<Vec<Literal>> {
-        let le = self.exec_ref(name)?;
-        let batch = le.batch;
-        let seq = self.manifest.config.seq_len;
-        if tokens.len() != batch * seq {
-            bail!("{name}: tokens len {} != {batch}x{seq}", tokens.len());
-        }
-        if grids.bufs.len() != self.manifest.quantized.len() {
-            bail!("{name}: got {} grid buffers, want {}", grids.bufs.len(), self.manifest.quantized.len());
-        }
-        let tok_buf = self.upload_i32(tokens, &[batch, seq])?;
-        let mut refs: Vec<&PjRtBuffer> =
-            Vec::with_capacity(1 + grids.bufs.len() + weights.bufs.len());
-        refs.push(&tok_buf);
-        refs.extend(grids.bufs.iter());
-        refs.extend(weights.bufs.iter());
-
-        let t0 = Instant::now();
-        let out = le
-            .exe
-            .execute_b(&refs)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
-        let dt = t0.elapsed().as_secs_f64();
-        {
-            let mut stats = self.stats.borrow_mut();
-            let s = stats.entry(name.to_string()).or_default();
-            s.calls += 1;
-            s.total_secs += dt;
-        }
-        if parts.len() != le.n_outputs {
-            bail!("{name}: {} outputs, manifest says {}", parts.len(), le.n_outputs);
-        }
-        Ok(parts)
-    }
-
-    /// Grid-upload execution path: uploads `grids` (one i32 grid per
-    /// quantized matrix, manifest order) and runs. This is the search
-    /// loop's path — the allocation mutates every iteration, so there
-    /// is nothing to cache. Fixed-allocation callers (serving, eval)
-    /// should `upload_grids` once and use [`Engine::run_model`].
-    pub fn run_model_host_grids(
-        &self,
-        name: &str,
-        tokens: &[i32],
-        grids: &[Vec<i32>],
-        weights: &WeightBuffers,
-    ) -> Result<Vec<Literal>> {
-        let gbufs = self.upload_grids(grids)?;
-        self.run_model(name, tokens, &gbufs, weights)
-    }
-
-    /// Raw execution for kernel-bench executables (caller owns layout).
-    pub fn run_raw(&self, exe: &PjRtLoadedExecutable, args: &[PjRtBuffer]) -> Result<Vec<Literal>> {
-        let refs: Vec<&PjRtBuffer> = args.iter().collect();
-        let out = exe.execute_b(&refs).map_err(|e| anyhow!("execute raw: {e:?}"))?;
-        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("fetch raw: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("untuple raw: {e:?}"))
-    }
-
-    pub fn stats(&self) -> HashMap<String, ExecStats> {
-        self.stats.borrow().clone()
-    }
-
-    pub fn reset_stats(&self) {
-        self.stats.borrow_mut().clear();
-    }
-}
-
-/// Device-resident full-precision weights (uploaded once).
-pub struct WeightBuffers {
-    pub bufs: Vec<PjRtBuffer>,
-}
-
-/// Device-resident per-allocation bit grids (uploaded once per
-/// allocation; one buffer per quantized matrix, manifest order).
-pub struct GridBuffers {
-    pub bufs: Vec<PjRtBuffer>,
-}
-
-// ---------------------------------------------------------------------
-// literal conversion helpers
-
-pub fn literal_scalar_f32(lit: &Literal) -> Result<f32> {
-    lit.get_first_element::<f32>()
-        .map_err(|e| anyhow!("literal scalar: {e:?}"))
-}
-
-pub fn literal_to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("literal vec: {e:?}"))
-}
-
-pub fn literal_to_mat(lit: &Literal, rows: usize, cols: usize) -> Result<Mat> {
-    let v = literal_to_vec_f32(lit)?;
-    Mat::from_vec(rows, cols, v)
-}
-
-#[cfg(test)]
-mod tests {
-    // Engine integration tests live in rust/tests/ (they need the
-    // artifacts directory); here we only test pure helpers.
-    use super::*;
-
-    #[test]
-    fn exec_stats_default() {
-        let s = ExecStats::default();
-        assert_eq!(s.calls, 0);
-        assert_eq!(s.total_secs, 0.0);
-    }
-
-    #[test]
-    fn transfer_stats_default() {
-        let t = TransferStats::default();
-        assert_eq!(t.uploads, 0);
-        assert_eq!(t.bytes, 0);
-    }
-}

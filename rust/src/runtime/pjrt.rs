@@ -1,0 +1,311 @@
+//! PJRT-CPU backend: compiles the AOT-lowered HLO artifacts and runs
+//! them on an XLA client. Pattern follows /opt/xla-example/load_hlo:
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile`.
+//!
+//! [`Engine`] owns the PJRT client, the compiled executables, and the
+//! raw buffer-upload helpers; the [`crate::runtime::ExecBackend`] impl
+//! at the bottom adapts it to the backend-agnostic interface the rest
+//! of the stack uses. Every host→device upload is counted in
+//! [`TransferStats`] so tests can assert the serve path moves nothing
+//! but tokens per batch.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::backend::{
+    BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut, ExecStats, Ledger,
+    TransferStats,
+};
+use crate::model::{Manifest, WeightStore};
+use crate::tensor::Mat;
+
+/// One compiled executable + its manifest signature.
+pub struct LoadedExec {
+    pub name: String,
+    pub exe: PjRtLoadedExecutable,
+    pub batch: usize,
+    pub n_outputs: usize,
+}
+
+/// The PJRT engine: client + compiled executables + counters.
+pub struct Engine {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    execs: HashMap<String, LoadedExec>,
+    ledger: Ledger,
+}
+
+impl Engine {
+    /// Create a CPU engine and compile the named executables.
+    pub fn load(manifest: Manifest, exec_names: &[&str]) -> Result<Engine> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut engine = Engine {
+            client,
+            manifest,
+            execs: HashMap::new(),
+            ledger: Ledger::default(),
+        };
+        for name in exec_names {
+            engine.compile_exec(name)?;
+        }
+        Ok(engine)
+    }
+
+    /// Compile (or re-compile) one executable from its HLO text file.
+    pub fn compile_exec(&mut self, name: &str) -> Result<()> {
+        let info = self.manifest.exec(name)?.clone();
+        let path = self.manifest.dir.join(&info.file);
+        let exe = self.compile_hlo_file(&path)?;
+        self.execs.insert(
+            name.to_string(),
+            LoadedExec { name: name.to_string(), exe, batch: info.batch, n_outputs: info.outputs.len() },
+        );
+        Ok(())
+    }
+
+    /// Compile an arbitrary HLO text file (kernel benches use this).
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+    }
+
+    pub fn has_exec(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    pub fn batch_of(&self, name: &str) -> Result<usize> {
+        Ok(self.exec_ref(name)?.batch)
+    }
+
+    fn exec_ref(&self, name: &str) -> Result<&LoadedExec> {
+        self.execs
+            .get(name)
+            .ok_or_else(|| anyhow!("executable {name:?} not loaded"))
+    }
+
+    // ---- buffer helpers ------------------------------------------------
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.ledger.note_transfer(std::mem::size_of_val(data));
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.ledger.note_transfer(std::mem::size_of_val(data));
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+
+    pub fn upload_i8(&self, data: &[i8], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.ledger.note_transfer(std::mem::size_of_val(data));
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i8 {dims:?}: {e:?}"))
+    }
+
+    /// Upload all model weights once; reuse across every execution.
+    pub fn upload_weight_buffers(&self, store: &WeightStore) -> Result<WeightBuffers> {
+        let mut bufs = Vec::with_capacity(store.order.len());
+        for p in &self.manifest.params {
+            let mat = store.get(&p.name)?;
+            let dims: Vec<usize> = p.shape.clone();
+            bufs.push(self.upload_f32(&mat.data, &dims)?);
+        }
+        Ok(WeightBuffers { bufs })
+    }
+
+    /// Upload one allocation's per-matrix bit grids once; reuse across
+    /// every execution of that allocation (the serving fast path).
+    /// Grids are validated against the manifest block shapes here, so
+    /// the per-call path can skip shape checks entirely.
+    pub fn upload_grid_buffers(&self, grids: &[Vec<i32>]) -> Result<GridBuffers> {
+        super::backend::validate_grids(&self.manifest, grids)?;
+        let mut bufs = Vec::with_capacity(grids.len());
+        for (gi, grid) in grids.iter().enumerate() {
+            let (gr, gc) = self.manifest.bits_shape(&self.manifest.quantized[gi])?;
+            bufs.push(self.upload_i32(grid, &[gr, gc])?);
+        }
+        Ok(GridBuffers { bufs })
+    }
+
+    // ---- execution -------------------------------------------------
+
+    /// Run one of the model executables: (tokens, *bits, *params), with
+    /// device-resident bit grids. The ONLY host→device transfer on this
+    /// path is the row-major [batch, seq_len] token batch.
+    pub fn run_model_buffers(
+        &self,
+        name: &str,
+        tokens: &[i32],
+        grids: &GridBuffers,
+        weights: &WeightBuffers,
+    ) -> Result<Vec<Literal>> {
+        let le = self.exec_ref(name)?;
+        let batch = le.batch;
+        let seq = self.manifest.config.seq_len;
+        if tokens.len() != batch * seq {
+            bail!("{name}: tokens len {} != {batch}x{seq}", tokens.len());
+        }
+        if grids.bufs.len() != self.manifest.quantized.len() {
+            bail!("{name}: got {} grid buffers, want {}", grids.bufs.len(), self.manifest.quantized.len());
+        }
+        let tok_buf = self.upload_i32(tokens, &[batch, seq])?;
+        let mut refs: Vec<&PjRtBuffer> =
+            Vec::with_capacity(1 + grids.bufs.len() + weights.bufs.len());
+        refs.push(&tok_buf);
+        refs.extend(grids.bufs.iter());
+        refs.extend(weights.bufs.iter());
+
+        let t0 = Instant::now();
+        let out = le
+            .exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        self.ledger.note_exec(name, t0.elapsed().as_secs_f64());
+        if parts.len() != le.n_outputs {
+            bail!("{name}: {} outputs, manifest says {}", parts.len(), le.n_outputs);
+        }
+        Ok(parts)
+    }
+
+    /// Raw execution for kernel-bench executables (caller owns layout).
+    /// Counted in [`ExecStats`] under `name` like every other execution
+    /// path, so kernel-bench cost accounting is not under-reported.
+    pub fn run_raw(
+        &self,
+        name: &str,
+        exe: &PjRtLoadedExecutable,
+        args: &[PjRtBuffer],
+    ) -> Result<Vec<Literal>> {
+        let refs: Vec<&PjRtBuffer> = args.iter().collect();
+        let t0 = Instant::now();
+        let out = exe.execute_b(&refs).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        self.ledger.note_exec(name, t0.elapsed().as_secs_f64());
+        Ok(parts)
+    }
+
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.ledger.stats()
+    }
+
+    pub fn reset_stats(&self) {
+        self.ledger.reset_stats()
+    }
+
+    /// Host→device transfer counters since the last reset.
+    pub fn transfer_stats(&self) -> TransferStats {
+        self.ledger.transfer_stats()
+    }
+
+    pub fn reset_transfer_stats(&self) {
+        self.ledger.reset_transfer_stats()
+    }
+}
+
+impl ExecBackend for Engine {
+    fn kind(&self) -> BackendKind {
+        BackendKind::PjrtCpu
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn has_exec(&self, name: &str) -> bool {
+        Engine::has_exec(self, name)
+    }
+
+    fn batch_of(&self, name: &str) -> Result<usize> {
+        Engine::batch_of(self, name)
+    }
+
+    fn upload_weights(&self, store: &WeightStore) -> Result<DeviceWeights> {
+        Ok(DeviceWeights::new(self.upload_weight_buffers(store)?))
+    }
+
+    fn upload_grids(&self, grids: &[Vec<i32>]) -> Result<DeviceGrids> {
+        Ok(DeviceGrids::new(self.upload_grid_buffers(grids)?))
+    }
+
+    fn run_model(
+        &self,
+        name: &str,
+        tokens: &[i32],
+        grids: &DeviceGrids,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<ExecOut>> {
+        let g = grids.downcast::<GridBuffers>()?;
+        let w = weights.downcast::<WeightBuffers>()?;
+        let parts = self.run_model_buffers(name, tokens, g, w)?;
+        Ok(parts.into_iter().map(ExecOut::Literal).collect())
+    }
+
+    fn stats(&self) -> HashMap<String, ExecStats> {
+        Engine::stats(self)
+    }
+
+    fn reset_stats(&self) {
+        Engine::reset_stats(self)
+    }
+
+    fn transfer_stats(&self) -> TransferStats {
+        Engine::transfer_stats(self)
+    }
+
+    fn reset_transfer_stats(&self) {
+        Engine::reset_transfer_stats(self)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// Device-resident full-precision weights (uploaded once).
+pub struct WeightBuffers {
+    pub bufs: Vec<PjRtBuffer>,
+}
+
+/// Device-resident per-allocation bit grids (uploaded once per
+/// allocation; one buffer per quantized matrix, manifest order).
+pub struct GridBuffers {
+    pub bufs: Vec<PjRtBuffer>,
+}
+
+// ---------------------------------------------------------------------
+// literal conversion helpers (PJRT-specific paths: run_raw outputs)
+
+pub fn literal_scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("literal scalar: {e:?}"))
+}
+
+pub fn literal_to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal vec: {e:?}"))
+}
+
+pub fn literal_to_mat(lit: &Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v = literal_to_vec_f32(lit)?;
+    Mat::from_vec(rows, cols, v)
+}

@@ -1,78 +1,103 @@
-//! Session: device-resident execution state over an [`Engine`].
+//! Session: device-resident execution state over an [`ExecBackend`].
 //!
-//! A session owns the engine plus everything that is uploaded ONCE and
+//! A session owns the backend plus everything that is uploaded ONCE and
 //! then reused across calls — the full-precision weight buffers and the
 //! per-allocation bit-grid buffers. After construction, `Session::run`
 //! uploads only the token batch: the per-call host→device traffic of
-//! the serving path shrinks to `batch * seq_len * 4` bytes.
+//! the serving path shrinks to `batch * seq_len * 4` bytes. The
+//! interpreter backend keeps the identical ledger, so the invariant is
+//! testable without artifacts.
 //!
 //! This is the unit a serving worker owns end-to-end. PJRT handles are
-//! `!Send`, so a `Session` never crosses threads: each worker thread
-//! constructs its own (see `crate::serve::router`).
+//! `!Send` (and the boxed backend inherits that), so a `Session` never
+//! crosses threads: each worker thread constructs its own (see
+//! `crate::serve::router`).
 //!
 //! The search loop does NOT use a session for its grids — it mutates
 //! the allocation every iteration and goes through
-//! [`Engine::run_model_host_grids`] instead.
+//! [`ExecBackend::run_model_host_grids`] instead.
 
 use std::path::Path;
 
 use anyhow::Result;
-use xla::Literal;
 
-use super::{Engine, GridBuffers, WeightBuffers};
+use super::backend::{open_backend, BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut};
+use super::pjrt::Engine;
 use crate::model::{Manifest, WeightStore};
 
-/// Engine + device-resident weights + device-resident bit grids.
+/// Backend + device-resident weights + device-resident bit grids.
 pub struct Session {
-    engine: Engine,
-    weights: WeightBuffers,
-    grids: GridBuffers,
+    backend: Box<dyn ExecBackend>,
+    weights: DeviceWeights,
+    grids: DeviceGrids,
 }
 
 impl Session {
-    /// Wrap an engine: upload `store` and `grids` once.
+    /// Wrap a PJRT engine: upload `store` and `grids` once.
+    /// (Compatibility constructor; [`Session::with_backend`] is the
+    /// backend-agnostic form.)
     pub fn new(engine: Engine, store: &WeightStore, grids: &[Vec<i32>]) -> Result<Session> {
-        let weights = engine.upload_weights(store)?;
-        let grids = engine.upload_grids(grids)?;
-        Ok(Session { engine, weights, grids })
+        Session::with_backend(Box::new(engine), store, grids)
+    }
+
+    /// Wrap any backend: upload `store` and `grids` once.
+    pub fn with_backend(
+        backend: Box<dyn ExecBackend>,
+        store: &WeightStore,
+        grids: &[Vec<i32>],
+    ) -> Result<Session> {
+        let weights = backend.upload_weights(store)?;
+        let grids = backend.upload_grids(grids)?;
+        Ok(Session { backend, weights, grids })
     }
 
     /// One-stop open: load the manifest + weights from `artifacts`,
-    /// compile `exec_names`, and pin `grids` on device.
+    /// prepare `exec_names` on the backend `Auto` resolves to, and pin
+    /// `grids` on device.
     pub fn open(artifacts: &Path, exec_names: &[&str], grids: &[Vec<i32>]) -> Result<Session> {
-        let manifest = Manifest::load(artifacts)?;
-        let engine = Engine::load(manifest, exec_names)?;
-        let store = WeightStore::load(&engine.manifest)?;
-        Session::new(engine, &store, grids)
+        Session::open_with(BackendKind::Auto, artifacts, exec_names, grids)
     }
 
-    pub fn engine(&self) -> &Engine {
-        &self.engine
+    /// [`Session::open`] with an explicit backend choice.
+    pub fn open_with(
+        kind: BackendKind,
+        artifacts: &Path,
+        exec_names: &[&str],
+        grids: &[Vec<i32>],
+    ) -> Result<Session> {
+        let manifest = Manifest::load(artifacts)?;
+        let backend = open_backend(kind, manifest, exec_names)?;
+        let store = WeightStore::load(backend.manifest())?;
+        Session::with_backend(backend, &store, grids)
+    }
+
+    pub fn backend(&self) -> &dyn ExecBackend {
+        self.backend.as_ref()
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.engine.manifest
+        self.backend.manifest()
     }
 
-    pub fn weights(&self) -> &WeightBuffers {
+    pub fn weights(&self) -> &DeviceWeights {
         &self.weights
     }
 
     /// Swap the served allocation: one grid re-upload, weights untouched.
     pub fn set_grids(&mut self, grids: &[Vec<i32>]) -> Result<()> {
-        self.grids = self.engine.upload_grids(grids)?;
+        self.grids = self.backend.upload_grids(grids)?;
         Ok(())
     }
 
     /// Swap the weight set (e.g. after reordering): one weight
     /// re-upload, grids untouched.
     pub fn set_weights(&mut self, store: &WeightStore) -> Result<()> {
-        self.weights = self.engine.upload_weights(store)?;
+        self.weights = self.backend.upload_weights(store)?;
         Ok(())
     }
 
     /// Execute with the resident state. Per-call upload: tokens only.
-    pub fn run(&self, name: &str, tokens: &[i32]) -> Result<Vec<Literal>> {
-        self.engine.run_model(name, tokens, &self.grids, &self.weights)
+    pub fn run(&self, name: &str, tokens: &[i32]) -> Result<Vec<ExecOut>> {
+        self.backend.run_model(name, tokens, &self.grids, &self.weights)
     }
 }

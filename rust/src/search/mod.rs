@@ -21,7 +21,7 @@ use anyhow::Result;
 use crate::calib::BatchSampler;
 use crate::model::WeightStore;
 use crate::quant::{BitAlloc, BlockIndex};
-use crate::runtime::{literal_scalar_f32, literal_to_mat, Engine, WeightBuffers};
+use crate::runtime::{DeviceWeights, ExecBackend};
 use crate::sensitivity::{block_stats, BlockStats};
 use crate::tensor::Mat;
 use crate::util::timer::Stopwatch;
@@ -94,13 +94,15 @@ impl SearchResult {
     }
 }
 
-/// Runtime context shared by the searchers: engine + device-resident
-/// weights + host weight copies for the CPU-side reductions.
+/// Runtime context shared by the searchers: execution backend +
+/// device-resident weights + host weight copies for the CPU-side
+/// reductions. Backend-agnostic: PJRT and the interpreter run the
+/// identical search.
 pub struct SearchContext<'a> {
-    pub engine: &'a Engine,
+    pub backend: &'a dyn ExecBackend,
     pub index: &'a BlockIndex,
     pub store: &'a WeightStore,
-    pub wbufs: &'a WeightBuffers,
+    pub wbufs: &'a DeviceWeights,
 }
 
 impl<'a> SearchContext<'a> {
@@ -110,19 +112,19 @@ impl<'a> SearchContext<'a> {
     // (serving, eval) pin grids on device instead.
     pub fn qloss(&self, tokens: &[i32], alloc: &BitAlloc) -> Result<f64> {
         let grids = alloc.grids(self.index);
-        let out = self.engine.run_model_host_grids("qloss", tokens, &grids, self.wbufs)?;
-        Ok(literal_scalar_f32(&out[0])? as f64)
+        let out = self.backend.run_model_host_grids("qloss", tokens, &grids, self.wbufs)?;
+        Ok(out[0].scalar_f32()? as f64)
     }
 
     /// One `qgrad` call: loss + per-matrix gradients at w^Q.
     pub fn qgrad(&self, tokens: &[i32], alloc: &BitAlloc) -> Result<(f64, Vec<Mat>)> {
         let grids = alloc.grids(self.index);
-        let out = self.engine.run_model_host_grids("qgrad", tokens, &grids, self.wbufs)?;
-        let loss = literal_scalar_f32(&out[0])? as f64;
+        let out = self.backend.run_model_host_grids("qgrad", tokens, &grids, self.wbufs)?;
+        let loss = out[0].scalar_f32()? as f64;
         let mut grads = Vec::with_capacity(self.index.mats.len());
         for (mi, name) in self.index.mats.iter().enumerate() {
-            let p = self.engine.manifest.param(name)?;
-            grads.push(literal_to_mat(&out[1 + mi], p.rows(), p.cols())?);
+            let p = self.backend.manifest().param(name)?;
+            grads.push(out[1 + mi].to_mat(p.rows(), p.cols())?);
         }
         Ok((loss, grads))
     }
@@ -177,7 +179,7 @@ pub fn scalable_greedy(
 ) -> Result<SearchResult> {
     let n = ctx.index.n_blocks;
     let sw = Stopwatch::start();
-    ctx.engine.reset_stats();
+    ctx.backend.reset_stats();
 
     // Warm start: b = ⌊B⌋ uniform (paper: avoids the collapsed-model
     // regime where gradients are uninformative).
@@ -191,6 +193,14 @@ pub fn scalable_greedy(
     let mut t = 0;
 
     while k >= k_min && t < cfg.max_iters {
+        // Under a whole block of headroom left while still below the
+        // budget (fractional budgets): expansion can never add a bit
+        // and the exchange stage is unreachable, so every further
+        // iteration would burn a qgrad+qloss as a pure no-op. Stop.
+        let avg_now = alloc.avg_bits();
+        if avg_now < cfg.budget && ((cfg.budget - avg_now) * n as f64).floor() < 1.0 {
+            break;
+        }
         let tokens = sampler.sample(batch);
 
         // Sensitivity at the current quantized point (Eq. 3) — or the
@@ -212,9 +222,11 @@ pub fn scalable_greedy(
         let mut next = alloc.clone();
         let avg = alloc.avg_bits();
         if avg < cfg.budget {
-            // Pure expansion, capped so we don't overshoot the budget.
+            // Pure expansion, capped so we don't overshoot the budget
+            // (headroom >= 1 here; the loop breaks before a 0-headroom
+            // iteration ever starts).
             let headroom = ((cfg.budget - avg) * n as f64).floor() as usize;
-            let k_eff = k.min(headroom.max(1));
+            let k_eff = k.min(headroom);
             for i in top_up_candidates(&stats, &alloc, cfg.bits_max, k_eff) {
                 next.bits[i] += 1;
             }
@@ -269,7 +281,15 @@ pub fn scalable_greedy(
         t += 1;
     }
 
-    let exec_calls = ctx.engine.stats().values().map(|s| s.calls).sum();
+    // When the loop never ran (k_min > k at entry, max_iters == 0, or
+    // an immediate fractional-budget break) `final_loss` would stay
+    // NaN; seed it with the warm-start loss instead. The common path
+    // pays nothing extra.
+    if iters.is_empty() {
+        let tokens = sampler.sample(batch);
+        final_loss = ctx.qloss(&tokens, &alloc)?;
+    }
+    let exec_calls = ctx.backend.stats().values().map(|s| s.calls).sum();
     Ok(SearchResult { alloc, iters, wall_secs: sw.secs(), exec_calls, final_loss })
 }
 
@@ -289,7 +309,7 @@ pub fn classic_greedy(
     verbose: bool,
 ) -> Result<SearchResult> {
     let sw = Stopwatch::start();
-    ctx.engine.reset_stats();
+    ctx.backend.reset_stats();
     let n_mats = ctx.index.mats.len();
     // Component-uniform allocation, starting from the minimum.
     let mut comp_bits = vec![bits_min; n_mats];
@@ -347,7 +367,7 @@ pub fn classic_greedy(
         }
         t += 1;
     }
-    let exec_calls = ctx.engine.stats().values().map(|s| s.calls).sum();
+    let exec_calls = ctx.backend.stats().values().map(|s| s.calls).sum();
     let final_loss = cur_loss;
     Ok(SearchResult { alloc: alloc_of(&comp_bits), iters, wall_secs: sw.secs(), exec_calls, final_loss })
 }

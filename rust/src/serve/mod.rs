@@ -17,10 +17,13 @@
 //! * [`metrics`] — latency histograms (p50/p95/p99), occupancy, queue
 //!   depth; replaces the flat `ServeStats`.
 //! * [`router`] — round-robin dispatch over N worker threads. Each
-//!   worker owns a complete PJRT [`crate::runtime::Session`] (engine +
-//!   device-resident weights + device-resident bit grids) because PJRT
-//!   handles are `!Send`; the per-dispatch host→device transfer is the
-//!   token batch alone.
+//!   worker owns a complete [`crate::runtime::Session`] (its own
+//!   execution backend + device-resident weights + device-resident bit
+//!   grids) because PJRT handles are `!Send`; the per-dispatch
+//!   host→device transfer is the token batch alone. Workers select
+//!   their backend via `ServeConfig::backend` (`--backend
+//!   {auto,pjrt-cpu,interp}`), so the same router serves compiled HLO
+//!   or the artifact-less interpreter.
 //!
 //! Threading model in one picture:
 //!
@@ -40,7 +43,7 @@ pub mod router;
 
 pub use batcher::{assemble_padded, BatchPolicy, Batcher};
 pub use metrics::{Histogram, ServeMetrics};
-pub use router::{start_server, Router, ServeConfig, ServeReport, ServerHandle};
+pub use router::{Router, ServeConfig, ServeReport};
 
 use std::sync::mpsc;
 use std::time::Duration;

@@ -4,10 +4,11 @@
 //! ---------------
 //! PJRT handles are `!Send`, so device state can never be shared or
 //! migrated: each worker THREAD owns a complete, independent
-//! [`Session`] (its own PJRT client, compiled executable, weight
-//! buffers and device-resident bit grids), built on the worker thread
-//! at spawn. The router owns only `Send` things: one bounded admission
-//! queue per worker plus the join handles.
+//! [`Session`] (its own backend — PJRT client + compiled executable,
+//! or the pure-Rust interpreter — plus weight buffers and
+//! device-resident bit grids), built on the worker thread at spawn.
+//! The router owns only `Send` things: one bounded admission queue per
+//! worker plus the join handles.
 //!
 //! Request path: `Router::submit` picks the next worker round-robin
 //! and `try_push`es into its queue; if that queue is full it spills to
@@ -33,7 +34,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::model::{Manifest, WeightStore};
 use crate::quant::{BitAlloc, BlockIndex};
-use crate::runtime::{literal_to_vec_f32, Engine, Session};
+use crate::runtime::{open_backend, BackendKind, Session};
 
 use super::admission::{Bounded, PushError};
 use super::batcher::{assemble_padded, BatchPolicy, Batcher};
@@ -53,10 +54,13 @@ pub struct ServeConfig {
     /// How long the batcher waits to fill a batch before dispatching a
     /// partial one.
     pub batch_window: Duration,
-    /// Worker threads, each with its own engine (PJRT is `!Send`).
+    /// Worker threads, each with its own backend (PJRT is `!Send`).
     pub workers: usize,
     /// Admission queue capacity per worker (backpressure bound).
     pub queue_cap: usize,
+    /// Engine each worker builds: PJRT, interpreter, or per-artifact
+    /// auto-detection (`--backend` on the CLI).
+    pub backend: BackendKind,
 }
 
 impl ServeConfig {
@@ -67,6 +71,7 @@ impl ServeConfig {
             batch_window: DEFAULT_BATCH_WINDOW,
             workers: 1,
             queue_cap: DEFAULT_QUEUE_CAP,
+            backend: BackendKind::Auto,
         }
     }
 }
@@ -89,10 +94,12 @@ pub struct Router {
     rr: usize,
     next_id: u64,
     blocked_submits: u64,
+    /// Vocabulary bound for admission-time token validation: a single
+    /// malformed request must be rejected at submit, never allowed to
+    /// take down a worker (the interpreter backend validates tokens in
+    /// run_model and a failing batch would kill the whole worker loop).
+    vocab: usize,
 }
-
-/// Historical name for [`Router`], kept for the single-worker API.
-pub type ServerHandle = Router;
 
 impl Router {
     /// Spawn the workers and return once all threads are launched.
@@ -110,6 +117,10 @@ impl Router {
             bail!("allocation has {} blocks, model has {}", cfg.alloc.bits.len(), index.n_blocks);
         }
         let grids = cfg.alloc.grids(&index);
+        // Resolve Auto once, router-side, so every worker builds the
+        // same backend even if the artifact dir changes under us.
+        let backend = cfg.backend.resolve(&manifest);
+        let vocab = manifest.config.vocab;
         drop(manifest);
 
         let mut queues = Vec::with_capacity(cfg.workers);
@@ -128,13 +139,13 @@ impl Router {
                     // any still-pending requests, so waiting clients
                     // see a channel error instead of hanging forever.
                     let _guard = CloseOnExit(worker_queue.clone());
-                    worker_loop(w, artifacts, worker_grids, worker_queue, window)
+                    worker_loop(w, artifacts, backend, worker_grids, worker_queue, window)
                 })
                 .map_err(|e| anyhow!("spawn worker {w}: {e}"))?;
             queues.push(queue);
             joins.push(join);
         }
-        Ok(Router { queues, joins, rr: 0, next_id: 0, blocked_submits: 0 })
+        Ok(Router { queues, joins, rr: 0, next_id: 0, blocked_submits: 0, vocab })
     }
 
     pub fn workers(&self) -> usize {
@@ -169,6 +180,15 @@ impl Router {
         tokens: Vec<i32>,
         record: bool,
     ) -> Result<mpsc::Receiver<Response>> {
+        // Reject malformed requests at admission: one bad client must
+        // cost one error, not a worker (and with it everyone else's
+        // pending requests on that queue).
+        if tokens.is_empty() {
+            bail!("empty token window");
+        }
+        if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
+            bail!("token {t} outside vocab {}", self.vocab);
+        }
         let (tx, rx) = mpsc::channel();
         let id = self.next_id;
         self.next_id += 1;
@@ -245,11 +265,12 @@ impl Drop for CloseOnExit {
     }
 }
 
-/// One worker: builds its own engine + session on this thread (PJRT
+/// One worker: builds its own backend + session on this thread (PJRT
 /// handles are `!Send`), then serves batches until shutdown.
 fn worker_loop(
     worker: usize,
     artifacts: PathBuf,
+    kind: BackendKind,
     grids: Vec<Vec<i32>>,
     queue: Arc<Bounded<Queued>>,
     window: Duration,
@@ -259,15 +280,15 @@ fn worker_loop(
     // artifact set includes it; fall back to full logits.
     let exec_name =
         if manifest.executables.contains_key("qpredict") { "qpredict" } else { "qlogits" };
-    let engine = Engine::load(manifest, &[exec_name])?;
-    let store = WeightStore::load(&engine.manifest)?;
-    let batch = engine.batch_of(exec_name)?;
-    let seq = engine.manifest.config.seq_len;
-    let vocab = engine.manifest.config.vocab;
+    let backend = open_backend(kind, manifest, &[exec_name])?;
+    let store = WeightStore::load(backend.manifest())?;
+    let batch = backend.batch_of(exec_name)?;
+    let seq = backend.manifest().config.seq_len;
+    let vocab = backend.manifest().config.vocab;
     let use_pred = exec_name == "qpredict";
     // Weights AND bit grids go device-resident here, once. From now on
     // each dispatch uploads exactly one buffer: the token batch.
-    let session = Session::new(engine, &store, &grids)?;
+    let session = Session::with_backend(backend, &store, &grids)?;
     drop(store);
 
     let batcher = Batcher::new(queue.clone(), BatchPolicy { max_batch: batch, window });
@@ -286,12 +307,8 @@ fn worker_loop(
 
         // Fast path ships [B, T] int32 predictions; fallback argmaxes
         // the full logits host-side.
-        let preds: Vec<i32> = if use_pred {
-            out[0].to_vec::<i32>().map_err(|e| anyhow!("pred fetch: {e:?}"))?
-        } else {
-            Vec::new()
-        };
-        let logits: Vec<f32> = if use_pred { Vec::new() } else { literal_to_vec_f32(&out[0])? };
+        let preds: Vec<i32> = if use_pred { out[0].to_vec_i32()? } else { Vec::new() };
+        let logits: Vec<f32> = if use_pred { Vec::new() } else { out[0].to_vec_f32()? };
 
         for (b, (req, t_in)) in items.into_iter().enumerate() {
             let pos = req.tokens.len().clamp(1, seq) - 1;
@@ -333,15 +350,4 @@ fn worker_loop(
         }
     }
     Ok(metrics)
-}
-
-/// Single-worker compatibility constructor (the seed API).
-pub fn start_server(
-    artifacts: PathBuf,
-    alloc: BitAlloc,
-    batch_window: Duration,
-) -> Result<Router> {
-    let mut cfg = ServeConfig::new(artifacts, alloc);
-    cfg.batch_window = batch_window;
-    Router::start(cfg)
 }

@@ -1,28 +1,85 @@
-//! Integration tests over the AOT artifacts + PJRT runtime.
+//! Cross-layer integration net: search invariants, gradient
+//! consistency, reordering equivalence, serving round-trip, transfer
+//! accounting, packfile roundtrip.
 //!
-//! These need `artifacts/` (run `make artifacts` first); they are the
-//! cross-layer correctness net: rust RTN vs Pallas kernel goldens,
-//! executable signatures, gradient consistency, reordering equivalence,
-//! search invariants, serving round-trip.
+//! Backend selection: when `artifacts/` holds real AOT-lowered HLO
+//! (run `make artifacts`), the net runs on the PJRT engine — plus a
+//! handful of PJRT-only tests (Pallas golden cross-validation, kernel
+//! executables). When artifacts are absent — or `SCALEBITS_BACKEND=
+//! interp` forces it — the same net runs on the pure-Rust interpreter
+//! over a deterministic synthetic artifact set written to a temp dir,
+//! so `cargo test` exercises every layer in an artifact-less container
+//! instead of asserting about missing files.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+use std::sync::OnceLock;
 
-use scalebits::calib::BatchSampler;
+use scalebits::calib::{BatchSampler, TokenStream};
 use scalebits::coordinator::Pipeline;
+use scalebits::model::synth::{self, SynthSpec};
 use scalebits::model::{Manifest, WeightStore};
 use scalebits::quant::{fakequant_mat, quant_group_codes, BitAlloc, BlockIndex};
-use scalebits::runtime::{literal_scalar_f32, literal_to_vec_f32, Engine};
+use scalebits::runtime::{BackendKind, Engine, ExecBackend, InterpBackend, Session};
 use scalebits::search::SearchConfig;
 use scalebits::tensor::Mat;
 use scalebits::util::json::Json;
 
-fn artifacts() -> PathBuf {
-    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    assert!(
-        p.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    p
+fn real_artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn force_interp() -> bool {
+    std::env::var("SCALEBITS_BACKEND").map(|v| v == "interp").unwrap_or(false)
+}
+
+/// Real PJRT artifacts present and not overridden?
+fn pjrt_available() -> bool {
+    !force_interp()
+        && real_artifacts().join("manifest.json").exists()
+        && real_artifacts().join("qloss.hlo.txt").exists()
+}
+
+/// Synthetic artifact dir: one stable, version-tagged location in the
+/// system temp dir, installed atomically (write to a PID-suffixed
+/// scratch dir, rename into place) so concurrent test runs can share
+/// it and repeated runs don't accumulate litter. Bump the tag when the
+/// synth format changes.
+fn synth_dir() -> &'static PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let base = std::env::temp_dir().join("scalebits-it-synth-v1");
+        if base.join("manifest.json").exists() {
+            return base;
+        }
+        let tmp = std::env::temp_dir()
+            .join(format!("scalebits-it-synth-v1.{}", std::process::id()));
+        synth::write_artifacts(&tmp, &SynthSpec::default()).expect("write synth artifacts");
+        if std::fs::rename(&tmp, &base).is_err() {
+            // Lost the race to a concurrent run that installed the same
+            // deterministic content; drop our scratch copy.
+            let _ = std::fs::remove_dir_all(&tmp);
+            assert!(base.join("manifest.json").exists(), "synth artifacts install failed");
+        }
+        base
+    })
+}
+
+/// Backend + artifact dir the cross-layer net runs on.
+fn setup() -> (BackendKind, PathBuf) {
+    if pjrt_available() {
+        (BackendKind::PjrtCpu, real_artifacts())
+    } else {
+        (BackendKind::Interp, synth_dir().clone())
+    }
+}
+
+macro_rules! require_pjrt {
+    () => {
+        if !pjrt_available() {
+            eprintln!("skipping: needs real PJRT artifacts (run `make artifacts`)");
+            return;
+        }
+    };
 }
 
 // ---------------------------------------------------------------------
@@ -30,7 +87,8 @@ fn artifacts() -> PathBuf {
 
 #[test]
 fn golden_fakequant_matches_python() {
-    let g = Json::read_file(&artifacts().join("golden.json")).unwrap();
+    require_pjrt!();
+    let g = Json::read_file(&real_artifacts().join("golden.json")).unwrap();
     let fq = g.get("fakequant").unwrap();
     let rows = fq.get("rows").unwrap().as_usize().unwrap();
     let cols = fq.get("cols").unwrap().as_usize().unwrap();
@@ -52,7 +110,8 @@ fn golden_fakequant_matches_python() {
 
 #[test]
 fn golden_codes_match_python() {
-    let g = Json::read_file(&artifacts().join("golden.json")).unwrap();
+    require_pjrt!();
+    let g = Json::read_file(&real_artifacts().join("golden.json")).unwrap();
     let c = g.get("codes4").unwrap();
     let rows = c.get("rows").unwrap().as_usize().unwrap();
     let cols = c.get("cols").unwrap().as_usize().unwrap();
@@ -80,24 +139,79 @@ fn golden_codes_match_python() {
 }
 
 // ---------------------------------------------------------------------
-// runtime + executables
+// interpreter vs the recorded float64 Python golden
 
 #[test]
-fn qloss_fp_is_finite_and_matches_training_regime() {
-    let p = Pipeline::load(&artifacts(), &["qloss"]).unwrap();
+fn interp_qloss_matches_python_golden() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("data")
+        .join("interp_golden.json");
+    let g = Json::read_file(&path).unwrap();
+    let s = g.get("spec").unwrap();
+    let u = |k: &str| s.get(k).unwrap().as_usize().unwrap();
+    let spec = SynthSpec {
+        vocab: u("vocab"),
+        d_model: u("d_model"),
+        n_layers: u("n_layers"),
+        n_heads: u("n_heads"),
+        d_ff: u("d_ff"),
+        seq_len: u("seq_len"),
+        block_rows: u("block_rows"),
+        block_cols: u("block_cols"),
+        batch: u("batch"),
+        seed: s.get("seed").unwrap().as_usize().unwrap() as u64,
+        ..SynthSpec::default()
+    };
+    let tok_xor = g.get("token_seed_xor").unwrap().as_usize().unwrap() as u64;
+    let manifest = synth::manifest(&spec, std::path::Path::new("unused"));
+    let index = BlockIndex::from_manifest(&manifest).unwrap();
+    let store = synth::weight_store(&manifest, spec.seed);
+    let tokens =
+        synth::token_stream(spec.batch * spec.seq_len, spec.vocab, spec.seed ^ tok_xor).tokens;
+    let be = InterpBackend::new(manifest, &["qloss"]).unwrap();
+    let w = be.upload_weights(&store).unwrap();
+    for case in g.get("cases").unwrap().as_arr().unwrap() {
+        let bits = case.get("bits").unwrap().as_f64().unwrap() as i32;
+        let want = case.get("loss").unwrap().as_f64().unwrap();
+        let grids = be.upload_grids(&BitAlloc::uniform(&index, bits).grids(&index)).unwrap();
+        let got = be.run_model("qloss", &tokens, &grids, &w).unwrap()[0]
+            .scalar_f32()
+            .unwrap() as f64;
+        assert!(
+            (got - want).abs() < 1e-4,
+            "bits={bits}: interp {got} vs python golden {want}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// runtime + executables (both backends)
+
+#[test]
+fn qloss_fp_is_finite_and_plausible() {
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["qloss"]).unwrap();
     let mut sampler = p.sampler(7);
-    let tokens = sampler.sample(p.engine.batch_of("qloss").unwrap());
+    let tokens = sampler.sample(p.batch_of("qloss").unwrap());
     let loss = p.ctx().qloss(&tokens, &p.fp_alloc()).unwrap();
     assert!(loss.is_finite());
-    // trained model: loss well below uniform ln(512)=6.24 and above 0
-    assert!(loss > 0.5 && loss < 5.5, "{loss}");
+    let ln_vocab = (p.manifest().config.vocab as f64).ln();
+    if kind == BackendKind::PjrtCpu {
+        // trained model: loss well below uniform ln(V) and above 0
+        assert!(loss > 0.5 && loss < 5.5, "{loss}");
+    } else {
+        // synthetic (untrained) model: near the uniform regime
+        assert!(loss > 0.5 && loss < 2.0 * ln_vocab, "{loss} vs ln V {ln_vocab}");
+    }
 }
 
 #[test]
 fn qgrad_loss_consistent_with_qloss() {
-    let p = Pipeline::load(&artifacts(), &["qloss", "qgrad"]).unwrap();
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["qloss", "qgrad"]).unwrap();
     let mut sampler = p.sampler(9);
-    let tokens = sampler.sample(8);
+    let tokens = sampler.sample(p.batch_of("qgrad").unwrap());
     let alloc = BitAlloc::uniform(&p.index, 3);
     let l1 = p.ctx().qloss(&tokens, &alloc).unwrap();
     let (l2, grads) = p.ctx().qgrad(&tokens, &alloc).unwrap();
@@ -105,33 +219,37 @@ fn qgrad_loss_consistent_with_qloss() {
     assert_eq!(grads.len(), p.index.mats.len());
     for (mi, g) in grads.iter().enumerate() {
         let name = &p.index.mats[mi];
-        let info = p.engine.manifest.param(name).unwrap();
+        let info = p.manifest().param(name).unwrap();
         assert_eq!((g.rows, g.cols), (info.rows(), info.cols()));
         assert!(g.data.iter().all(|x| x.is_finite()), "{name}");
     }
 }
 
 #[test]
-fn quantization_monotone_in_bits_on_device() {
-    let p = Pipeline::load(&artifacts(), &["qloss"]).unwrap();
+fn quantization_precision_ladder_on_device() {
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["qloss"]).unwrap();
     let mut sampler = p.sampler(11);
-    let tokens = sampler.sample(8);
+    let tokens = sampler.sample(p.batch_of("qloss").unwrap());
     let l2 = p.ctx().qloss(&tokens, &BitAlloc::uniform(&p.index, 2)).unwrap();
     let l8 = p.ctx().qloss(&tokens, &BitAlloc::uniform(&p.index, 8)).unwrap();
     let lfp = p.ctx().qloss(&tokens, &p.fp_alloc()).unwrap();
+    // 8-bit is a tiny perturbation of FP on any weight set.
     assert!((l8 - lfp).abs() < 0.05, "8-bit ~ FP: {l8} vs {lfp}");
-    assert!(l2 > lfp + 0.05, "2-bit must hurt: {l2} vs {lfp}");
+    assert!(l2.is_finite());
+    if kind == BackendKind::PjrtCpu {
+        // Only a TRAINED model guarantees 2-bit damage shows up as a
+        // loss increase; the synthetic model starts near uniform loss.
+        assert!(l2 > lfp + 0.05, "2-bit must hurt: {l2} vs {lfp}");
+    }
 }
 
 #[test]
 fn device_fakequant_agrees_with_rust_mirror() {
-    // upload weights pre-quantized by the RUST quantizer with FP
-    // sentinel bits == run the original weights with on-device 3-bit
-    // quantization. This pins the two RTN implementations together
-    // through the actual loss computation.
-    let p = Pipeline::load(&artifacts(), &["qloss"]).unwrap();
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["qloss"]).unwrap();
     let mut sampler = p.sampler(13);
-    let tokens = sampler.sample(8);
+    let tokens = sampler.sample(p.batch_of("qloss").unwrap());
     let alloc3 = BitAlloc::uniform(&p.index, 3);
     let on_device = p.ctx().qloss(&tokens, &alloc3).unwrap();
 
@@ -146,10 +264,10 @@ fn device_fakequant_agrees_with_rust_mirror() {
         );
         *store.get_mut(name).unwrap() = wq;
     }
-    let bufs = p.engine.upload_weights(&store).unwrap();
+    let bufs = p.backend.upload_weights(&store).unwrap();
     let grids = p.fp_alloc().grids(&p.index);
-    let out = p.engine.run_model_host_grids("qloss", &tokens, &grids, &bufs).unwrap();
-    let host_side = literal_scalar_f32(&out[0]).unwrap() as f64;
+    let out = p.backend.run_model_host_grids("qloss", &tokens, &grids, &bufs).unwrap();
+    let host_side = out[0].scalar_f32().unwrap() as f64;
     assert!(
         (on_device - host_side).abs() < 1e-4,
         "device fakequant {on_device} vs rust fakequant {host_side}"
@@ -157,29 +275,30 @@ fn device_fakequant_agrees_with_rust_mirror() {
 }
 
 // ---------------------------------------------------------------------
-// reordering equivalence
+// reordering equivalence (both backends)
 
 #[test]
 fn reordering_preserves_model_function() {
-    let mut p = Pipeline::load(&artifacts(), &["qloss", "qgrad", "qlogits"]).unwrap();
+    let (kind, dir) = setup();
+    let mut p = Pipeline::load_with(kind, &dir, &["qloss", "qgrad", "qlogits"]).unwrap();
     let mut sampler = p.sampler(17);
-    let tokens = sampler.sample(8);
+    let tokens = sampler.sample(p.batch_of("qlogits").unwrap());
     let fp = p.fp_alloc();
     let logits_before = {
         let out = p
-            .engine
+            .backend
             .run_model_host_grids("qlogits", &tokens, &fp.grids(&p.index), &p.wbufs)
             .unwrap();
-        literal_to_vec_f32(&out[0]).unwrap()
+        out[0].to_vec_f32().unwrap()
     };
     let r = p.reorder(3, 42).unwrap();
     assert!(!r.is_identity(), "reordering should move channels");
     let logits_after = {
         let out = p
-            .engine
+            .backend
             .run_model_host_grids("qlogits", &tokens, &fp.grids(&p.index), &p.wbufs)
             .unwrap();
-        literal_to_vec_f32(&out[0]).unwrap()
+        out[0].to_vec_f32().unwrap()
     };
     let mut max_abs = 0.0f32;
     for (a, b) in logits_before.iter().zip(&logits_after) {
@@ -189,11 +308,12 @@ fn reordering_preserves_model_function() {
 }
 
 // ---------------------------------------------------------------------
-// search invariants on the real engine
+// search invariants (both backends)
 
 #[test]
 fn short_search_respects_invariants() {
-    let p = Pipeline::load(&artifacts(), &["qloss", "qgrad"]).unwrap();
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["qloss", "qgrad"]).unwrap();
     let cfg = SearchConfig { budget: 3.0, max_iters: 6, seed: 5, ..Default::default() };
     let res = p.search(&cfg).unwrap();
     // bit bounds
@@ -207,27 +327,71 @@ fn short_search_respects_invariants() {
         }
     }
     assert!(res.exec_calls >= 2 * res.iters.len() as u64);
+    assert!(res.final_loss.is_finite());
 }
 
 #[test]
 fn search_is_deterministic_under_seed() {
-    let p = Pipeline::load(&artifacts(), &["qloss", "qgrad"]).unwrap();
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["qloss", "qgrad"]).unwrap();
     let cfg = SearchConfig { budget: 2.5, max_iters: 4, seed: 77, ..Default::default() };
     let a = p.search(&cfg).unwrap();
     let b = p.search(&cfg).unwrap();
     assert_eq!(a.alloc.bits, b.alloc.bits);
 }
 
+/// Regression: `final_loss` used to stay NaN whenever the loop body
+/// never ran (max_iters == 0, or gamma_t > gamma0 making k < k_min at
+/// entry). It is now seeded with the warm-start qloss.
+#[test]
+fn search_final_loss_seeded_when_loop_never_runs() {
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["qloss", "qgrad"]).unwrap();
+    for cfg in [
+        SearchConfig { budget: 3.0, max_iters: 0, seed: 3, ..Default::default() },
+        SearchConfig { budget: 3.0, gamma0: 0.01, gamma_t: 0.5, seed: 3, ..Default::default() },
+    ] {
+        let res = p.search(&cfg).unwrap();
+        assert!(res.iters.is_empty(), "loop must not run ({cfg:?})");
+        assert!(res.final_loss.is_finite(), "final_loss NaN again ({cfg:?})");
+        assert!(res.final_loss > 0.0);
+    }
+}
+
+/// Budget safety across random seeds: the two-stage update may never
+/// exceed `cfg.budget` in average bits (previously only a host-side
+/// sketch of the exchange stage was tested).
+#[test]
+fn search_never_exceeds_budget_across_seeds() {
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["qloss", "qgrad"]).unwrap();
+    // 2.21 makes budget*n_blocks fractional: the expansion stage used
+    // to overshoot it by one block when under a bit of headroom remained.
+    for (seed, budget) in [(1u64, 2.5f64), (2, 3.0), (3, 2.21), (4, 3.5)] {
+        let cfg = SearchConfig { budget, max_iters: 4, seed, ..Default::default() };
+        let res = p.search(&cfg).unwrap();
+        assert!(
+            res.alloc.avg_bits() <= budget + 1e-9,
+            "seed {seed} budget {budget}: avg {}",
+            res.alloc.avg_bits()
+        );
+        for it in &res.iters {
+            assert!(it.avg_bits <= budget + 1e-9, "seed {seed} iter {}: {}", it.iter, it.avg_bits);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
-// grams + GPTQ through the real pipeline
+// grams + eval (both backends)
 
 #[test]
 fn grams_are_psd_and_sized() {
-    let p = Pipeline::load(&artifacts(), &["grams"]).unwrap();
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["grams"]).unwrap();
     let grams = p.grams(&p.fp_alloc(), 1, 3).unwrap();
     assert_eq!(grams.len(), p.index.mats.len());
     for (name, g) in &grams {
-        let info = p.engine.manifest.param(name).unwrap();
+        let info = p.manifest().param(name).unwrap();
         assert_eq!(g.n, info.cols(), "{name}");
         // diagonals of X^T X are nonnegative
         for i in 0..g.n {
@@ -236,20 +400,38 @@ fn grams_are_psd_and_sized() {
     }
 }
 
+/// Regression: perplexity on a stream too short for one window used to
+/// return exp(0) = 1.0 (a silently "perfect" model); it must error.
+#[test]
+fn perplexity_errors_on_short_stream() {
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["qloss"]).unwrap();
+    let seq = p.manifest().config.seq_len;
+    let short = TokenStream { tokens: vec![1; seq / 2] };
+    let r = scalebits::eval::perplexity(
+        p.backend.as_ref(),
+        &p.wbufs,
+        &p.index,
+        &BitAlloc::uniform(&p.index, 4),
+        &short,
+        4,
+    );
+    assert!(r.is_err(), "short stream must error, got {r:?}");
+}
+
 // ---------------------------------------------------------------------
-// serving round-trip
+// serving round-trip (both backends)
 
 #[test]
 fn server_round_trip() {
-    let m = Manifest::load(&artifacts()).unwrap();
+    let (kind, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
     let index = BlockIndex::from_manifest(&m).unwrap();
     let alloc = BitAlloc::uniform(&index, 4);
-    let mut server = scalebits::serve::start_server(
-        artifacts(),
-        alloc,
-        std::time::Duration::from_millis(2),
-    )
-    .unwrap();
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), alloc);
+    cfg.backend = kind;
+    cfg.batch_window = std::time::Duration::from_millis(2);
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
     let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
     let mut rxs = Vec::new();
     for i in 0..5 {
@@ -270,10 +452,12 @@ fn server_round_trip() {
 
 #[test]
 fn multi_worker_router_round_trip() {
-    let m = Manifest::load(&artifacts()).unwrap();
+    let (kind, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
     let index = BlockIndex::from_manifest(&m).unwrap();
     let mut cfg =
-        scalebits::serve::ServeConfig::new(artifacts(), BitAlloc::uniform(&index, 4));
+        scalebits::serve::ServeConfig::new(dir.clone(), BitAlloc::uniform(&index, 4));
+    cfg.backend = kind;
     cfg.workers = 2;
     let mut server = scalebits::serve::Router::start(cfg).unwrap();
     let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
@@ -301,37 +485,39 @@ fn multi_worker_router_round_trip() {
 
 /// The acceptance check for grid residency: once a Session is built,
 /// the serve path's only host→device transfer per batch is the token
-/// batch itself (weights AND bit grids stay resident).
+/// batch itself (weights AND bit grids stay resident). The interpreter
+/// keeps the identical ledger, so this runs on both backends.
 #[test]
 fn serve_path_uploads_tokens_only() {
-    let m = Manifest::load(&artifacts()).unwrap();
+    let (kind, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
     let index = BlockIndex::from_manifest(&m).unwrap();
-    let engine = Engine::load(m, &["qloss"]).unwrap();
-    let store = WeightStore::load(&engine.manifest).unwrap();
     let alloc = BitAlloc::uniform(&index, 4);
-    let session = scalebits::runtime::Session::new(engine, &store, &alloc.grids(&index)).unwrap();
-    let batch = session.engine().batch_of("qloss").unwrap();
+    let session =
+        Session::open_with(kind, &dir, &["qloss"], &alloc.grids(&index)).unwrap();
+    let batch = session.backend().batch_of("qloss").unwrap();
     let seq = session.manifest().config.seq_len;
     let stream =
         scalebits::calib::TokenStream::from_manifest(session.manifest(), "eval").unwrap();
     let tokens: Vec<i32> = stream.tokens[..batch * seq].to_vec();
 
     session.run("qloss", &tokens).unwrap(); // warm
-    session.engine().reset_transfer_stats();
+    session.backend().reset_transfer_stats();
     for _ in 0..3 {
         session.run("qloss", &tokens).unwrap();
     }
-    let t = session.engine().transfer_stats();
+    let t = session.backend().transfer_stats();
     assert_eq!(t.uploads, 3, "per-batch transfers must be the token batch only");
     assert_eq!(t.bytes, 3 * (batch * seq * 4) as u64);
 }
 
 // ---------------------------------------------------------------------
-// weight store + manifest sanity
+// weight store + manifest sanity (both backends)
 
 #[test]
 fn manifest_and_weights_consistent() {
-    let m = Manifest::load(&artifacts()).unwrap();
+    let (_, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
     let store = WeightStore::load(&m).unwrap();
     assert_eq!(store.order.len(), m.params.len());
     let index = BlockIndex::from_manifest(&m).unwrap();
@@ -351,7 +537,8 @@ fn manifest_and_weights_consistent() {
 
 #[test]
 fn batch_sampler_stays_in_vocab() {
-    let m = Manifest::load(&artifacts()).unwrap();
+    let (_, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
     let stream = scalebits::calib::TokenStream::from_manifest(&m, "calib").unwrap();
     let mut s = BatchSampler::new(stream, m.config.seq_len, 3);
     let b = s.sample(8);
@@ -359,11 +546,12 @@ fn batch_sampler_stays_in_vocab() {
 }
 
 // ---------------------------------------------------------------------
-// kernel-bench executables numerics
+// kernel-bench executables numerics (PJRT only)
 
 #[test]
 fn mpq_kernel_exec_matches_host_reference() {
-    let m = Manifest::load(&artifacts()).unwrap();
+    require_pjrt!();
+    let m = Manifest::load(&real_artifacts()).unwrap();
     let kb = m.kernel_bench().unwrap();
     let engine = Engine::load(m, &[]).unwrap();
     let exe = engine
@@ -395,8 +583,11 @@ fn mpq_kernel_exec_matches_host_reference() {
         engine.upload_f32(&packed.scales, &[n, nbc]).unwrap(),
         engine.upload_i32(&bits, &[n / br, nbc]).unwrap(),
     ];
-    let out = engine.run_raw(&exe, &args).unwrap();
-    let y = literal_to_vec_f32(&out[0]).unwrap();
+    let out = engine.run_raw("mpq", &exe, &args).unwrap();
+    // run_raw executions are cost-accounted like every other path
+    let stats = Engine::stats(&engine);
+    assert_eq!(stats.get("mpq").map(|s| s.calls), Some(1));
+    let y = scalebits::runtime::literal_to_vec_f32(&out[0]).unwrap();
     // host reference: x @ deq^T
     for r in 0..4 {
         for c in 0..8 {
@@ -413,16 +604,13 @@ fn mpq_kernel_exec_matches_host_reference() {
     }
 }
 
-fn _assert_path_is_dir(p: &Path) {
-    assert!(p.is_dir());
-}
-
 // ---------------------------------------------------------------------
-// packed model export / load roundtrip
+// packed model export / load roundtrip (both backends: host-side)
 
 #[test]
 fn packfile_roundtrip_bit_exact() {
-    let m = Manifest::load(&artifacts()).unwrap();
+    let (_, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
     let index = BlockIndex::from_manifest(&m).unwrap();
     let store = WeightStore::load(&m).unwrap();
     let mut rng = scalebits::util::rng::Rng::new(21);
@@ -463,7 +651,8 @@ fn packfile_roundtrip_bit_exact() {
 
 #[test]
 fn packfile_rejects_corrupt_magic() {
-    let m = Manifest::load(&artifacts()).unwrap();
+    let (_, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
     let index = BlockIndex::from_manifest(&m).unwrap();
     let path = std::env::temp_dir().join("scalebits_bad.sbits");
     std::fs::write(&path, b"NOTSBITSxxxxxxxxxxxx").unwrap();
@@ -473,28 +662,30 @@ fn packfile_rejects_corrupt_magic() {
 
 // ---------------------------------------------------------------------
 // failure injection: the runtime must reject malformed calls loudly
+// (identically on either backend)
 
 #[test]
 fn runtime_rejects_bad_shapes() {
-    let p = Pipeline::load(&artifacts(), &["qloss"]).unwrap();
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["qloss"]).unwrap();
     let alloc = BitAlloc::uniform(&p.index, 3);
     let grids = alloc.grids(&p.index);
     // wrong token count
     let bad_tokens = vec![0i32; 17];
-    assert!(p.engine.run_model_host_grids("qloss", &bad_tokens, &grids, &p.wbufs).is_err());
+    assert!(p.backend.run_model_host_grids("qloss", &bad_tokens, &grids, &p.wbufs).is_err());
     // wrong grid count
     let mut sampler = p.sampler(1);
-    let tokens = sampler.sample(8);
+    let tokens = sampler.sample(p.batch_of("qloss").unwrap());
     assert!(p
-        .engine
+        .backend
         .run_model_host_grids("qloss", &tokens, &grids[..grids.len() - 1], &p.wbufs)
         .is_err());
     // wrong grid shape
     let mut bad_grids = grids.clone();
     bad_grids[0].pop();
-    assert!(p.engine.run_model_host_grids("qloss", &tokens, &bad_grids, &p.wbufs).is_err());
+    assert!(p.backend.run_model_host_grids("qloss", &tokens, &bad_grids, &p.wbufs).is_err());
     // unknown executable
-    assert!(p.engine.run_model_host_grids("nonexistent", &tokens, &grids, &p.wbufs).is_err());
+    assert!(p.backend.run_model_host_grids("nonexistent", &tokens, &grids, &p.wbufs).is_err());
 }
 
 #[test]
