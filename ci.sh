@@ -2,6 +2,10 @@
 # Tier-1 gate + lint, run from the repo root:
 #   ./ci.sh                  # default lane
 #   ./ci.sh --no-artifacts   # force the interpreter backend everywhere
+#   ./ci.sh --bench-smoke    # build + run both benches at tiny iteration
+#                            # counts (no artifacts needed) so kernel
+#                            # regressions fail fast; does NOT overwrite
+#                            # the committed BENCH_*.json snapshots
 #
 # Matches the ROADMAP tier-1 verify (`cargo build --release &&
 # cargo test -q`) and adds rustfmt + clippy.
@@ -10,20 +14,25 @@
 # `rust/artifacts/` is missing — they auto-fall back to the pure-Rust
 # interpreter backend over a synthetic artifact set, so the FULL
 # cross-layer net (search invariants, serving round-trip, transfer
-# accounting, reordering equivalence) runs in this container with zero
-# AOT artifacts and zero PJRT executions. Run `make artifacts`
-# (python/compile/aot.py) first to additionally exercise the PJRT-only
-# tests (Pallas goldens, kernel executables). The `--no-artifacts`
-# lane sets SCALEBITS_BACKEND=interp to force the interpreter even
-# when artifacts exist, so both backends stay green.
+# accounting, reordering equivalence, packed-kernel equivalence) runs
+# in this container with zero AOT artifacts and zero PJRT executions.
+# Run `make artifacts` (python/compile/aot.py) first to additionally
+# exercise the PJRT-only tests (Pallas goldens, kernel executables).
+# The `--no-artifacts` lane sets SCALEBITS_BACKEND=interp to force the
+# interpreter even when artifacts exist, so both backends stay green.
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
 LANE="default"
-if [[ "${1:-}" == "--no-artifacts" ]]; then
-  LANE="no-artifacts"
-  export SCALEBITS_BACKEND=interp
-fi
+case "${1:-}" in
+  --no-artifacts)
+    LANE="no-artifacts"
+    export SCALEBITS_BACKEND=interp
+    ;;
+  --bench-smoke)
+    LANE="bench-smoke"
+    ;;
+esac
 
 echo "== cargo fmt --check"
 # Not yet gating: the seed predates the fmt gate and is hand-formatted.
@@ -39,6 +48,19 @@ fi
 
 echo "== cargo build --release"
 cargo build --release --offline
+
+if [[ "$LANE" == "bench-smoke" ]]; then
+  # Fast kernel-regression lane: the kernel bench verifies the fused
+  # packed GEMM bitwise against dequantize+reference before timing, and
+  # the serve bench round-trips the full router/session stack; both run
+  # artifact-less (synthetic model on the interpreter backend).
+  echo "== bench smoke: bench_kernel"
+  cargo bench --offline --bench bench_kernel -- --smoke
+  echo "== bench smoke: bench_serve"
+  cargo bench --offline --bench bench_serve -- --smoke
+  echo "CI OK (${LANE})"
+  exit 0
+fi
 
 echo "== cargo test -q (${LANE} lane)"
 cargo test -q --offline

@@ -1,111 +1,246 @@
-//! Bench: fused mixed-precision dequant+matmul executable (Table 4).
+//! Bench: native fused mixed-precision dequant×matmul (Table 4).
 //!
-//! Regenerates the paper's kernel-latency rows on the PJRT-CPU
-//! testbed: uniform-4bit vs mixed {2,4,8} mixtures vs dense f32 vs the
-//! unstructured element-MP scatter baseline.
+//! Runs entirely on the in-tree `kernel` module — NO artifacts, NO
+//! PJRT — and reproduces the paper's kernel-latency rows natively:
+//! uniform INT2/4/8 vs mixed block-bitwidth mixtures vs dense f32 vs
+//! an unstructured element-MP scatter baseline (SpQR-like).
 //!
-//! Run: cargo bench --offline --bench bench_kernel
+//! The load-bearing comparisons (the ISSUE-3 acceptance bar):
+//!   * fused packed GEMM vs "dequantize, then dense matmul" — the
+//!     pre-kernel interpreter serving path (naive serial loops over a
+//!     materialized dense matrix);
+//!   * mixed 40/40/20 (avg 4b) vs uniform INT4 — the paper's
+//!     "no runtime overhead" claim: per-block bitwidth dispatch must
+//!     cost ~nothing next to uniform-width unpacking.
+//!
+//! Before timing anything, the fused kernel output is checked against
+//! dequantize()+reference-matmul (they are bitwise identical by the
+//! kernel's accumulation-order contract; the bench fails loudly if
+//! that ever regresses — this is what `ci.sh --bench-smoke` gates).
+//!
+//! Run: cargo bench --offline --bench bench_kernel [-- --smoke]
+//! Writes ../BENCH_kernel.json (repo root) unless --smoke.
 
-use scalebits::model::Manifest;
+use scalebits::kernel;
 use scalebits::quant::PackedMat;
-use scalebits::runtime::Engine;
 use scalebits::tensor::Mat;
+use scalebits::util::json::Json;
 use scalebits::util::rng::Rng;
+use scalebits::util::threadpool;
 use scalebits::util::timer;
 
-fn main() -> anyhow::Result<()> {
-    let artifacts = std::path::PathBuf::from("artifacts");
-    let m = Manifest::load(&artifacts)?;
-    let kb = m.kernel_bench()?;
-    let engine = Engine::load(m, &[])?;
-    let dir = engine.manifest.dir.clone();
-    let mpq = engine.compile_hlo_file(&dir.join(&kb.files["mpq"]))?;
-    let dense = engine.compile_hlo_file(&dir.join(&kb.files["dense"]))?;
-    let elemmp = engine.compile_hlo_file(&dir.join(&kb.files["elemmp"]))?;
+/// Naive serial x[m,k] @ w[n,k]^T — the pre-kernel serving matmul.
+fn matmul_nt_naive(x: &[f64], w: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut y = vec![0.0f64; m * n];
+    for i in 0..m {
+        let xr = &x[i * k..(i + 1) * k];
+        for o in 0..n {
+            let wr = &w[o * k..(o + 1) * k];
+            let mut acc = 0.0;
+            for j in 0..k {
+                acc += xr[j] * wr[j];
+            }
+            y[i * n + o] = acc;
+        }
+    }
+    y
+}
 
-    let (mm, n, k) = (kb.m, kb.n, kb.k);
-    let (br, bc) = (kb.block_rows, kb.block_cols);
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // Shapes: a serving-sized GEMM (batch*seq activation rows against a
+    // projection matrix) full-size, or a seconds-fast smoke config.
+    let (m, n, k, warmup, iters) =
+        if smoke { (16usize, 128usize, 128usize, 1usize, 3usize) } else { (128, 1024, 1024, 3, 20) };
+    let (br, bc) = (32usize, 32usize);
+    let (nbr, nbc) = (n / br, k / bc);
+    let nblocks = nbr * nbc;
+
     let mut rng = Rng::new(1);
-    let x: Vec<f32> = (0..mm * k).map(|_| rng.normal_f32()).collect();
+    let x: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
     let w = Mat::from_vec(n, k, (0..n * k).map(|_| rng.normal_f32()).collect())?;
 
-    let codes_for = |grid: &[i32]| -> (Vec<i8>, Vec<f32>) {
-        let packed = PackedMat::quantize(&w, grid, br, bc);
-        let deq = packed.dequantize();
-        let nbc = k / bc;
-        let mut codes = vec![0i8; n * k];
-        for r in 0..n {
-            for g in 0..nbc {
-                let s = packed.scales[r * nbc + g];
-                for c in 0..bc {
-                    let idx = r * k + g * bc + c;
-                    codes[idx] =
-                        if s > 0.0 { (deq.data[idx] / s).round_ties_even() as i8 } else { 0 };
-                }
-            }
-        }
-        (codes, packed.scales)
+    type Mix = (&'static str, &'static str, Box<dyn Fn(usize) -> i32>);
+    let mixes: Vec<Mix> = vec![
+        ("uniform_int2", "fused packed uniform INT2", Box::new(|_| 2)),
+        ("uniform_int4", "fused packed uniform INT4", Box::new(|_| 4)),
+        ("uniform_int8", "fused packed uniform INT8", Box::new(|_| 8)),
+        (
+            "mixed_40_40_20",
+            "fused packed mixed 40/40/20 (avg 4b)",
+            Box::new(|i| match i % 10 {
+                0..=3 => 2,
+                4..=7 => 4,
+                _ => 8,
+            }),
+        ),
+        (
+            "mixed_25_50_25",
+            "fused packed mixed 25/50/25 (avg 4.5b)",
+            Box::new(|i| match i % 4 {
+                0 => 2,
+                1 | 2 => 4,
+                _ => 8,
+            }),
+        ),
+    ];
+
+    // ---- correctness gate (runs in every mode, incl. --smoke) -------
+    // Gate on the multi-bitwidth mixture, selected by KEY so table
+    // reordering can never silently change what the gate covers.
+    let gate_mix = mixes
+        .iter()
+        .find(|(key, _, _)| *key == "mixed_40_40_20")
+        .expect("gate mixture present");
+    let grid_mixed: Vec<i32> = (0..nblocks).map(|i| (gate_mix.2)(i)).collect();
+    let pm_mixed = PackedMat::quantize(&w, &grid_mixed, br, bc);
+    let deq: Vec<f64> = pm_mixed.dequantize().data.iter().map(|&v| v as f64).collect();
+    let want = matmul_nt_naive(&x, &deq, m, k, n);
+    let got = kernel::matmul_nt_packed(&x, &pm_mixed, m);
+    let mut max_rel = 0.0f64;
+    for i in 0..want.len() {
+        let rel = (got[i] - want[i]).abs() / want[i].abs().max(1.0);
+        max_rel = max_rel.max(rel);
+    }
+    anyhow::ensure!(
+        max_rel <= 1e-12,
+        "fused kernel diverged from dequantize+reference: max rel {max_rel}"
+    );
+    println!("correctness: fused == dequantize+reference (max rel {max_rel:.1e})");
+
+    println!(
+        "GEMM {m}x{k} @ {n}x{k}^T, {br}x{bc} blocks, {} worker threads, native kernels",
+        threadpool::n_workers()
+    );
+    let mut rows = Json::obj();
+    let row_json = |s: &timer::Stats| {
+        Json::from_pairs(vec![
+            ("mean_us", Json::Num(s.mean_us)),
+            ("p50_us", Json::Num(s.p50_us)),
+            ("p95_us", Json::Num(s.p95_us)),
+            ("min_us", Json::Num(s.min_us)),
+            ("n", Json::Num(s.n as f64)),
+        ])
     };
 
-    println!("GEMM {mm}x{k} @ {n}x{k}^T, {br}x{bc} blocks, PJRT-CPU");
-    let nblocks = (n / br) * (k / bc);
-    let mixes: &[(&str, Box<dyn Fn(usize) -> i32>)] = &[
-        ("uniform INT2", Box::new(|_| 2)),
-        ("uniform INT4", Box::new(|_| 4)),
-        ("uniform INT8", Box::new(|_| 8)),
-        ("mixed 40/40/20 (avg 4b)", Box::new(|i| match i % 10 {
-            0..=3 => 2,
-            4..=7 => 4,
-            _ => 8,
-        })),
-        ("mixed 25/50/25 (avg 4.5b)", Box::new(|i| match i % 4 {
-            0 => 2,
-            1 | 2 => 4,
-            _ => 8,
-        })),
-    ];
-    for (label, f) in mixes {
+    // ---- fused packed rows ------------------------------------------
+    let mut fused_int4_us = f64::NAN;
+    let mut mixed_404020_us = f64::NAN;
+    for (key, label, f) in &mixes {
         let grid: Vec<i32> = (0..nblocks).map(|i| f(i)).collect();
-        let (codes, scales) = codes_for(&grid);
-        let args = vec![
-            engine.upload_f32(&x, &[mm, k])?,
-            engine.upload_i8(&codes, &[n, k])?,
-            engine.upload_f32(&scales, &[n, k / bc])?,
-            engine.upload_i32(&grid, &[n / br, k / bc])?,
-        ];
-        let stats = timer::bench(5, 40, || {
-            engine.run_raw("mpq", &mpq, &args).expect("run");
+        let pm = PackedMat::quantize(&w, &grid, br, bc);
+        let stats = timer::bench(warmup, iters, || {
+            std::hint::black_box(kernel::matmul_nt_packed(&x, &pm, m));
         });
-        println!("{}", stats.line(&format!("mpq {label}")));
+        println!("{}", stats.line(label));
+        if *key == "uniform_int4" {
+            fused_int4_us = stats.mean_us;
+        }
+        if *key == "mixed_40_40_20" {
+            mixed_404020_us = stats.mean_us;
+        }
+        rows.set(key, row_json(&stats));
     }
 
-    let args = vec![engine.upload_f32(&x, &[mm, k])?, engine.upload_f32(&w.data, &[n, k])?];
-    let stats = timer::bench(5, 40, || {
-        engine.run_raw("dense", &dense, &args).expect("run");
+    // ---- dequantize-then-dense baselines (uniform INT4) -------------
+    let pm4 = PackedMat::quantize(&w, &vec![4i32; nblocks], br, bc);
+    // (a) the pre-kernel interpreter serving path: materialize the
+    // dense matrix, then the naive serial triple loop.
+    let naive_iters = if smoke { 2 } else { 5 };
+    let stats = timer::bench(1, naive_iters, || {
+        let deq: Vec<f64> = pm4.dequantize().data.iter().map(|&v| v as f64).collect();
+        std::hint::black_box(matmul_nt_naive(&x, &deq, m, k, n));
     });
-    println!("{}", stats.line("dense f32 (BF16 analog)"));
+    println!("{}", stats.line("dequant + naive matmul (pre-kernel path)"));
+    rows.set("dequant_naive_int4", row_json(&stats));
+    let dequant_naive_us = stats.mean_us;
+    // (b) same materialization, but through the parallel dense kernel —
+    // isolates what fusion buys over a fast dequantize-then-GEMM.
+    let stats = timer::bench(warmup, iters, || {
+        let deq: Vec<f64> = pm4.dequantize().data.iter().map(|&v| v as f64).collect();
+        std::hint::black_box(kernel::matmul_nt(&x, &deq, m, k, n));
+    });
+    println!("{}", stats.line("dequant + blocked dense kernel"));
+    rows.set("dequant_blocked_int4", row_json(&stats));
 
-    let n_out = kb.elemmp_n_outliers;
-    let mut idx = Vec::with_capacity(n_out * 2);
+    // ---- dense f32 (uncompressed weights, BF16 analog) --------------
+    let wfull: Vec<f64> = w.data.iter().map(|&v| v as f64).collect();
+    let stats = timer::bench(warmup, iters, || {
+        std::hint::black_box(kernel::matmul_nt(&x, &wfull, m, k, n));
+    });
+    println!("{}", stats.line("dense f32 weights (no compression)"));
+    rows.set("dense_f32", row_json(&stats));
+
+    // ---- element-MP scatter baseline (SpQR-like) --------------------
+    // INT4 body + unstructured high-precision outliers applied through
+    // an index list: the per-element scatter the paper's block-uniform
+    // layout exists to avoid.
+    let n_out = (n * k) / 100; // 1% outliers
+    let mut idx = Vec::with_capacity(n_out);
     let mut vals = Vec::with_capacity(n_out);
     for _ in 0..n_out {
-        idx.push(rng.below(n) as i32);
-        idx.push(rng.below(k) as i32);
-        vals.push(rng.normal_f32());
+        idx.push((rng.below(n), rng.below(k)));
+        vals.push(rng.normal());
     }
-    let grid4: Vec<i32> = vec![4; nblocks];
-    let wq4 = PackedMat::quantize(&w, &grid4, br, bc).dequantize();
-    let args = vec![
-        engine.upload_f32(&x, &[mm, k])?,
-        engine.upload_f32(&wq4.data, &[n, k])?,
-        engine.upload_i32(&idx, &[n_out, 2])?,
-        engine.upload_f32(&vals, &[n_out])?,
-    ];
-    let stats = timer::bench(5, 40, || {
-        engine.run_raw("elemmp", &elemmp, &args).expect("run");
+    let stats = timer::bench(warmup, iters, || {
+        let mut y = kernel::matmul_nt_packed(&x, &pm4, m);
+        for (t, &(r, c)) in idx.iter().enumerate() {
+            let v = vals[t];
+            for i in 0..m {
+                y[i * n + r] += x[i * k + c] * v;
+            }
+        }
+        std::hint::black_box(y);
     });
-    println!("{}", stats.line("element-MP scatter (SpQR-like)"));
-    println!("\nshape claim (paper Table 4): all mpq rows within noise of each other;");
-    println!("element-MP pays a visible scatter penalty.");
+    println!("{}", stats.line("element-MP scatter (SpQR-like, 1% outliers)"));
+    rows.set("element_scatter_int4", row_json(&stats));
+
+    // ---- claims ------------------------------------------------------
+    let speedup = dequant_naive_us / fused_int4_us;
+    let mixed_ratio = mixed_404020_us / fused_int4_us;
+    println!("\nfused INT4 vs dequant+naive (pre-kernel path): {speedup:.2}x faster");
+    println!(
+        "mixed 40/40/20 vs uniform INT4: {:.1}% overhead (paper claim: within noise)",
+        100.0 * (mixed_ratio - 1.0)
+    );
+
+    let mut out = Json::obj();
+    out.set(
+        "gemm",
+        Json::from_pairs(vec![
+            ("m", Json::Num(m as f64)),
+            ("n", Json::Num(n as f64)),
+            ("k", Json::Num(k as f64)),
+            ("block_rows", Json::Num(br as f64)),
+            ("block_cols", Json::Num(bc as f64)),
+        ]),
+    );
+    out.set("threads", Json::Num(threadpool::n_workers() as f64));
+    out.set(
+        "environment",
+        Json::Str(format!(
+            "measured by `cargo bench --offline --bench bench_kernel` on {} worker threads",
+            threadpool::n_workers()
+        )),
+    );
+    out.set("rows", rows);
+    out.set("speedup_fused_int4_vs_dequant_naive", Json::Num(speedup));
+    out.set("ratio_mixed_404020_vs_uniform_int4", Json::Num(mixed_ratio));
+    out.set(
+        "note",
+        Json::Str(format!(
+            "all timings measured post-warmup ({warmup} discarded warmup iters, then mean/p50 \
+             over {iters} iters); fused kernel verified bitwise against dequantize+reference \
+             before timing"
+        )),
+    );
+    if smoke {
+        println!("--smoke: correctness gate passed; not overwriting BENCH_kernel.json");
+    } else {
+        let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let path = root.parent().unwrap_or(&root).join("BENCH_kernel.json");
+        out.write_file(&path)?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }

@@ -18,7 +18,7 @@
 use anyhow::Result;
 
 use crate::linalg::SqMat;
-use crate::quant::{quant_group_codes, BitAlloc, BlockIndex};
+use crate::quant::{group_scale, BitAlloc, BlockIndex};
 use crate::tensor::Mat;
 
 /// Uniform-precision RTN allocation.
@@ -81,12 +81,13 @@ pub fn gptq_quantize_matrix(w: &Mat, gram: &SqMat, cfg: &GptqConfig) -> Result<M
     for j in 0..n {
         // Refresh group scales at each group boundary, from the CURRENT
         // (error-compensated) weights — the standard groupwise recipe.
+        // `group_scale` is the same single-pass reduction the RTN
+        // quantizer uses, so the inner loop no longer materializes a
+        // throwaway code vector just to read its scale.
         if j % cfg.group == 0 {
             let hi = (j + cfg.group).min(n);
             for r in 0..w.rows {
-                let seg: Vec<f32> = (j..hi).map(|c| wp.at(r, c)).collect();
-                let (_, s) = quant_group_codes(&seg, cfg.bits);
-                scales[r] = s;
+                scales[r] = group_scale(&wp.row(r)[j..hi], cfg.bits);
             }
         }
         let d = hinv_u.at(j, j);

@@ -1,0 +1,567 @@
+//! Native mixed-precision GEMM kernels over bit-plane blocks.
+//!
+//! This is the CPU kernel story behind the paper's Table-4 claim:
+//! block-UNIFORM bitwidth tiles are exactly the shape a word-level
+//! kernel can exploit. Unlike element-wise scatter schemes (SliM-LLM)
+//! or per-channel formats, every ScaleBITS block stores one bitwidth,
+//! so the inner loop dispatches ONCE per block row-segment to a
+//! specialized unpack-and-FMA routine operating on whole `u64` code
+//! words — no per-element branching, no index scatter.
+//!
+//! Two kernel families live here:
+//!
+//! * **Fused dequant×matmul** ([`matmul_nt_packed`]): consumes a
+//!   [`PackedMat`] directly. For each weight row it decodes the packed
+//!   row segments (per-block bitwidth dispatch: specialized 1/2/4/8-bit
+//!   word loops, a generic path for 3/5/6/7, raw-f32 passthrough for
+//!   FP-sentinel blocks) into an L1-resident row buffer, then runs
+//!   single-pass dots against every activation row. The dense weight
+//!   matrix is NEVER materialized: scratch is one row (`cols` f64s),
+//!   and the packed stream — 4-16x smaller than dense f64 — is read
+//!   exactly once per GEMM. Work is parallelized across weight
+//!   row-blocks with [`crate::util::threadpool::par_map`].
+//! * **Dense f64 kernels** ([`matmul_nt`], [`matmul_nn_acc`],
+//!   [`accum_wgrad`], [`gram`]): the interpreter's forward/backward
+//!   primitives, re-implemented with tile-parallel scheduling over
+//!   disjoint output stripes.
+//!
+//! Determinism contract (load-bearing, tested): every output element
+//! is produced by exactly one task as a single ascending-k
+//! accumulation. Results are therefore **bitwise identical** to the
+//! naive reference loops, independent of worker count — the packed
+//! serving path produces the exact logits the dense path produced
+//! before this module existed, and goldens never move.
+
+use crate::quant::{PackedMat, FP_SENTINEL_BITS};
+use crate::util::threadpool;
+
+/// Minimum multiply-accumulate count before a kernel fans out across
+/// worker threads. Below this, scoped-thread spawn overhead dominates
+/// (the synthetic test model's 32x32 matmuls stay serial; real-model
+/// projections and the bench shapes go parallel).
+pub const PAR_MIN_FLOPS: usize = 1 << 22;
+
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for j in 0..a.len() {
+        acc += a[j] * b[j];
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// packed row decoding (the per-bitwidth dispatch table)
+
+/// Decode one packed row segment of `out.len()` codes at `bits` ∈ 1..=8
+/// into dequantized f64 values. `scale` is the RTN group scale; the
+/// value written is `(code as f32) * scale` widened to f64 — the exact
+/// arithmetic of [`crate::quant::fakequant_group`], so packed and dense
+/// forwards agree bit-for-bit.
+#[inline]
+fn decode_row_segment(seg: &[u64], bits: i32, scale: f32, out: &mut [f64]) {
+    let b = bits as usize;
+    match bits {
+        1 => {
+            // 1-bit codes are sign bits: 1 -> +scale, 0 -> -scale.
+            for (t, d) in out.iter_mut().enumerate() {
+                let bit = (seg[t >> 6] >> (t & 63)) & 1;
+                *d = (if bit == 1 { scale } else { -scale }) as f64;
+            }
+        }
+        2 | 4 | 8 => {
+            // Power-of-two widths never straddle a word: shift the
+            // field to the top and sign-extend with one arithmetic
+            // shift — branch-free two's-complement decode.
+            let cpw = 64 / b;
+            for (t, d) in out.iter_mut().enumerate() {
+                let word = seg[t / cpw];
+                let off = (t % cpw) * b;
+                let code = ((word << (64 - off - b)) as i64) >> (64 - b);
+                *d = (code as f32 * scale) as f64;
+            }
+        }
+        _ => {
+            // Generic path (3/5/6/7 bits): fields may straddle word
+            // boundaries within the row segment.
+            let mask = (1u64 << b) - 1;
+            let sign = 1u64 << (b - 1);
+            for (t, d) in out.iter_mut().enumerate() {
+                let bitpos = t * b;
+                let wi = bitpos >> 6;
+                let off = bitpos & 63;
+                let mut v = seg[wi] >> off;
+                if off + b > 64 {
+                    v |= seg[wi + 1] << (64 - off);
+                }
+                v &= mask;
+                let code = if v & sign != 0 { (v | !mask) as i64 } else { v as i64 };
+                *d = (code as f32 * scale) as f64;
+            }
+        }
+    }
+}
+
+/// Decode one FP-sentinel row segment (raw f32 bit patterns, two per
+/// word, low half first) into f64 values.
+#[inline]
+fn decode_fp_row_segment(seg: &[u64], out: &mut [f64]) {
+    for (t, d) in out.iter_mut().enumerate() {
+        let word = seg[t >> 1];
+        let bits32 = if t & 1 == 1 { (word >> 32) as u32 } else { word as u32 };
+        *d = f32::from_bits(bits32) as f64;
+    }
+}
+
+/// Dequantize one full weight row of `w` into `out` (len = `w.cols`),
+/// dispatching per block on the stored bitwidth. This is the kernel's
+/// only scratch structure: one L1-resident row, O(cols) per call.
+pub fn dequant_row_into(w: &PackedMat, row: usize, out: &mut [f64]) {
+    assert_eq!(out.len(), w.cols, "row buffer size mismatch");
+    assert!(row < w.rows);
+    let nbc = w.n_block_cols();
+    let bi = row / w.block_rows;
+    let lr = row - bi * w.block_rows;
+    for bj in 0..nbc {
+        let blk = bi * nbc + bj;
+        let b = w.bits[blk];
+        let c0 = bj * w.block_cols;
+        let bw = w.block_cols.min(w.cols - c0);
+        let dst = &mut out[c0..c0 + bw];
+        if b <= 0 {
+            dst.fill(0.0);
+            continue;
+        }
+        let wpr = PackedMat::words_per_row(bw, b);
+        let s0 = w.word_off[blk] + lr * wpr;
+        let seg = &w.words[s0..s0 + wpr];
+        if b >= FP_SENTINEL_BITS {
+            decode_fp_row_segment(seg, dst);
+        } else {
+            decode_row_segment(seg, b, w.scales[row * nbc + bj], dst);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// fused dequant×matmul
+
+/// `y[m, n] = x[m, k] @ dequantize(w)[n, k]^T`, computed directly from
+/// the packed bit-plane blocks. Parallelism is chosen by problem size.
+pub fn matmul_nt_packed(x: &[f64], w: &PackedMat, m: usize) -> Vec<f64> {
+    let threads = if m * w.rows * w.cols >= PAR_MIN_FLOPS { threadpool::n_workers() } else { 1 };
+    matmul_nt_packed_threads(x, w, m, threads)
+}
+
+/// [`matmul_nt_packed`] with an explicit thread count (`<= 1` forces
+/// the serial path; higher counts are honored up to the machine's
+/// available parallelism by splitting the row-blocks into exactly
+/// `threads` contiguous task groups). Exposed for the determinism
+/// tests and the bench: the result is bitwise identical at every
+/// thread count because each weight row-block is an independent pure
+/// task.
+pub fn matmul_nt_packed_threads(x: &[f64], w: &PackedMat, m: usize, threads: usize) -> Vec<f64> {
+    let (n, k) = (w.rows, w.cols);
+    assert_eq!(x.len(), m * k, "x is [m={m}, k={k}]");
+    let nbr = w.n_block_rows();
+    let mut y = vec![0.0f64; m * n];
+
+    // One task per weight row-block: dequantize each row of the stripe
+    // into the row buffer once, then stream every activation row
+    // against it. Returns the [bh, m] output tile for rows r0..r0+bh.
+    let stripe = |bi: usize| -> Vec<f64> {
+        let r0 = bi * w.block_rows;
+        let bh = w.block_rows.min(n - r0);
+        let mut tile = vec![0.0f64; bh * m];
+        let mut rowbuf = vec![0.0f64; k];
+        for lr in 0..bh {
+            dequant_row_into(w, r0 + lr, &mut rowbuf);
+            for i in 0..m {
+                tile[lr * m + i] = dot(&x[i * k..(i + 1) * k], &rowbuf);
+            }
+        }
+        tile
+    };
+    let scatter = |y: &mut [f64], bi: usize, tile: &[f64]| {
+        let r0 = bi * w.block_rows;
+        let bh = w.block_rows.min(n - r0);
+        for lr in 0..bh {
+            for i in 0..m {
+                y[i * n + r0 + lr] = tile[lr * m + i];
+            }
+        }
+    };
+
+    if threads <= 1 || nbr <= 1 {
+        for bi in 0..nbr {
+            let tile = stripe(bi);
+            scatter(&mut y, bi, &tile[..]);
+        }
+    } else {
+        // Exactly `threads` contiguous row-block groups, one par_map
+        // item each, so the requested count is what actually runs
+        // (par_map itself caps at the machine's available parallelism).
+        let per_group = nbr.div_ceil(threads.min(nbr));
+        let groups: Vec<usize> = (0..nbr.div_ceil(per_group)).collect();
+        let group_tiles = threadpool::par_map(&groups, |_, &gr| {
+            let lo = gr * per_group;
+            let hi = (lo + per_group).min(nbr);
+            (lo..hi).map(&stripe).collect::<Vec<Vec<f64>>>()
+        });
+        for (&gr, tiles) in groups.iter().zip(group_tiles.iter()) {
+            for (off, tile) in tiles.iter().enumerate() {
+                scatter(&mut y, gr * per_group + off, &tile[..]);
+            }
+        }
+    }
+    y
+}
+
+// ---------------------------------------------------------------------
+// dense f64 kernels (the interpreter's forward/backward primitives)
+
+/// `y[m, dout] = x[m, din] @ w[dout, din]^T`. Tile-parallel over output
+/// column stripes; per-element accumulation is one ascending-k pass
+/// (bitwise identical to the naive triple loop at any thread count).
+pub fn matmul_nt(x: &[f64], w: &[f64], m: usize, din: usize, dout: usize) -> Vec<f64> {
+    debug_assert_eq!(x.len(), m * din);
+    debug_assert_eq!(w.len(), dout * din);
+    let mut y = vec![0.0f64; m * dout];
+    let workers =
+        if m * din * dout >= PAR_MIN_FLOPS { threadpool::n_workers().min(dout) } else { 1 };
+    if workers <= 1 {
+        for i in 0..m {
+            let xr = &x[i * din..(i + 1) * din];
+            for (o, yo) in y[i * dout..(i + 1) * dout].iter_mut().enumerate() {
+                *yo = dot(xr, &w[o * din..(o + 1) * din]);
+            }
+        }
+        return y;
+    }
+    let stripe = dout.div_ceil(workers);
+    let ids: Vec<usize> = (0..dout.div_ceil(stripe)).collect();
+    let tiles = threadpool::par_map(&ids, |_, &s| {
+        let o0 = s * stripe;
+        let o1 = (o0 + stripe).min(dout);
+        let mut tile = vec![0.0f64; m * (o1 - o0)];
+        for i in 0..m {
+            let xr = &x[i * din..(i + 1) * din];
+            for (lo, t) in tile[i * (o1 - o0)..(i + 1) * (o1 - o0)].iter_mut().enumerate() {
+                *t = dot(xr, &w[(o0 + lo) * din..(o0 + lo + 1) * din]);
+            }
+        }
+        tile
+    });
+    for (&s, tile) in ids.iter().zip(&tiles) {
+        let o0 = s * stripe;
+        let width = ((o0 + stripe).min(dout)) - o0;
+        for i in 0..m {
+            y[i * dout + o0..i * dout + o0 + width]
+                .copy_from_slice(&tile[i * width..(i + 1) * width]);
+        }
+    }
+    y
+}
+
+/// `dx[m, din] += dy[m, dout] @ w[dout, din]`. Parallel over disjoint
+/// `dx` row chunks; per-element accumulation order is unchanged from
+/// the naive loop.
+pub fn matmul_nn_acc(dy: &[f64], w: &[f64], m: usize, dout: usize, din: usize, dx: &mut [f64]) {
+    debug_assert_eq!(dy.len(), m * dout);
+    debug_assert_eq!(w.len(), dout * din);
+    debug_assert_eq!(dx.len(), m * din);
+    let workers = if m * dout * din >= PAR_MIN_FLOPS { threadpool::n_workers().min(m) } else { 1 };
+    let rows_per_chunk = m.div_ceil(workers.max(1));
+    threadpool::par_chunks_mut(dx, rows_per_chunk * din, |start, chunk| {
+        let i0 = start / din;
+        for (li, dxr) in chunk.chunks_mut(din).enumerate() {
+            let dyr = &dy[(i0 + li) * dout..(i0 + li + 1) * dout];
+            for (o, &g) in dyr.iter().enumerate() {
+                if g != 0.0 {
+                    let wr = &w[o * din..(o + 1) * din];
+                    for j in 0..din {
+                        dxr[j] += g * wr[j];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `dw[dout, din] += dy[m, dout]^T @ x[m, din]`. Parallel over disjoint
+/// `dw` row chunks; each element still accumulates over i ascending.
+pub fn accum_wgrad(dy: &[f64], x: &[f64], m: usize, dout: usize, din: usize, dw: &mut [f64]) {
+    debug_assert_eq!(dy.len(), m * dout);
+    debug_assert_eq!(x.len(), m * din);
+    debug_assert_eq!(dw.len(), dout * din);
+    let workers =
+        if m * dout * din >= PAR_MIN_FLOPS { threadpool::n_workers().min(dout) } else { 1 };
+    let rows_per_chunk = dout.div_ceil(workers.max(1));
+    threadpool::par_chunks_mut(dw, rows_per_chunk * din, |start, chunk| {
+        let o0 = start / din;
+        for i in 0..m {
+            let xr = &x[i * din..(i + 1) * din];
+            let dyr = &dy[i * dout..(i + 1) * dout];
+            for (lo, dwr) in chunk.chunks_mut(din).enumerate() {
+                let g = dyr[o0 + lo];
+                if g != 0.0 {
+                    for j in 0..din {
+                        dwr[j] += g * xr[j];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `X^T X` over a `[rows, d]` activation, flattened `[d, d]` f32.
+/// Parallel over disjoint output row chunks.
+pub fn gram(flat: &[f64], d: usize) -> Vec<f32> {
+    let rows = flat.len() / d;
+    let mut out = vec![0.0f64; d * d];
+    let workers = if rows * d * d >= PAR_MIN_FLOPS { threadpool::n_workers().min(d) } else { 1 };
+    let rows_per_chunk = d.div_ceil(workers.max(1));
+    threadpool::par_chunks_mut(&mut out, rows_per_chunk * d, |start, chunk| {
+        let a0 = start / d;
+        for i in 0..rows {
+            let xr = &flat[i * d..(i + 1) * d];
+            for (la, or) in chunk.chunks_mut(d).enumerate() {
+                let xa = xr[a0 + la];
+                if xa != 0.0 {
+                    for b in 0..d {
+                        or[b] += xa * xr[b];
+                    }
+                }
+            }
+        }
+    });
+    out.iter().map(|&v| v as f32).collect()
+}
+
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fakequant_mat;
+    use crate::tensor::Mat;
+    use crate::testkit::{forall, Config};
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal_f32()).collect()).unwrap()
+    }
+
+    fn rand_x(m: usize, k: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..m * k).map(|_| rng.normal()).collect()
+    }
+
+    /// Naive reference: one ascending-k pass per element.
+    fn matmul_nt_ref(x: &[f64], w: &[f64], m: usize, din: usize, dout: usize) -> Vec<f64> {
+        let mut y = vec![0.0f64; m * dout];
+        for i in 0..m {
+            for o in 0..dout {
+                let mut acc = 0.0;
+                for j in 0..din {
+                    acc += x[i * din + j] * w[o * din + j];
+                }
+                y[i * dout + o] = acc;
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn dense_matmul_matches_reference_bitwise() {
+        // small (serial path) and >= PAR_MIN_FLOPS (parallel path)
+        for (m, din, dout, seed) in [(3usize, 17usize, 5usize, 1u64), (64, 256, 256, 2)] {
+            let x = rand_x(m, din, seed);
+            let w = rand_x(dout, din, seed + 100);
+            let got = matmul_nt(&x, &w, m, din, dout);
+            let want = matmul_nt_ref(&x, &w, m, din, dout);
+            assert_eq!(got, want, "m={m} din={din} dout={dout}");
+        }
+    }
+
+    #[test]
+    fn dense_backward_kernels_match_reference_bitwise() {
+        for (m, dout, din, seed) in [(4usize, 9usize, 13usize, 3u64), (64, 256, 256, 4)] {
+            let dy = rand_x(m, dout, seed);
+            let w = rand_x(dout, din, seed + 1);
+            let x = rand_x(m, din, seed + 2);
+
+            let mut dx = vec![0.0f64; m * din];
+            matmul_nn_acc(&dy, &w, m, dout, din, &mut dx);
+            let mut dx_ref = vec![0.0f64; m * din];
+            for i in 0..m {
+                for o in 0..dout {
+                    let g = dy[i * dout + o];
+                    if g != 0.0 {
+                        for j in 0..din {
+                            dx_ref[i * din + j] += g * w[o * din + j];
+                        }
+                    }
+                }
+            }
+            assert_eq!(dx, dx_ref);
+
+            let mut dw = vec![0.0f64; dout * din];
+            accum_wgrad(&dy, &x, m, dout, din, &mut dw);
+            let mut dw_ref = vec![0.0f64; dout * din];
+            for i in 0..m {
+                for o in 0..dout {
+                    let g = dy[i * dout + o];
+                    if g != 0.0 {
+                        for j in 0..din {
+                            dw_ref[o * din + j] += g * x[i * din + j];
+                        }
+                    }
+                }
+            }
+            assert_eq!(dw, dw_ref);
+        }
+    }
+
+    #[test]
+    fn gram_matches_reference_bitwise() {
+        for (rows, d, seed) in [(7usize, 11usize, 5u64), (128, 192, 6)] {
+            let flat = rand_x(rows, d, seed);
+            let got = gram(&flat, d);
+            let mut want = vec![0.0f64; d * d];
+            for i in 0..rows {
+                for a in 0..d {
+                    let xa = flat[i * d + a];
+                    if xa != 0.0 {
+                        for b in 0..d {
+                            want[a * d + b] += xa * flat[i * d + b];
+                        }
+                    }
+                }
+            }
+            let want: Vec<f32> = want.iter().map(|&v| v as f32).collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn dequant_row_matches_packed_dequantize() {
+        // Every bitwidth incl. pruned + FP sentinel, ragged both dims:
+        // the specialized word-level decoders must agree with the
+        // generic PackedMat::dequantize reference exactly.
+        forall("dequant-row", Config { cases: 48, ..Config::default() }, |g| {
+            let br = *g.pick(&[4usize, 8, 16]);
+            let bc = *g.pick(&[4usize, 8, 16, 32]);
+            let rows = g.usize_in(1, 40);
+            let cols = g.usize_in(1, 48);
+            let w = {
+                let mut rng = Rng::new(g.rng.next_u64());
+                Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal_f32()).collect())
+                    .unwrap()
+            };
+            let nblocks = rows.div_ceil(br) * cols.div_ceil(bc);
+            let bits: Vec<i32> =
+                (0..nblocks).map(|_| *g.pick(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 16])).collect();
+            let pm = PackedMat::quantize(&w, &bits, br, bc);
+            let deq = pm.dequantize();
+            let mut buf = vec![0.0f64; cols];
+            for r in 0..rows {
+                dequant_row_into(&pm, r, &mut buf);
+                for c in 0..cols {
+                    crate::prop_assert!(
+                        buf[c] == deq.data[r * cols + c] as f64,
+                        "({r},{c}): {} vs {}",
+                        buf[c],
+                        deq.data[r * cols + c]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_gemm_matches_dequant_reference() {
+        // The ISSUE acceptance property: fused packed GEMM == reference
+        // matmul over PackedMat::dequantize() to <= 1e-5 rel (in fact
+        // bitwise, by the single-pass accumulation contract) for bits
+        // in {1,2,3,4,8}, ragged tails and FP_SENTINEL blocks.
+        forall("packed-gemm", Config { cases: 32, ..Config::default() }, |g| {
+            let br = *g.pick(&[4usize, 8, 16]);
+            let bc = *g.pick(&[4usize, 8, 16]);
+            let rows = g.usize_in(1, 33);
+            let cols = g.usize_in(1, 40);
+            let m = g.usize_in(1, 5);
+            let w = {
+                let mut rng = Rng::new(g.rng.next_u64());
+                Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal_f32()).collect())
+                    .unwrap()
+            };
+            let nblocks = rows.div_ceil(br) * cols.div_ceil(bc);
+            let bits: Vec<i32> =
+                (0..nblocks).map(|_| *g.pick(&[1, 2, 3, 4, 8, 9])).collect();
+            let pm = PackedMat::quantize(&w, &bits, br, bc);
+            let x = rand_x(m, cols, g.rng.next_u64());
+            let deq: Vec<f64> = pm.dequantize().data.iter().map(|&v| v as f64).collect();
+            let want = matmul_nt_ref(&x, &deq, m, cols, rows);
+            let got = matmul_nt_packed_threads(&x, &pm, m, 1);
+            for i in 0..want.len() {
+                let tol = 1e-5 * want[i].abs().max(1.0);
+                crate::prop_assert!(
+                    (got[i] - want[i]).abs() <= tol,
+                    "elem {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_gemm_exactly_tiled_fakequant_equivalence() {
+        // On exactly-tiled shapes (the model case), packed GEMM over
+        // quantized codes equals the dense kernel over the fakequant
+        // matrix BITWISE: same values, same accumulation order.
+        let w = rand_mat(32, 48, 11);
+        let bits = vec![4, 2, 8, 1, 3, 9, 4, 5, 2, 8, 16, 4];
+        assert_eq!(bits.len(), (32 / 8) * (48 / 16));
+        let pm = PackedMat::quantize(&w, &bits, 8, 16);
+        let fq = fakequant_mat(&w, &bits, 8, 16);
+        let fq64: Vec<f64> = fq.data.iter().map(|&v| v as f64).collect();
+        let x = rand_x(6, 48, 12);
+        let packed = matmul_nt_packed(&x, &pm, 6);
+        let dense = matmul_nt(&x, &fq64, 6, 48, 32);
+        assert_eq!(packed, dense);
+    }
+
+    #[test]
+    fn packed_gemm_deterministic_across_worker_counts() {
+        // The threadpool-determinism contract: same bits out at 1 and N
+        // workers (and at the auto-chosen count).
+        let w = rand_mat(64, 64, 21);
+        let bits: Vec<i32> = (0..(64 / 16) * (64 / 16))
+            .map(|i| [1, 2, 3, 4, 8, 9][i % 6])
+            .collect();
+        let pm = PackedMat::quantize(&w, &bits, 16, 16);
+        let x = rand_x(8, 64, 22);
+        let serial = matmul_nt_packed_threads(&x, &pm, 8, 1);
+        let par4 = matmul_nt_packed_threads(&x, &pm, 8, 4);
+        let auto = matmul_nt_packed(&x, &pm, 8);
+        let many = matmul_nt_packed_threads(&x, &pm, 8, threadpool::n_workers().max(2));
+        assert_eq!(serial, par4);
+        assert_eq!(serial, auto);
+        assert_eq!(serial, many);
+    }
+
+    #[test]
+    fn pruned_blocks_contribute_zero() {
+        let w = rand_mat(16, 16, 31);
+        let pm = PackedMat::quantize(&w, &[0], 16, 16);
+        let x = rand_x(2, 16, 32);
+        let y = matmul_nt_packed(&x, &pm, 2);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

@@ -10,6 +10,9 @@
 //! * **L3** (this crate) — everything at runtime: a multi-backend
 //!   execution runtime (the [`runtime::ExecBackend`] trait over the
 //!   PJRT engine AND a pure-Rust interpreter for artifact-less runs),
+//!   native packed mixed-precision GEMM kernels ([`kernel`]: fused
+//!   dequant×matmul over bit-plane blocks, per-block bitwidth
+//!   dispatch — the Table-4 "no runtime overhead" claim, natively),
 //!   the RTN quantizer and bit-packing, progressive sensitivity
 //!   estimation, bi-directional channel reordering, the scalable greedy
 //!   bitwidth search (the paper's Algorithm 1), baselines (classic
@@ -33,6 +36,7 @@ pub mod baselines;
 pub mod calib;
 pub mod coordinator;
 pub mod eval;
+pub mod kernel;
 pub mod linalg;
 pub mod model;
 pub mod quant;

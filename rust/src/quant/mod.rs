@@ -23,6 +23,22 @@ pub const SCALE_BITS: f64 = 16.0;
 // ---------------------------------------------------------------------
 // scalar RTN
 
+/// Symmetric RTN group scale at bitwidth `bits` ∈ 1..=8: the ONE place
+/// the amax/mean-abs reduction lives. [`fakequant_group`] and
+/// [`quant_group_codes`] both call it, so fake- and real-quantization
+/// can never drift — and callers that only need the scale (the GPTQ
+/// group-boundary refresh) get it in a single pass with no code
+/// materialization.
+pub fn group_scale(w: &[f32], bits: i32) -> f32 {
+    assert!((1..=8).contains(&bits));
+    if bits == 1 {
+        return w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32;
+    }
+    let qmax = (2.0f32).powi(bits - 1) - 1.0;
+    let amax = w.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    amax / qmax.max(1.0)
+}
+
 /// Fake-quantize one row-group (slice of `group` weights) at bitwidth b.
 /// Mirrors `rtn_group_fakequant_ref` in python/compile/kernels/ref.py.
 pub fn fakequant_group(w: &mut [f32], bits: i32) {
@@ -34,15 +50,14 @@ pub fn fakequant_group(w: &mut [f32], bits: i32) {
         return;
     }
     if bits == 1 {
-        let mean_abs = w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32;
+        let mean_abs = group_scale(w, 1);
         for x in w.iter_mut() {
             *x = if *x >= 0.0 { mean_abs } else { -mean_abs };
         }
         return;
     }
     let qmax = (2.0f32).powi(bits - 1) - 1.0;
-    let amax = w.iter().fold(0.0f32, |m, x| m.max(x.abs()));
-    let scale = amax / qmax.max(1.0);
+    let scale = group_scale(w, bits);
     let safe = if scale > 0.0 { scale } else { 1.0 };
     for x in w.iter_mut() {
         let q = (*x / safe).round_ties_even().clamp(-qmax, qmax);
@@ -54,13 +69,12 @@ pub fn fakequant_group(w: &mut [f32], bits: i32) {
 pub fn quant_group_codes(w: &[f32], bits: i32) -> (Vec<i8>, f32) {
     assert!((1..=8).contains(&bits));
     if bits == 1 {
-        let scale = w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32;
+        let scale = group_scale(w, 1);
         let codes = w.iter().map(|x| if *x >= 0.0 { 1i8 } else { -1i8 }).collect();
         return (codes, scale);
     }
     let qmax = (2.0f32).powi(bits - 1) - 1.0;
-    let amax = w.iter().fold(0.0f32, |m, x| m.max(x.abs()));
-    let scale = amax / qmax.max(1.0);
+    let scale = group_scale(w, bits);
     let safe = if scale > 0.0 { scale } else { 1.0 };
     let codes = w
         .iter()
@@ -272,44 +286,112 @@ pub fn unpack_codes(packed: &[u64], n: usize, bits: i32) -> Vec<i8> {
     out
 }
 
-/// A fully packed quantized matrix: per-block packed code words +
-/// per-(row, block-col) f32 scales. This is the storage format the
-/// serving path would ship; `dequantize` reconstructs the fake-quant
-/// matrix exactly.
+/// A fully packed quantized matrix in the BLOCK-ALIGNED layout the
+/// native kernels ([`crate::kernel`]) consume directly: one flat
+/// little-endian `u64` word stream, blocks in row-major block order,
+/// and — the kernel-critical invariant — every ROW SEGMENT inside a
+/// block starts on a fresh word. A kernel can therefore locate any
+/// (block, local-row) pair in O(1):
+///
+/// ```text
+/// words[word_off[blk] + local_row * words_per_row(block_width, bits)]
+/// ```
+///
+/// Per-block bitwidths are stored in EFFECTIVE form: `0` (pruned),
+/// `1..=8` (two's-complement codes; 1-bit stores sign bits), or
+/// [`FP_SENTINEL_BITS`] (raw f32 passthrough, two values per word —
+/// full-precision blocks survive packing instead of being clamped to
+/// 8 bits). Ragged edge blocks (rows/cols not divisible by the block
+/// shape) are supported; the model path always tiles exactly.
+///
+/// `dequantize` reconstructs the fake-quant matrix exactly (same f32
+/// arithmetic as [`fakequant_mat`]).
 pub struct PackedMat {
     pub rows: usize,
     pub cols: usize,
     pub block_rows: usize,
     pub block_cols: usize,
+    /// Effective per-block bitwidth: 0, 1..=8, or FP_SENTINEL_BITS.
     pub bits: Vec<i32>,
-    /// One packed stream per block (row-major code order inside block).
-    pub blocks: Vec<Vec<u64>>,
-    /// scales[row][block_col]
+    /// Flat word stream, row-segment-aligned (see type docs).
+    pub words: Vec<u64>,
+    /// Per-block word offsets, `n_blocks + 1` entries; recomputable
+    /// from `bits` + shape alone (the packfile relies on this).
+    pub word_off: Vec<usize>,
+    /// scales[row * n_block_cols + block_col] (1.0 for FP blocks).
     pub scales: Vec<f32>,
 }
 
 impl PackedMat {
+    pub fn n_block_rows(&self) -> usize {
+        self.rows.div_ceil(self.block_rows)
+    }
+
+    pub fn n_block_cols(&self) -> usize {
+        self.cols.div_ceil(self.block_cols)
+    }
+
+    /// Map a requested bitwidth onto the stored effective form.
+    pub fn effective_bits(raw: i32) -> i32 {
+        if raw >= FP_SENTINEL_BITS {
+            FP_SENTINEL_BITS
+        } else {
+            raw.clamp(0, 8)
+        }
+    }
+
+    /// Words one row segment of `bw` codes occupies at `bits`.
+    pub fn words_per_row(bw: usize, bits: i32) -> usize {
+        if bits <= 0 {
+            0
+        } else if bits >= FP_SENTINEL_BITS {
+            bw.div_ceil(2) // raw f32, two per word
+        } else {
+            (bw * bits as usize).div_ceil(64)
+        }
+    }
+
     pub fn quantize(w: &Mat, bits: &[i32], block_rows: usize, block_cols: usize) -> PackedMat {
-        let (nbr, nbc) = (w.rows / block_rows, w.cols / block_cols);
-        assert_eq!(bits.len(), nbr * nbc);
-        let mut blocks = Vec::with_capacity(nbr * nbc);
+        let nbr = w.rows.div_ceil(block_rows);
+        let nbc = w.cols.div_ceil(block_cols);
+        assert_eq!(bits.len(), nbr * nbc, "bit grid mismatch");
+        let mut eff = Vec::with_capacity(nbr * nbc);
+        let mut words: Vec<u64> = Vec::new();
+        let mut word_off = Vec::with_capacity(nbr * nbc + 1);
+        word_off.push(0);
         let mut scales = vec![0.0f32; w.rows * nbc];
         for bi in 0..nbr {
+            let bh = block_rows.min(w.rows - bi * block_rows);
             for bj in 0..nbc {
-                let b = bits[bi * nbc + bj].clamp(0, 8);
-                if b == 0 {
-                    blocks.push(Vec::new());
-                    continue;
+                let b = Self::effective_bits(bits[bi * nbc + bj]);
+                eff.push(b);
+                let c0 = bj * block_cols;
+                let bw = block_cols.min(w.cols - c0);
+                if b > 0 {
+                    for r in 0..bh {
+                        let row = bi * block_rows + r;
+                        let seg = &w.data[row * w.cols + c0..row * w.cols + c0 + bw];
+                        if b >= FP_SENTINEL_BITS {
+                            scales[row * nbc + bj] = 1.0;
+                            let mut t = 0;
+                            while t < bw {
+                                let lo = seg[t].to_bits() as u64;
+                                let hi = if t + 1 < bw {
+                                    (seg[t + 1].to_bits() as u64) << 32
+                                } else {
+                                    0
+                                };
+                                words.push(lo | hi);
+                                t += 2;
+                            }
+                        } else {
+                            let (codes, s) = quant_group_codes(seg, b);
+                            scales[row * nbc + bj] = s;
+                            words.extend_from_slice(&pack_codes(&codes, b));
+                        }
+                    }
                 }
-                let mut codes = Vec::with_capacity(block_rows * block_cols);
-                for r in 0..block_rows {
-                    let row = bi * block_rows + r;
-                    let start = row * w.cols + bj * block_cols;
-                    let (c, s) = quant_group_codes(&w.data[start..start + block_cols], b);
-                    scales[row * nbc + bj] = s;
-                    codes.extend_from_slice(&c);
-                }
-                blocks.push(pack_codes(&codes, b));
+                word_off.push(words.len());
             }
         }
         PackedMat {
@@ -317,30 +399,44 @@ impl PackedMat {
             cols: w.cols,
             block_rows,
             block_cols,
-            bits: bits.iter().map(|&b| b.clamp(0, 8)).collect(),
-            blocks,
+            bits: eff,
+            words,
+            word_off,
             scales,
         }
     }
 
     pub fn dequantize(&self) -> Mat {
-        let (nbr, nbc) = (self.rows / self.block_rows, self.cols / self.block_cols);
+        let (nbr, nbc) = (self.n_block_rows(), self.n_block_cols());
         let mut out = Mat::zeros(self.rows, self.cols);
         for bi in 0..nbr {
+            let bh = self.block_rows.min(self.rows - bi * self.block_rows);
             for bj in 0..nbc {
-                let b = self.bits[bi * nbc + bj];
+                let blk = bi * nbc + bj;
+                let b = self.bits[blk];
                 if b == 0 {
                     continue;
                 }
-                let codes =
-                    unpack_codes(&self.blocks[bi * nbc + bj], self.block_rows * self.block_cols, b);
-                for r in 0..self.block_rows {
+                let c0 = bj * self.block_cols;
+                let bw = self.block_cols.min(self.cols - c0);
+                let wpr = Self::words_per_row(bw, b);
+                for r in 0..bh {
                     let row = bi * self.block_rows + r;
-                    let scale = self.scales[row * nbc + bj];
-                    for c in 0..self.block_cols {
-                        let col = bj * self.block_cols + c;
-                        out.data[row * self.cols + col] =
-                            codes[r * self.block_cols + c] as f32 * scale;
+                    let seg = &self.words[self.word_off[blk] + r * wpr..][..wpr];
+                    let dst = &mut out.data[row * self.cols + c0..][..bw];
+                    if b >= FP_SENTINEL_BITS {
+                        for (t, d) in dst.iter_mut().enumerate() {
+                            let word = seg[t >> 1];
+                            let bits32 =
+                                if t & 1 == 1 { (word >> 32) as u32 } else { word as u32 };
+                            *d = f32::from_bits(bits32);
+                        }
+                    } else {
+                        let codes = unpack_codes(seg, bw, b);
+                        let s = self.scales[row * nbc + bj];
+                        for (t, d) in dst.iter_mut().enumerate() {
+                            *d = codes[t] as f32 * s;
+                        }
                     }
                 }
             }
@@ -348,11 +444,9 @@ impl PackedMat {
         out
     }
 
-    /// Packed storage footprint in bytes (codes + f16 scales).
+    /// Packed storage footprint in bytes (code/FP words + f16 scales).
     pub fn storage_bytes(&self) -> usize {
-        let code_bytes: usize = self.blocks.iter().map(|b| b.len() * 8).sum();
-        let scale_bytes = self.scales.len() * 2; // f16 scales on disk
-        code_bytes + scale_bytes
+        self.words.len() * 8 + self.scales.len() * 2 // f16 scales on disk
     }
 }
 
@@ -466,6 +560,100 @@ mod tests {
                 fq.data[i]
             );
         }
+    }
+
+    #[test]
+    fn group_scale_is_the_shared_reduction() {
+        forall("group-scale-shared", Config::default(), |g| {
+            let bits = g.i32_in(1, 8);
+            let n = g.usize_in(1, 64);
+            let w = g.vec_f32(n);
+            let s = group_scale(&w, bits);
+            let (_, s2) = quant_group_codes(&w, bits);
+            crate::prop_assert!(s == s2, "bits={bits}: {s} vs {s2}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_fp_sentinel_blocks_pass_through() {
+        let w = rand_mat(32, 32, 13);
+        // one FP block, one pruned, two coded
+        let packed = PackedMat::quantize(&w, &[FP_SENTINEL_BITS, 0, 4, 16], 16, 16);
+        assert_eq!(packed.bits, vec![9, 0, 4, 9]);
+        let deq = packed.dequantize();
+        for r in 0..16 {
+            for c in 0..16 {
+                // block (0,0) and (1,1) are FP: exact raw weights
+                assert_eq!(deq.at(r, c), w.at(r, c), "fp block ({r},{c})");
+                assert_eq!(deq.at(16 + r, 16 + c), w.at(16 + r, 16 + c));
+                // block (0,1) is pruned
+                assert_eq!(deq.at(r, 16 + c), 0.0);
+            }
+        }
+        let fq = fakequant_mat(&w, &[FP_SENTINEL_BITS, 0, 4, 16], 16, 16);
+        for i in 0..fq.data.len() {
+            assert_eq!(deq.data[i], fq.data[i], "elem {i}");
+        }
+    }
+
+    #[test]
+    fn packed_ragged_tails_roundtrip() {
+        // 20x24 with 16x16 blocks: ragged in both dimensions.
+        let w = rand_mat(20, 24, 14);
+        let bits = vec![3, 5, 8, 9];
+        let packed = PackedMat::quantize(&w, &bits, 16, 16);
+        assert_eq!((packed.n_block_rows(), packed.n_block_cols()), (2, 2));
+        let deq = packed.dequantize();
+        let fq = fakequant_ragged_ref(&w, &bits, 16, 16);
+        for i in 0..deq.data.len() {
+            assert!(
+                (deq.data[i] - fq.data[i]).abs() < 1e-6,
+                "elem {i}: {} vs {}",
+                deq.data[i],
+                fq.data[i]
+            );
+        }
+    }
+
+    /// Reference ragged fakequant (fakequant_mat requires exact tiling).
+    fn fakequant_ragged_ref(w: &Mat, bits: &[i32], br: usize, bc: usize) -> Mat {
+        let (nbr, nbc) = (w.rows.div_ceil(br), w.cols.div_ceil(bc));
+        let mut out = w.clone();
+        for bi in 0..nbr {
+            let bh = br.min(w.rows - bi * br);
+            for bj in 0..nbc {
+                let bw = bc.min(w.cols - bj * bc);
+                let b = bits[bi * nbc + bj];
+                for r in 0..bh {
+                    let row = bi * br + r;
+                    let start = row * w.cols + bj * bc;
+                    fakequant_group(&mut out.data[start..start + bw], b);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn packed_word_offsets_recomputable_from_bits() {
+        // The packfile reader rebuilds word_off from the bits grid
+        // alone; the two derivations must agree for every layout.
+        let w = rand_mat(20, 24, 15);
+        let bits = vec![1, 9, 0, 7];
+        let packed = PackedMat::quantize(&w, &bits, 16, 16);
+        let (nbr, nbc) = (2usize, 2usize);
+        let mut off = vec![0usize];
+        for bi in 0..nbr {
+            let bh = 16.min(20 - bi * 16);
+            for bj in 0..nbc {
+                let bw = 16.min(24 - bj * 16);
+                let b = packed.bits[bi * nbc + bj];
+                off.push(off.last().unwrap() + bh * PackedMat::words_per_row(bw, b));
+            }
+        }
+        assert_eq!(off, packed.word_off);
+        assert_eq!(*off.last().unwrap(), packed.words.len());
     }
 
     #[test]

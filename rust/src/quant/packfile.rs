@@ -8,11 +8,17 @@
 //! process can start from the packed file alone.
 //!
 //! Layout (little endian):
-//!   magic "SBITS1\0\0" (8)  | manifest-json length u32 | manifest json
+//!   magic "SBITS2\0\0" (8)  | manifest-json length u32 | manifest json
 //!   then per quantized matrix in manifest order:
-//!     bits grid (i8 per block) | scales (f16 per row x block-col)
-//!     | packed code words (u64 stream per block, concatenated)
+//!     bits grid (u8 per block: 0, 1..=8, or 9 = FP passthrough)
+//!     | scales (f16 per row x block-col)
+//!     | the PackedMat word stream (row-segment-aligned u64s; per-block
+//!       word counts are recomputed from the bits grid on load)
 //!   then unquantized params as raw f32.
+//!
+//! SBITS2 switched the code stream to the block-aligned layout the
+//! native kernels index in O(1) (see [`PackedMat`]), and made
+//! FP-sentinel blocks raw-f32 passthrough instead of clamping to 8-bit.
 
 use std::io::Write;
 use std::path::Path;
@@ -24,7 +30,7 @@ use crate::model::{Manifest, WeightStore};
 use crate::tensor::Mat;
 use crate::util::json::Json;
 
-const MAGIC: &[u8; 8] = b"SBITS1\0\0";
+const MAGIC: &[u8; 8] = b"SBITS2\0\0";
 
 /// f32 -> f16 bits (round-to-nearest-even via f64 is overkill; standard
 /// truncating round is fine for scale storage).
@@ -98,10 +104,8 @@ pub fn write_packfile(
         for &s in &pm.scales {
             out.extend_from_slice(&f32_to_f16_bits(s).to_le_bytes());
         }
-        for blk in &pm.blocks {
-            for &word in blk {
-                out.extend_from_slice(&word.to_le_bytes());
-            }
+        for &word in &pm.words {
+            out.extend_from_slice(&word.to_le_bytes());
         }
     }
     // unquantized params raw f32
@@ -131,7 +135,7 @@ pub fn read_packfile(
 ) -> Result<(WeightStore, BitAlloc)> {
     let bytes = std::fs::read(path).map_err(|e| anyhow!("read {}: {e}", path.display()))?;
     if bytes.len() < 12 || &bytes[..8] != MAGIC {
-        bail!("{}: not an SBITS1 file", path.display());
+        bail!("{}: not an SBITS2 file", path.display());
     }
     let meta_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
     let mut pos = 12 + meta_len;
@@ -155,30 +159,35 @@ pub fn read_packfile(
             scales.push(f16_bits_to_f32(h));
         }
         pos += 2 * nscales;
-        // packed blocks
-        let mut blocks = Vec::with_capacity(nblocks);
-        for &b in &grid {
-            if b == 0 {
-                blocks.push(Vec::new());
-                continue;
+        // word stream: per-block counts recomputed from the bits grid
+        // (row-segment-aligned layout; model matrices tile exactly, but
+        // the ragged formula is used for parity with PackedMat).
+        let mut word_off = Vec::with_capacity(nblocks + 1);
+        word_off.push(0usize);
+        for bi in 0..gr {
+            let bh = br.min(p.rows() - bi * br);
+            for bj in 0..gc {
+                let bw = bc.min(p.cols() - bj * bc);
+                let b = grid[bi * gc + bj];
+                word_off.push(word_off.last().unwrap() + bh * PackedMat::words_per_row(bw, b));
             }
-            let nwords = (br * bc * b as usize).div_ceil(64);
-            let mut words = Vec::with_capacity(nwords);
-            for i in 0..nwords {
-                words.push(u64::from_le_bytes(
-                    bytes[pos + 8 * i..pos + 8 * i + 8].try_into().unwrap(),
-                ));
-            }
-            pos += 8 * nwords;
-            blocks.push(words);
         }
+        let nwords = *word_off.last().unwrap();
+        let mut words = Vec::with_capacity(nwords);
+        for i in 0..nwords {
+            words.push(u64::from_le_bytes(
+                bytes[pos + 8 * i..pos + 8 * i + 8].try_into().unwrap(),
+            ));
+        }
+        pos += 8 * nwords;
         let pm = PackedMat {
             rows: p.rows(),
             cols: p.cols(),
             block_rows: br,
             block_cols: bc,
             bits: grid.clone(),
-            blocks,
+            words,
+            word_off,
             scales,
         };
         mats.insert(name.clone(), pm.dequantize());

@@ -109,7 +109,11 @@ impl<'a> SearchContext<'a> {
     // The search loop mutates the allocation every iteration, so it
     // deliberately stays on the grid-upload path (the tiny int32 grids
     // are the only re-uploaded input); fixed-allocation callers
-    // (serving, eval) pin grids on device instead.
+    // (serving, eval) pin grids on device instead. On the interpreter
+    // backend the host-side fakequant cost of this path is DELTA
+    // re-quantization: only blocks whose bitwidth changed since the
+    // previous call are re-fake-quantized, so a greedy move that
+    // touches k blocks costs O(k · block) instead of O(model).
     pub fn qloss(&self, tokens: &[i32], alloc: &BitAlloc) -> Result<f64> {
         let grids = alloc.grids(self.index);
         let out = self.backend.run_model_host_grids("qloss", tokens, &grids, self.wbufs)?;

@@ -511,6 +511,127 @@ fn serve_path_uploads_tokens_only() {
     assert_eq!(t.bytes, 3 * (batch * seq * 4) as u64);
 }
 
+/// Serving equivalence for the packed-kernel path: `qlogits` at a
+/// mixed-precision grid must equal quantizing host-side (the rust RTN
+/// mirror) and serving the result at the FP sentinel. On the
+/// interpreter the first run goes through the fused packed kernels and
+/// the second through FP-passthrough blocks, so this pins the
+/// compressed serving path to the dense fake-quant reference —
+/// bitwise on interp, f32-tolerance on PJRT.
+#[test]
+fn packed_serving_qlogits_match_host_fakequant_reference() {
+    let (kind, dir) = setup();
+    let p = Pipeline::load_with(kind, &dir, &["qlogits", "qpredict"]).unwrap();
+    let mut sampler = p.sampler(23);
+    let tokens = sampler.sample(p.batch_of("qlogits").unwrap());
+    let mut alloc = BitAlloc::uniform(&p.index, 4);
+    for (i, b) in alloc.bits.iter_mut().enumerate() {
+        *b = [1, 2, 3, 4, 8, 16][i % 6];
+    }
+    let grids = alloc.grids(&p.index);
+    let quantized =
+        p.backend.run_model_host_grids("qlogits", &tokens, &grids, &p.wbufs).unwrap()[0]
+            .to_vec_f32()
+            .unwrap();
+
+    // host-side fakequant + FP-sentinel serve of the result
+    let mut store = p.store.clone();
+    for (mi, name) in p.index.mats.iter().enumerate() {
+        let grid = &alloc.bits[p.index.mat_range(mi)];
+        let wq = fakequant_mat(
+            p.store.get(name).unwrap(),
+            grid,
+            p.index.block_rows,
+            p.index.block_cols,
+        );
+        *store.get_mut(name).unwrap() = wq;
+    }
+    let bufs = p.backend.upload_weights(&store).unwrap();
+    let fp_grids = p.fp_alloc().grids(&p.index);
+    let reference =
+        p.backend.run_model_host_grids("qlogits", &tokens, &fp_grids, &bufs).unwrap()[0]
+            .to_vec_f32()
+            .unwrap();
+
+    assert_eq!(quantized.len(), reference.len());
+    let mut max_abs = 0.0f32;
+    for (a, b) in quantized.iter().zip(&reference) {
+        max_abs = max_abs.max((a - b).abs());
+    }
+    if kind == BackendKind::Interp {
+        assert_eq!(quantized, reference, "packed serving path diverged (max abs {max_abs})");
+    } else {
+        assert!(max_abs < 2e-3, "packed serving path diverged: {max_abs}");
+    }
+
+    // qpredict (the serve workers' fast path) must agree with the
+    // argmax of the packed logits
+    let preds = p.backend.run_model_host_grids("qpredict", &tokens, &grids, &p.wbufs).unwrap()[0]
+        .to_vec_i32()
+        .unwrap();
+    let vocab = p.manifest().config.vocab;
+    for (i, row) in quantized.chunks_exact(vocab).enumerate() {
+        let mut best = 0usize;
+        for (j, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = j;
+            }
+        }
+        assert_eq!(preds[i], best as i32, "position {i}");
+    }
+}
+
+/// The end-to-end serving round-trip off compressed weights: a router
+/// worker serving a mixed-precision allocation must return the same
+/// next-token predictions as the host-side dense fake-quant reference.
+#[test]
+fn server_round_trip_packed_weights_match_dense_reference() {
+    let (kind, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut alloc = BitAlloc::uniform(&index, 4);
+    for (i, b) in alloc.bits.iter_mut().enumerate() {
+        *b = [2, 4, 8][i % 3];
+    }
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), alloc.clone());
+    cfg.backend = kind;
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..4 {
+        rxs.push(server.submit(stream.tokens[i * 64..i * 64 + m.config.seq_len].to_vec()).unwrap());
+    }
+    let served: Vec<i32> = rxs.into_iter().map(|rx| rx.recv().unwrap().next_token).collect();
+    server.shutdown().unwrap();
+
+    // dense reference: qlogits over the same resident state, argmax at
+    // the last position of each request window
+    let p = Pipeline::load_with(kind, &dir, &["qlogits"]).unwrap();
+    let batch = p.batch_of("qlogits").unwrap();
+    let seq = m.config.seq_len;
+    let vocab = m.config.vocab;
+    let grids = alloc.grids(&index);
+    for (i, &got) in served.iter().enumerate() {
+        let window = &stream.tokens[i * 64..i * 64 + seq];
+        let mut tokens = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            tokens.extend_from_slice(window);
+        }
+        let logits = p.backend.run_model_host_grids("qlogits", &tokens, &grids, &p.wbufs).unwrap()
+            [0]
+            .to_vec_f32()
+            .unwrap();
+        let row = &logits[(seq - 1) * vocab..seq * vocab];
+        let mut best = 0usize;
+        for (v, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = v;
+            }
+        }
+        assert_eq!(got, best as i32, "request {i}: served token diverged from dense reference");
+    }
+}
+
 // ---------------------------------------------------------------------
 // weight store + manifest sanity (both backends)
 
@@ -616,7 +737,9 @@ fn packfile_roundtrip_bit_exact() {
     let mut rng = scalebits::util::rng::Rng::new(21);
     let mut alloc = BitAlloc::uniform(&index, 3);
     for b in alloc.bits.iter_mut() {
-        *b = rng.range(1, 9) as i32;
+        // 1..=8 plus the FP sentinel: full-precision blocks must
+        // survive packing as raw f32 (SBITS2), not clamp to 8-bit
+        *b = rng.range(1, 10) as i32;
     }
     let path = std::env::temp_dir().join("scalebits_test_model.sbits");
     let n = scalebits::quant::packfile::write_packfile(&path, &m, &index, &store, &alloc)
