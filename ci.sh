@@ -49,14 +49,22 @@ fi
 echo "== cargo build --release"
 cargo build --release --offline
 
+echo "== cargo build --release --examples"
+# Examples live at ../examples and are NOT part of the default build
+# targets; without this step they only compile by luck (clippy's
+# --all-targets). Build them explicitly so API drift fails here.
+cargo build --release --offline --examples
+
 if [[ "$LANE" == "bench-smoke" ]]; then
-  # Fast kernel-regression lane: the kernel bench verifies the fused
-  # packed GEMM bitwise against dequantize+reference before timing, and
-  # the serve bench round-trips the full router/session stack; both run
-  # artifact-less (synthetic model on the interpreter backend).
+  # Fast regression lane: the kernel bench verifies the fused packed
+  # GEMM bitwise against dequantize+reference before timing, and the
+  # serve bench runs the decode-mode serving stack end-to-end
+  # (multi-token continuous batching + the deadline/cancel lifecycle
+  # round-trip); both run artifact-less (synthetic model on the
+  # interpreter backend).
   echo "== bench smoke: bench_kernel"
   cargo bench --offline --bench bench_kernel -- --smoke
-  echo "== bench smoke: bench_serve"
+  echo "== bench smoke: bench_serve (decode mode)"
   cargo bench --offline --bench bench_serve -- --smoke
   echo "CI OK (${LANE})"
   exit 0

@@ -1,30 +1,67 @@
-//! Pareto sweep (Figure 1 analog): trace the perplexity–bits frontier.
+//! Pareto sweep (Figure 1 analog): trace the perplexity–bits frontier,
+//! optionally annotated with SERVED decode throughput per operating
+//! point (quality AND serving cost of each allocation, one csv).
 //!
 //! ScaleBITS reaches arbitrary budgets; uniform RTN only has discrete
-//! points. The sweep writes results/pareto.csv for plotting.
+//! points. The sweep writes results/pareto.csv for plotting. With
+//! `--serve-requests N` (default 8, 0 disables) every operating point
+//! is additionally served through the continuous-batching router for N
+//! multi-token sessions and the measured decode tokens/sec lands in
+//! the `serve_tps` column.
 //!
-//! Run: cargo run --release --offline --example pareto_sweep [-- --points 5]
+//! Run: cargo run --release --offline --example pareto_sweep
+//!      [-- --points 5 --serve-requests 8]
 
 use std::io::Write;
 
 use scalebits::coordinator::Pipeline;
 use scalebits::quant::BitAlloc;
 use scalebits::search::SearchConfig;
+use scalebits::serve::{run_workload, Router, ServeConfig, WorkloadSpec};
 use scalebits::util::cli::Args;
+
+/// Decode throughput of one allocation through the serving stack
+/// (0.0 when serving is disabled).
+fn served_tps(
+    artifacts: &std::path::Path,
+    p: &Pipeline,
+    alloc: &BitAlloc,
+    n_requests: usize,
+) -> anyhow::Result<f64> {
+    if n_requests == 0 {
+        return Ok(0.0);
+    }
+    let stream = scalebits::calib::TokenStream::from_manifest(p.manifest(), "eval")?;
+    let seq = p.manifest().config.seq_len;
+    let mut cfg = ServeConfig::new(artifacts.to_path_buf(), alloc.clone());
+    cfg.backend = p.backend.kind();
+    let mut server = Router::start(cfg)?;
+    let spec = WorkloadSpec::new(seq, n_requests, 200.0, 13).max_new_tokens(4);
+    let wl = run_workload(&mut server, &stream, &spec)?;
+    server.shutdown()?;
+    Ok(wl.decode_tps())
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&[]);
     let points = args.usize_or("points", 7)?;
+    let serve_requests = args.usize_or("serve-requests", 8)?;
     let artifacts = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
 
     let mut p = Pipeline::load_full(&artifacts)?;
-    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    let mut rows: Vec<(String, f64, f64, f64, f64)> = Vec::new();
 
     println!("== uniform RTN operating points ==");
     for bits in [2, 3, 4] {
-        let r = p.eval_alloc(&BitAlloc::uniform(&p.index, bits))?;
-        println!("  uniform {bits}b: ppl {:8.2}  acc {:5.1}%", r.perplexity, 100.0 * r.task_accuracy);
-        rows.push(("uniform".into(), r.avg_bits, r.perplexity, r.task_accuracy));
+        let alloc = BitAlloc::uniform(&p.index, bits);
+        let r = p.eval_alloc(&alloc)?;
+        let tps = served_tps(&artifacts, &p, &alloc, serve_requests)?;
+        println!(
+            "  uniform {bits}b: ppl {:8.2}  acc {:5.1}%  serve {tps:7.1} tok/s",
+            r.perplexity,
+            100.0 * r.task_accuracy
+        );
+        rows.push(("uniform".into(), r.avg_bits, r.perplexity, r.task_accuracy, tps));
     }
 
     println!("== ScaleBITS frontier ==");
@@ -34,22 +71,24 @@ fn main() -> anyhow::Result<()> {
         let cfg = SearchConfig { budget, seed: 42, ..Default::default() };
         let res = p.search(&cfg)?;
         let r = p.eval_alloc(&res.alloc)?;
+        let tps = served_tps(&artifacts, &p, &res.alloc, serve_requests)?;
         println!(
-            "  budget {budget:4.2}: avg {:4.2}b  ppl {:8.2}  acc {:5.1}%  ({} iters, {:.1}s)",
+            "  budget {budget:4.2}: avg {:4.2}b  ppl {:8.2}  acc {:5.1}%  serve {tps:7.1} tok/s  \
+             ({} iters, {:.1}s)",
             r.avg_bits,
             r.perplexity,
             100.0 * r.task_accuracy,
             res.iters.len(),
             res.wall_secs
         );
-        rows.push(("scalebits".into(), r.avg_bits, r.perplexity, r.task_accuracy));
+        rows.push(("scalebits".into(), r.avg_bits, r.perplexity, r.task_accuracy, tps));
     }
 
     std::fs::create_dir_all("results")?;
     let mut f = std::fs::File::create("results/pareto.csv")?;
-    writeln!(f, "method,bits,ppl,task_acc")?;
-    for (m, b, ppl, acc) in &rows {
-        writeln!(f, "{m},{b:.3},{ppl:.4},{acc:.4}")?;
+    writeln!(f, "method,bits,ppl,task_acc,serve_tps")?;
+    for (m, b, ppl, acc, tps) in &rows {
+        writeln!(f, "{m},{b:.3},{ppl:.4},{acc:.4},{tps:.2}")?;
     }
     println!("wrote results/pareto.csv ({} rows)", rows.len());
     Ok(())

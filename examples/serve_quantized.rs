@@ -1,21 +1,24 @@
-//! Serving demo: batched next-token service over the quantized model,
-//! through the multi-worker router.
+//! Serving demo: multi-token decode sessions over the quantized model,
+//! through the continuous-batching multi-worker router.
 //!
-//! Demonstrates the paper's §5.3 claim end-to-end: a MIXED-precision
-//! bit allocation served through the same compiled executable has the
-//! same latency as a uniform one at equal average bits — the request
-//! path never branches on precision. The worker sweep additionally
-//! shows the scaling the router buys: each worker owns its own PJRT
-//! engine with device-resident weights and bit grids, so adding
-//! workers multiplies capacity without touching the request path.
+//! Demonstrates the paper's §5.3 claim end-to-end under a DECODE load:
+//! a MIXED-precision bit allocation served through the same executable
+//! has the same request and inter-token latency as a uniform one at
+//! equal average bits — the request path never branches on precision.
+//! The worker sweep additionally shows the scaling the router buys:
+//! each worker owns its own engine with device-resident weights and
+//! bit grids, so adding workers multiplies decode capacity without
+//! touching the request path. A final vignette walks the request
+//! lifecycle explicitly: streaming a ticket token by token, then
+//! cancelling a long generation mid-decode.
 //!
 //! Run: cargo run --release --offline --example serve_quantized
-//!      [-- --requests 24 --rate 100 --workers 4]
+//!      [-- --requests 24 --rate 100 --workers 4 --max-new-tokens 8]
 
 use scalebits::calib::TokenStream;
 use scalebits::model::Manifest;
 use scalebits::quant::{BitAlloc, BlockIndex};
-use scalebits::serve::{run_workload, Router, ServeConfig};
+use scalebits::serve::{run_workload, Finish, GenRequest, Router, ServeConfig, WorkloadSpec};
 use scalebits::util::cli::Args;
 use scalebits::util::rng::Rng;
 
@@ -24,6 +27,7 @@ fn main() -> anyhow::Result<()> {
     let n = args.usize_or("requests", 24)?;
     let rate = args.f64_or("rate", 100.0)?;
     let max_workers = args.usize_or("workers", 4)?;
+    let max_new = args.usize_or("max-new-tokens", 8)?;
     let artifacts = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
 
     let m = Manifest::load(&artifacts)?;
@@ -43,28 +47,54 @@ fn main() -> anyhow::Result<()> {
         };
     }
     println!(
-        "uniform avg bits {:.2} | mixed avg bits {:.2} (40% INT2 / 40% INT4 / 20% INT8)",
+        "uniform avg bits {:.2} | mixed avg bits {:.2} (40% INT2 / 40% INT4 / 20% INT8), \
+         {max_new} tokens per request",
         uniform.avg_bits(),
         mixed.avg_bits()
     );
 
     let sweeps: Vec<usize> = if max_workers > 1 { vec![1, max_workers] } else { vec![1] };
-    for (label, alloc) in [("uniform-4bit", uniform), ("mixed-2/4/8", mixed)] {
+    for (label, alloc) in [("uniform-4bit", uniform.clone()), ("mixed-2/4/8", mixed)] {
         for &workers in &sweeps {
             let mut cfg = ServeConfig::new(artifacts.clone(), alloc.clone());
             cfg.workers = workers;
             let mut server = Router::start(cfg)?;
-            let wl = run_workload(&mut server, &stream, seq, n, rate, 7)?;
+            let spec = WorkloadSpec::new(seq, n, rate, 7).max_new_tokens(max_new);
+            let wl = run_workload(&mut server, &stream, &spec)?;
             let report = server.shutdown()?;
             println!(
-                "{} | {:.1} req/s, {} batches, occupancy {:.2}",
-                report.total.latency.line(&format!("{label} x{workers}w")),
+                "{} | {:.1} req/s, {:.1} tok/s, decode depth {:.2}",
+                report.total.inter_token.line(&format!("ITL {label} x{workers}w")),
                 wl.throughput_rps(),
-                report.total.batches,
-                report.total.mean_occupancy()
+                wl.decode_tps(),
+                report.total.mean_decode_depth()
             );
         }
     }
     println!("(matching per-allocation latencies ==> mixed precision adds no request-path overhead)");
+
+    // -- lifecycle vignette: stream one ticket, cancel another --------
+    let mut cfg = ServeConfig::new(artifacts.clone(), uniform);
+    cfg.workers = 1;
+    let mut server = Router::start(cfg)?;
+    let mut streamed = server
+        .submit_request(GenRequest::new(stream.tokens[..seq].to_vec()).max_new_tokens(4))?;
+    print!("streamed tokens:");
+    while let Some(ev) = streamed.recv_token()? {
+        print!(" {} (+{:.0}us)", ev.token, ev.latency.as_secs_f64() * 1e6);
+    }
+    println!(" -> {}", streamed.outcome().expect("terminal").finish.name());
+
+    let mut doomed = server
+        .submit_request(GenRequest::new(stream.tokens[..seq].to_vec()).max_new_tokens(1_000_000))?;
+    doomed.try_cancel();
+    let outcome = doomed.wait()?;
+    assert_eq!(outcome.finish, Finish::Cancelled);
+    println!(
+        "cancelled after {} token(s): finish = {}",
+        outcome.tokens.len(),
+        outcome.finish.name()
+    );
+    server.shutdown()?;
     Ok(())
 }

@@ -1,14 +1,18 @@
-//! Bench: serving-path throughput/latency (end-to-end Table 4 claim).
+//! Bench: serving-path throughput/latency (end-to-end Table 4 claim)
+//! under a continuous-batching DECODE load.
 //!
 //! Three measurements through the serving stack:
 //!   1. raw single-request floor (qlogits_b1 through a device-resident
 //!      Session — token-only upload per call),
-//!   2. multi-worker throughput sweep (1/2/4 workers, uniform 4-bit)
-//!      under an offered load well above single-worker capacity,
+//!   2. multi-worker decode sweep (1/2/4 workers, uniform 4-bit,
+//!      multi-token sessions): request throughput, decode throughput
+//!      (tokens/sec) and inter-token p50/p95/p99 under an offered load
+//!      well above single-worker capacity,
 //!   3. the §5.3 check at 4 workers: mixed 2/4/8 grids vs uniform must
 //!      show matching latency (the request path never branches on
 //!      precision — on the interpreter backend both run the same fused
-//!      packed kernels off resident compressed weights).
+//!      packed kernels off resident compressed weights, token after
+//!      token).
 //!
 //! Backend: auto-detected. With `rust/artifacts/` present the sweep
 //! runs on PJRT; without artifacts it generates a deterministic
@@ -16,16 +20,19 @@
 //! works in an artifact-less container (and `ci.sh --bench-smoke` can
 //! gate it).
 //!
-//! Emits `../BENCH_serve.json` (repo root: throughput, p50/p99,
-//! occupancy, 4w/1w speedup; all post-warmup) unless --smoke.
+//! Emits `../BENCH_serve.json` (repo root: request + decode
+//! throughput, request p50/p99, inter-token p50/p95/p99, decode-set
+//! depth, 4w/1w speedup; all post-warmup) unless --smoke.
 //!
 //! Run: cargo bench --offline --bench bench_serve [-- --smoke]
+
+use std::time::Duration;
 
 use scalebits::calib::TokenStream;
 use scalebits::model::Manifest;
 use scalebits::quant::{BitAlloc, BlockIndex};
 use scalebits::runtime::{BackendKind, Session};
-use scalebits::serve::{run_workload, Router, ServeConfig};
+use scalebits::serve::{run_workload, Router, ServeConfig, WorkloadSpec};
 use scalebits::util::json::Json;
 use scalebits::util::rng::Rng;
 use scalebits::util::timer;
@@ -66,51 +73,64 @@ fn main() -> anyhow::Result<()> {
         out.set("floor_b1_mean_us", Json::Num(stats.mean_us));
     }
 
-    // 2. multi-worker sweep at fixed allocation.
+    // 2. multi-worker decode sweep at fixed allocation: every request
+    // is a multi-token session, so the sweep exercises iteration-level
+    // continuous batching (sequences join/retire between steps).
     // Offered load must exceed single-worker capacity or the sweep
     // measures the arrival process, not scaling; the synthetic interp
-    // model is ~20x cheaper per batch than the real PJRT model, so its
+    // model is ~20x cheaper per step than the real PJRT model, so its
     // load is scaled up accordingly.
     let interp = resolved == BackendKind::Interp;
-    let n_requests = if smoke { 8usize } else if interp { 96 } else { 48 };
-    let rate = if interp { 4000.0 } else { 400.0 };
+    let max_new = if smoke { 4usize } else { 8 };
+    let n_requests = if smoke { 8usize } else if interp { 64 } else { 32 };
+    let rate = if interp { 1500.0 } else { 150.0 };
     let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
-    let mut throughput_1w = f64::NAN;
+    let mut decode_tps_1w = f64::NAN;
     for &workers in worker_counts {
         let mut cfg = ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 4));
         cfg.backend = kind;
         cfg.workers = workers;
         let mut server = Router::start(cfg)?;
         // wall excludes per-worker compile/warmup (see WorkloadReport)
-        let wl = run_workload(&mut server, &stream, seq, n_requests, rate, 5)?;
+        let spec = WorkloadSpec::new(seq, n_requests, rate, 5).max_new_tokens(max_new);
+        let wl = run_workload(&mut server, &stream, &spec)?;
         let rep = server.shutdown()?;
-        let thr = wl.throughput_rps();
+        let tps = wl.decode_tps();
         if workers == 1 {
-            throughput_1w = thr;
+            decode_tps_1w = tps;
         }
         println!(
-            "{} | {:.1} req/s, occupancy {:.2}",
-            rep.total.latency.line(&format!("uniform-4bit x{workers} worker(s)")),
-            thr,
-            rep.total.mean_occupancy()
+            "{} | {:.1} req/s, {:.1} tok/s, decode depth {:.2}",
+            rep.total
+                .inter_token
+                .line(&format!("ITL uniform-4bit x{workers} worker(s)")),
+            wl.throughput_rps(),
+            tps,
+            rep.total.mean_decode_depth()
         );
         out.set(
             &format!("workers_{workers}"),
             Json::from_pairs(vec![
-                ("throughput_rps", Json::Num(thr)),
+                ("throughput_rps", Json::Num(wl.throughput_rps())),
+                ("decode_tps", Json::Num(tps)),
                 ("p50_us", Json::Num(rep.total.latency.p50_us())),
                 ("p99_us", Json::Num(rep.total.latency.p99_us())),
-                ("mean_occupancy", Json::Num(rep.total.mean_occupancy())),
+                ("ttft_p50_us", Json::Num(rep.total.first_token.p50_us())),
+                ("itl_p50_us", Json::Num(rep.total.inter_token.p50_us())),
+                ("itl_p95_us", Json::Num(rep.total.inter_token.p95_us())),
+                ("itl_p99_us", Json::Num(rep.total.inter_token.p99_us())),
+                ("mean_decode_depth", Json::Num(rep.total.mean_decode_depth())),
             ]),
         );
         if workers == 4 {
-            let speedup = thr / throughput_1w.max(1e-9);
-            println!("  4-worker throughput vs 1 worker: {speedup:.2}x");
+            let speedup = tps / decode_tps_1w.max(1e-9);
+            println!("  4-worker decode throughput vs 1 worker: {speedup:.2}x");
             out.set("speedup_4w_over_1w", Json::Num(speedup));
         }
     }
 
-    // 3. §5.3: mixed precision must match uniform latency
+    // 3. §5.3: mixed precision must match uniform latency, decoded
+    // autoregressively off the packed serving path
     if !smoke {
         let mut mixed = BitAlloc::uniform(&index, 4);
         let mut rng = Rng::new(2);
@@ -129,23 +149,57 @@ fn main() -> anyhow::Result<()> {
             cfg.backend = kind;
             cfg.workers = 4;
             let mut server = Router::start(cfg)?;
-            let (n3, rate3) = if interp { (48, 1500.0) } else { (24, 200.0) };
-            let wl = run_workload(&mut server, &stream, seq, n3, rate3, 5)?;
+            let (n3, rate3) = if interp { (32, 800.0) } else { (16, 100.0) };
+            let spec = WorkloadSpec::new(seq, n3, rate3, 5).max_new_tokens(max_new);
+            let wl = run_workload(&mut server, &stream, &spec)?;
             let rep = server.shutdown()?;
             println!(
-                "{} | {:.1} req/s, occupancy {:.2}",
+                "{} | {:.1} tok/s, decode depth {:.2}",
                 rep.total.latency.line(&format!("served {label} x4w")),
-                wl.throughput_rps(),
-                rep.total.mean_occupancy()
+                wl.decode_tps(),
+                rep.total.mean_decode_depth()
             );
             out.set(
                 key,
                 Json::from_pairs(vec![
                     ("p50_us", Json::Num(rep.total.latency.p50_us())),
                     ("p99_us", Json::Num(rep.total.latency.p99_us())),
+                    ("itl_p50_us", Json::Num(rep.total.inter_token.p50_us())),
+                    ("itl_p99_us", Json::Num(rep.total.inter_token.p99_us())),
                 ]),
             );
         }
+    }
+
+    // Smoke-gated lifecycle round-trip: deadline + cancel paths must
+    // reach their terminal states through the real stack (this is what
+    // `ci.sh --bench-smoke` exercises beyond plain completion).
+    {
+        let mut cfg = ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 4));
+        cfg.backend = kind;
+        let mut server = Router::start(cfg)?;
+        let mut warm = server.submit_warmup(stream.tokens[..seq].to_vec())?;
+        warm.wait().expect("warmup");
+        let mut expired = server.submit_request(
+            scalebits::serve::GenRequest::new(stream.tokens[..seq].to_vec())
+                .max_new_tokens(1_000_000)
+                .deadline(Duration::ZERO),
+        )?;
+        let mut cancelled = server.submit_request(
+            scalebits::serve::GenRequest::new(stream.tokens[..seq].to_vec())
+                .max_new_tokens(1_000_000),
+        )?;
+        cancelled.try_cancel();
+        assert_eq!(
+            expired.wait().expect("expired ticket").finish,
+            scalebits::serve::Finish::DeadlineExceeded
+        );
+        assert_eq!(
+            cancelled.wait().expect("cancelled ticket").finish,
+            scalebits::serve::Finish::Cancelled
+        );
+        server.shutdown()?;
+        println!("lifecycle round-trip: deadline + cancel terminal states OK");
     }
 
     out.set(
@@ -159,8 +213,9 @@ fn main() -> anyhow::Result<()> {
         "note",
         Json::Str(
             "all numbers post-warmup: per-worker engine construction and buffer upload are \
-             excluded via unrecorded warmup requests (see run_workload); latencies are \
-             server-side queue+batch+execute"
+             excluded via unrecorded warmup requests (see run_workload); requests are \
+             multi-token decode sessions through the continuous batcher; latencies are \
+             server-side (queue + decode loop), itl_* are inter-token gaps"
                 .to_string(),
         ),
     );

@@ -481,16 +481,17 @@ pub fn tab6(p: &mut Pipeline, seed: u64) -> Result<()> {
 // End-to-end serving: the §5.3 claim through the full router stack
 
 /// Serving grid: {uniform-4bit, mixed-2/4/8} x {1, 4 workers} under a
-/// synthetic Poisson load. Matching per-allocation latencies show mixed
+/// synthetic Poisson DECODE load (multi-token sessions through the
+/// continuous batcher). Matching per-allocation latencies show mixed
 /// precision adds no request-path overhead; the worker column shows the
-/// throughput scaling the router buys (each worker owns its own PJRT
-/// engine with device-resident weights and bit grids).
+/// throughput scaling the router buys (each worker owns its own engine
+/// with device-resident weights and bit grids).
 pub fn serve_e2e(
     artifacts: &std::path::Path,
     backend: crate::runtime::BackendKind,
     seed: u64,
 ) -> Result<()> {
-    use crate::serve::{run_workload, Router, ServeConfig};
+    use crate::serve::{run_workload, Router, ServeConfig, WorkloadSpec};
 
     println!("[serve_e2e] end-to-end serving: allocation x workers ({})", backend.name());
     let m = crate::model::Manifest::load(artifacts)?;
@@ -499,6 +500,7 @@ pub fn serve_e2e(
     let seq = m.config.seq_len;
     let n_requests = 32usize;
     let rate = 400.0; // offered load well above single-worker capacity
+    let max_new = 4usize;
 
     let mut mixed = BitAlloc::uniform(&index, 4);
     let mut rng = crate::util::rng::Rng::new(seed ^ 0x5e7e);
@@ -511,8 +513,8 @@ pub fn serve_e2e(
     }
 
     let mut t = Table::new(
-        "End-to-end serving (PJRT-CPU, synthetic Poisson load)",
-        &["alloc", "workers", "req/s", "p50_us", "p99_us", "occupancy"],
+        "End-to-end serving (synthetic Poisson decode load)",
+        &["alloc", "workers", "req/s", "tok/s", "p50_us", "p99_us", "itl_p50_us", "depth"],
     );
     let mut out = Json::obj();
     for (label, alloc) in [("uniform4", BitAlloc::uniform(&index, 4)), ("mixed248", mixed)] {
@@ -521,24 +523,30 @@ pub fn serve_e2e(
             cfg.backend = backend;
             cfg.workers = workers;
             let mut server = Router::start(cfg)?;
-            let wl = run_workload(&mut server, &stream, seq, n_requests, rate, seed)?;
+            let spec = WorkloadSpec::new(seq, n_requests, rate, seed).max_new_tokens(max_new);
+            let wl = run_workload(&mut server, &stream, &spec)?;
             let rep = server.shutdown()?;
             let thr = wl.throughput_rps();
             t.row(vec![
                 label.into(),
                 format!("{workers}"),
                 f2(thr),
+                f2(wl.decode_tps()),
                 f2(rep.total.latency.p50_us()),
                 f2(rep.total.latency.p99_us()),
-                f2(rep.total.mean_occupancy()),
+                f2(rep.total.inter_token.p50_us()),
+                f2(rep.total.mean_decode_depth()),
             ]);
             out.set(
                 &format!("{label}_w{workers}"),
                 Json::from_pairs(vec![
                     ("throughput_rps", Json::Num(thr)),
+                    ("decode_tps", Json::Num(wl.decode_tps())),
                     ("p50_us", Json::Num(rep.total.latency.p50_us())),
                     ("p99_us", Json::Num(rep.total.latency.p99_us())),
-                    ("occupancy", Json::Num(rep.total.mean_occupancy())),
+                    ("itl_p50_us", Json::Num(rep.total.inter_token.p50_us())),
+                    ("itl_p99_us", Json::Num(rep.total.inter_token.p99_us())),
+                    ("decode_depth", Json::Num(rep.total.mean_decode_depth())),
                     ("blocked_submits", Json::Num(rep.total.blocked_submits as f64)),
                 ]),
             );

@@ -17,9 +17,10 @@
 //!   estimation, bi-directional channel reordering, the scalable greedy
 //!   bitwidth search (the paper's Algorithm 1), baselines (classic
 //!   greedy, GPTQ, SlimLLM-style, heuristics), evaluation, a serving
-//!   subsystem (multi-worker router, deadline batcher, bounded
-//!   admission, latency histograms — see [`serve`]) over device-
-//!   resident [`runtime::Session`]s, and the experiment harness
+//!   subsystem (request-lifecycle API with tickets and cancellation,
+//!   multi-worker router, iteration-level continuous batching, bounded
+//!   admission, latency + inter-token histograms — see [`serve`]) over
+//!   device-resident [`runtime::Session`]s, and the experiment harness
 //!   reproducing every table and figure of the paper.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the

@@ -100,4 +100,101 @@ impl Session {
     pub fn run(&self, name: &str, tokens: &[i32]) -> Result<Vec<ExecOut>> {
         self.backend.run_model(name, tokens, &self.grids, &self.weights)
     }
+
+    /// One decode iteration over up to `batch_of(name)` in-flight
+    /// sequences: assemble the padded `[batch, seq]` step batch (each
+    /// row is the sliding window over the LAST `seq_len` tokens of its
+    /// sequence), execute, and return one next token per sequence —
+    /// read at each row's last real position.
+    ///
+    /// This is the serving stack's step-batch entry point: the
+    /// continuous batcher calls it once per iteration with whatever is
+    /// in flight. `name` is `"qpredict"` (on-device argmax fast path)
+    /// or a logits executable (`"qlogits"`/`"qlogits_b1"`; argmax runs
+    /// host-side). Rows are independent under the kernel module's
+    /// accumulation-order contract, so a sequence's decoded tokens do
+    /// not depend on what else shares its step batch (tested: a
+    /// continuously batched decode is bitwise identical to a
+    /// sequential one on the interpreter backend).
+    pub fn decode_step(&self, name: &str, rows: &[&[i32]]) -> Result<Vec<i32>> {
+        let batch = self.backend.batch_of(name)?;
+        let cfg = &self.manifest().config;
+        let (seq, vocab) = (cfg.seq_len, cfg.vocab);
+        anyhow::ensure!(!rows.is_empty(), "decode step needs at least one sequence");
+        anyhow::ensure!(
+            rows.len() <= batch,
+            "{} in-flight sequences exceed compiled batch {batch}",
+            rows.len()
+        );
+        anyhow::ensure!(rows.iter().all(|r| !r.is_empty()), "empty sequence in decode step");
+        let (tokens, pos) = assemble_step(rows, batch, seq);
+        let out = self.run(name, &tokens)?;
+        let mut next = Vec::with_capacity(rows.len());
+        if name == "qpredict" {
+            let preds = out[0].to_vec_i32()?;
+            for (b, &p) in pos.iter().enumerate() {
+                next.push(preds[b * seq + p]);
+            }
+        } else {
+            let logits = out[0].to_vec_f32()?;
+            for (b, &p) in pos.iter().enumerate() {
+                let base = (b * seq + p) * vocab;
+                let row = &logits[base..base + vocab];
+                let mut best = 0usize;
+                for (v, &x) in row.iter().enumerate() {
+                    if x > row[best] {
+                        best = v;
+                    }
+                }
+                next.push(best as i32);
+            }
+        }
+        Ok(next)
+    }
+}
+
+/// Assemble the padded row-major `[batch, seq]` token tensor for one
+/// decode step. Each sequence contributes its last `min(len, seq)`
+/// tokens (sliding window); shorter rows and rows beyond `rows.len()`
+/// are zero-padded. Returns the tensor plus each row's last real
+/// position (where the next-token prediction is read).
+pub fn assemble_step(rows: &[&[i32]], batch: usize, seq: usize) -> (Vec<i32>, Vec<usize>) {
+    let mut tokens = vec![0i32; batch * seq];
+    let mut pos = Vec::with_capacity(rows.len().min(batch));
+    for (b, row) in rows.iter().take(batch).enumerate() {
+        let n = row.len().min(seq);
+        tokens[b * seq..b * seq + n].copy_from_slice(&row[row.len() - n..]);
+        pos.push(n.max(1) - 1);
+    }
+    (tokens, pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_step_pads_and_positions() {
+        let rows: Vec<&[i32]> = vec![&[1, 2, 3], &[4, 5]];
+        let (tokens, pos) = assemble_step(&rows, 4, 3);
+        assert_eq!(tokens, vec![1, 2, 3, 4, 5, 0, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(pos, vec![2, 1]);
+    }
+
+    #[test]
+    fn assemble_step_slides_long_rows() {
+        // a sequence longer than seq serves its LAST window
+        let rows: Vec<&[i32]> = vec![&[9, 8, 7, 6, 5]];
+        let (tokens, pos) = assemble_step(&rows, 2, 3);
+        assert_eq!(tokens, vec![7, 6, 5, 0, 0, 0]);
+        assert_eq!(pos, vec![2]);
+    }
+
+    #[test]
+    fn assemble_step_clamps_overfull_row_sets() {
+        let rows: Vec<&[i32]> = vec![&[1], &[2], &[3]];
+        let (tokens, pos) = assemble_step(&rows, 2, 1);
+        assert_eq!(tokens, vec![1, 2]);
+        assert_eq!(pos, vec![0, 0]);
+    }
 }

@@ -100,6 +100,22 @@ impl<T> Bounded<T> {
         }
     }
 
+    /// Non-blocking pop (the continuous batcher's busy-path admission:
+    /// a worker with a live decode set must never stall on an empty
+    /// queue). `Timeout` doubles as "empty right now".
+    pub fn try_pop(&self) -> Pop<T> {
+        let mut s = self.state.lock().unwrap();
+        if let Some(v) = s.q.pop_front() {
+            self.not_full.notify_one();
+            return Pop::Item(v);
+        }
+        if s.closed {
+            Pop::Closed
+        } else {
+            Pop::Timeout
+        }
+    }
+
     /// Pop with a deadline (the batcher's fill-window path).
     pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
         let deadline = Instant::now() + timeout;
@@ -191,6 +207,25 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn try_pop_never_blocks() {
+        let q = Bounded::new(2);
+        match q.try_pop() {
+            Pop::Timeout => {}
+            _ => panic!("empty open queue must report Timeout"),
+        }
+        q.try_push(5).unwrap();
+        match q.try_pop() {
+            Pop::Item(v) => assert_eq!(v, 5),
+            _ => panic!("expected Item"),
+        }
+        q.close();
+        match q.try_pop() {
+            Pop::Closed => {}
+            _ => panic!("closed+drained must report Closed"),
+        }
     }
 
     #[test]

@@ -1,0 +1,564 @@
+//! The request-lifecycle serving API: typed requests, ticket handles,
+//! and the client façade that owns admission.
+//!
+//! The seed's serving API was a single blocking call —
+//! `submit(tokens) -> mpsc::Receiver<Response>` — which can only
+//! express one-shot next-token prediction. This module replaces it
+//! with an explicit lifecycle so the serving stack can express real
+//! decode loads (the regime the paper's §5.3 "no runtime overhead"
+//! claim has to survive):
+//!
+//! ```text
+//! GenRequest ──Client::submit──> Ticket ──(queued)──> decoding ──> Finish
+//!                                  │                     │
+//!                                  │   Event::Token per generated token
+//!                                  └──(try_cancel)───────┘
+//! ```
+//!
+//! * [`GenRequest`] — what to decode: a prompt, a generation budget
+//!   (`max_new_tokens`), an optional deadline, a [`Priority`], and
+//!   whether the request is recorded in the serving metrics.
+//! * [`Ticket`] — the client-side handle: poll or block for progress,
+//!   stream tokens as they are produced, cancel mid-decode. Terminal
+//!   state is an [`Outcome`] carrying a [`Finish`] reason.
+//! * [`Client`] — admission façade over the worker queues: validates
+//!   the request, picks a worker (round-robin with spill-over), and
+//!   applies backpressure when every queue is full. Cheap to clone;
+//!   every clone shares the id space and the blocked-submit counter.
+//!
+//! Workers speak to tickets over a per-request [`Event`] channel: one
+//! `Event::Token` per generated token (the incremental stream), then
+//! exactly one `Event::Done` with the outcome. A dropped channel
+//! without a `Done` means the worker died — [`Ticket::wait`] reports
+//! that as an error, never as a fabricated outcome.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::admission::{Bounded, PushError};
+use super::router::DecodeSeq;
+
+// ---------------------------------------------------------------------
+// request
+
+/// Scheduling priority. Within one admission pass a worker moves
+/// higher-priority requests into its decode set first; equal
+/// priorities keep arrival order (stable sort), so `Normal`-only
+/// traffic behaves exactly FIFO.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    Normal,
+    High,
+}
+
+/// A generation request: prompt tokens plus the decode contract.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    /// Prompt context. Longer than `seq_len` is served from a sliding
+    /// window over the last `seq_len` tokens.
+    pub tokens: Vec<i32>,
+    /// How many tokens to generate (>= 1). 1 reproduces the seed's
+    /// one-shot next-token prediction.
+    pub max_new_tokens: usize,
+    /// Relative deadline, measured from submission. A request past its
+    /// deadline finishes `Finish::DeadlineExceeded` without occupying
+    /// another decode iteration.
+    pub deadline: Option<Duration>,
+    pub priority: Priority,
+    /// Count this request in the worker's served/latency metrics.
+    /// Warmup barriers submit with `record: false` so cold-start
+    /// compile waits never contaminate the histograms.
+    pub record: bool,
+}
+
+impl GenRequest {
+    /// Next-token request with defaults: one generated token, no
+    /// deadline, normal priority, recorded.
+    pub fn new(tokens: Vec<i32>) -> GenRequest {
+        GenRequest {
+            tokens,
+            max_new_tokens: 1,
+            deadline: None,
+            priority: Priority::Normal,
+            record: true,
+        }
+    }
+
+    pub fn max_new_tokens(mut self, n: usize) -> GenRequest {
+        self.max_new_tokens = n;
+        self
+    }
+
+    pub fn deadline(mut self, d: Duration) -> GenRequest {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> GenRequest {
+        self.priority = p;
+        self
+    }
+
+    /// Exclude from metrics (warmup barriers).
+    pub fn unrecorded(mut self) -> GenRequest {
+        self.record = false;
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// lifecycle events
+
+/// Why a request reached its terminal state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Finish {
+    /// All `max_new_tokens` tokens were generated.
+    Completed,
+    /// `Ticket::try_cancel` was observed mid-decode.
+    Cancelled,
+    /// The deadline passed before generation finished (tokens produced
+    /// before expiry are kept in the outcome).
+    DeadlineExceeded,
+    /// Admission refused the request (malformed tokens, bad budget).
+    /// Rejection happens client-side; no worker ever saw the request.
+    Rejected(String),
+}
+
+impl Finish {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Finish::Completed => "completed",
+            Finish::Cancelled => "cancelled",
+            Finish::DeadlineExceeded => "deadline-exceeded",
+            Finish::Rejected(_) => "rejected",
+        }
+    }
+}
+
+/// One generated token, streamed to the ticket as soon as it is
+/// appended to the sequence.
+#[derive(Clone, Debug)]
+pub struct TokenEvent {
+    /// 0-based index within the generated tokens.
+    pub index: usize,
+    pub token: i32,
+    /// Time since submission for the first token (time-to-first-token),
+    /// since the previous token otherwise (inter-token latency) —
+    /// measured server-side.
+    pub latency: Duration,
+}
+
+/// Terminal state of a request.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub id: u64,
+    pub finish: Finish,
+    /// Every token generated before the terminal state (all
+    /// `max_new_tokens` of them iff `finish == Completed`).
+    pub tokens: Vec<i32>,
+    /// Submission → terminal state, server-side.
+    pub latency: Duration,
+    /// Which worker served the request. `usize::MAX` when no worker
+    /// ever saw it (client-side rejection).
+    pub worker: usize,
+}
+
+/// Wire protocol worker → ticket: zero or more `Token`s, then exactly
+/// one `Done`.
+#[derive(Clone, Debug)]
+pub enum Event {
+    Token(TokenEvent),
+    Done(Outcome),
+}
+
+// ---------------------------------------------------------------------
+// ticket
+
+/// Client-side handle for one in-flight request.
+///
+/// States: *pending* (no terminal event yet) → *finished*
+/// ([`Ticket::outcome`] is `Some`). Progress arrives over the event
+/// channel; `poll`/`wait`/`recv_token` drain it. Dropping a ticket
+/// abandons the stream but does NOT cancel the request — call
+/// [`Ticket::try_cancel`] for that.
+pub struct Ticket {
+    id: u64,
+    rx: mpsc::Receiver<Event>,
+    cancel: Arc<AtomicBool>,
+    tokens: Vec<i32>,
+    outcome: Option<Outcome>,
+}
+
+impl Ticket {
+    pub(crate) fn new(id: u64, rx: mpsc::Receiver<Event>, cancel: Arc<AtomicBool>) -> Ticket {
+        Ticket { id, rx, cancel, tokens: Vec::new(), outcome: None }
+    }
+
+    /// A ticket that was rejected at admission: already terminal.
+    pub(crate) fn rejected(id: u64, reason: String) -> Ticket {
+        let (tx, rx) = mpsc::channel();
+        let _ = tx.send(Event::Done(Outcome {
+            id,
+            finish: Finish::Rejected(reason),
+            tokens: Vec::new(),
+            latency: Duration::ZERO,
+            worker: usize::MAX,
+        }));
+        Ticket::new(id, rx, Arc::new(AtomicBool::new(false)))
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Tokens generated so far (the ones already drained off the
+    /// channel by `poll`/`wait`/`recv_token`).
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// Terminal outcome, if already observed.
+    pub fn outcome(&self) -> Option<&Outcome> {
+        self.outcome.as_ref()
+    }
+
+    /// Request cancellation. Advisory: the worker observes the flag
+    /// between decode iterations, so a token already in flight may
+    /// still arrive; the terminal outcome is `Cancelled` unless the
+    /// request finished first. Safe to call repeatedly, from any
+    /// thread holding a clone of the flag, at any lifecycle stage.
+    pub fn try_cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    fn absorb(&mut self, ev: Event) {
+        match ev {
+            Event::Token(t) => self.tokens.push(t.token),
+            Event::Done(o) => self.outcome = Some(o),
+        }
+    }
+
+    /// Non-blocking progress check: drains every buffered event and
+    /// returns the outcome if the request is finished. `Ok(None)` means
+    /// still in flight; a worker that died without delivering a
+    /// terminal event is an `Err` here exactly as in [`Ticket::wait`]
+    /// (a poll-only client must not spin forever on a dead request).
+    pub fn poll(&mut self) -> Result<Option<&Outcome>> {
+        if self.outcome.is_none() {
+            loop {
+                match self.rx.try_recv() {
+                    Ok(ev) => {
+                        self.absorb(ev);
+                        if self.outcome.is_some() {
+                            break;
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        bail!("worker died before finishing request {}", self.id)
+                    }
+                }
+            }
+        }
+        Ok(self.outcome.as_ref())
+    }
+
+    /// Block until the next generated token (streaming consumption).
+    /// `Ok(Some(ev))` per token, `Ok(None)` once the request is
+    /// finished (the outcome is then available via [`Ticket::outcome`]),
+    /// `Err` if the worker died mid-request.
+    pub fn recv_token(&mut self) -> Result<Option<TokenEvent>> {
+        if self.outcome.is_some() {
+            return Ok(None);
+        }
+        match self.rx.recv() {
+            Ok(Event::Token(t)) => {
+                self.tokens.push(t.token);
+                Ok(Some(t))
+            }
+            Ok(Event::Done(o)) => {
+                self.outcome = Some(o);
+                Ok(None)
+            }
+            Err(_) => bail!("worker died before finishing request {}", self.id),
+        }
+    }
+
+    /// Block until the request reaches its terminal state.
+    pub fn wait(&mut self) -> Result<&Outcome> {
+        while self.outcome.is_none() {
+            match self.rx.recv() {
+                Ok(ev) => self.absorb(ev),
+                Err(_) => bail!("worker died before finishing request {}", self.id),
+            }
+        }
+        Ok(self.outcome.as_ref().expect("outcome set by loop"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// client façade
+
+/// Shared admission state: id space and counters common to every
+/// client clone and read by the router at shutdown.
+#[derive(Default)]
+pub(crate) struct Shared {
+    pub next_id: AtomicU64,
+    pub blocked_submits: AtomicU64,
+    pub rejected: AtomicU64,
+    /// Staggers the round-robin start of each client clone so N
+    /// clones don't all begin at worker 0 in lockstep.
+    pub clone_cursor: AtomicU64,
+}
+
+/// Admission façade over the worker queues.
+///
+/// Owns request validation and dispatch: round-robin home worker,
+/// spill-over to any worker with queue space, and — only when every
+/// live queue is full — a blocking push (backpressure: the client
+/// slows down instead of the server buffering unboundedly).
+///
+/// `Client` is cheap to clone and each clone may live on its own
+/// thread; clones share the id space and counters but keep their own
+/// round-robin cursor.
+pub struct Client {
+    queues: Vec<Arc<Bounded<DecodeSeq>>>,
+    shared: Arc<Shared>,
+    rr: usize,
+    vocab: usize,
+}
+
+impl Clone for Client {
+    fn clone(&self) -> Client {
+        // Stagger each clone's starting worker: low-rate clones all
+        // beginning at worker 0 would skew load to low-index workers.
+        let rr = self.shared.clone_cursor.fetch_add(1, Ordering::Relaxed) as usize
+            % self.queues.len().max(1);
+        Client { queues: self.queues.clone(), shared: self.shared.clone(), rr, vocab: self.vocab }
+    }
+}
+
+impl Client {
+    pub(crate) fn new(
+        queues: Vec<Arc<Bounded<DecodeSeq>>>,
+        shared: Arc<Shared>,
+        vocab: usize,
+    ) -> Client {
+        let rr =
+            shared.clone_cursor.fetch_add(1, Ordering::Relaxed) as usize % queues.len().max(1);
+        Client { queues, shared, rr, vocab }
+    }
+
+    /// Validate a request; `Some(reason)` means reject at admission.
+    fn validate(&self, req: &GenRequest) -> Option<String> {
+        if req.tokens.is_empty() {
+            return Some("empty token window".to_string());
+        }
+        if req.max_new_tokens == 0 {
+            return Some("max_new_tokens must be >= 1".to_string());
+        }
+        if let Some(&t) = req.tokens.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
+            return Some(format!("token {t} outside vocab {}", self.vocab));
+        }
+        None
+    }
+
+    /// Submit a request and get its lifecycle handle.
+    ///
+    /// A malformed request yields an already-finished ticket with
+    /// `Finish::Rejected` (admission owns rejection — one bad client
+    /// costs one rejected ticket, never a worker). `Err` is reserved
+    /// for "no server": every worker queue is closed.
+    pub fn submit(&mut self, req: GenRequest) -> Result<Ticket> {
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Some(reason) = self.validate(&req) {
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return Ok(Ticket::rejected(id, reason));
+        }
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let submitted = Instant::now();
+        let mut msg = DecodeSeq::admit(id, req, tx, cancel.clone(), submitted);
+
+        let n = self.queues.len();
+        let home = self.rr % n;
+        self.rr = (self.rr + 1) % n;
+        let mut any_live = false;
+        for k in 0..n {
+            match self.queues[(home + k) % n].try_push(msg) {
+                Ok(()) => return Ok(Ticket::new(id, rx, cancel)),
+                Err(PushError::Full(m)) => {
+                    any_live = true;
+                    msg = m;
+                }
+                Err(PushError::Closed(m)) => msg = m,
+            }
+        }
+        if !any_live {
+            bail!("server is shut down");
+        }
+        self.shared.blocked_submits.fetch_add(1, Ordering::Relaxed);
+        loop {
+            let mut closed = 0;
+            for k in 0..n {
+                let q = &self.queues[(home + k) % n];
+                if q.is_closed() {
+                    closed += 1;
+                    continue;
+                }
+                match q.push(msg) {
+                    Ok(()) => return Ok(Ticket::new(id, rx, cancel)),
+                    // raced with a shutdown/death — try the next queue
+                    Err(PushError::Closed(m)) | Err(PushError::Full(m)) => msg = m,
+                }
+            }
+            if closed == n {
+                bail!("server is shut down");
+            }
+        }
+    }
+
+    /// Convenience shim for the seed-era call shape: one next token.
+    pub fn submit_tokens(&mut self, tokens: Vec<i32>) -> Result<Ticket> {
+        self.submit(GenRequest::new(tokens))
+    }
+
+    /// Point-in-time backlog per worker queue (autoscaling signal).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.queues.iter().map(|q| q.len()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done(id: u64, finish: Finish, tokens: Vec<i32>) -> Event {
+        Event::Done(Outcome {
+            id,
+            finish,
+            tokens,
+            latency: Duration::from_millis(1),
+            worker: 0,
+        })
+    }
+
+    #[test]
+    fn ticket_streams_tokens_then_outcome() {
+        let (tx, rx) = mpsc::channel();
+        let mut t = Ticket::new(7, rx, Arc::new(AtomicBool::new(false)));
+        assert!(t.poll().unwrap().is_none());
+        tx.send(Event::Token(TokenEvent {
+            index: 0,
+            token: 11,
+            latency: Duration::from_micros(5),
+        }))
+        .unwrap();
+        tx.send(Event::Token(TokenEvent {
+            index: 1,
+            token: 12,
+            latency: Duration::from_micros(5),
+        }))
+        .unwrap();
+        let ev = t.recv_token().unwrap().unwrap();
+        assert_eq!((ev.index, ev.token), (0, 11));
+        tx.send(done(7, Finish::Completed, vec![11, 12])).unwrap();
+        // drain the second token and reach the terminal state
+        assert!(t.recv_token().unwrap().is_some());
+        assert!(t.recv_token().unwrap().is_none());
+        assert_eq!(t.tokens(), &[11, 12]);
+        assert_eq!(t.outcome().unwrap().finish, Finish::Completed);
+        // terminal is sticky
+        assert!(t.recv_token().unwrap().is_none());
+    }
+
+    #[test]
+    fn ticket_wait_collects_everything() {
+        let (tx, rx) = mpsc::channel();
+        let mut t = Ticket::new(1, rx, Arc::new(AtomicBool::new(false)));
+        tx.send(Event::Token(TokenEvent {
+            index: 0,
+            token: 3,
+            latency: Duration::ZERO,
+        }))
+        .unwrap();
+        tx.send(done(1, Finish::Cancelled, vec![3])).unwrap();
+        let o = t.wait().unwrap();
+        assert_eq!(o.finish, Finish::Cancelled);
+        assert_eq!(t.tokens(), &[3]);
+    }
+
+    #[test]
+    fn dead_worker_is_an_error_not_an_outcome() {
+        let (tx, rx) = mpsc::channel::<Event>();
+        drop(tx);
+        let mut t = Ticket::new(2, rx, Arc::new(AtomicBool::new(false)));
+        assert!(t.wait().is_err());
+        assert!(t.outcome().is_none(), "no fabricated outcome");
+        // the non-blocking path must see the death too, not spin forever
+        let (tx2, rx2) = mpsc::channel::<Event>();
+        drop(tx2);
+        let mut t2 = Ticket::new(3, rx2, Arc::new(AtomicBool::new(false)));
+        assert!(t2.poll().is_err(), "poll must report a dead worker");
+    }
+
+    #[test]
+    fn poll_after_terminal_stays_ok_even_if_sender_dropped() {
+        let (tx, rx) = mpsc::channel();
+        let mut t = Ticket::new(4, rx, Arc::new(AtomicBool::new(false)));
+        tx.send(done(4, Finish::Completed, vec![1])).unwrap();
+        drop(tx);
+        assert_eq!(t.poll().unwrap().unwrap().finish, Finish::Completed);
+        // terminal outcome is sticky; the closed channel no longer matters
+        assert!(t.poll().unwrap().is_some());
+    }
+
+    #[test]
+    fn rejected_ticket_is_born_terminal() {
+        let mut t = Ticket::rejected(9, "bad tokens".into());
+        let o = t.wait().unwrap();
+        assert_eq!(o.finish, Finish::Rejected("bad tokens".into()));
+        assert!(o.tokens.is_empty());
+        assert_eq!(o.worker, usize::MAX);
+    }
+
+    #[test]
+    fn cancel_flag_is_shared() {
+        let (_tx, rx) = mpsc::channel();
+        let flag = Arc::new(AtomicBool::new(false));
+        let t = Ticket::new(3, rx, flag.clone());
+        t.try_cancel();
+        assert!(flag.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn priority_orders() {
+        assert!(Priority::High > Priority::Normal);
+        assert!(Priority::Normal > Priority::Low);
+    }
+
+    #[test]
+    fn request_builder_defaults() {
+        let r = GenRequest::new(vec![1, 2]);
+        assert_eq!(r.max_new_tokens, 1);
+        assert!(r.deadline.is_none());
+        assert_eq!(r.priority, Priority::Normal);
+        assert!(r.record);
+        let r = r
+            .max_new_tokens(8)
+            .deadline(Duration::from_millis(50))
+            .priority(Priority::High)
+            .unrecorded();
+        assert_eq!(r.max_new_tokens, 8);
+        assert!(r.deadline.is_some());
+        assert_eq!(r.priority, Priority::High);
+        assert!(!r.record);
+    }
+}

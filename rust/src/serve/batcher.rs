@@ -1,154 +1,315 @@
-//! Deadline batching, extracted from the server loop so it is unit-
-//! testable without PJRT artifacts.
+//! Iteration-level continuous batching, extracted from the worker loop
+//! so it is unit-testable without PJRT artifacts.
 //!
-//! Policy (same as the seed's inline loop): block for the first request
-//! of a batch, then keep draining the queue until either the batch is
-//! full or `window` has elapsed since the first item arrived. Partial
-//! batches dispatch at the deadline — static AOT shapes mean the
-//! executable always runs at its compiled batch size, so the padding
-//! cost of a partial batch is paid on device either way and the window
-//! only trades latency against occupancy.
+//! The seed (and PR 1) batched at REQUEST level: a deadline window
+//! formed a batch, the whole batch executed, every request in it was
+//! answered, repeat. Under decode loads that policy head-of-line
+//! blocks: a short request admitted behind a long one waits for the
+//! long one's entire generation. This module batches at ITERATION
+//! level instead — the worker keeps a *live decode set* of in-flight
+//! sequences, and between every model step the set is re-formed:
+//! finished/cancelled/expired sequences retire (freeing their slot
+//! immediately), newly admitted sequences join, and each iteration's
+//! padded step batch is assembled from whatever is in flight right
+//! now. A short request rides along with a long one's remaining
+//! iterations instead of waiting behind all of them.
 //!
-//! Shutdown semantics come from the admission queue: after `close`,
-//! `next_batch` keeps returning batches until every admitted request
-//! has been drained, then returns `None`.
+//! Policy:
+//!
+//! * the decode set is capped at the executable's compiled batch size
+//!   (`max_live`) — static AOT shapes mean the step always runs at
+//!   that size and padding is paid on device either way;
+//! * an IDLE worker blocks for the first request, then coalesces
+//!   arrivals for up to `idle_window` so a burst that arrives together
+//!   decodes together from iteration one (the PR-1 deadline window,
+//!   demoted to the idle path);
+//! * a BUSY worker never waits: admission between iterations is a
+//!   non-blocking queue drain into free slots;
+//! * admission order is priority-then-arrival (stable sort, so
+//!   equal-priority traffic stays FIFO).
+//!
+//! Shutdown semantics compose with the admission queue: after `close`,
+//! [`ContinuousBatcher::admit`] keeps yielding queued requests until
+//! the queue is drained, and returns `false` only when no further work
+//! can ever arrive; the worker then finishes decoding its live set —
+//! nothing admitted is ever dropped.
 
+use std::cmp::Reverse;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::admission::{Bounded, Pop};
+use super::api::Priority;
 
-/// How a worker groups requests into executable calls.
+/// Anything the batcher can schedule (the worker's decode sequences;
+/// plain test types in the unit tests).
+pub trait Schedulable {
+    fn priority(&self) -> Priority;
+
+    /// Will never decode again (cancelled, past its deadline). Defunct
+    /// items waiting in the holding pen are surfaced to the caller even
+    /// when the live set is full, so their terminal event is not
+    /// delayed behind long-running sequences. Must be monotone: once
+    /// `true`, always `true`.
+    fn defunct(&self) -> bool {
+        false
+    }
+}
+
+/// How a worker forms its live decode set.
 #[derive(Clone, Copy, Debug)]
-pub struct BatchPolicy {
-    /// Compiled batch size of the executable (hard cap).
-    pub max_batch: usize,
-    /// How long to wait for a batch to fill before dispatching partial.
-    pub window: Duration,
+pub struct StepPolicy {
+    /// Decode-set cap == compiled batch size of the executable.
+    pub max_live: usize,
+    /// How long an idle worker coalesces arrivals before its first
+    /// iteration.
+    pub idle_window: Duration,
 }
 
-/// Pulls batches off a bounded queue under a [`BatchPolicy`].
-pub struct Batcher<T> {
+/// Admits requests from a bounded queue into a live decode set under a
+/// [`StepPolicy`].
+pub struct ContinuousBatcher<T> {
     queue: Arc<Bounded<T>>,
-    policy: BatchPolicy,
+    policy: StepPolicy,
+    /// Popped-but-not-yet-live requests (the priority holding pen):
+    /// filled when the live set is full, bounded by `max_live`. Items
+    /// here have been admitted off the queue, so shutdown must drain
+    /// them like live sequences.
+    pen: Vec<T>,
 }
 
-impl<T> Batcher<T> {
-    pub fn new(queue: Arc<Bounded<T>>, policy: BatchPolicy) -> Batcher<T> {
-        assert!(policy.max_batch >= 1, "batch size must be positive");
-        Batcher { queue, policy }
+impl<T: Schedulable> ContinuousBatcher<T> {
+    pub fn new(queue: Arc<Bounded<T>>, policy: StepPolicy) -> ContinuousBatcher<T> {
+        assert!(policy.max_live >= 1, "decode set cap must be positive");
+        ContinuousBatcher { queue, policy, pen: Vec::new() }
     }
 
-    /// Next batch (1..=max_batch items), or `None` once the queue is
-    /// closed and fully drained.
-    pub fn next_batch(&self) -> Option<Vec<T>> {
-        let first = self.queue.pop()?;
-        let mut batch = Vec::with_capacity(self.policy.max_batch);
-        batch.push(first);
-        let deadline = Instant::now() + self.policy.window;
-        while batch.len() < self.policy.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+    /// One admission pass: top up `live` (up to `max_live`) from the
+    /// pen + queue, highest priority first. Blocks only when there is
+    /// no work at all; with anything in flight it returns immediately.
+    ///
+    /// Returns `false` once no further request can ever arrive (queue
+    /// closed and drained, pen empty) — the worker should finish
+    /// decoding whatever remains in `live` and exit.
+    pub fn admit(&mut self, live: &mut Vec<T>) -> bool {
+        if live.is_empty() && self.pen.is_empty() {
+            // Idle: block for the first request, then coalesce briefly.
+            match self.queue.pop() {
+                Some(v) => self.pen.push(v),
+                None => return false,
             }
-            match self.queue.pop_timeout(deadline - now) {
-                Pop::Item(v) => batch.push(v),
-                Pop::Timeout | Pop::Closed => break,
+            let deadline = Instant::now() + self.policy.idle_window;
+            while self.pen.len() < self.policy.max_live {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match self.queue.pop_timeout(deadline - now) {
+                    Pop::Item(v) => self.pen.push(v),
+                    Pop::Timeout | Pop::Closed => break,
+                }
+            }
+        } else {
+            // Busy: non-blocking top-up between iterations.
+            while self.pen.len() < self.policy.max_live {
+                match self.queue.try_pop() {
+                    Pop::Item(v) => self.pen.push(v),
+                    Pop::Timeout | Pop::Closed => break,
+                }
             }
         }
-        Some(batch)
+        // Priority-then-arrival admission into free slots (stable sort:
+        // FIFO within a priority class).
+        self.pen.sort_by_key(|t| Reverse(t.priority()));
+        let free = self.policy.max_live.saturating_sub(live.len());
+        let take = free.min(self.pen.len());
+        live.extend(self.pen.drain(..take));
+        // Defunct items bypass the cap: the caller retires them before
+        // the next step (so the step batch never exceeds `max_live`),
+        // and their terminal event must not wait for a slot behind
+        // long-running sequences.
+        let mut i = 0;
+        while i < self.pen.len() {
+            if self.pen[i].defunct() {
+                live.push(self.pen.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        !(self.pen.is_empty() && self.queue.is_closed() && self.queue.is_empty())
     }
-}
 
-/// Assemble the padded row-major [batch, seq] token tensor for one
-/// dispatch. Rows beyond `rows.len()` (and positions beyond each row's
-/// length) are zero-padded; rows longer than `seq` are truncated.
-/// Returns (tokens, occupancy).
-pub fn assemble_padded(rows: &[&[i32]], batch: usize, seq: usize) -> (Vec<i32>, usize) {
-    let occupancy = rows.len().min(batch);
-    let mut tokens = vec![0i32; batch * seq];
-    for (b, row) in rows.iter().take(occupancy).enumerate() {
-        let n = row.len().min(seq);
-        tokens[b * seq..b * seq + n].copy_from_slice(&row[..n]);
+    /// Requests admitted off the queue but not yet in a decode set.
+    pub fn pen_len(&self) -> usize {
+        self.pen.len()
     }
-    (tokens, occupancy)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn queue_of(cap: usize, items: &[i32]) -> Arc<Bounded<i32>> {
+    #[derive(Debug, PartialEq)]
+    struct Item(i32, Priority);
+
+    impl Schedulable for Item {
+        fn priority(&self) -> Priority {
+            self.1
+        }
+    }
+
+    #[derive(Debug)]
+    struct Flagged(i32, std::sync::Arc<std::sync::atomic::AtomicBool>);
+
+    impl Schedulable for Flagged {
+        fn priority(&self) -> Priority {
+            Priority::Normal
+        }
+
+        fn defunct(&self) -> bool {
+            self.1.load(std::sync::atomic::Ordering::Relaxed)
+        }
+    }
+
+    fn normal(v: i32) -> Item {
+        Item(v, Priority::Normal)
+    }
+
+    fn queue_of(cap: usize, items: Vec<Item>) -> Arc<Bounded<Item>> {
         let q = Arc::new(Bounded::new(cap));
-        for &i in items {
-            q.try_push(i).unwrap();
+        for i in items {
+            assert!(q.try_push(i).is_ok());
         }
         q
     }
 
-    #[test]
-    fn collects_up_to_max_batch() {
-        let q = queue_of(64, &[1, 2, 3, 4, 5]);
-        let b = Batcher::new(q, BatchPolicy { max_batch: 3, window: Duration::from_millis(5) });
-        assert_eq!(b.next_batch().unwrap(), vec![1, 2, 3]);
-        assert_eq!(b.next_batch().unwrap(), vec![4, 5]);
+    fn policy(max_live: usize) -> StepPolicy {
+        StepPolicy { max_live, idle_window: Duration::from_millis(5) }
     }
 
     #[test]
-    fn partial_batch_dispatches_at_deadline() {
-        let q = queue_of(64, &[7]);
+    fn fills_live_set_up_to_cap() {
+        let q = queue_of(64, (1..=5).map(normal).collect());
+        let mut b = ContinuousBatcher::new(q, policy(3));
+        let mut live = Vec::new();
+        assert!(b.admit(&mut live));
+        assert_eq!(live.iter().map(|i| i.0).collect::<Vec<_>>(), vec![1, 2, 3]);
+        // full set: another pass changes nothing but pens the overflow
+        assert!(b.admit(&mut live));
+        assert_eq!(live.len(), 3);
+        assert_eq!(b.pen_len(), 2);
+        // two sequences retire -> their slots refill from the pen
+        live.truncate(1);
+        assert!(b.admit(&mut live));
+        assert_eq!(live.iter().map(|i| i.0).collect::<Vec<_>>(), vec![1, 4, 5]);
+    }
+
+    #[test]
+    fn admission_is_priority_then_arrival() {
+        let q = queue_of(
+            64,
+            vec![
+                Item(1, Priority::Low),
+                Item(2, Priority::Normal),
+                Item(3, Priority::High),
+                Item(4, Priority::Normal),
+            ],
+        );
+        let mut b = ContinuousBatcher::new(q, policy(4));
+        let mut live = Vec::new();
+        assert!(b.admit(&mut live));
+        // High first, Normals keep arrival order, Low last
+        assert_eq!(live.iter().map(|i| i.0).collect::<Vec<_>>(), vec![3, 2, 4, 1]);
+    }
+
+    #[test]
+    fn busy_worker_never_blocks_on_an_empty_queue() {
+        let q: Arc<Bounded<Item>> = Arc::new(Bounded::new(8));
+        let mut b = ContinuousBatcher::new(q, policy(4));
+        let mut live = vec![normal(9)];
+        let t0 = Instant::now();
+        assert!(b.admit(&mut live), "queue still open");
+        assert!(t0.elapsed() < Duration::from_millis(50), "busy admit must not wait");
+        assert_eq!(live.len(), 1);
+    }
+
+    #[test]
+    fn idle_worker_coalesces_within_the_window_only() {
+        let q = queue_of(64, vec![normal(7)]);
         let q2 = q.clone();
-        // A second request arrives well AFTER the window: the first
-        // batch must go out alone.
+        // A second request arrives well AFTER the idle window: the
+        // first iteration must start without it.
         let t = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(250));
-            let _ = q2.try_push(8);
+            let _ = q2.try_push(normal(8));
         });
-        let b = Batcher::new(q, BatchPolicy { max_batch: 8, window: Duration::from_millis(30) });
-        let start = Instant::now();
-        assert_eq!(b.next_batch().unwrap(), vec![7], "deadline must cut the batch");
-        assert!(start.elapsed() < Duration::from_millis(200));
+        let mut b = ContinuousBatcher::new(
+            q,
+            StepPolicy { max_live: 8, idle_window: Duration::from_millis(30) },
+        );
+        let mut live = Vec::new();
+        let t0 = Instant::now();
+        assert!(b.admit(&mut live));
+        assert_eq!(live.iter().map(|i| i.0).collect::<Vec<_>>(), vec![7]);
+        assert!(t0.elapsed() < Duration::from_millis(200), "idle window must cut");
         t.join().unwrap();
-        assert_eq!(b.next_batch().unwrap(), vec![8]);
+        live.clear();
+        assert!(b.admit(&mut live));
+        assert_eq!(live.iter().map(|i| i.0).collect::<Vec<_>>(), vec![8]);
     }
 
     #[test]
-    fn shutdown_drains_all_pending() {
-        let q = queue_of(64, &[1, 2, 3, 4, 5]);
+    fn shutdown_drains_queue_and_pen_then_reports_closed() {
+        let q = queue_of(64, (1..=5).map(normal).collect());
         q.close();
-        let b = Batcher::new(q, BatchPolicy { max_batch: 2, window: Duration::from_millis(5) });
-        let mut drained = Vec::new();
-        let mut batches = 0;
-        while let Some(batch) = b.next_batch() {
-            assert!(batch.len() <= 2);
-            drained.extend(batch);
-            batches += 1;
+        let mut b = ContinuousBatcher::new(q, policy(2));
+        let mut seen = Vec::new();
+        let mut live: Vec<Item> = Vec::new();
+        loop {
+            let open = b.admit(&mut live);
+            seen.extend(live.drain(..).map(|i| i.0));
+            if !open {
+                break;
+            }
         }
-        assert_eq!(drained, vec![1, 2, 3, 4, 5], "no admitted request may be dropped");
-        assert_eq!(batches, 3);
+        assert_eq!(seen, vec![1, 2, 3, 4, 5], "no admitted request may be dropped");
+        assert_eq!(b.pen_len(), 0);
     }
 
     #[test]
-    fn occupancy_counts_only_real_rows() {
-        let rows: Vec<&[i32]> = vec![&[1, 2, 3], &[4, 5]];
-        let (tokens, occ) = assemble_padded(&rows, 4, 3);
-        assert_eq!(occ, 2);
-        assert_eq!(tokens, vec![1, 2, 3, 4, 5, 0, 0, 0, 0, 0, 0, 0]);
+    fn defunct_pen_items_surface_past_a_full_live_set() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let q: Arc<Bounded<Flagged>> = Arc::new(Bounded::new(8));
+        let flag = Arc::new(AtomicBool::new(false));
+        for i in 0..2 {
+            q.try_push(Flagged(i, Arc::new(AtomicBool::new(false)))).ok();
+        }
+        q.try_push(Flagged(2, flag.clone())).ok();
+        let mut b = ContinuousBatcher::new(
+            q,
+            StepPolicy { max_live: 2, idle_window: Duration::from_millis(1) },
+        );
+        let mut live = Vec::new();
+        assert!(b.admit(&mut live));
+        assert_eq!(live.len(), 2, "live set full");
+        assert_eq!(b.pen_len(), 1, "overflow waits in the pen");
+        // cancel the penned item: the next admit must surface it even
+        // though no live slot is free
+        flag.store(true, Ordering::Relaxed);
+        assert!(b.admit(&mut live));
+        assert_eq!(b.pen_len(), 0);
+        assert_eq!(live.len(), 3, "defunct item bypasses the cap for retirement");
+        assert_eq!(live[2].0, 2);
     }
 
     #[test]
-    fn padding_truncates_long_rows() {
-        let rows: Vec<&[i32]> = vec![&[9, 9, 9, 9, 9]];
-        let (tokens, occ) = assemble_padded(&rows, 2, 3);
-        assert_eq!(occ, 1);
-        assert_eq!(tokens, vec![9, 9, 9, 0, 0, 0]);
-    }
-
-    #[test]
-    fn overfull_row_set_clamps_occupancy() {
-        let rows: Vec<&[i32]> = vec![&[1], &[2], &[3]];
-        let (tokens, occ) = assemble_padded(&rows, 2, 1);
-        assert_eq!(occ, 2);
-        assert_eq!(tokens, vec![1, 2]);
+    fn closed_empty_queue_reports_no_more_work() {
+        let q: Arc<Bounded<Item>> = Arc::new(Bounded::new(4));
+        q.close();
+        let mut b = ContinuousBatcher::new(q, policy(2));
+        let mut live = Vec::new();
+        assert!(!b.admit(&mut live));
+        assert!(live.is_empty());
     }
 }

@@ -145,7 +145,9 @@ impl Histogram {
 /// Per-worker (and, merged, per-server) serving metrics.
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
+    /// Requests that reached a terminal state on this worker.
     pub served: u64,
+    /// Decode iterations (padded step batches dispatched).
     pub batches: u64,
     pub total_batch_occupancy: u64,
     /// Submissions that found every worker queue full and had to block
@@ -154,10 +156,40 @@ pub struct ServeMetrics {
     /// Queue depth sampled at each dispatch (backlog gauge).
     pub queue_depth_sum: u64,
     pub queue_depth_samples: u64,
-    /// Time spent inside `Session::run` (device occupancy numerator).
+    /// In-flight sequences on the worker — live decode set PLUS the
+    /// batcher's holding pen — sampled at each iteration. Distinct
+    /// from `total_batch_occupancy / batches` (rows actually in the
+    /// step batch): the gap between the two is admitted work waiting
+    /// for a decode slot. The autoscaler reads both: deep queues say
+    /// "add workers", shallow decode sets say "shrink".
+    pub decode_depth_sum: u64,
+    pub decode_depth_samples: u64,
+    /// Tokens generated across all recorded requests (decode
+    /// throughput numerator).
+    pub decode_tokens: u64,
+    /// Terminal-state counters for recorded requests. `served` is
+    /// their sum; rejected requests never reach a worker and are
+    /// counted router-side.
+    pub completed: u64,
+    pub cancelled: u64,
+    pub deadline_exceeded: u64,
+    /// Admission-time rejections (router-level; zero on worker
+    /// metrics).
+    pub rejected: u64,
+    /// Time spent inside `Session::decode_step` (device occupancy
+    /// numerator).
     pub exec_secs: f64,
-    /// End-to-end request latency (queue + batch + execute + post).
+    /// End-to-end request latency (queue + decode loop + post) of
+    /// COMPLETED requests only — cancelled/expired lifetimes are not
+    /// service latencies (they live in the terminal-state counters).
     pub latency: Histogram,
+    /// Submission → first generated token (includes queue wait and
+    /// admission — the responsiveness number).
+    pub first_token: Histogram,
+    /// Token → token gaps ONLY (first token excluded, so queueing
+    /// under load cannot masquerade as decode-step latency — this is
+    /// the tail the continuous batcher is supposed to protect).
+    pub inter_token: Histogram,
 }
 
 impl ServeMetrics {
@@ -177,6 +209,15 @@ impl ServeMetrics {
         }
     }
 
+    /// Mean in-flight sequences (live + pen) per iteration.
+    pub fn mean_decode_depth(&self) -> f64 {
+        if self.decode_depth_samples == 0 {
+            0.0
+        } else {
+            self.decode_depth_sum as f64 / self.decode_depth_samples as f64
+        }
+    }
+
     pub fn merge(&mut self, other: &ServeMetrics) {
         self.served += other.served;
         self.batches += other.batches;
@@ -184,8 +225,17 @@ impl ServeMetrics {
         self.blocked_submits += other.blocked_submits;
         self.queue_depth_sum += other.queue_depth_sum;
         self.queue_depth_samples += other.queue_depth_samples;
+        self.decode_depth_sum += other.decode_depth_sum;
+        self.decode_depth_samples += other.decode_depth_samples;
+        self.decode_tokens += other.decode_tokens;
+        self.completed += other.completed;
+        self.cancelled += other.cancelled;
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.rejected += other.rejected;
         self.exec_secs += other.exec_secs;
         self.latency.merge(&other.latency);
+        self.first_token.merge(&other.first_token);
+        self.inter_token.merge(&other.inter_token);
     }
 }
 
@@ -272,5 +322,42 @@ mod tests {
         assert_eq!(a.batches, 8);
         assert!((a.mean_occupancy() - 26.0 / 8.0).abs() < 1e-12);
         assert!((a.mean_queue_depth() - 18.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_gauges_and_finish_counters_merge() {
+        let mut a = ServeMetrics {
+            decode_depth_sum: 12,
+            decode_depth_samples: 4,
+            decode_tokens: 40,
+            completed: 3,
+            cancelled: 1,
+            ..Default::default()
+        };
+        a.inter_token.record_us(100.0);
+        let mut b = ServeMetrics {
+            decode_depth_sum: 4,
+            decode_depth_samples: 4,
+            decode_tokens: 8,
+            completed: 1,
+            deadline_exceeded: 2,
+            ..Default::default()
+        };
+        b.inter_token.record_us(300.0);
+        assert!((a.mean_decode_depth() - 3.0).abs() < 1e-12);
+        a.merge(&b);
+        assert!((a.mean_decode_depth() - 2.0).abs() < 1e-12);
+        assert_eq!(a.decode_tokens, 48);
+        assert_eq!(
+            (a.completed, a.cancelled, a.deadline_exceeded, a.rejected),
+            (4, 1, 2, 0)
+        );
+        assert_eq!(a.inter_token.count(), 2);
+    }
+
+    #[test]
+    fn empty_decode_gauge_is_zero() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.mean_decode_depth(), 0.0);
     }
 }

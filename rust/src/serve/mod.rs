@@ -1,119 +1,180 @@
-//! Serving subsystem: admission → router → per-worker batcher →
-//! device-resident session.
+//! Serving subsystem: request-lifecycle API → admission → per-worker
+//! continuous-batching decode loop → device-resident session.
 //!
 //! This is the "no runtime overhead" demonstration of §5.3 scaled up
 //! from the seed's single runner thread: the same compiled graph serves
 //! FP-sentinel, uniform and mixed-precision bit grids, so mixed
 //! precision adds zero request-path work — and now it does so through a
-//! real serving stack that the end-to-end latency/throughput numbers
-//! (Table-4 analog, `BENCH_serve.json`) are measured against.
+//! real serving stack under a real DECODE load (multi-token sessions,
+//! iteration-level continuous batching), which is what the end-to-end
+//! latency/throughput numbers (Table-4 analog, `BENCH_serve.json`) are
+//! measured against.
 //!
 //! Layout:
 //!
+//! * [`api`] — the request lifecycle: typed [`GenRequest`]s, [`Ticket`]
+//!   handles (poll / wait / per-token streaming / cancel), terminal
+//!   [`Finish`] reasons, and the [`Client`] admission façade.
 //! * [`admission`] — bounded per-worker request queues with
 //!   backpressure (replaces the seed's unbounded mpsc).
-//! * [`batcher`] — the deadline batching loop, extracted so it is
-//!   unit-testable without PJRT.
-//! * [`metrics`] — latency histograms (p50/p95/p99), occupancy, queue
-//!   depth; replaces the flat `ServeStats`.
-//! * [`router`] — round-robin dispatch over N worker threads. Each
-//!   worker owns a complete [`crate::runtime::Session`] (its own
-//!   execution backend + device-resident weights + device-resident bit
-//!   grids) because PJRT handles are `!Send`; the per-dispatch
-//!   host→device transfer is the token batch alone. Workers select
-//!   their backend via `ServeConfig::backend` (`--backend
-//!   {auto,pjrt-cpu,interp}`), so the same router serves compiled HLO
-//!   or the artifact-less interpreter.
+//! * [`batcher`] — iteration-level continuous batching: the live
+//!   decode set, admission policy, shutdown-drain semantics; extracted
+//!   so it is unit-testable without PJRT.
+//! * [`metrics`] — latency + inter-token histograms (p50/p95/p99),
+//!   occupancy, queue-depth and decode-set-depth gauges, terminal-state
+//!   counters.
+//! * [`router`] — worker lifecycle + the decode loop. Each worker owns
+//!   a complete [`crate::runtime::Session`] (its own execution backend
+//!   + device-resident weights + device-resident bit grids) because
+//!   PJRT handles are `!Send`; the per-iteration host→device transfer
+//!   is the padded step batch alone. Workers select their backend via
+//!   `ServeConfig::backend` (`--backend {auto,pjrt-cpu,interp}`), so
+//!   the same router serves compiled HLO or the artifact-less
+//!   interpreter.
 //!
 //! Threading model in one picture:
 //!
 //! ```text
-//! client ── submit ──> Router ──(round-robin, bounded queues)──┬─> worker 0: Batcher -> Session::run -> respond
-//!                                                              ├─> worker 1: ...
-//!                                                              └─> worker N-1: ...
+//! Client ── submit(GenRequest) ─> Ticket        (round-robin, bounded queues)
+//!    │                                   ╭─> worker 0 ─╮   per iteration:
+//!    ├──────────────────────────────────>│  admit new ──> live decode set
+//!    │                                   │  retire cancelled/expired/done
+//!    │    Event::Token per token         │  step = Session::decode_step(live)
+//!    │<──────────────────────────────────│  append token to every sequence
+//!    │    Event::Done(Outcome)           ╰─< loop ─╯
+//!    │                                   ├─> worker 1: ...
+//!    └─ poll/wait/recv_token/try_cancel  └─> worker N-1: ...
 //! ```
 //!
-//! Shutdown closes every queue; workers drain all admitted requests
-//! before exiting, so nothing accepted is ever dropped.
+//! A sequence joins the live set the iteration after it is admitted and
+//! leaves the moment it finishes — so a short request never waits for a
+//! long one's remaining tokens (no head-of-line blocking), and the
+//! packed-kernel serving path (`qpredict` off `PackedCache`) is
+//! exercised autoregressively, token after token, off the same
+//! resident compressed weights.
+//!
+//! Shutdown closes every queue; workers drain all admitted requests and
+//! decode their live sets to completion before exiting, so nothing
+//! accepted is ever dropped.
 
 pub mod admission;
+pub mod api;
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 
-pub use batcher::{assemble_padded, BatchPolicy, Batcher};
+pub use api::{Client, Event, Finish, GenRequest, Outcome, Priority, Ticket, TokenEvent};
+pub use batcher::{ContinuousBatcher, Schedulable, StepPolicy};
 pub use metrics::{Histogram, ServeMetrics};
 pub use router::{Router, ServeConfig, ServeReport};
 
-use std::sync::mpsc;
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::{Context, Result};
 
 use crate::calib::TokenStream;
 
-/// A next-token prediction request: a full context window.
-pub struct Request {
-    pub id: u64,
-    pub tokens: Vec<i32>,
-    pub tx: mpsc::Sender<Response>,
-    /// Count this request in the worker's served/latency metrics.
-    /// Warmup barriers submit with `record: false` so cold-start
-    /// compile waits never contaminate the latency histograms.
-    pub record: bool,
-}
-
+/// What a synthetic client run offers the server.
 #[derive(Clone, Debug)]
-pub struct Response {
-    pub id: u64,
-    pub next_token: i32,
-    /// Queue + batch + execute + postprocess, measured server-side.
-    pub latency: Duration,
-    pub batch_size: usize,
-    /// Which worker served the request (round-robin dispatch).
-    pub worker: usize,
+pub struct WorkloadSpec {
+    /// Prompt window length sampled from the token stream.
+    pub seq_len: usize,
+    pub n_requests: usize,
+    /// Open-loop Poisson arrival rate.
+    pub rate_per_sec: f64,
+    /// Decode budget per request (1 == the seed's one-shot prediction).
+    pub max_new_tokens: usize,
+    /// Optional per-request deadline (relative to submission).
+    pub deadline: Option<Duration>,
+    pub seed: u64,
 }
 
-/// What [`run_workload`] measured.
+impl WorkloadSpec {
+    pub fn new(seq_len: usize, n_requests: usize, rate_per_sec: f64, seed: u64) -> WorkloadSpec {
+        WorkloadSpec { seq_len, n_requests, rate_per_sec, max_new_tokens: 1, deadline: None, seed }
+    }
+
+    pub fn max_new_tokens(mut self, n: usize) -> WorkloadSpec {
+        self.max_new_tokens = n;
+        self
+    }
+
+    pub fn deadline(mut self, d: Duration) -> WorkloadSpec {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// What [`run_workload`] measured. Every submitted request is accounted
+/// under exactly one terminal [`Finish`] reason — a cancelled or
+/// deadline-exceeded request is data here, not an error (errors are
+/// reserved for a worker dying mid-request).
 pub struct WorkloadReport {
-    /// Per-request server-side latencies (seconds), submission order.
+    /// Per-request server-side latencies (seconds) of COMPLETED
+    /// requests, submission order.
     pub latencies: Vec<f64>,
-    /// First measured submission → last response. Warmup (per-worker
-    /// engine compilation + buffer upload) is excluded, so
-    /// `n / wall_secs` is a serving-throughput number, not a
-    /// cold-start-amortization number.
+    /// Tokens generated across all requests (including partial output
+    /// of cancelled/expired ones).
+    pub decode_tokens: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+    pub deadline_exceeded: u64,
+    pub rejected: u64,
+    /// First measured submission → last terminal event. Warmup
+    /// (per-worker engine compilation + buffer upload) is excluded, so
+    /// the throughput numbers measure serving, not cold-start
+    /// amortization.
     pub wall_secs: f64,
 }
 
 impl WorkloadReport {
+    /// Requests reaching a terminal state per second.
     pub fn throughput_rps(&self) -> f64 {
-        self.latencies.len() as f64 / self.wall_secs.max(1e-9)
+        let n = self.completed + self.cancelled + self.deadline_exceeded + self.rejected;
+        n as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Generated tokens per second (decode throughput).
+    pub fn decode_tps(&self) -> f64 {
+        self.decode_tokens as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// One-line terminal-state summary for demo/bench output.
+    pub fn finish_line(&self) -> String {
+        format!(
+            "completed {} | cancelled {} | deadline-exceeded {} | rejected {}",
+            self.completed, self.cancelled, self.deadline_exceeded, self.rejected
+        )
     }
 }
 
 /// Synthetic client workload against a running server.
 ///
-/// Arrival model: OPEN-LOOP Poisson — `n_requests` windows sampled from
-/// a token stream are submitted with exponential inter-arrival gaps at
-/// `rate_per_sec`, and the sampled gap is honored exactly (the seed
-/// clamped gaps at 50 ms, silently turning low-rate workloads into
-/// higher-rate ones). The loop becomes CLOSED only at the admission
-/// bound: when every worker queue is full, `submit` blocks, so the
-/// client cannot outrun the server by more than `workers * queue_cap`
-/// in-flight requests. After the submission phase the client blocks for
-/// all completions.
+/// Arrival model: OPEN-LOOP Poisson — `n_requests` prompt windows
+/// sampled from a token stream are submitted with exponential
+/// inter-arrival gaps at `rate_per_sec`, and the sampled gap is honored
+/// exactly (the seed clamped gaps at 50 ms, silently turning low-rate
+/// workloads into higher-rate ones). Each request asks for
+/// `max_new_tokens` of decode. The loop becomes CLOSED only at the
+/// admission bound: when every worker queue is full, `submit` blocks,
+/// so the client cannot outrun the server by more than
+/// `workers * queue_cap` in-flight requests. After the submission phase
+/// the client blocks for all terminal events and maps each ticket's
+/// [`Finish`] reason into the report — an expired or cancelled request
+/// is a counted outcome, not an opaque "channel closed" error.
 pub fn run_workload(
     server: &mut Router,
     stream: &TokenStream,
-    seq_len: usize,
-    n_requests: usize,
-    rate_per_sec: f64,
-    seed: u64,
+    spec: &WorkloadSpec,
 ) -> Result<WorkloadReport> {
-    anyhow::ensure!(rate_per_sec > 0.0, "rate_per_sec must be positive (got {rate_per_sec})");
-    let mut rng = crate::util::rng::Rng::new(seed);
-    let mut rxs = Vec::with_capacity(n_requests);
-    let max_start = stream.len() - seq_len - 1;
+    anyhow::ensure!(
+        spec.rate_per_sec > 0.0,
+        "rate_per_sec must be positive (got {})",
+        spec.rate_per_sec
+    );
+    let mut rng = crate::util::rng::Rng::new(spec.seed);
+    let mut tickets = Vec::with_capacity(spec.n_requests);
+    let max_start = stream.len() - spec.seq_len - 1;
     // Warmup barrier: each worker compiles its executable and uploads
     // its buffers on its own thread; block on one unmeasured,
     // unrecorded request per worker so cold-start cost never counts as
@@ -121,26 +182,52 @@ pub fn run_workload(
     // (Round-robin lands one warmup on each worker.)
     let mut warm = Vec::with_capacity(server.workers());
     for _ in 0..server.workers() {
-        warm.push(server.submit_warmup(stream.tokens[..seq_len].to_vec())?);
+        warm.push(server.submit_warmup(stream.tokens[..spec.seq_len].to_vec())?);
     }
-    for rx in warm {
-        rx.recv().map_err(|_| anyhow!("warmup failed"))?;
+    for mut t in warm {
+        t.wait().context("warmup failed")?;
     }
     let t0 = std::time::Instant::now();
-    for _ in 0..n_requests {
+    for _ in 0..spec.n_requests {
         let start = rng.below(max_start);
-        let tokens = stream.tokens[start..start + seq_len].to_vec();
-        rxs.push(server.submit(tokens)?);
-        let gap = rng.exp(rate_per_sec);
+        let tokens = stream.tokens[start..start + spec.seq_len].to_vec();
+        let mut req = GenRequest::new(tokens).max_new_tokens(spec.max_new_tokens);
+        if let Some(d) = spec.deadline {
+            req = req.deadline(d);
+        }
+        tickets.push(server.submit_request(req)?);
+        let gap = rng.exp(spec.rate_per_sec);
         // non-finite gaps can't reach a Duration (from_secs_f64 panics)
         if gap.is_finite() && gap > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(gap));
         }
     }
-    let mut latencies = Vec::with_capacity(n_requests);
-    for rx in rxs {
-        let resp = rx.recv().map_err(|_| anyhow!("response channel closed"))?;
-        latencies.push(resp.latency.as_secs_f64());
+    let mut report = WorkloadReport {
+        latencies: Vec::with_capacity(spec.n_requests),
+        decode_tokens: 0,
+        completed: 0,
+        cancelled: 0,
+        deadline_exceeded: 0,
+        rejected: 0,
+        wall_secs: 0.0,
+    };
+    for mut t in tickets {
+        // `wait` errors only when a worker died mid-request; every
+        // normal terminal state — including cancellation and deadline
+        // expiry — arrives as an Outcome and is tallied by reason.
+        let id = t.id();
+        let o = t.wait().with_context(|| format!("request {id}"))?;
+        report.decode_tokens += o.tokens.len() as u64;
+        match o.finish {
+            Finish::Completed => {
+                report.completed += 1;
+                report.latencies.push(o.latency.as_secs_f64());
+            }
+            Finish::Cancelled => report.cancelled += 1,
+            Finish::DeadlineExceeded => report.deadline_exceeded += 1,
+            Finish::Rejected(_) => report.rejected += 1,
+        }
     }
-    Ok(WorkloadReport { latencies, wall_secs: t0.elapsed().as_secs_f64() })
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(report)
 }

@@ -1,4 +1,4 @@
-//! Round-robin router over N serving workers.
+//! Worker lifecycle + the decode loop behind the request API.
 //!
 //! Threading model
 //! ---------------
@@ -8,23 +8,28 @@
 //! or the pure-Rust interpreter — plus weight buffers and
 //! device-resident bit grids), built on the worker thread at spawn.
 //! The router owns only `Send` things: one bounded admission queue per
-//! worker plus the join handles.
+//! worker, the shared admission counters, and the join handles.
 //!
-//! Request path: `Router::submit` picks the next worker round-robin
-//! and `try_push`es into its queue; if that queue is full it spills to
-//! the other workers, and only if EVERY queue is full does it block on
-//! the home queue (backpressure — the client slows down instead of the
-//! server buffering unboundedly). Each worker runs the deadline
-//! [`Batcher`] over its queue, executes the padded batch through its
-//! session (token-only upload), and answers each request over its
-//! per-request response channel.
+//! Request path: a [`Client`] (from [`Router::client`], or the
+//! `submit*` shims on the router itself) validates the request and
+//! pushes a [`DecodeSeq`] onto a worker queue — round-robin home
+//! worker, spill-over to any worker with space, and only when EVERY
+//! queue is full a blocking push (backpressure: the client slows down
+//! instead of the server buffering unboundedly). Each worker runs the
+//! iteration-level [`ContinuousBatcher`] over its queue: every
+//! iteration re-forms the live decode set, executes ONE padded step
+//! batch through `Session::decode_step` (token-only upload), appends
+//! each sampled token to its sequence, streams it to the ticket, and
+//! retires finished/cancelled/expired sequences between iterations.
 //!
 //! Shutdown: `Router::shutdown` closes every queue. Workers drain all
-//! admitted requests (the batcher keeps yielding until its queue is
-//! closed AND empty), return their [`ServeMetrics`], and the router
-//! merges them into a [`ServeReport`].
+//! admitted requests — the batcher keeps admitting until its queue is
+//! closed AND empty, then the worker decodes its live set to
+//! completion — return their [`ServeMetrics`], and the router merges
+//! them into a [`ServeReport`].
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -36,13 +41,13 @@ use crate::model::{Manifest, WeightStore};
 use crate::quant::{BitAlloc, BlockIndex};
 use crate::runtime::{open_backend, BackendKind, Session};
 
-use super::admission::{Bounded, PushError};
-use super::batcher::{assemble_padded, BatchPolicy, Batcher};
+use super::admission::Bounded;
+use super::api::{Client, Event, Finish, GenRequest, Outcome, Priority, Shared, Ticket, TokenEvent};
+use super::batcher::{ContinuousBatcher, Schedulable, StepPolicy};
 use super::metrics::ServeMetrics;
-use super::{Request, Response};
 
 pub const DEFAULT_QUEUE_CAP: usize = 256;
-pub const DEFAULT_BATCH_WINDOW: Duration = Duration::from_millis(3);
+pub const DEFAULT_IDLE_WINDOW: Duration = Duration::from_millis(3);
 
 /// Server configuration. `alloc` fixes the bit grids served (the
 /// quantized model); weights and grids are uploaded once per worker at
@@ -51,8 +56,9 @@ pub const DEFAULT_BATCH_WINDOW: Duration = Duration::from_millis(3);
 pub struct ServeConfig {
     pub artifacts: PathBuf,
     pub alloc: BitAlloc,
-    /// How long the batcher waits to fill a batch before dispatching a
-    /// partial one.
+    /// How long an IDLE worker coalesces arrivals before its first
+    /// decode iteration (a busy worker admits without waiting — see
+    /// [`ContinuousBatcher`]).
     pub batch_window: Duration,
     /// Worker threads, each with its own backend (PJRT is `!Send`).
     pub workers: usize,
@@ -68,7 +74,7 @@ impl ServeConfig {
         ServeConfig {
             artifacts,
             alloc,
-            batch_window: DEFAULT_BATCH_WINDOW,
+            batch_window: DEFAULT_IDLE_WINDOW,
             workers: 1,
             queue_cap: DEFAULT_QUEUE_CAP,
             backend: BackendKind::Auto,
@@ -81,24 +87,141 @@ impl ServeConfig {
 pub struct ServeReport {
     pub workers: usize,
     pub per_worker: Vec<ServeMetrics>,
-    /// All workers merged; `blocked_submits` is filled in router-side.
+    /// All workers merged; `blocked_submits`/`rejected` are filled in
+    /// router-side (admission happens client-side, not on a worker).
     pub total: ServeMetrics,
 }
 
-type Queued = (Request, Instant);
+/// One in-flight sequence: the admission record pushed by the client
+/// AND the worker's decode state. Crosses the queue once; after that
+/// it lives in exactly one worker's decode set until it finishes.
+pub(crate) struct DecodeSeq {
+    pub id: u64,
+    /// Full context: prompt + every generated token (the step batch
+    /// serves the sliding window over its tail).
+    tokens: Vec<i32>,
+    max_new: usize,
+    priority: Priority,
+    record: bool,
+    tx: mpsc::Sender<Event>,
+    cancel: Arc<AtomicBool>,
+    submitted: Instant,
+    /// Absolute deadline, resolved at admission.
+    deadline: Option<Instant>,
+    /// Generated tokens only (returned in the outcome).
+    generated: Vec<i32>,
+    /// Timestamp of submission, then of each generated token — the
+    /// inter-token-latency clock.
+    last_event: Instant,
+}
 
-/// Client-side handle: round-robin dispatcher over the worker queues.
+impl Schedulable for DecodeSeq {
+    fn priority(&self) -> Priority {
+        self.priority
+    }
+
+    /// Cancelled/expired sequences surface out of the batcher's pen
+    /// even when the live set is full, so their terminal event is
+    /// never delayed behind long-running generations.
+    fn defunct(&self) -> bool {
+        self.cancelled() || self.expired(Instant::now())
+    }
+}
+
+impl DecodeSeq {
+    pub(crate) fn admit(
+        id: u64,
+        req: GenRequest,
+        tx: mpsc::Sender<Event>,
+        cancel: Arc<AtomicBool>,
+        submitted: Instant,
+    ) -> DecodeSeq {
+        let deadline = req.deadline.map(|d| submitted + d);
+        DecodeSeq {
+            id,
+            tokens: req.tokens,
+            max_new: req.max_new_tokens,
+            priority: req.priority,
+            record: req.record,
+            tx,
+            cancel,
+            submitted,
+            deadline,
+            generated: Vec::new(),
+            last_event: submitted,
+        }
+    }
+
+    fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    fn done(&self) -> bool {
+        self.generated.len() >= self.max_new
+    }
+
+    /// Append one sampled token: extend the sequence, stream the event,
+    /// record the gap — time-to-first-token and inter-token go to
+    /// SEPARATE histograms so queue wait under load never masquerades
+    /// as decode-step latency.
+    fn push_token(&mut self, tok: i32, now: Instant, metrics: &mut ServeMetrics) {
+        let gap = now.duration_since(self.last_event);
+        self.last_event = now;
+        let index = self.generated.len();
+        self.generated.push(tok);
+        self.tokens.push(tok);
+        if self.record {
+            if index == 0 {
+                metrics.first_token.record(gap);
+            } else {
+                metrics.inter_token.record(gap);
+            }
+            metrics.decode_tokens += 1;
+        }
+        let _ = self.tx.send(Event::Token(TokenEvent { index, token: tok, latency: gap }));
+    }
+
+    /// Reach the terminal state: send `Event::Done`, credit the
+    /// metrics. Consumes the sequence — its decode slot is free.
+    /// The latency histogram records COMPLETED requests only (matching
+    /// `WorkloadReport::latencies`): a cancelled or expired request's
+    /// queue wait is not a service latency and would poison the tail
+    /// percentiles under deadline-heavy load.
+    fn finish(self, finish: Finish, worker: usize, metrics: &mut ServeMetrics) {
+        let latency = self.submitted.elapsed();
+        if self.record {
+            metrics.served += 1;
+            match finish {
+                Finish::Completed => {
+                    metrics.completed += 1;
+                    metrics.latency.record(latency);
+                }
+                Finish::Cancelled => metrics.cancelled += 1,
+                Finish::DeadlineExceeded => metrics.deadline_exceeded += 1,
+                Finish::Rejected(_) => metrics.rejected += 1,
+            }
+        }
+        let _ = self.tx.send(Event::Done(Outcome {
+            id: self.id,
+            finish,
+            tokens: self.generated,
+            latency,
+            worker,
+        }));
+    }
+}
+
+/// Worker lifecycle handle: spawns the decode workers, hands out
+/// admission [`Client`]s, aggregates metrics at shutdown.
 pub struct Router {
-    queues: Vec<Arc<Bounded<Queued>>>,
+    queues: Vec<Arc<Bounded<DecodeSeq>>>,
     joins: Vec<JoinHandle<Result<ServeMetrics>>>,
-    rr: usize,
-    next_id: u64,
-    blocked_submits: u64,
-    /// Vocabulary bound for admission-time token validation: a single
-    /// malformed request must be rejected at submit, never allowed to
-    /// take down a worker (the interpreter backend validates tokens in
-    /// run_model and a failing batch would kill the whole worker loop).
-    vocab: usize,
+    shared: Arc<Shared>,
+    client: Client,
 }
 
 impl Router {
@@ -145,7 +268,9 @@ impl Router {
             queues.push(queue);
             joins.push(join);
         }
-        Ok(Router { queues, joins, rr: 0, next_id: 0, blocked_submits: 0, vocab })
+        let shared = Arc::new(Shared::default());
+        let client = Client::new(queues.clone(), shared.clone(), vocab);
+        Ok(Router { queues, joins, shared, client })
     }
 
     pub fn workers(&self) -> usize {
@@ -157,72 +282,29 @@ impl Router {
         self.queues.iter().map(|q| q.len()).collect()
     }
 
-    /// Submit a request; returns a receiver for the response.
-    ///
-    /// Dispatch: round-robin home worker, spill-over to any worker with
-    /// space, and — only when every live queue is full — a blocking
-    /// push on the first live queue (admission backpressure). A closed
-    /// queue (dead worker) is skipped like a full one; submission fails
-    /// only when every worker is gone.
-    pub fn submit(&mut self, tokens: Vec<i32>) -> Result<mpsc::Receiver<Response>> {
-        self.submit_inner(tokens, true)
+    /// An admission handle that can outlive borrows of the router (and
+    /// move to another thread). Clones share the id space and
+    /// counters.
+    pub fn client(&self) -> Client {
+        self.client.clone()
     }
 
-    /// Submit a request that is served normally but excluded from the
-    /// worker metrics (used by warmup barriers, whose "latency" is the
+    /// Submit a full lifecycle request; returns its [`Ticket`].
+    pub fn submit_request(&mut self, req: GenRequest) -> Result<Ticket> {
+        self.client.submit(req)
+    }
+
+    /// Seed-era shim: one-shot next-token prediction, recorded.
+    /// Equivalent to `submit_request(GenRequest::new(tokens))`.
+    pub fn submit(&mut self, tokens: Vec<i32>) -> Result<Ticket> {
+        self.client.submit(GenRequest::new(tokens))
+    }
+
+    /// Seed-era shim: a request served normally but excluded from the
+    /// worker metrics (warmup barriers, whose "latency" is the
     /// worker's one-time engine compilation).
-    pub fn submit_warmup(&mut self, tokens: Vec<i32>) -> Result<mpsc::Receiver<Response>> {
-        self.submit_inner(tokens, false)
-    }
-
-    fn submit_inner(
-        &mut self,
-        tokens: Vec<i32>,
-        record: bool,
-    ) -> Result<mpsc::Receiver<Response>> {
-        // Reject malformed requests at admission: one bad client must
-        // cost one error, not a worker (and with it everyone else's
-        // pending requests on that queue).
-        if tokens.is_empty() {
-            bail!("empty token window");
-        }
-        if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
-            bail!("token {t} outside vocab {}", self.vocab);
-        }
-        let (tx, rx) = mpsc::channel();
-        let id = self.next_id;
-        self.next_id += 1;
-        let n = self.queues.len();
-        let home = self.rr % n;
-        self.rr = (self.rr + 1) % n;
-        let mut msg: Queued = (Request { id, tokens, tx, record }, Instant::now());
-        let mut any_live = false;
-        for k in 0..n {
-            match self.queues[(home + k) % n].try_push(msg) {
-                Ok(()) => return Ok(rx),
-                Err(PushError::Full(m)) => {
-                    any_live = true;
-                    msg = m;
-                }
-                Err(PushError::Closed(m)) => msg = m,
-            }
-        }
-        if !any_live {
-            bail!("server is shut down");
-        }
-        self.blocked_submits += 1;
-        for k in 0..n {
-            let q = &self.queues[(home + k) % n];
-            if q.is_closed() {
-                continue;
-            }
-            match q.push(msg) {
-                Ok(()) => return Ok(rx),
-                // raced with a shutdown/death — try the next queue
-                Err(PushError::Closed(m)) | Err(PushError::Full(m)) => msg = m,
-            }
-        }
-        bail!("server is shut down")
+    pub fn submit_warmup(&mut self, tokens: Vec<i32>) -> Result<Ticket> {
+        self.client.submit(GenRequest::new(tokens).unrecorded())
     }
 
     /// Stop admission, drain every pending request, join the workers
@@ -239,7 +321,8 @@ impl Router {
         for m in &per_worker {
             total.merge(m);
         }
-        total.blocked_submits = self.blocked_submits;
+        total.blocked_submits = self.shared.blocked_submits.load(Ordering::Relaxed);
+        total.rejected += self.shared.rejected.load(Ordering::Relaxed);
         Ok(ServeReport { workers: per_worker.len(), per_worker, total })
     }
 }
@@ -257,7 +340,7 @@ impl Drop for Router {
 /// Closes (and drains) a worker queue when the worker exits — on the
 /// clean path the queue is already empty, on the error/panic path the
 /// pending requests are dropped so their clients unblock with an error.
-struct CloseOnExit(Arc<Bounded<Queued>>);
+struct CloseOnExit(Arc<Bounded<DecodeSeq>>);
 
 impl Drop for CloseOnExit {
     fn drop(&mut self) {
@@ -266,13 +349,14 @@ impl Drop for CloseOnExit {
 }
 
 /// One worker: builds its own backend + session on this thread (PJRT
-/// handles are `!Send`), then serves batches until shutdown.
+/// handles are `!Send`), then runs the continuous-batching decode loop
+/// until shutdown.
 fn worker_loop(
     worker: usize,
     artifacts: PathBuf,
     kind: BackendKind,
     grids: Vec<Vec<i32>>,
-    queue: Arc<Bounded<Queued>>,
+    queue: Arc<Bounded<DecodeSeq>>,
     window: Duration,
 ) -> Result<ServeMetrics> {
     let manifest = Manifest::load(&artifacts)?;
@@ -283,70 +367,81 @@ fn worker_loop(
     let backend = open_backend(kind, manifest, &[exec_name])?;
     let store = WeightStore::load(backend.manifest())?;
     let batch = backend.batch_of(exec_name)?;
-    let seq = backend.manifest().config.seq_len;
-    let vocab = backend.manifest().config.vocab;
-    let use_pred = exec_name == "qpredict";
     // Weights AND bit grids go device-resident here, once. From now on
-    // each dispatch uploads exactly one buffer: the token batch.
+    // each decode iteration uploads exactly one buffer: the step batch.
     let session = Session::with_backend(backend, &store, &grids)?;
     drop(store);
 
-    let batcher = Batcher::new(queue.clone(), BatchPolicy { max_batch: batch, window });
+    let mut batcher =
+        ContinuousBatcher::new(queue.clone(), StepPolicy { max_live: batch, idle_window: window });
+    let mut live: Vec<DecodeSeq> = Vec::new();
     let mut metrics = ServeMetrics::default();
-    while let Some(items) = batcher.next_batch() {
-        // Sampled at dispatch; only credited to the metrics below if
-        // this batch contains recorded (non-warmup) requests.
-        let depth = queue.len() as u64;
-        let mut recorded = 0u64;
+    loop {
+        let open = batcher.admit(&mut live);
 
-        let rows: Vec<&[i32]> = items.iter().map(|(r, _)| r.tokens.as_slice()).collect();
-        let (tokens, occupancy) = assemble_padded(&rows, batch, seq);
-        let t0 = Instant::now();
-        let out = session.run(exec_name, &tokens)?;
-        let exec_dt = t0.elapsed().as_secs_f64();
-
-        // Fast path ships [B, T] int32 predictions; fallback argmaxes
-        // the full logits host-side.
-        let preds: Vec<i32> = if use_pred { out[0].to_vec_i32()? } else { Vec::new() };
-        let logits: Vec<f32> = if use_pred { Vec::new() } else { out[0].to_vec_f32()? };
-
-        for (b, (req, t_in)) in items.into_iter().enumerate() {
-            let pos = req.tokens.len().clamp(1, seq) - 1;
-            let best = if use_pred {
-                preds[b * seq + pos] as usize
-            } else {
-                let base = (b * seq + pos) * vocab;
-                let row = &logits[base..base + vocab];
-                let mut best = 0usize;
-                for (v, &x) in row.iter().enumerate() {
-                    if x > row[best] {
-                        best = v;
-                    }
+        // Retire cancelled/expired sequences BEFORE the step: a
+        // cancelled or deadline-exceeded request must never occupy a
+        // decode iteration, and its slot refills on the next admit.
+        let now = Instant::now();
+        if live.iter().any(|s| s.cancelled() || s.expired(now)) {
+            let mut keep = Vec::with_capacity(live.len());
+            for s in live.drain(..) {
+                if s.cancelled() {
+                    s.finish(Finish::Cancelled, worker, &mut metrics);
+                } else if s.expired(now) {
+                    s.finish(Finish::DeadlineExceeded, worker, &mut metrics);
+                } else {
+                    keep.push(s);
                 }
-                best
-            };
-            let latency = t_in.elapsed();
-            if req.record {
-                metrics.latency.record(latency);
-                metrics.served += 1;
-                recorded += 1;
             }
-            let _ = req.tx.send(Response {
-                id: req.id,
-                next_token: best as i32,
-                latency,
-                batch_size: occupancy,
-                worker,
-            });
+            live = keep;
         }
-        // Warmup-only batches stay out of the batch/occupancy/queue
-        // statistics too — they measure engine cold start, not serving.
-        if recorded > 0 {
-            metrics.batches += 1;
-            metrics.total_batch_occupancy += occupancy as u64;
-            metrics.queue_depth_sum += depth;
-            metrics.queue_depth_samples += 1;
-            metrics.exec_secs += exec_dt;
+        if live.is_empty() {
+            if open {
+                continue;
+            }
+            break; // queue closed + drained, decode set empty: done
+        }
+
+        // One decode iteration over the whole live set.
+        let depth = queue.len() as u64;
+        let occupancy = live.len();
+        // In-flight on this worker: decoding + admitted-but-waiting.
+        let in_flight = (live.len() + batcher.pen_len()) as u64;
+        let recorded = live.iter().filter(|s| s.record).count() as u64;
+        let next = {
+            let rows: Vec<&[i32]> = live.iter().map(|s| s.tokens.as_slice()).collect();
+            let t0 = Instant::now();
+            let next = session.decode_step(exec_name, &rows)?;
+            let exec_dt = t0.elapsed().as_secs_f64();
+            // Warmup-only iterations stay out of the batch/occupancy/
+            // depth statistics — they measure engine cold start.
+            if recorded > 0 {
+                metrics.batches += 1;
+                metrics.total_batch_occupancy += occupancy as u64;
+                metrics.decode_depth_sum += in_flight;
+                metrics.decode_depth_samples += 1;
+                metrics.queue_depth_sum += depth;
+                metrics.queue_depth_samples += 1;
+                metrics.exec_secs += exec_dt;
+            }
+            next
+        };
+        let now = Instant::now();
+        for (s, &tok) in live.iter_mut().zip(&next) {
+            s.push_token(tok, now, &mut metrics);
+        }
+        // Retire completed sequences; everyone else decodes on.
+        if live.iter().any(|s| s.done()) {
+            let mut keep = Vec::with_capacity(live.len());
+            for s in live.drain(..) {
+                if s.done() {
+                    s.finish(Finish::Completed, worker, &mut metrics);
+                } else {
+                    keep.push(s);
+                }
+            }
+            live = keep;
         }
     }
     Ok(metrics)

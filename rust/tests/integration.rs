@@ -433,20 +433,22 @@ fn server_round_trip() {
     cfg.batch_window = std::time::Duration::from_millis(2);
     let mut server = scalebits::serve::Router::start(cfg).unwrap();
     let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for i in 0..5 {
         let tokens = stream.tokens[i * 64..i * 64 + m.config.seq_len].to_vec();
-        rxs.push(server.submit(tokens).unwrap());
+        tickets.push(server.submit(tokens).unwrap());
     }
-    for rx in rxs {
-        let resp = rx.recv().unwrap();
-        assert!(resp.next_token >= 0 && (resp.next_token as usize) < m.config.vocab);
-        assert!(resp.batch_size >= 1);
-        assert_eq!(resp.worker, 0);
+    for t in &mut tickets {
+        let o = t.wait().unwrap();
+        assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+        assert_eq!(o.tokens.len(), 1, "seed-shim submit asks for one token");
+        assert!(o.tokens[0] >= 0 && (o.tokens[0] as usize) < m.config.vocab);
+        assert_eq!(o.worker, 0);
     }
     let report = server.shutdown().unwrap();
     assert_eq!(report.workers, 1);
     assert_eq!(report.total.served, 5);
+    assert_eq!(report.total.completed, 5);
     assert_eq!(report.total.latency.count(), 5);
 }
 
@@ -461,16 +463,16 @@ fn multi_worker_router_round_trip() {
     cfg.workers = 2;
     let mut server = scalebits::serve::Router::start(cfg).unwrap();
     let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for i in 0..8 {
         let tokens = stream.tokens[i * 32..i * 32 + m.config.seq_len].to_vec();
-        rxs.push(server.submit(tokens).unwrap());
+        tickets.push(server.submit(tokens).unwrap());
     }
     let mut seen_workers = std::collections::HashSet::new();
-    for rx in rxs {
-        let resp = rx.recv().unwrap();
-        assert!(resp.next_token >= 0 && (resp.next_token as usize) < m.config.vocab);
-        seen_workers.insert(resp.worker);
+    for t in &mut tickets {
+        let o = t.wait().unwrap();
+        assert!(o.tokens[0] >= 0 && (o.tokens[0] as usize) < m.config.vocab);
+        seen_workers.insert(o.worker);
     }
     let report = server.shutdown().unwrap();
     assert_eq!(report.total.served, 8);
@@ -481,6 +483,247 @@ fn multi_worker_router_round_trip() {
         report.per_worker.iter().map(|w| w.served).sum::<u64>(),
         report.total.served
     );
+}
+
+// ---------------------------------------------------------------------
+// request lifecycle (both backends unless noted)
+
+#[test]
+fn ticket_streams_tokens_incrementally() {
+    let (kind, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), BitAlloc::uniform(&index, 4));
+    cfg.backend = kind;
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let mut t = server
+        .submit_request(
+            scalebits::serve::GenRequest::new(stream.tokens[..m.config.seq_len].to_vec())
+                .max_new_tokens(3),
+        )
+        .unwrap();
+    let mut streamed = Vec::new();
+    while let Some(ev) = t.recv_token().unwrap() {
+        assert_eq!(ev.index, streamed.len(), "tokens must stream in order");
+        streamed.push(ev.token);
+    }
+    let o = t.outcome().expect("terminal after recv_token returns None");
+    assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+    assert_eq!(o.tokens, streamed, "outcome must carry exactly the streamed tokens");
+    assert_eq!(streamed.len(), 3);
+    assert!(streamed.iter().all(|&x| x >= 0 && (x as usize) < m.config.vocab));
+    let rep = server.shutdown().unwrap();
+    assert_eq!(rep.total.decode_tokens, 3);
+    assert_eq!(rep.total.first_token.count(), 1, "one TTFT sample per request");
+    assert_eq!(
+        rep.total.inter_token.count(),
+        2,
+        "ITL counts token->token gaps only (the first token is TTFT, not ITL)"
+    );
+}
+
+#[test]
+fn cancellation_mid_decode_frees_the_worker_slot() {
+    let (kind, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), BitAlloc::uniform(&index, 4));
+    cfg.backend = kind;
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let seq = m.config.seq_len;
+    let batch = m.exec(if m.executables.contains_key("qpredict") { "qpredict" } else { "qlogits" })
+        .unwrap()
+        .batch;
+    // Fill the whole decode set with effectively-unbounded generations…
+    let mut long = Vec::new();
+    for i in 0..batch {
+        long.push(
+            server
+                .submit_request(
+                    scalebits::serve::GenRequest::new(
+                        stream.tokens[i * 16..i * 16 + seq].to_vec(),
+                    )
+                    .max_new_tokens(1_000_000),
+                )
+                .unwrap(),
+        );
+    }
+    // …cancel them all; if cancellation did not free the slots, the
+    // short request below could never be admitted and wait() would
+    // hang (the test harness would time out).
+    for t in &long {
+        t.try_cancel();
+    }
+    let mut short = server.submit(stream.tokens[..seq].to_vec()).unwrap();
+    let o = short.wait().unwrap();
+    assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+    for t in &mut long {
+        assert_eq!(t.wait().unwrap().finish, scalebits::serve::Finish::Cancelled);
+    }
+    let rep = server.shutdown().unwrap();
+    assert_eq!(rep.total.cancelled, batch as u64);
+    assert_eq!(rep.total.completed, 1);
+    assert_eq!(rep.total.served, batch as u64 + 1);
+}
+
+#[test]
+fn deadline_exceeded_requests_never_occupy_an_iteration() {
+    let (kind, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), BitAlloc::uniform(&index, 4));
+    cfg.backend = kind;
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let seq = m.config.seq_len;
+    // Warm the engine so the expired request meets a ready worker.
+    let mut warm = server.submit_warmup(stream.tokens[..seq].to_vec()).unwrap();
+    warm.wait().unwrap();
+    let mut t = server
+        .submit_request(
+            scalebits::serve::GenRequest::new(stream.tokens[..seq].to_vec())
+                .max_new_tokens(4)
+                .deadline(std::time::Duration::ZERO),
+        )
+        .unwrap();
+    let o = t.wait().unwrap();
+    assert_eq!(o.finish, scalebits::serve::Finish::DeadlineExceeded);
+    assert!(o.tokens.is_empty(), "an expired request must not decode");
+    let rep = server.shutdown().unwrap();
+    assert_eq!(rep.total.deadline_exceeded, 1);
+    assert_eq!(rep.total.served, 1);
+    assert_eq!(rep.total.decode_tokens, 0);
+    assert_eq!(
+        rep.total.batches, 0,
+        "a deadline-exceeded request must never occupy a decode iteration"
+    );
+}
+
+#[test]
+fn shutdown_drains_the_live_decode_set() {
+    let (kind, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), BitAlloc::uniform(&index, 4));
+    cfg.backend = kind;
+    cfg.workers = 2;
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let seq = m.config.seq_len;
+    let (n, max_new) = (6usize, 5usize);
+    let mut tickets = Vec::new();
+    for i in 0..n {
+        tickets.push(
+            server
+                .submit_request(
+                    scalebits::serve::GenRequest::new(stream.tokens[i * 16..i * 16 + seq].to_vec())
+                        .max_new_tokens(max_new),
+                )
+                .unwrap(),
+        );
+    }
+    // Shut down immediately: every admitted request — queued or
+    // mid-decode — must still be decoded to completion.
+    let rep = server.shutdown().unwrap();
+    for t in &mut tickets {
+        let o = t.wait().unwrap();
+        assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+        assert_eq!(o.tokens.len(), max_new, "shutdown must not truncate generation");
+    }
+    assert_eq!(rep.total.completed, n as u64);
+    assert_eq!(rep.total.decode_tokens, (n * max_new) as u64);
+}
+
+#[test]
+fn malformed_requests_reject_at_admission() {
+    let (kind, dir) = setup();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), BitAlloc::uniform(&index, 4));
+    cfg.backend = kind;
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    for req in [
+        scalebits::serve::GenRequest::new(vec![]),
+        scalebits::serve::GenRequest::new(vec![-1]),
+        scalebits::serve::GenRequest::new(vec![m.config.vocab as i32]),
+        scalebits::serve::GenRequest::new(vec![0]).max_new_tokens(0),
+    ] {
+        let mut t = server.submit_request(req).unwrap();
+        let o = t.wait().unwrap();
+        assert!(
+            matches!(o.finish, scalebits::serve::Finish::Rejected(_)),
+            "expected rejection, got {:?}",
+            o.finish
+        );
+        assert!(o.tokens.is_empty());
+    }
+    let rep = server.shutdown().unwrap();
+    assert_eq!(rep.total.rejected, 4);
+    assert_eq!(rep.total.served, 0, "no worker may ever see a rejected request");
+}
+
+/// THE acceptance property of iteration-level continuous batching: on
+/// the interpreter backend, decoding many interleaved sequences
+/// through the shared step batches produces bitwise-identical tokens
+/// to decoding each sequence alone, one at a time (the kernel module's
+/// accumulation-order contract makes batch rows independent).
+#[test]
+fn continuous_batched_decode_matches_sequential_decode_bitwise() {
+    // Forced interpreter over the synthetic artifacts (even when PJRT
+    // artifacts exist): bitwise determinism is the interp contract.
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut alloc = BitAlloc::uniform(&index, 4);
+    for (i, b) in alloc.bits.iter_mut().enumerate() {
+        *b = [2, 4, 8][i % 3];
+    }
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let seq = m.config.seq_len;
+    let (n, max_new) = (6usize, 6usize); // n > compiled batch: admission churns
+
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), alloc.clone());
+    cfg.backend = BackendKind::Interp;
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let mut tickets = Vec::new();
+    for i in 0..n {
+        tickets.push(
+            server
+                .submit_request(
+                    scalebits::serve::GenRequest::new(stream.tokens[i * 17..i * 17 + seq].to_vec())
+                        .max_new_tokens(max_new),
+                )
+                .unwrap(),
+        );
+    }
+    let mut served = Vec::new();
+    for t in &mut tickets {
+        let o = t.wait().unwrap();
+        assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+        served.push(o.tokens.clone());
+    }
+    server.shutdown().unwrap();
+
+    // Sequential reference: the same model state, one sequence per
+    // step batch, appending each sampled token manually.
+    let session =
+        Session::open_with(BackendKind::Interp, &dir, &["qpredict"], &alloc.grids(&index))
+            .unwrap();
+    for i in 0..n {
+        let mut toks = stream.tokens[i * 17..i * 17 + seq].to_vec();
+        let mut generated = Vec::new();
+        for _ in 0..max_new {
+            let next = session.decode_step("qpredict", &[toks.as_slice()]).unwrap()[0];
+            toks.push(next);
+            generated.push(next);
+        }
+        assert_eq!(
+            served[i], generated,
+            "request {i}: continuous-batched decode diverged from sequential decode"
+        );
+    }
 }
 
 /// The acceptance check for grid residency: once a Session is built,
@@ -597,11 +840,13 @@ fn server_round_trip_packed_weights_match_dense_reference() {
     cfg.backend = kind;
     let mut server = scalebits::serve::Router::start(cfg).unwrap();
     let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for i in 0..4 {
-        rxs.push(server.submit(stream.tokens[i * 64..i * 64 + m.config.seq_len].to_vec()).unwrap());
+        tickets
+            .push(server.submit(stream.tokens[i * 64..i * 64 + m.config.seq_len].to_vec()).unwrap());
     }
-    let served: Vec<i32> = rxs.into_iter().map(|rx| rx.recv().unwrap().next_token).collect();
+    let served: Vec<i32> =
+        tickets.iter_mut().map(|t| t.wait().unwrap().tokens[0]).collect();
     server.shutdown().unwrap();
 
     // dense reference: qlogits over the same resident state, argmax at
