@@ -6,6 +6,10 @@
 #                            # counts (no artifacts needed) so kernel
 #                            # regressions fail fast; does NOT overwrite
 #                            # the committed BENCH_*.json snapshots
+#   ./ci.sh --examples-smoke # build AND RUN the serving/search examples
+#                            # on the interpreter backend with synthetic
+#                            # artifacts (build-only coverage lets
+#                            # example behavior rot invisibly)
 #
 # Matches the ROADMAP tier-1 verify (`cargo build --release &&
 # cargo test -q`) and adds rustfmt + clippy.
@@ -31,6 +35,9 @@ case "${1:-}" in
     ;;
   --bench-smoke)
     LANE="bench-smoke"
+    ;;
+  --examples-smoke)
+    LANE="examples-smoke"
     ;;
 esac
 
@@ -59,13 +66,32 @@ if [[ "$LANE" == "bench-smoke" ]]; then
   # Fast regression lane: the kernel bench verifies the fused packed
   # GEMM bitwise against dequantize+reference before timing, and the
   # serve bench runs the decode-mode serving stack end-to-end
-  # (multi-token continuous batching + the deadline/cancel lifecycle
-  # round-trip); both run artifact-less (synthetic model on the
-  # interpreter backend).
+  # (multi-token continuous batching, the chunked-prefill lifecycle —
+  # a long prompt must complete AFTER short requests stream past it —
+  # and the deadline/cancel round-trip); both run artifact-less
+  # (synthetic model on the interpreter backend).
   echo "== bench smoke: bench_kernel"
   cargo bench --offline --bench bench_kernel -- --smoke
   echo "== bench smoke: bench_serve (decode mode)"
   cargo bench --offline --bench bench_serve -- --smoke
+  echo "CI OK (${LANE})"
+  exit 0
+fi
+
+if [[ "$LANE" == "examples-smoke" ]]; then
+  # Actually RUN the examples (small settings) instead of only building
+  # them: both fall back to a synthetic model on the interpreter
+  # backend when rust/artifacts/ is absent, so this lane needs no AOT
+  # artifacts. serve_quantized drives the full scheduler serving path
+  # (decode sweep + streaming/cancel/chunked-prefill vignettes);
+  # pareto_sweep drives search -> eval -> served-throughput per
+  # operating point.
+  echo "== examples smoke: serve_quantized"
+  cargo run --release --offline --example serve_quantized -- \
+    --requests 6 --rate 400 --workers 2 --max-new-tokens 4
+  echo "== examples smoke: pareto_sweep"
+  cargo run --release --offline --example pareto_sweep -- \
+    --points 2 --serve-requests 4 --iters 4
   echo "CI OK (${LANE})"
   exit 0
 fi

@@ -10,7 +10,7 @@
 //! the `serve_tps` column.
 //!
 //! Run: cargo run --release --offline --example pareto_sweep
-//!      [-- --points 5 --serve-requests 8]
+//!      [-- --points 5 --serve-requests 8 --iters 100]
 
 use std::io::Write;
 
@@ -46,7 +46,17 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&[]);
     let points = args.usize_or("points", 7)?;
     let serve_requests = args.usize_or("serve-requests", 8)?;
-    let artifacts = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+    // search budget per operating point (the examples-smoke CI lane
+    // passes a small value so the sweep finishes in seconds)
+    let iters = args.usize_or("iters", SearchConfig::default().max_iters)?;
+    // Artifact-less container (the ci.sh examples-smoke lane): with no
+    // explicit --artifacts and no artifacts/ dir, synthesize the
+    // deterministic model; BackendKind::Auto then resolves to the
+    // interpreter (no HLO files present). An explicit path must exist.
+    let artifacts = scalebits::model::synth::artifacts_or_synth(
+        args.str_opt("artifacts").map(String::from),
+        "example",
+    )?;
 
     let mut p = Pipeline::load_full(&artifacts)?;
     let mut rows: Vec<(String, f64, f64, f64, f64)> = Vec::new();
@@ -68,7 +78,7 @@ fn main() -> anyhow::Result<()> {
     p.reorder(3, 42)?;
     for i in 0..points {
         let budget = 2.0 + 2.0 * i as f64 / (points - 1).max(1) as f64;
-        let cfg = SearchConfig { budget, seed: 42, ..Default::default() };
+        let cfg = SearchConfig { budget, seed: 42, max_iters: iters, ..Default::default() };
         let res = p.search(&cfg)?;
         let r = p.eval_alloc(&res.alloc)?;
         let tps = served_tps(&artifacts, &p, &res.alloc, serve_requests)?;

@@ -28,7 +28,14 @@ fn main() -> anyhow::Result<()> {
     let rate = args.f64_or("rate", 100.0)?;
     let max_workers = args.usize_or("workers", 4)?;
     let max_new = args.usize_or("max-new-tokens", 8)?;
-    let artifacts = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+    // Artifact-less container (the ci.sh examples-smoke lane): with no
+    // explicit --artifacts and no artifacts/ dir, synthesize the
+    // deterministic model; BackendKind::Auto then resolves to the
+    // interpreter (no HLO files present). An explicit path must exist.
+    let artifacts = scalebits::model::synth::artifacts_or_synth(
+        args.str_opt("artifacts").map(String::from),
+        "example",
+    )?;
 
     let m = Manifest::load(&artifacts)?;
     let index = BlockIndex::from_manifest(&m)?;
@@ -94,6 +101,25 @@ fn main() -> anyhow::Result<()> {
         "cancelled after {} token(s): finish = {}",
         outcome.tokens.len(),
         outcome.finish.name()
+    );
+
+    // -- chunked prefill: a LONG prompt trickles through the step
+    // batch a few tokens per iteration, so a short request admitted
+    // behind it completes first instead of stalling on the prefill --
+    let mut long = server.submit_request(
+        GenRequest::new(stream.tokens[..4 * seq].to_vec()).max_new_tokens(2).prefill_chunk(4),
+    )?;
+    let mut short =
+        server.submit_request(GenRequest::new(stream.tokens[seq..2 * seq].to_vec()))?;
+    let short_outcome = short.wait()?;
+    let long_still_prefilling = long.poll()?.is_none();
+    let long_outcome = long.wait()?;
+    println!(
+        "chunked prefill: short request finished ({}) while the 4x-window prompt {} \
+         (long finish = {})",
+        short_outcome.finish.name(),
+        if long_still_prefilling { "was still prefilling" } else { "had finished" },
+        long_outcome.finish.name()
     );
     server.shutdown()?;
     Ok(())

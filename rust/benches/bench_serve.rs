@@ -1,7 +1,7 @@
 //! Bench: serving-path throughput/latency (end-to-end Table 4 claim)
 //! under a continuous-batching DECODE load.
 //!
-//! Three measurements through the serving stack:
+//! Four measurements through the serving stack:
 //!   1. raw single-request floor (qlogits_b1 through a device-resident
 //!      Session — token-only upload per call),
 //!   2. multi-worker decode sweep (1/2/4 workers, uniform 4-bit,
@@ -12,7 +12,13 @@
 //!      show matching latency (the request path never branches on
 //!      precision — on the interpreter backend both run the same fused
 //!      packed kernels off resident compressed weights, token after
-//!      token).
+//!      token),
+//!   4. the scheduler sweep: prefill-chunk {whole, seq} x max-live
+//!      {batch, 2x batch} x workers {1,2,4} under a long-prompt-mixed
+//!      load (10% prompts at 16x the chunk): decode tok/s and
+//!      short-request TTFT p50/p95 — chunked prefill must beat
+//!      whole-prompt on short-request TTFT p95 (`--prefill-chunk` /
+//!      `--max-live` on serve-demo drive the same knobs).
 //!
 //! Backend: auto-detected. With `rust/artifacts/` present the sweep
 //! runs on PJRT; without artifacts it generates a deterministic
@@ -32,7 +38,7 @@ use scalebits::calib::TokenStream;
 use scalebits::model::Manifest;
 use scalebits::quant::{BitAlloc, BlockIndex};
 use scalebits::runtime::{BackendKind, Session};
-use scalebits::serve::{run_workload, Router, ServeConfig, WorkloadSpec};
+use scalebits::serve::{percentile, run_workload, Router, ServeConfig, WorkloadSpec};
 use scalebits::util::json::Json;
 use scalebits::util::rng::Rng;
 use scalebits::util::timer;
@@ -171,6 +177,118 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // 4. the scheduler sweep: chunked prefill x virtual live set under
+    // a long-prompt-mixed load. 10% of prompts are 16x the prefill
+    // chunk; with whole-prompt prefill each of those monopolizes
+    // ceil(16*chunk/seq) full step batches in one iteration, stalling
+    // every co-scheduled decode — the short-request TTFT tail pays for
+    // it. Chunked prefill trickles the same prompt one row per
+    // iteration instead.
+    if !smoke {
+        let batch = m
+            .exec(if m.executables.contains_key("qpredict") { "qpredict" } else { "qlogits" })?
+            .batch;
+        let chunk = seq; // prefill budget = one row's token capacity
+        let long_len = 16 * chunk; // the acceptance mix: prompts >= 16x chunk
+        let (n4, rate4) = if interp { (48usize, 1000.0) } else { (24, 100.0) };
+        let mut sweep = Json::obj();
+        for &workers in worker_counts {
+            for &(mode, prefill_chunk) in &[("whole", 0usize), ("chunked", chunk)] {
+                for &live_mult in &[1usize, 2] {
+                    let mut cfg = ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 4));
+                    cfg.backend = kind;
+                    cfg.workers = workers;
+                    cfg.prefill_chunk = prefill_chunk;
+                    cfg.max_live = live_mult * batch;
+                    let mut server = Router::start(cfg)?;
+                    let spec = WorkloadSpec::new(seq, n4, rate4, 11)
+                        .max_new_tokens(max_new)
+                        .long_prompts(0.10, long_len);
+                    let wl = run_workload(&mut server, &stream, &spec)?;
+                    let rep = server.shutdown()?;
+                    let ttft_s_p50 = 1e6 * percentile(&wl.ttft_short, 0.50);
+                    let ttft_s_p95 = 1e6 * percentile(&wl.ttft_short, 0.95);
+                    let ttft_l_p50 = 1e6 * percentile(&wl.ttft_long, 0.50);
+                    println!(
+                        "prefill {mode:<7} max_live {}x{batch} x{workers}w | {:.1} tok/s | \
+                         ttft short p50/p95 {:.0}/{:.0}us | ttft long p50 {:.0}us | \
+                         prefill rows {} | preempted {}",
+                        live_mult,
+                        wl.decode_tps(),
+                        ttft_s_p50,
+                        ttft_s_p95,
+                        ttft_l_p50,
+                        rep.total.prefill_rows,
+                        rep.total.preempted
+                    );
+                    sweep.set(
+                        &format!("w{workers}_{mode}_live{live_mult}x"),
+                        Json::from_pairs(vec![
+                            ("decode_tps", Json::Num(wl.decode_tps())),
+                            ("ttft_short_p50_us", Json::Num(ttft_s_p50)),
+                            ("ttft_short_p95_us", Json::Num(ttft_s_p95)),
+                            ("ttft_long_p50_us", Json::Num(ttft_l_p50)),
+                            ("mean_live_depth", Json::Num(rep.total.mean_live_depth())),
+                            ("prefill_rows", Json::Num(rep.total.prefill_rows as f64)),
+                            ("step_batches", Json::Num(rep.total.batches as f64)),
+                        ]),
+                    );
+                }
+            }
+        }
+        // Headline: short-request TTFT p95, chunked vs whole-prompt
+        // (single worker, live = batch — the purest comparison).
+        let p95 = |k: &str| sweep.get(k).and_then(|v| v.get("ttft_short_p95_us")).and_then(|v| v.as_f64());
+        if let (Ok(whole), Ok(chunked)) = (p95("w1_whole_live1x"), p95("w1_chunked_live1x")) {
+            println!(
+                "chunked-prefill short-request TTFT p95: {chunked:.0}us vs whole-prompt \
+                 {whole:.0}us ({:.2}x)",
+                whole / chunked.max(1.0)
+            );
+            sweep.set("ttft_short_p95_whole_over_chunked_1w", Json::Num(whole / chunked.max(1.0)));
+        }
+        out.set("prefill_sweep", sweep);
+    }
+
+    // Smoke-gated chunked-prefill lifecycle: a LONG prompt served with
+    // a small chunk must not block short requests — they stream tokens
+    // and complete while the long prompt is still prefilling (this is
+    // what `ci.sh --bench-smoke` asserts beyond the deadline/cancel
+    // round-trip below).
+    {
+        let mut cfg = ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 4));
+        cfg.backend = kind;
+        cfg.prefill_chunk = 2; // an 8x-seq prompt needs 4*seq prefill iterations
+        let mut server = Router::start(cfg)?;
+        let mut warm = server.submit_warmup(stream.tokens[..seq].to_vec())?;
+        warm.wait().expect("warmup");
+        let mut long = server.submit_request(
+            scalebits::serve::GenRequest::new(stream.tokens[..8 * seq].to_vec())
+                .max_new_tokens(2),
+        )?;
+        let mut shorts = Vec::new();
+        for i in 1..=3 {
+            shorts.push(server.submit_request(
+                scalebits::serve::GenRequest::new(stream.tokens[i * 40..i * 40 + seq].to_vec())
+                    .max_new_tokens(3),
+            )?);
+        }
+        for t in shorts.iter_mut() {
+            let o = t.wait().expect("short ticket");
+            assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+            assert_eq!(o.tokens.len(), 3, "short requests stream to completion");
+        }
+        assert!(
+            long.poll().expect("long ticket").is_none(),
+            "the long prompt must still be prefilling when every short request has completed"
+        );
+        let o = long.wait().expect("long ticket");
+        assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+        let rep = server.shutdown()?;
+        assert!(rep.total.prefill_rows as usize >= 4 * seq, "chunk slices must be counted");
+        println!("chunked-prefill lifecycle: shorts completed mid-prefill of a long prompt OK");
+    }
+
     // Smoke-gated lifecycle round-trip: deadline + cancel paths must
     // reach their terminal states through the real stack (this is what
     // `ci.sh --bench-smoke` exercises beyond plain completion).
@@ -214,8 +332,10 @@ fn main() -> anyhow::Result<()> {
         Json::Str(
             "all numbers post-warmup: per-worker engine construction and buffer upload are \
              excluded via unrecorded warmup requests (see run_workload); requests are \
-             multi-token decode sessions through the continuous batcher; latencies are \
-             server-side (queue + decode loop), itl_* are inter-token gaps"
+             multi-token decode sessions through the scheduler; latencies are \
+             server-side (queue + decode loop), itl_* are inter-token gaps; \
+             prefill_sweep: ttft_short_* covers seq-length prompts only, under a \
+             10% long-prompt mix (see the sweep keys for chunk/max_live/workers)"
                 .to_string(),
         ),
     );

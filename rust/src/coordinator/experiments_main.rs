@@ -2,7 +2,7 @@
 //! Table 3 (search cost), Table 4 (kernel latency), Table 5 (MP
 //! baseline grid), Table 6 (instruct-analog task splits), plus the
 //! end-to-end serving grid (`serve_e2e`): allocation x worker-count
-//! throughput/latency through the real router/batcher stack.
+//! throughput/latency through the real router/scheduler stack.
 //!
 //! Every harness prints the paper-style rows AND writes
 //! `results/<id>.json` with the raw numbers; EXPERIMENTS.md records the

@@ -255,6 +255,62 @@ pub fn token_stream(n: usize, vocab: usize, seed: u64) -> TokenStream {
     TokenStream { tokens: (0..n).map(|_| rng.below(vocab) as i32).collect() }
 }
 
+/// Example/bench artifact fallback. An EXPLICITLY passed artifact path
+/// must exist — a typo'd `--artifacts` flag is an error, never a toy
+/// model silently standing in for the real one (the PR-2 rule: auto
+/// never fabricates). Only the implicit default (`explicit == None`,
+/// probing `artifacts/`) falls back: the deterministic synthetic model
+/// is installed once into a stable, tag-versioned temp dir and reused
+/// across runs — `BackendKind::Auto` then resolves to the interpreter,
+/// since the synthetic set carries no HLO files. One shared helper so
+/// the artifact-less entry points (examples, `ci.sh --examples-smoke`)
+/// cannot drift out of sync on the dir name, probe, or install.
+///
+/// Concurrent first runs are safe: each writes to a PID-suffixed
+/// scratch dir and renames it into place (same pattern as the
+/// integration tests' shared synth dir); the rename loser discards its
+/// copy. Bump the `-v1` suffix whenever the synth format or
+/// `SynthSpec::default()` changes, or stale cached artifacts survive.
+pub fn artifacts_or_synth(explicit: Option<String>, tag: &str) -> Result<std::path::PathBuf> {
+    if let Some(p) = explicit {
+        let p = std::path::PathBuf::from(p);
+        anyhow::ensure!(
+            p.join("manifest.json").exists(),
+            "{}: no manifest.json — an explicit --artifacts path is never substituted \
+             with a synthetic model (run `make artifacts`, or drop the flag to use \
+             the interpreter fallback)",
+            p.display()
+        );
+        return Ok(p);
+    }
+    let preferred = std::path::PathBuf::from("artifacts");
+    if preferred.join("manifest.json").exists() {
+        return Ok(preferred);
+    }
+    let dir = std::env::temp_dir().join(format!("scalebits-{tag}-synth-v1"));
+    if !dir.join("manifest.json").exists() {
+        let scratch =
+            std::env::temp_dir().join(format!("scalebits-{tag}-synth-v1.{}", std::process::id()));
+        write_artifacts(&scratch, &SynthSpec::default())?;
+        if std::fs::rename(&scratch, &dir).is_err() {
+            // Lost the race to a concurrent run that installed the same
+            // deterministic content; drop our scratch copy.
+            let _ = std::fs::remove_dir_all(&scratch);
+            anyhow::ensure!(
+                dir.join("manifest.json").exists(),
+                "synthetic artifact install failed at {}",
+                dir.display()
+            );
+        }
+    }
+    println!(
+        "no {} — interpreter backend over a synthetic model ({})",
+        preferred.display(),
+        dir.display()
+    );
+    Ok(dir)
+}
+
 /// Write a complete artifact directory (minus HLO files) so every
 /// file-loading path works against the interpreter backend.
 pub fn write_artifacts(dir: &Path, spec: &SynthSpec) -> Result<Manifest> {

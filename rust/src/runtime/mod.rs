@@ -44,4 +44,4 @@ pub use pjrt::{
     literal_scalar_f32, literal_to_mat, literal_to_vec_f32, Engine, GridBuffers, LoadedExec,
     WeightBuffers,
 };
-pub use session::Session;
+pub use session::{Session, StepRow};

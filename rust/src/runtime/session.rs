@@ -107,50 +107,85 @@ impl Session {
     /// sequence), execute, and return one next token per sequence —
     /// read at each row's last real position.
     ///
-    /// This is the serving stack's step-batch entry point: the
-    /// continuous batcher calls it once per iteration with whatever is
-    /// in flight. `name` is `"qpredict"` (on-device argmax fast path)
-    /// or a logits executable (`"qlogits"`/`"qlogits_b1"`; argmax runs
-    /// host-side). Rows are independent under the kernel module's
-    /// accumulation-order contract, so a sequence's decoded tokens do
-    /// not depend on what else shares its step batch (tested: a
-    /// continuously batched decode is bitwise identical to a
-    /// sequential one on the interpreter backend).
+    /// Thin wrapper over [`Session::decode_step_rows`] with every row
+    /// emitting (the pre-scheduler call shape, kept for sequential
+    /// references and tests).
     pub fn decode_step(&self, name: &str, rows: &[&[i32]]) -> Result<Vec<i32>> {
+        let step: Vec<StepRow> = rows.iter().map(|w| StepRow { window: w, emit: true }).collect();
+        self.decode_step_rows(name, &step)?
+            .into_iter()
+            .map(|o| o.ok_or_else(|| anyhow::anyhow!("emit row returned no token")))
+            .collect()
+    }
+
+    /// The scheduler's step-batch entry point: one padded `[batch,
+    /// seq]` execution over a mix of DECODE rows and PREFILL rows.
+    ///
+    /// Each [`StepRow`] carries the window the scheduler chose — the
+    /// full sequence for a decode row, a prompt prefix for a prefill
+    /// slice — and whether to read a next token out of it. Prefill
+    /// rows with `emit: false` return `None`: they exist to pass
+    /// prompt tokens through the engine (and to cost a row), not to
+    /// sample. The row that COMPLETES a prefill carries the window
+    /// over the whole prompt, so its readout — the first generated
+    /// token — is identical to what a single whole-prompt step would
+    /// produce, which is why chunked and whole-prompt prefill decode
+    /// bitwise-identically (tested on the interpreter).
+    ///
+    /// `name` is `"qpredict"` (on-device argmax fast path) or a logits
+    /// executable (`"qlogits"`/`"qlogits_b1"`; argmax runs host-side).
+    /// Rows are independent under the kernel module's
+    /// accumulation-order contract, so a sequence's tokens do not
+    /// depend on what else shares its step batch.
+    pub fn decode_step_rows(&self, name: &str, rows: &[StepRow]) -> Result<Vec<Option<i32>>> {
         let batch = self.backend.batch_of(name)?;
         let cfg = &self.manifest().config;
         let (seq, vocab) = (cfg.seq_len, cfg.vocab);
-        anyhow::ensure!(!rows.is_empty(), "decode step needs at least one sequence");
+        anyhow::ensure!(!rows.is_empty(), "decode step needs at least one row");
         anyhow::ensure!(
             rows.len() <= batch,
-            "{} in-flight sequences exceed compiled batch {batch}",
+            "{} step rows exceed compiled batch {batch}",
             rows.len()
         );
-        anyhow::ensure!(rows.iter().all(|r| !r.is_empty()), "empty sequence in decode step");
-        let (tokens, pos) = assemble_step(rows, batch, seq);
+        anyhow::ensure!(rows.iter().all(|r| !r.window.is_empty()), "empty window in decode step");
+        let windows: Vec<&[i32]> = rows.iter().map(|r| r.window).collect();
+        let (tokens, pos) = assemble_step(&windows, batch, seq);
         let out = self.run(name, &tokens)?;
         let mut next = Vec::with_capacity(rows.len());
         if name == "qpredict" {
             let preds = out[0].to_vec_i32()?;
-            for (b, &p) in pos.iter().enumerate() {
-                next.push(preds[b * seq + p]);
+            for (b, row) in rows.iter().enumerate() {
+                next.push(row.emit.then(|| preds[b * seq + pos[b]]));
             }
         } else {
             let logits = out[0].to_vec_f32()?;
-            for (b, &p) in pos.iter().enumerate() {
-                let base = (b * seq + p) * vocab;
-                let row = &logits[base..base + vocab];
+            for (b, row) in rows.iter().enumerate() {
+                if !row.emit {
+                    next.push(None);
+                    continue;
+                }
+                let base = (b * seq + pos[b]) * vocab;
+                let lrow = &logits[base..base + vocab];
                 let mut best = 0usize;
-                for (v, &x) in row.iter().enumerate() {
-                    if x > row[best] {
+                for (v, &x) in lrow.iter().enumerate() {
+                    if x > lrow[best] {
                         best = v;
                     }
                 }
-                next.push(best as i32);
+                next.push(Some(best as i32));
             }
         }
         Ok(next)
     }
+}
+
+/// One row of a scheduler-planned step batch: the token window to
+/// feed (served through the sliding last-`seq_len` window) and whether
+/// to read a next-token prediction out of it.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRow<'a> {
+    pub window: &'a [i32],
+    pub emit: bool,
 }
 
 /// Assemble the padded row-major `[batch, seq]` token tensor for one
@@ -188,6 +223,17 @@ mod tests {
         let (tokens, pos) = assemble_step(&rows, 2, 3);
         assert_eq!(tokens, vec![7, 6, 5, 0, 0, 0]);
         assert_eq!(pos, vec![2]);
+    }
+
+    #[test]
+    fn assemble_step_prefix_windows_position_at_prefix_end() {
+        // prefill rows feed prompt PREFIXES; the readout position must
+        // track the prefix end (sliding once the prefix outgrows seq)
+        let prompt = [5, 6, 7, 8, 9];
+        let rows: Vec<&[i32]> = vec![&prompt[..2], &prompt[..5]];
+        let (tokens, pos) = assemble_step(&rows, 2, 4);
+        assert_eq!(tokens, vec![5, 6, 0, 0, 6, 7, 8, 9]);
+        assert_eq!(pos, vec![1, 3]);
     }
 
     #[test]

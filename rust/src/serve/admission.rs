@@ -100,9 +100,9 @@ impl<T> Bounded<T> {
         }
     }
 
-    /// Non-blocking pop (the continuous batcher's busy-path admission:
-    /// a worker with a live decode set must never stall on an empty
-    /// queue). `Timeout` doubles as "empty right now".
+    /// Non-blocking pop (the scheduler's busy-path admission: a worker
+    /// with a live decode set must never stall on an empty queue).
+    /// `Timeout` doubles as "empty right now".
     pub fn try_pop(&self) -> Pop<T> {
         let mut s = self.state.lock().unwrap();
         if let Some(v) = s.q.pop_front() {
@@ -116,7 +116,7 @@ impl<T> Bounded<T> {
         }
     }
 
-    /// Pop with a deadline (the batcher's fill-window path).
+    /// Pop with a deadline (the scheduler's idle-window coalesce path).
     pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
         let deadline = Instant::now() + timeout;
         let mut s = self.state.lock().unwrap();
@@ -135,6 +135,36 @@ impl<T> Bounded<T> {
             let (guard, _res) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
             s = guard;
         }
+    }
+
+    /// Remove every queued item matching `pred` (preserving the FIFO
+    /// order of the rest). The scheduler uses this to surface
+    /// cancelled/expired requests that are still QUEUED behind a full
+    /// holding pen — their terminal events must not wait for a decode
+    /// slot to open. Wakes blocked producers when space frees up.
+    ///
+    /// Called on the decode hot loop with the producer-contended lock
+    /// held, so the common no-match case is a single scan with no
+    /// allocation and no rebuild. `pred` may be called more than once
+    /// per item (scan + collect) — it must be stable, like the
+    /// monotone `defunct` flags it is used with.
+    pub fn remove_where<F: FnMut(&T) -> bool>(&self, mut pred: F) -> Vec<T> {
+        let mut s = self.state.lock().unwrap();
+        if !s.q.iter().any(&mut pred) {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut kept = VecDeque::with_capacity(s.q.len());
+        while let Some(v) = s.q.pop_front() {
+            if pred(&v) {
+                out.push(v);
+            } else {
+                kept.push_back(v);
+            }
+        }
+        s.q = kept;
+        self.not_full.notify_all();
+        out
     }
 
     /// Stop admitting; wake all waiters. Consumers drain the remainder.
@@ -248,6 +278,34 @@ mod tests {
         assert_eq!(q.pop(), Some(0));
         t.join().unwrap();
         assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn remove_where_extracts_matches_in_place() {
+        let q = Bounded::new(8);
+        for v in [1, 2, 3, 4, 5] {
+            q.try_push(v).unwrap();
+        }
+        let evens = q.remove_where(|v| v % 2 == 0);
+        assert_eq!(evens, vec![2, 4]);
+        assert_eq!(q.len(), 3);
+        // FIFO order of the survivors is preserved
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(5));
+        assert!(q.remove_where(|_| true).is_empty());
+    }
+
+    #[test]
+    fn remove_where_unblocks_a_full_queue_producer() {
+        let q = Arc::new(Bounded::new(1));
+        q.try_push(7).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(8).map_err(|_| ()).unwrap());
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.remove_where(|&v| v == 7), vec![7]);
+        t.join().unwrap();
+        assert_eq!(q.pop(), Some(8), "freed space must admit the blocked producer");
     }
 
     #[test]

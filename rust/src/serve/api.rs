@@ -74,6 +74,12 @@ pub struct GenRequest {
     /// Warmup barriers submit with `record: false` so cold-start
     /// compile waits never contaminate the histograms.
     pub record: bool,
+    /// Per-request prefill-chunk override: at most this many NEW
+    /// prompt tokens enter the step batch per iteration while the
+    /// request is prefilling (`None` = the server's
+    /// `ServeConfig::prefill_chunk`; `Some(0)` is rejected at
+    /// admission). See `serve::sched` for the policy.
+    pub prefill_chunk: Option<usize>,
 }
 
 impl GenRequest {
@@ -86,6 +92,7 @@ impl GenRequest {
             deadline: None,
             priority: Priority::Normal,
             record: true,
+            prefill_chunk: None,
         }
     }
 
@@ -107,6 +114,12 @@ impl GenRequest {
     /// Exclude from metrics (warmup barriers).
     pub fn unrecorded(mut self) -> GenRequest {
         self.record = false;
+        self
+    }
+
+    /// Override the server's prefill-chunk budget for this request.
+    pub fn prefill_chunk(mut self, chunk: usize) -> GenRequest {
+        self.prefill_chunk = Some(chunk);
         self
     }
 }
@@ -191,12 +204,13 @@ pub struct Ticket {
     rx: mpsc::Receiver<Event>,
     cancel: Arc<AtomicBool>,
     tokens: Vec<i32>,
+    first_token: Option<Duration>,
     outcome: Option<Outcome>,
 }
 
 impl Ticket {
     pub(crate) fn new(id: u64, rx: mpsc::Receiver<Event>, cancel: Arc<AtomicBool>) -> Ticket {
-        Ticket { id, rx, cancel, tokens: Vec::new(), outcome: None }
+        Ticket { id, rx, cancel, tokens: Vec::new(), first_token: None, outcome: None }
     }
 
     /// A ticket that was rejected at admission: already terminal.
@@ -227,6 +241,14 @@ impl Ticket {
         self.outcome.as_ref()
     }
 
+    /// Server-measured submission → first-token latency, once the
+    /// first token has been drained off the channel. Workload drivers
+    /// split this by prompt class (short vs long) to see what chunked
+    /// prefill buys.
+    pub fn first_token_latency(&self) -> Option<Duration> {
+        self.first_token
+    }
+
     /// Request cancellation. Advisory: the worker observes the flag
     /// between decode iterations, so a token already in flight may
     /// still arrive; the terminal outcome is `Cancelled` unless the
@@ -236,9 +258,16 @@ impl Ticket {
         self.cancel.store(true, Ordering::Relaxed);
     }
 
+    fn note_token(&mut self, t: &TokenEvent) {
+        if t.index == 0 {
+            self.first_token = Some(t.latency);
+        }
+        self.tokens.push(t.token);
+    }
+
     fn absorb(&mut self, ev: Event) {
         match ev {
-            Event::Token(t) => self.tokens.push(t.token),
+            Event::Token(t) => self.note_token(&t),
             Event::Done(o) => self.outcome = Some(o),
         }
     }
@@ -278,7 +307,7 @@ impl Ticket {
         }
         match self.rx.recv() {
             Ok(Event::Token(t)) => {
-                self.tokens.push(t.token);
+                self.note_token(&t);
                 Ok(Some(t))
             }
             Ok(Event::Done(o)) => {
@@ -361,6 +390,9 @@ impl Client {
         }
         if req.max_new_tokens == 0 {
             return Some("max_new_tokens must be >= 1".to_string());
+        }
+        if req.prefill_chunk == Some(0) {
+            return Some("prefill_chunk override must be >= 1".to_string());
         }
         if let Some(&t) = req.tokens.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
             return Some(format!("token {t} outside vocab {}", self.vocab));
@@ -551,14 +583,40 @@ mod tests {
         assert!(r.deadline.is_none());
         assert_eq!(r.priority, Priority::Normal);
         assert!(r.record);
+        assert!(r.prefill_chunk.is_none(), "default = server-wide prefill policy");
         let r = r
             .max_new_tokens(8)
             .deadline(Duration::from_millis(50))
             .priority(Priority::High)
+            .prefill_chunk(16)
             .unrecorded();
         assert_eq!(r.max_new_tokens, 8);
         assert!(r.deadline.is_some());
         assert_eq!(r.priority, Priority::High);
         assert!(!r.record);
+        assert_eq!(r.prefill_chunk, Some(16));
+    }
+
+    #[test]
+    fn ticket_records_first_token_latency() {
+        let (tx, rx) = mpsc::channel();
+        let mut t = Ticket::new(5, rx, Arc::new(AtomicBool::new(false)));
+        assert!(t.first_token_latency().is_none());
+        tx.send(Event::Token(TokenEvent {
+            index: 0,
+            token: 9,
+            latency: Duration::from_micros(1234),
+        }))
+        .unwrap();
+        tx.send(Event::Token(TokenEvent {
+            index: 1,
+            token: 10,
+            latency: Duration::from_micros(7),
+        }))
+        .unwrap();
+        tx.send(done(5, Finish::Completed, vec![9, 10])).unwrap();
+        t.wait().unwrap();
+        // the TTFT is the FIRST token's latency, not overwritten by ITL
+        assert_eq!(t.first_token_latency(), Some(Duration::from_micros(1234)));
     }
 }

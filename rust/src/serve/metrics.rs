@@ -147,23 +147,46 @@ impl Histogram {
 pub struct ServeMetrics {
     /// Requests that reached a terminal state on this worker.
     pub served: u64,
-    /// Decode iterations (padded step batches dispatched).
+    /// Padded step batches dispatched. With a virtual live set or a
+    /// whole-prompt prefill an iteration dispatches several, so
+    /// `batches >= iterations`.
     pub batches: u64,
+    /// Scheduler iterations (one quantum of progress for every live
+    /// sequence).
+    pub iterations: u64,
     pub total_batch_occupancy: u64,
+    /// Prefill slices fed through step-batch rows, and the prompt
+    /// tokens they carried (the chunked-prefill counters; a whole
+    /// prompt fed at once counts one row per `seq_len` stride).
+    pub prefill_rows: u64,
+    pub prefill_tokens: u64,
+    /// Sequences evicted from the live set back to the holding pen in
+    /// favor of higher-ranked work (they resume later with their
+    /// generated tokens intact — see `serve::sched`).
+    pub preempted: u64,
     /// Submissions that found every worker queue full and had to block
     /// on the admission queue (router-level; zero on worker metrics).
     pub blocked_submits: u64,
     /// Queue depth sampled at each dispatch (backlog gauge).
     pub queue_depth_sum: u64,
     pub queue_depth_samples: u64,
-    /// In-flight sequences on the worker — live decode set PLUS the
-    /// batcher's holding pen — sampled at each iteration. Distinct
+    /// In-flight sequences on the worker — live set PLUS the
+    /// scheduler's holding pen — sampled at each iteration. Distinct
     /// from `total_batch_occupancy / batches` (rows actually in the
     /// step batch): the gap between the two is admitted work waiting
     /// for a decode slot. The autoscaler reads both: deep queues say
     /// "add workers", shallow decode sets say "shrink".
     pub decode_depth_sum: u64,
     pub decode_depth_samples: u64,
+    /// VIRTUAL live-set depth sampled at each iteration — how many
+    /// sequences actually advance per iteration. Exceeds the compiled
+    /// batch when `max_live` does (the whole point of the virtual live
+    /// set); `mean_live_depth / batch` is the time-slicing factor.
+    pub live_depth_sum: u64,
+    pub live_depth_samples: u64,
+    /// Of the live set, how many were still prefilling (sampled at
+    /// each iteration; same sample count as `live_depth_samples`).
+    pub prefill_depth_sum: u64,
     /// Tokens generated across all recorded requests (decode
     /// throughput numerator).
     pub decode_tokens: u64,
@@ -188,7 +211,7 @@ pub struct ServeMetrics {
     pub first_token: Histogram,
     /// Token → token gaps ONLY (first token excluded, so queueing
     /// under load cannot masquerade as decode-step latency — this is
-    /// the tail the continuous batcher is supposed to protect).
+    /// the tail the scheduler is supposed to protect).
     pub inter_token: Histogram,
 }
 
@@ -218,15 +241,41 @@ impl ServeMetrics {
         }
     }
 
+    /// Mean VIRTUAL live-set depth per iteration (sequences advancing
+    /// together; exceeds the compiled batch when `max_live` does).
+    pub fn mean_live_depth(&self) -> f64 {
+        if self.live_depth_samples == 0 {
+            0.0
+        } else {
+            self.live_depth_sum as f64 / self.live_depth_samples as f64
+        }
+    }
+
+    /// Mean count of still-prefilling live sequences per iteration.
+    pub fn mean_prefill_depth(&self) -> f64 {
+        if self.live_depth_samples == 0 {
+            0.0
+        } else {
+            self.prefill_depth_sum as f64 / self.live_depth_samples as f64
+        }
+    }
+
     pub fn merge(&mut self, other: &ServeMetrics) {
         self.served += other.served;
         self.batches += other.batches;
+        self.iterations += other.iterations;
         self.total_batch_occupancy += other.total_batch_occupancy;
+        self.prefill_rows += other.prefill_rows;
+        self.prefill_tokens += other.prefill_tokens;
+        self.preempted += other.preempted;
         self.blocked_submits += other.blocked_submits;
         self.queue_depth_sum += other.queue_depth_sum;
         self.queue_depth_samples += other.queue_depth_samples;
         self.decode_depth_sum += other.decode_depth_sum;
         self.decode_depth_samples += other.decode_depth_samples;
+        self.live_depth_sum += other.live_depth_sum;
+        self.live_depth_samples += other.live_depth_samples;
+        self.prefill_depth_sum += other.prefill_depth_sum;
         self.decode_tokens += other.decode_tokens;
         self.completed += other.completed;
         self.cancelled += other.cancelled;
@@ -359,5 +408,41 @@ mod tests {
     fn empty_decode_gauge_is_zero() {
         let m = ServeMetrics::default();
         assert_eq!(m.mean_decode_depth(), 0.0);
+        assert_eq!(m.mean_live_depth(), 0.0);
+        assert_eq!(m.mean_prefill_depth(), 0.0);
+    }
+
+    #[test]
+    fn scheduler_counters_and_gauges_merge() {
+        let mut a = ServeMetrics {
+            iterations: 4,
+            batches: 10, // virtual live set: more step batches than iterations
+            prefill_rows: 6,
+            prefill_tokens: 48,
+            preempted: 2,
+            live_depth_sum: 24,
+            live_depth_samples: 4,
+            prefill_depth_sum: 8,
+            ..Default::default()
+        };
+        let b = ServeMetrics {
+            iterations: 2,
+            batches: 2,
+            prefill_rows: 1,
+            prefill_tokens: 8,
+            preempted: 1,
+            live_depth_sum: 4,
+            live_depth_samples: 2,
+            prefill_depth_sum: 1,
+            ..Default::default()
+        };
+        assert!((a.mean_live_depth() - 6.0).abs() < 1e-12);
+        assert!((a.mean_prefill_depth() - 2.0).abs() < 1e-12);
+        a.merge(&b);
+        assert_eq!(a.iterations, 6);
+        assert_eq!(a.batches, 12);
+        assert_eq!((a.prefill_rows, a.prefill_tokens, a.preempted), (7, 56, 3));
+        assert!((a.mean_live_depth() - 28.0 / 6.0).abs() < 1e-12);
+        assert!((a.mean_prefill_depth() - 9.0 / 6.0).abs() < 1e-12);
     }
 }

@@ -1,57 +1,64 @@
 //! Serving subsystem: request-lifecycle API → admission → per-worker
-//! continuous-batching decode loop → device-resident session.
+//! scheduler → device-resident session.
 //!
 //! This is the "no runtime overhead" demonstration of §5.3 scaled up
 //! from the seed's single runner thread: the same compiled graph serves
 //! FP-sentinel, uniform and mixed-precision bit grids, so mixed
 //! precision adds zero request-path work — and now it does so through a
 //! real serving stack under a real DECODE load (multi-token sessions,
-//! iteration-level continuous batching), which is what the end-to-end
-//! latency/throughput numbers (Table-4 analog, `BENCH_serve.json`) are
-//! measured against.
+//! chunked prefill, a virtual live set beyond the compiled batch),
+//! which is what the end-to-end latency/throughput numbers (Table-4
+//! analog, `BENCH_serve.json`) are measured against.
 //!
-//! Layout:
+//! Layout (policy and mechanism deliberately split):
 //!
 //! * [`api`] — the request lifecycle: typed [`GenRequest`]s, [`Ticket`]
 //!   handles (poll / wait / per-token streaming / cancel), terminal
 //!   [`Finish`] reasons, and the [`Client`] admission façade.
 //! * [`admission`] — bounded per-worker request queues with
 //!   backpressure (replaces the seed's unbounded mpsc).
-//! * [`batcher`] — iteration-level continuous batching: the live
-//!   decode set, admission policy, shutdown-drain semantics; extracted
-//!   so it is unit-testable without PJRT.
-//! * [`metrics`] — latency + inter-token histograms (p50/p95/p99),
-//!   occupancy, queue-depth and decode-set-depth gauges, terminal-state
-//!   counters.
-//! * [`router`] — worker lifecycle + the decode loop. Each worker owns
-//!   a complete [`crate::runtime::Session`] (its own execution backend
-//!   + device-resident weights + device-resident bit grids) because
-//!   PJRT handles are `!Send`; the per-iteration host→device transfer
-//!   is the padded step batch alone. Workers select their backend via
-//!   `ServeConfig::backend` (`--backend {auto,pjrt-cpu,interp}`), so
-//!   the same router serves compiled HLO or the artifact-less
-//!   interpreter.
+//! * [`sched`] — ALL scheduling policy: the holding pen with
+//!   arrival-age promotion (no priority starvation), chunked prefill,
+//!   the virtual live set time-sliced over fixed-size step batches,
+//!   deadline-aware preemption, shutdown-drain semantics. Host-side
+//!   and engine-free, unit-tested without PJRT. (Successor of the
+//!   retired `serve::batcher::ContinuousBatcher` — see the README
+//!   migration notes.)
+//! * [`trace`] — recorded arrival traces replayed by [`run_workload`]
+//!   in place of the synthetic Poisson process.
+//! * [`metrics`] — latency + TTFT + inter-token histograms
+//!   (p50/p95/p99), occupancy, queue/decode/live-set depth gauges,
+//!   prefill and preemption counters, terminal-state counters.
+//! * [`router`] — worker lifecycle + the scheduler drive loop. Each
+//!   worker owns a complete [`crate::runtime::Session`] (its own
+//!   execution backend + device-resident weights + bit grids) because
+//!   PJRT handles are `!Send`; per-step host→device transfer is the
+//!   padded token batch alone. Workers select their backend via
+//!   `ServeConfig::backend` (`--backend {auto,pjrt-cpu,interp}`).
 //!
 //! Threading model in one picture:
 //!
 //! ```text
 //! Client ── submit(GenRequest) ─> Ticket        (round-robin, bounded queues)
 //!    │                                   ╭─> worker 0 ─╮   per iteration:
-//!    ├──────────────────────────────────>│  admit new ──> live decode set
+//!    ├──────────────────────────────────>│  Scheduler: admit/age/evict/plan
 //!    │                                   │  retire cancelled/expired/done
-//!    │    Event::Token per token         │  step = Session::decode_step(live)
-//!    │<──────────────────────────────────│  append token to every sequence
-//!    │    Event::Done(Outcome)           ╰─< loop ─╯
-//!    │                                   ├─> worker 1: ...
-//!    └─ poll/wait/recv_token/try_cancel  └─> worker N-1: ...
+//!    │    Event::Token per token         │  for step in plan:  (1+ batches)
+//!    │<──────────────────────────────────│    Session::decode_step_rows
+//!    │    Event::Done(Outcome)           │    prefill slices + decode rows
+//!    │                                   ╰─< loop ─╯
+//!    └─ poll/wait/recv_token/try_cancel  ├─> worker 1: ... each its own
+//!                                        └─> worker N-1: ... engine+scheduler
 //! ```
 //!
 //! A sequence joins the live set the iteration after it is admitted and
-//! leaves the moment it finishes — so a short request never waits for a
-//! long one's remaining tokens (no head-of-line blocking), and the
-//! packed-kernel serving path (`qpredict` off `PackedCache`) is
-//! exercised autoregressively, token after token, off the same
-//! resident compressed weights.
+//! leaves the moment it finishes — a short request never waits for a
+//! long one's remaining tokens, and with chunked prefill it does not
+//! wait for a long PROMPT either: the prompt trickles through the step
+//! batch `prefill_chunk` tokens per iteration while decodes keep
+//! streaming in the other rows. The packed-kernel serving path
+//! (`qpredict` off `PackedCache`) is exercised autoregressively, token
+//! after token, off the same resident compressed weights.
 //!
 //! Shutdown closes every queue; workers drain all admitted requests and
 //! decode their live sets to completion before exiting, so nothing
@@ -59,16 +66,18 @@
 
 pub mod admission;
 pub mod api;
-pub mod batcher;
 pub mod metrics;
 pub mod router;
+pub mod sched;
+pub mod trace;
 
 pub use api::{Client, Event, Finish, GenRequest, Outcome, Priority, Ticket, TokenEvent};
-pub use batcher::{ContinuousBatcher, Schedulable, StepPolicy};
 pub use metrics::{Histogram, ServeMetrics};
-pub use router::{Router, ServeConfig, ServeReport};
+pub use router::{Router, SeqState, ServeConfig, ServeReport};
+pub use sched::{IterationPlan, PlanRow, SchedConfig, SchedSeq, Scheduler};
+pub use trace::{load_trace, TraceArrival};
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -77,7 +86,8 @@ use crate::calib::TokenStream;
 /// What a synthetic client run offers the server.
 #[derive(Clone, Debug)]
 pub struct WorkloadSpec {
-    /// Prompt window length sampled from the token stream.
+    /// Prompt window length sampled from the token stream (the SHORT
+    /// prompt class; also the warmup prompt length).
     pub seq_len: usize,
     pub n_requests: usize,
     /// Open-loop Poisson arrival rate.
@@ -87,11 +97,34 @@ pub struct WorkloadSpec {
     /// Optional per-request deadline (relative to submission).
     pub deadline: Option<Duration>,
     pub seed: u64,
+    /// Mixed prompt lengths: this fraction of requests get a
+    /// `long_prompt_len`-token prompt instead of `seq_len` (0.0
+    /// disables — the knob that makes chunked prefill observable).
+    pub long_prompt_frac: f64,
+    pub long_prompt_len: usize,
+    /// Per-request prefill-chunk override attached to every request
+    /// (`None` = the server default).
+    pub prefill_chunk: Option<usize>,
+    /// Replay this recorded arrival trace instead of the Poisson
+    /// process (offsets/prompt lengths/budgets come from the trace;
+    /// `n_requests`/`rate_per_sec`/long-prompt mixing are ignored).
+    pub trace: Option<Vec<TraceArrival>>,
 }
 
 impl WorkloadSpec {
     pub fn new(seq_len: usize, n_requests: usize, rate_per_sec: f64, seed: u64) -> WorkloadSpec {
-        WorkloadSpec { seq_len, n_requests, rate_per_sec, max_new_tokens: 1, deadline: None, seed }
+        WorkloadSpec {
+            seq_len,
+            n_requests,
+            rate_per_sec,
+            max_new_tokens: 1,
+            deadline: None,
+            seed,
+            long_prompt_frac: 0.0,
+            long_prompt_len: 0,
+            prefill_chunk: None,
+            trace: None,
+        }
     }
 
     pub fn max_new_tokens(mut self, n: usize) -> WorkloadSpec {
@@ -101,6 +134,26 @@ impl WorkloadSpec {
 
     pub fn deadline(mut self, d: Duration) -> WorkloadSpec {
         self.deadline = Some(d);
+        self
+    }
+
+    /// Mix `frac` of requests with `len`-token prompts (long-prompt
+    /// class for prefill experiments).
+    pub fn long_prompts(mut self, frac: f64, len: usize) -> WorkloadSpec {
+        self.long_prompt_frac = frac.clamp(0.0, 1.0);
+        self.long_prompt_len = len;
+        self
+    }
+
+    /// Attach a per-request prefill-chunk override to every request.
+    pub fn prefill_chunk(mut self, chunk: usize) -> WorkloadSpec {
+        self.prefill_chunk = Some(chunk);
+        self
+    }
+
+    /// Replay a recorded arrival trace instead of the Poisson process.
+    pub fn trace(mut self, t: Vec<TraceArrival>) -> WorkloadSpec {
+        self.trace = Some(t);
         self
     }
 }
@@ -113,6 +166,13 @@ pub struct WorkloadReport {
     /// Per-request server-side latencies (seconds) of COMPLETED
     /// requests, submission order.
     pub latencies: Vec<f64>,
+    /// Submission → first-token latencies (seconds) split by prompt
+    /// class (short: prompt <= `seq_len`; long: the rest) — the
+    /// numbers that show what chunked prefill buys short requests
+    /// under a long-prompt-mixed load. One entry per request that
+    /// produced at least one token.
+    pub ttft_short: Vec<f64>,
+    pub ttft_long: Vec<f64>,
     /// Tokens generated across all requests (including partial output
     /// of cancelled/expired ones).
     pub decode_tokens: u64,
@@ -148,33 +208,76 @@ impl WorkloadReport {
     }
 }
 
+/// Exact sample quantile (nearest-rank on a sorted copy) — for the
+/// workload driver's small per-class TTFT vectors, where the
+/// log-bucketed [`Histogram`] would be overkill. Returns 0.0 on empty
+/// input.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank]
+}
+
 /// Synthetic client workload against a running server.
 ///
 /// Arrival model: OPEN-LOOP Poisson — `n_requests` prompt windows
 /// sampled from a token stream are submitted with exponential
 /// inter-arrival gaps at `rate_per_sec`, and the sampled gap is honored
 /// exactly (the seed clamped gaps at 50 ms, silently turning low-rate
-/// workloads into higher-rate ones). Each request asks for
-/// `max_new_tokens` of decode. The loop becomes CLOSED only at the
-/// admission bound: when every worker queue is full, `submit` blocks,
-/// so the client cannot outrun the server by more than
-/// `workers * queue_cap` in-flight requests. After the submission phase
-/// the client blocks for all terminal events and maps each ticket's
-/// [`Finish`] reason into the report — an expired or cancelled request
-/// is a counted outcome, not an opaque "channel closed" error.
+/// workloads into higher-rate ones). With `long_prompts`, a fraction
+/// of requests carry long prompts (the chunked-prefill stressor). With
+/// a [`WorkloadSpec::trace`], the recorded arrival schedule is
+/// replayed instead: each entry is submitted at its absolute
+/// `offset_us` with its own prompt length and decode budget.
+///
+/// Each request asks for its decode budget. The loop becomes CLOSED
+/// only at the admission bound: when every worker queue is full,
+/// `submit` blocks, so the client cannot outrun the server by more
+/// than `workers * queue_cap` in-flight requests. After the submission
+/// phase the client blocks for all terminal events and maps each
+/// ticket's [`Finish`] reason into the report — an expired or
+/// cancelled request is a counted outcome, not an opaque "channel
+/// closed" error.
 pub fn run_workload(
     server: &mut Router,
     stream: &TokenStream,
     spec: &WorkloadSpec,
 ) -> Result<WorkloadReport> {
     anyhow::ensure!(
-        spec.rate_per_sec > 0.0,
+        spec.trace.is_some() || spec.rate_per_sec > 0.0,
         "rate_per_sec must be positive (got {})",
         spec.rate_per_sec
     );
+    anyhow::ensure!(
+        stream.len() > spec.seq_len,
+        "token stream ({} tokens) shorter than the prompt window ({})",
+        stream.len(),
+        spec.seq_len
+    );
+    // A replay (or a long-prompt mix) must be faithful or fail loudly:
+    // silently truncating prompts to the stream would measure a
+    // different load than the one recorded/requested.
+    if let Some(entries) = &spec.trace {
+        if let Some(bad) = entries.iter().find(|e| e.prompt_len >= stream.len()) {
+            anyhow::bail!(
+                "trace prompt_len {} does not fit the token stream ({} tokens); \
+                 replaying it would silently truncate the recorded load",
+                bad.prompt_len,
+                stream.len()
+            );
+        }
+    }
+    anyhow::ensure!(
+        spec.long_prompt_len < stream.len(),
+        "long_prompt_len {} does not fit the token stream ({} tokens)",
+        spec.long_prompt_len,
+        stream.len()
+    );
     let mut rng = crate::util::rng::Rng::new(spec.seed);
-    let mut tickets = Vec::with_capacity(spec.n_requests);
-    let max_start = stream.len() - spec.seq_len - 1;
     // Warmup barrier: each worker compiles its executable and uploads
     // its buffers on its own thread; block on one unmeasured,
     // unrecorded request per worker so cold-start cost never counts as
@@ -187,23 +290,60 @@ pub fn run_workload(
     for mut t in warm {
         t.wait().context("warmup failed")?;
     }
-    let t0 = std::time::Instant::now();
-    for _ in 0..spec.n_requests {
-        let start = rng.below(max_start);
-        let tokens = stream.tokens[start..start + spec.seq_len].to_vec();
-        let mut req = GenRequest::new(tokens).max_new_tokens(spec.max_new_tokens);
+
+    // One request: sample a `len`-token prompt anywhere in the stream,
+    // attach the decode contract, submit. Returns (ticket, is_long).
+    let submit_one = |server: &mut Router,
+                          rng: &mut crate::util::rng::Rng,
+                          len: usize,
+                          max_new: usize|
+     -> Result<(Ticket, bool)> {
+        let len = len.clamp(1, stream.len() - 1);
+        let start = rng.below(stream.len() - len);
+        let mut req =
+            GenRequest::new(stream.tokens[start..start + len].to_vec()).max_new_tokens(max_new);
         if let Some(d) = spec.deadline {
             req = req.deadline(d);
         }
-        tickets.push(server.submit_request(req)?);
-        let gap = rng.exp(spec.rate_per_sec);
-        // non-finite gaps can't reach a Duration (from_secs_f64 panics)
-        if gap.is_finite() && gap > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(gap));
+        if let Some(c) = spec.prefill_chunk {
+            req = req.prefill_chunk(c);
+        }
+        Ok((server.submit_request(req)?, len > spec.seq_len))
+    };
+
+    let n_planned = spec.trace.as_ref().map(|t| t.len()).unwrap_or(spec.n_requests);
+    let mut tickets: Vec<(Ticket, bool)> = Vec::with_capacity(n_planned);
+    let t0 = Instant::now();
+    if let Some(entries) = &spec.trace {
+        // Trace replay: absolute offsets from t0, so lateness in one
+        // submission does not shift the rest of the schedule.
+        for e in entries {
+            let target = t0 + Duration::from_micros(e.offset_us);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            tickets.push(submit_one(server, &mut rng, e.prompt_len, e.max_new_tokens)?);
+        }
+    } else {
+        for _ in 0..spec.n_requests {
+            let len = if spec.long_prompt_len > 0 && rng.f64() < spec.long_prompt_frac {
+                spec.long_prompt_len
+            } else {
+                spec.seq_len
+            };
+            tickets.push(submit_one(server, &mut rng, len, spec.max_new_tokens)?);
+            let gap = rng.exp(spec.rate_per_sec);
+            // non-finite gaps can't reach a Duration (from_secs_f64 panics)
+            if gap.is_finite() && gap > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(gap));
+            }
         }
     }
     let mut report = WorkloadReport {
-        latencies: Vec::with_capacity(spec.n_requests),
+        latencies: Vec::with_capacity(n_planned),
+        ttft_short: Vec::new(),
+        ttft_long: Vec::new(),
         decode_tokens: 0,
         completed: 0,
         cancelled: 0,
@@ -211,7 +351,7 @@ pub fn run_workload(
         rejected: 0,
         wall_secs: 0.0,
     };
-    for mut t in tickets {
+    for (mut t, is_long) in tickets {
         // `wait` errors only when a worker died mid-request; every
         // normal terminal state — including cancellation and deadline
         // expiry — arrives as an Outcome and is tallied by reason.
@@ -226,6 +366,10 @@ pub fn run_workload(
             Finish::Cancelled => report.cancelled += 1,
             Finish::DeadlineExceeded => report.deadline_exceeded += 1,
             Finish::Rejected(_) => report.rejected += 1,
+        }
+        if let Some(d) = t.first_token_latency() {
+            let dst = if is_long { &mut report.ttft_long } else { &mut report.ttft_short };
+            dst.push(d.as_secs_f64());
         }
     }
     report.wall_secs = t0.elapsed().as_secs_f64();

@@ -1,4 +1,7 @@
-//! Worker lifecycle + the decode loop behind the request API.
+//! Worker lifecycle + the scheduler drive loop behind the request API.
+//! All scheduling POLICY lives in [`super::sched`]; this module is
+//! wiring: it owns the engines, the worker threads, and the loop that
+//! turns a [`Scheduler`] plan into `Session::decode_step_rows` calls.
 //!
 //! Threading model
 //! ---------------
@@ -15,16 +18,17 @@
 //! pushes a [`DecodeSeq`] onto a worker queue — round-robin home
 //! worker, spill-over to any worker with space, and only when EVERY
 //! queue is full a blocking push (backpressure: the client slows down
-//! instead of the server buffering unboundedly). Each worker runs the
-//! iteration-level [`ContinuousBatcher`] over its queue: every
-//! iteration re-forms the live decode set, executes ONE padded step
-//! batch through `Session::decode_step` (token-only upload), appends
-//! each sampled token to its sequence, streams it to the ticket, and
-//! retires finished/cancelled/expired sequences between iterations.
+//! instead of the server buffering unboundedly). Each worker drives a
+//! [`Scheduler`] over its queue: every iteration retires defunct
+//! sequences, admits/ages/evicts (see `sched`), then executes the
+//! planned step batches — chunked-prefill slices and decode rows side
+//! by side, one-or-more fixed-size batches when the virtual live set
+//! exceeds the compiled batch — appending and streaming each emitted
+//! token.
 //!
 //! Shutdown: `Router::shutdown` closes every queue. Workers drain all
-//! admitted requests — the batcher keeps admitting until its queue is
-//! closed AND empty, then the worker decodes its live set to
+//! admitted requests — the scheduler keeps admitting until its queue
+//! is closed AND empty, then the worker decodes its live set to
 //! completion — return their [`ServeMetrics`], and the router merges
 //! them into a [`ServeReport`].
 
@@ -39,15 +43,16 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::model::{Manifest, WeightStore};
 use crate::quant::{BitAlloc, BlockIndex};
-use crate::runtime::{open_backend, BackendKind, Session};
+use crate::runtime::{open_backend, BackendKind, Session, StepRow};
 
 use super::admission::Bounded;
 use super::api::{Client, Event, Finish, GenRequest, Outcome, Priority, Shared, Ticket, TokenEvent};
-use super::batcher::{ContinuousBatcher, Schedulable, StepPolicy};
 use super::metrics::ServeMetrics;
+use super::sched::{SchedConfig, SchedSeq, Scheduler};
 
 pub const DEFAULT_QUEUE_CAP: usize = 256;
 pub const DEFAULT_IDLE_WINDOW: Duration = Duration::from_millis(3);
+pub const DEFAULT_AGING: Duration = Duration::from_millis(250);
 
 /// Server configuration. `alloc` fixes the bit grids served (the
 /// quantized model); weights and grids are uploaded once per worker at
@@ -58,7 +63,7 @@ pub struct ServeConfig {
     pub alloc: BitAlloc,
     /// How long an IDLE worker coalesces arrivals before its first
     /// decode iteration (a busy worker admits without waiting — see
-    /// [`ContinuousBatcher`]).
+    /// [`Scheduler`]).
     pub batch_window: Duration,
     /// Worker threads, each with its own backend (PJRT is `!Send`).
     pub workers: usize,
@@ -67,6 +72,19 @@ pub struct ServeConfig {
     /// Engine each worker builds: PJRT, interpreter, or per-artifact
     /// auto-detection (`--backend` on the CLI).
     pub backend: BackendKind,
+    /// Prefill budget: NEW prompt tokens per sequence per iteration
+    /// while prefilling. `0` (default) = whole-prompt mode — the
+    /// entire prompt enters the step batch at once, one row per
+    /// `seq_len` stride, stalling co-scheduled decodes for the
+    /// duration (`--prefill-chunk`).
+    pub prefill_chunk: usize,
+    /// Virtual live-set cap per worker. `0` (default) = the compiled
+    /// batch size; larger values time-slice the live set over multiple
+    /// step batches per iteration (`--max-live`).
+    pub max_live: usize,
+    /// Arrival-age promotion interval for the holding pen (the
+    /// anti-starvation knob; `Duration::ZERO` disables aging).
+    pub aging: Duration,
 }
 
 impl ServeConfig {
@@ -78,6 +96,9 @@ impl ServeConfig {
             workers: 1,
             queue_cap: DEFAULT_QUEUE_CAP,
             backend: BackendKind::Auto,
+            prefill_chunk: 0,
+            max_live: 0,
+            aging: DEFAULT_AGING,
         }
     }
 }
@@ -92,16 +113,39 @@ pub struct ServeReport {
     pub total: ServeMetrics,
 }
 
+/// Where a sequence stands in its lifecycle: still owing the engine
+/// prompt tokens, or emitting one token per scheduled iteration.
+/// (`queued` and the terminal states live outside the worker — see the
+/// state machine in `sched`.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqState {
+    /// `fed < prompt_len`: prompt tokens still to pass through the
+    /// engine (in `prefill_chunk` slices, or whole).
+    Prefilling,
+    /// Prompt fully fed; every scheduled iteration emits a token.
+    Decoding,
+}
+
 /// One in-flight sequence: the admission record pushed by the client
 /// AND the worker's decode state. Crosses the queue once; after that
-/// it lives in exactly one worker's decode set until it finishes.
+/// it lives on exactly one worker — in the scheduler's live set or,
+/// while preempted, its pen — until it finishes. Decode state is
+/// host-side (a token vector and a prefill cursor), so preemption
+/// costs nothing to resume.
 pub(crate) struct DecodeSeq {
     pub id: u64,
     /// Full context: prompt + every generated token (the step batch
     /// serves the sliding window over its tail).
     tokens: Vec<i32>,
+    /// Prompt length at admission (`tokens[..prompt_len]` is the
+    /// prompt; the rest is generated).
+    prompt_len: usize,
+    /// Prompt tokens already fed through the engine (prefill cursor).
+    fed: usize,
+    state: SeqState,
     max_new: usize,
     priority: Priority,
+    prefill_chunk: Option<usize>,
     record: bool,
     tx: mpsc::Sender<Event>,
     cancel: Arc<AtomicBool>,
@@ -115,16 +159,43 @@ pub(crate) struct DecodeSeq {
     last_event: Instant,
 }
 
-impl Schedulable for DecodeSeq {
+impl SchedSeq for DecodeSeq {
     fn priority(&self) -> Priority {
         self.priority
     }
 
-    /// Cancelled/expired sequences surface out of the batcher's pen
+    fn arrived(&self) -> Instant {
+        self.submitted
+    }
+
+    /// Cancelled/expired sequences surface out of the scheduler's pen
     /// even when the live set is full, so their terminal event is
     /// never delayed behind long-running generations.
     fn defunct(&self) -> bool {
         self.cancelled() || self.expired(Instant::now())
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    fn fed(&self) -> usize {
+        match self.state {
+            SeqState::Decoding => self.prompt_len,
+            SeqState::Prefilling => self.fed,
+        }
+    }
+
+    fn prefill_chunk(&self) -> Option<usize> {
+        self.prefill_chunk
+    }
+
+    fn done(&self) -> bool {
+        self.generated.len() >= self.max_new
     }
 }
 
@@ -137,11 +208,16 @@ impl DecodeSeq {
         submitted: Instant,
     ) -> DecodeSeq {
         let deadline = req.deadline.map(|d| submitted + d);
+        let prompt_len = req.tokens.len();
         DecodeSeq {
             id,
             tokens: req.tokens,
+            prompt_len,
+            fed: 0,
+            state: SeqState::Prefilling,
             max_new: req.max_new_tokens,
             priority: req.priority,
+            prefill_chunk: req.prefill_chunk,
             record: req.record,
             tx,
             cancel,
@@ -160,8 +236,27 @@ impl DecodeSeq {
         self.deadline.is_some_and(|d| now >= d)
     }
 
-    fn done(&self) -> bool {
-        self.generated.len() >= self.max_new
+    pub(crate) fn state(&self) -> SeqState {
+        self.state
+    }
+
+    /// The token window for one planned step row: the prompt prefix
+    /// `tokens[..end]` for a prefill slice, the full sequence for a
+    /// decode row (the session serves the sliding tail either way).
+    fn window(&self, window_end: Option<usize>) -> &[i32] {
+        match window_end {
+            Some(end) => &self.tokens[..end.min(self.tokens.len())],
+            None => &self.tokens,
+        }
+    }
+
+    /// Advance the prefill cursor after a slice passed through the
+    /// engine; completing the prompt moves the sequence to `Decoding`.
+    fn advance_fed(&mut self, n: usize) {
+        self.fed = (self.fed + n).min(self.prompt_len);
+        if self.fed >= self.prompt_len {
+            self.state = SeqState::Decoding;
+        }
     }
 
     /// Append one sampled token: extend the sequence, stream the event,
@@ -215,6 +310,16 @@ impl DecodeSeq {
     }
 }
 
+/// The scheduling knobs a worker forwards into its [`SchedConfig`]
+/// (the batch/seq facts come from its own compiled executable).
+#[derive(Clone, Copy, Debug)]
+struct SchedKnobs {
+    idle_window: Duration,
+    prefill_chunk: usize,
+    max_live: usize,
+    aging: Duration,
+}
+
 /// Worker lifecycle handle: spawns the decode workers, hands out
 /// admission [`Client`]s, aggregates metrics at shutdown.
 pub struct Router {
@@ -246,6 +351,12 @@ impl Router {
         let vocab = manifest.config.vocab;
         drop(manifest);
 
+        let knobs = SchedKnobs {
+            idle_window: cfg.batch_window,
+            prefill_chunk: cfg.prefill_chunk,
+            max_live: cfg.max_live,
+            aging: cfg.aging,
+        };
         let mut queues = Vec::with_capacity(cfg.workers);
         let mut joins = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -253,7 +364,6 @@ impl Router {
             let worker_queue = queue.clone();
             let artifacts = cfg.artifacts.clone();
             let worker_grids = grids.clone();
-            let window = cfg.batch_window;
             let join = std::thread::Builder::new()
                 .name(format!("scalebits-worker-{w}"))
                 .spawn(move || {
@@ -262,7 +372,7 @@ impl Router {
                     // any still-pending requests, so waiting clients
                     // see a channel error instead of hanging forever.
                     let _guard = CloseOnExit(worker_queue.clone());
-                    worker_loop(w, artifacts, backend, worker_grids, worker_queue, window)
+                    worker_loop(w, artifacts, backend, worker_grids, worker_queue, knobs)
                 })
                 .map_err(|e| anyhow!("spawn worker {w}: {e}"))?;
             queues.push(queue);
@@ -349,15 +459,17 @@ impl Drop for CloseOnExit {
 }
 
 /// One worker: builds its own backend + session on this thread (PJRT
-/// handles are `!Send`), then runs the continuous-batching decode loop
-/// until shutdown.
+/// handles are `!Send`), then drives a [`Scheduler`] until shutdown.
+/// Pure wiring — every placement decision (who is live, who is penned,
+/// what each step-batch row carries) comes out of the scheduler; this
+/// loop only executes the plan and routes results back.
 fn worker_loop(
     worker: usize,
     artifacts: PathBuf,
     kind: BackendKind,
     grids: Vec<Vec<i32>>,
     queue: Arc<Bounded<DecodeSeq>>,
-    window: Duration,
+    knobs: SchedKnobs,
 ) -> Result<ServeMetrics> {
     let manifest = Manifest::load(&artifacts)?;
     // Prefer the prediction fast path (int32 [B,T] output) when the
@@ -367,81 +479,95 @@ fn worker_loop(
     let backend = open_backend(kind, manifest, &[exec_name])?;
     let store = WeightStore::load(backend.manifest())?;
     let batch = backend.batch_of(exec_name)?;
+    let seq_len = backend.manifest().config.seq_len;
     // Weights AND bit grids go device-resident here, once. From now on
-    // each decode iteration uploads exactly one buffer: the step batch.
+    // each step-batch execution uploads exactly one buffer: the tokens.
     let session = Session::with_backend(backend, &store, &grids)?;
     drop(store);
 
-    let mut batcher =
-        ContinuousBatcher::new(queue.clone(), StepPolicy { max_live: batch, idle_window: window });
-    let mut live: Vec<DecodeSeq> = Vec::new();
+    let sched_cfg = SchedConfig {
+        batch,
+        seq_len,
+        max_live: knobs.max_live, // 0 normalizes to `batch`
+        prefill_chunk: knobs.prefill_chunk,
+        idle_window: knobs.idle_window,
+        aging: knobs.aging,
+    };
+    let mut sched: Scheduler<DecodeSeq> = Scheduler::new(queue.clone(), sched_cfg);
     let mut metrics = ServeMetrics::default();
     loop {
-        let open = batcher.admit(&mut live);
+        let open = sched.admit();
 
-        // Retire cancelled/expired sequences BEFORE the step: a
-        // cancelled or deadline-exceeded request must never occupy a
-        // decode iteration, and its slot refills on the next admit.
-        let now = Instant::now();
-        if live.iter().any(|s| s.cancelled() || s.expired(now)) {
-            let mut keep = Vec::with_capacity(live.len());
-            for s in live.drain(..) {
-                if s.cancelled() {
-                    s.finish(Finish::Cancelled, worker, &mut metrics);
-                } else if s.expired(now) {
-                    s.finish(Finish::DeadlineExceeded, worker, &mut metrics);
-                } else {
-                    keep.push(s);
-                }
+        // Retire cancelled/expired sequences BEFORE planning: a
+        // defunct request must never occupy a step-batch row, and its
+        // slot refills on the next admit.
+        for s in sched.drain_defunct() {
+            if s.cancelled() {
+                s.finish(Finish::Cancelled, worker, &mut metrics);
+            } else {
+                s.finish(Finish::DeadlineExceeded, worker, &mut metrics);
             }
-            live = keep;
         }
-        if live.is_empty() {
+        metrics.preempted += sched.take_preemptions();
+        if sched.live_len() == 0 {
             if open {
                 continue;
             }
-            break; // queue closed + drained, decode set empty: done
+            break; // queue closed + drained, live set empty: done
         }
 
-        // One decode iteration over the whole live set.
+        // One scheduler iteration: every live sequence advances one
+        // quantum across one-or-more fixed-size step batches.
         let depth = queue.len() as u64;
-        let occupancy = live.len();
-        // In-flight on this worker: decoding + admitted-but-waiting.
-        let in_flight = (live.len() + batcher.pen_len()) as u64;
-        let recorded = live.iter().filter(|s| s.record).count() as u64;
-        let next = {
-            let rows: Vec<&[i32]> = live.iter().map(|s| s.tokens.as_slice()).collect();
+        let live_n = sched.live_len() as u64;
+        let in_flight = live_n + sched.pen_len() as u64;
+        let prefilling =
+            sched.live().iter().filter(|s| s.state() == SeqState::Prefilling).count() as u64;
+        // Warmup-only iterations stay out of the batch/occupancy/
+        // depth statistics — they measure engine cold start.
+        let recorded = sched.live().iter().filter(|s| s.record).count();
+        let plan = sched.plan();
+        for step in &plan.steps {
+            let rows: Vec<StepRow> = step
+                .iter()
+                .map(|r| StepRow { window: sched.live()[r.seq].window(r.window_end), emit: r.emit })
+                .collect();
             let t0 = Instant::now();
-            let next = session.decode_step(exec_name, &rows)?;
+            let outs = session.decode_step_rows(exec_name, &rows)?;
             let exec_dt = t0.elapsed().as_secs_f64();
-            // Warmup-only iterations stay out of the batch/occupancy/
-            // depth statistics — they measure engine cold start.
             if recorded > 0 {
                 metrics.batches += 1;
-                metrics.total_batch_occupancy += occupancy as u64;
-                metrics.decode_depth_sum += in_flight;
-                metrics.decode_depth_samples += 1;
-                metrics.queue_depth_sum += depth;
-                metrics.queue_depth_samples += 1;
+                metrics.total_batch_occupancy += step.len() as u64;
                 metrics.exec_secs += exec_dt;
             }
-            next
-        };
-        let now = Instant::now();
-        for (s, &tok) in live.iter_mut().zip(&next) {
-            s.push_token(tok, now, &mut metrics);
-        }
-        // Retire completed sequences; everyone else decodes on.
-        if live.iter().any(|s| s.done()) {
-            let mut keep = Vec::with_capacity(live.len());
-            for s in live.drain(..) {
-                if s.done() {
-                    s.finish(Finish::Completed, worker, &mut metrics);
-                } else {
-                    keep.push(s);
+            let now = Instant::now();
+            for (r, out) in step.iter().zip(&outs) {
+                let s = &mut sched.live_mut()[r.seq];
+                if r.advance > 0 {
+                    s.advance_fed(r.advance);
+                    if s.record {
+                        metrics.prefill_rows += 1;
+                        metrics.prefill_tokens += r.advance as u64;
+                    }
+                }
+                if let Some(tok) = *out {
+                    s.push_token(tok, now, &mut metrics);
                 }
             }
-            live = keep;
+        }
+        if recorded > 0 {
+            metrics.iterations += 1;
+            metrics.live_depth_sum += live_n;
+            metrics.live_depth_samples += 1;
+            metrics.prefill_depth_sum += prefilling;
+            metrics.decode_depth_sum += in_flight;
+            metrics.decode_depth_samples += 1;
+            metrics.queue_depth_sum += depth;
+            metrics.queue_depth_samples += 1;
+        }
+        // Retire completed sequences; everyone else decodes on.
+        for s in sched.drain_done() {
+            s.finish(Finish::Completed, worker, &mut metrics);
         }
     }
     Ok(metrics)

@@ -1,0 +1,78 @@
+//! The scheduler subsystem: every scheduling POLICY decision between
+//! request admission and `Session::decode_step`.
+//!
+//! PR 4 fused this policy into the router's worker loop (and its
+//! predecessor, `serve::batcher::ContinuousBatcher`, owned only the
+//! admit/retire half of it). This module extracts all of it behind one
+//! type, [`Scheduler`], leaving `serve::router` as pure wiring (engine
+//! ownership + the drive loop) and `runtime::Session` as pure
+//! mechanism (assemble/execute/read out a padded step batch):
+//!
+//! ```text
+//!           POLICY (this module)                MECHANISM (runtime)
+//!  queue ─> admit / age / evict ─> live set ─> plan() ─┐
+//!             ▲         │                              │ rows per
+//!             └── pen ──┘  (preempted seqs wait here)  ▼ step batch
+//!                                        Session::decode_step_rows
+//! ```
+//!
+//! What the scheduler owns:
+//!
+//! * **Admission** — the bounded holding pen between the worker queue
+//!   and the live set, ordered by priority-then-arrival with
+//!   **arrival-age promotion** (a ticket that has waited `aging` is
+//!   treated one priority class higher, capped at `High`, for both
+//!   admission order and eviction — so a saturating high-priority
+//!   stream can delay a low-priority ticket, never starve it).
+//!   Cancelled/expired requests surface for retirement from wherever
+//!   they wait — live set, pen, or still-queued — never behind a
+//!   long-running generation. The SCHEDULING WINDOW is bounded on
+//!   purpose: rank ordering, aging and preemption apply to the live
+//!   set plus the pen (up to `2 × max_live` sequences); requests
+//!   deeper in the admission queue stay strictly FIFO until they
+//!   reach the pen. That bound is what keeps worker memory and
+//!   client backpressure finite — a rank-aware queue that keeps
+//!   global priority visibility without unbounding either is a
+//!   ROADMAP follow-on.
+//! * **Chunked prefill** — a sequence whose prompt has not fully
+//!   passed through the engine is *prefilling*: each iteration it is
+//!   fed at most `prefill_chunk` new prompt tokens in one step-batch
+//!   row, and co-resident decodes keep streaming in the other rows.
+//!   With `prefill_chunk == 0` (whole-prompt mode) the entire
+//!   remaining prompt enters the iteration at once, one row per
+//!   `seq_len`-stride — a 16×`seq_len` prompt monopolizes four full
+//!   step batches and every co-scheduled decode stalls for all of
+//!   them, which is exactly the head-of-line blocking chunking exists
+//!   to remove. Either way the token emitted when prefill completes
+//!   is read from the window over the *full* prompt, so generated
+//!   tokens are bitwise independent of the chunk size (tested).
+//! * **The virtual live set** — `max_live` may exceed the compiled
+//!   batch size: [`Scheduler::plan`] time-slices the whole live set
+//!   over `ceil(rows / batch)` fixed-size padded step batches per
+//!   iteration, so worker throughput is bounded by the hardware, not
+//!   by whatever batch happened to be compiled.
+//! * **Preemption** — when the live set is full and the pen holds
+//!   strictly higher-ranked work, the lowest-ranked live sequence is
+//!   evicted back to the pen (deadline-aware victim choice: prefer
+//!   sequences with no deadline, then the farthest deadline, then the
+//!   newest arrival). Decode state is a token vector, not device
+//!   state, so a preempted sequence keeps its generated tokens and
+//!   resumes later without recompute — and produces the same tokens
+//!   it would have uninterrupted (tested).
+//!
+//! Sequence state machine (driven by the router against this policy):
+//!
+//! ```text
+//!  queued ──admit──> prefilling ──fed == prompt_len──> decoding ──> terminal
+//!    │                   │  ▲                            │  ▲         (completed /
+//!    │                   └──┘ preempt/resume             └──┘          cancelled /
+//!    └────────────── cancel / deadline ──────────────────────────>     deadline)
+//! ```
+//!
+//! Everything here is host-side and engine-free, so the full policy —
+//! aging, eviction, chunk planning, shutdown drain — is unit-tested
+//! without PJRT or artifacts (see `scheduler::tests`).
+
+mod scheduler;
+
+pub use scheduler::{IterationPlan, PlanRow, SchedConfig, SchedSeq, Scheduler};

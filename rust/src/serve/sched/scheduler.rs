@@ -1,0 +1,872 @@
+//! The [`Scheduler`]: admission, aging, preemption and per-iteration
+//! step-batch planning over a live set that may exceed the compiled
+//! batch. See the module docs in `sched/mod.rs` for the policy story.
+
+use std::cmp::Reverse;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::serve::admission::{Bounded, Pop};
+use crate::serve::api::Priority;
+
+/// What the scheduler needs to know about a sequence to place it. The
+/// worker's `DecodeSeq` implements this; the unit tests use plain
+/// structs. Defaults describe a plain decode-only item (no prompt to
+/// prefill, never defunct, never done) so simple tests stay simple.
+pub trait SchedSeq {
+    fn priority(&self) -> Priority;
+
+    /// Submission time — the aging clock and the FIFO tie-break.
+    fn arrived(&self) -> Instant;
+
+    /// Will never decode again (cancelled, past its deadline). Defunct
+    /// items are surfaced past a full live set wherever they wait —
+    /// the holding pen or the admission queue itself — so their
+    /// terminal event is never delayed behind long generations. Must
+    /// be monotone: once `true`, always `true`.
+    fn defunct(&self) -> bool {
+        false
+    }
+
+    /// Absolute deadline, if any — read by the eviction policy (a
+    /// deadline-free sequence is preempted before a deadlined one).
+    fn deadline(&self) -> Option<Instant> {
+        None
+    }
+
+    /// Total prompt tokens. `fed() < prompt_len()` means the sequence
+    /// is still *prefilling* and owes the engine prompt tokens before
+    /// it can emit.
+    fn prompt_len(&self) -> usize {
+        0
+    }
+
+    /// Prompt tokens already fed through the engine.
+    fn fed(&self) -> usize {
+        0
+    }
+
+    /// Per-request prefill-chunk override (`None` = scheduler default).
+    fn prefill_chunk(&self) -> Option<usize> {
+        None
+    }
+
+    /// Generation finished — the scheduler drains it via
+    /// [`Scheduler::drain_done`].
+    fn done(&self) -> bool {
+        false
+    }
+}
+
+/// Scheduler knobs. `batch`/`seq_len` describe the compiled step
+/// executable (mechanism facts); the rest is policy.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// Rows per compiled step batch (the physical bound).
+    pub batch: usize,
+    /// Token capacity of one row (the window length) — the most NEW
+    /// prompt tokens one prefill row can carry.
+    pub seq_len: usize,
+    /// Virtual live-set cap. May exceed `batch`: the whole live set
+    /// then advances over multiple step batches per iteration. `0` is
+    /// normalized to `batch` by [`SchedConfig::normalize`].
+    pub max_live: usize,
+    /// Prefill budget in NEW prompt tokens per sequence per iteration.
+    /// `0` = whole-prompt mode: the entire remaining prompt enters the
+    /// iteration at once (one row per `seq_len` stride), stalling
+    /// co-scheduled decodes for the duration.
+    pub prefill_chunk: usize,
+    /// How long an idle worker coalesces arrivals before its first
+    /// iteration.
+    pub idle_window: Duration,
+    /// Arrival-age promotion interval: a penned ticket is ranked one
+    /// priority class higher per `aging` waited (capped at `High`).
+    /// `Duration::ZERO` disables aging.
+    pub aging: Duration,
+}
+
+impl SchedConfig {
+    pub fn new(batch: usize, seq_len: usize) -> SchedConfig {
+        SchedConfig {
+            batch,
+            seq_len,
+            max_live: batch,
+            prefill_chunk: 0,
+            idle_window: Duration::from_millis(3),
+            aging: Duration::from_millis(250),
+        }
+    }
+
+    /// Resolve defaulted fields (`max_live == 0` → compiled batch).
+    pub fn normalize(mut self) -> SchedConfig {
+        if self.max_live == 0 {
+            self.max_live = self.batch;
+        }
+        self
+    }
+}
+
+/// One row of one planned step batch. `seq` indexes
+/// [`Scheduler::live`]; the router turns it into a window over the
+/// sequence's tokens:
+///
+/// * `window_end == None` — a DECODE row: the full sequence (prompt +
+///   generated so far), served through the sliding window.
+/// * `window_end == Some(e)` — a PREFILL row: the prompt prefix
+///   `tokens[..e]`, advancing the fed cursor by `advance` tokens.
+///
+/// `emit` rows read a next token out of the step (every decode row,
+/// and the prefill row that completes the prompt — its readout IS the
+/// first generated token, computed from the window over the full
+/// prompt exactly as a whole-prompt step would, which is why chunking
+/// never changes the generated tokens).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanRow {
+    pub seq: usize,
+    pub window_end: Option<usize>,
+    pub advance: usize,
+    pub emit: bool,
+}
+
+/// One iteration's worth of padded step batches, each at most `batch`
+/// rows. Every live sequence advances exactly one scheduling quantum
+/// per iteration (one decode token, or one prefill chunk — or its
+/// whole remaining prompt in whole-prompt mode).
+#[derive(Clone, Debug, Default)]
+pub struct IterationPlan {
+    pub steps: Vec<Vec<PlanRow>>,
+}
+
+impl IterationPlan {
+    pub fn rows(&self) -> usize {
+        self.steps.iter().map(|s| s.len()).sum()
+    }
+}
+
+/// Owns the request lifecycle between the admission queue and the
+/// step-batch boundary: the holding pen, the live set, aging,
+/// eviction, and the per-iteration plan.
+pub struct Scheduler<T> {
+    queue: Arc<Bounded<T>>,
+    cfg: SchedConfig,
+    /// Popped-but-not-live requests: admission overflow and preempted
+    /// sequences. Items here were accepted off the queue, so shutdown
+    /// drains them like live sequences.
+    pen: Vec<T>,
+    /// The virtual live set (≤ `max_live`, plus temporarily any
+    /// defunct pen items surfaced for retirement).
+    live: Vec<T>,
+    preemptions: u64,
+}
+
+/// Remove and return every element matching `pred`, preserving the
+/// order of both the extracted and the surviving elements (the one
+/// retirement primitive behind `drain_defunct`/`drain_done` and the
+/// pen's defunct bypass, so their semantics cannot drift).
+fn extract<T>(v: &mut Vec<T>, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < v.len() {
+        if pred(&v[i]) {
+            out.push(v.remove(i));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Effective scheduling rank: static priority promoted one class per
+/// `aging` waited, capped at `High`. Used for BOTH admission order and
+/// eviction, so an aged low-priority ticket is indistinguishable from
+/// fresh high-priority work — it cannot be starved out of admission,
+/// and once admitted it cannot be evicted by equal-ranked arrivals.
+fn rank<T: SchedSeq>(s: &T, now: Instant, aging: Duration) -> u8 {
+    let base = match s.priority() {
+        Priority::Low => 0u8,
+        Priority::Normal => 1,
+        Priority::High => 2,
+    };
+    if aging.is_zero() {
+        return base;
+    }
+    let waited = now.saturating_duration_since(s.arrived());
+    let promoted = (waited.as_nanos() / aging.as_nanos().max(1)).min(2) as u8;
+    (base + promoted).min(2)
+}
+
+impl<T: SchedSeq> Scheduler<T> {
+    pub fn new(queue: Arc<Bounded<T>>, cfg: SchedConfig) -> Scheduler<T> {
+        let cfg = cfg.normalize();
+        assert!(cfg.batch >= 1, "step batch must have at least one row");
+        assert!(cfg.seq_len >= 1, "row capacity must be positive");
+        assert!(cfg.max_live >= 1, "live set cap must be positive");
+        Scheduler { queue, cfg, pen: Vec::new(), live: Vec::new(), preemptions: 0 }
+    }
+
+    pub fn config(&self) -> &SchedConfig {
+        &self.cfg
+    }
+
+    /// One admission pass: drain the queue into the pen (blocking only
+    /// when completely idle, with the `idle_window` coalesce), order
+    /// the pen by aged rank then arrival, fill free live slots, evict
+    /// for strictly higher-ranked penned work, and surface defunct pen
+    /// items past the cap so the caller can retire them.
+    ///
+    /// Returns `false` once no further request can ever arrive (queue
+    /// closed and drained, pen empty) — the worker should finish
+    /// decoding whatever remains live and exit.
+    pub fn admit(&mut self) -> bool {
+        if self.live.is_empty() && self.pen.is_empty() {
+            // Idle: block for the first request, then coalesce briefly
+            // so a burst that arrives together decodes together.
+            match self.queue.pop() {
+                Some(v) => self.pen.push(v),
+                None => return false,
+            }
+            let deadline = Instant::now() + self.cfg.idle_window;
+            while self.pen.len() < self.cfg.max_live {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match self.queue.pop_timeout(deadline - now) {
+                    Pop::Item(v) => self.pen.push(v),
+                    Pop::Timeout | Pop::Closed => break,
+                }
+            }
+        } else {
+            // Busy: non-blocking top-up between iterations; the pen is
+            // bounded by the live cap.
+            while self.pen.len() < self.cfg.max_live {
+                match self.queue.try_pop() {
+                    Pop::Item(v) => self.pen.push(v),
+                    Pop::Timeout | Pop::Closed => break,
+                }
+            }
+        }
+        let now = Instant::now();
+        let aging = self.cfg.aging;
+        // Aged-priority-then-arrival (stable: FIFO within a rank).
+        self.pen.sort_by_key(|t| (Reverse(rank(t, now, aging)), t.arrived()));
+        while self.live.len() < self.cfg.max_live && !self.pen.is_empty() {
+            let next = self.pen.remove(0);
+            self.live.push(next);
+        }
+        self.evict_for_rank(now);
+        // Defunct items bypass the cap everywhere they may be waiting —
+        // the pen AND the queue itself (a full pen stops the top-up, so
+        // a cancelled request could otherwise sit queued behind it
+        // forever). The caller retires them before planning the next
+        // step, so the step batch never exceeds the policy bounds, but
+        // their terminal event must not wait for a slot behind
+        // long-running sequences.
+        let defunct = extract(&mut self.pen, |t| t.defunct());
+        self.live.extend(defunct);
+        self.live.extend(self.queue.remove_where(|t| t.defunct()));
+        !(self.pen.is_empty() && self.queue.is_closed() && self.queue.is_empty())
+    }
+
+    /// Preemption: while the pen's best-ranked ticket strictly outranks
+    /// the worst-ranked live sequence, swap them. The victim returns to
+    /// the pen with all its state (generated tokens, prefill cursor) —
+    /// decode state is host-side, so resuming needs no recompute.
+    /// Victim choice among the lowest rank is deadline-aware: prefer a
+    /// sequence with NO deadline, then the farthest deadline (most
+    /// slack), then the newest arrival — the preempted work most able
+    /// to absorb the delay.
+    fn evict_for_rank(&mut self, now: Instant) {
+        let aging = self.cfg.aging;
+        loop {
+            if self.live.len() < self.cfg.max_live {
+                return; // free slots: nothing to evict for
+            }
+            // Pen is rank-then-arrival sorted; best candidate is the
+            // first non-defunct entry.
+            let Some(ci) = self.pen.iter().position(|t| !t.defunct()) else { return };
+            let cand_rank = rank(&self.pen[ci], now, aging);
+            let Some(vi) = self.victim_index(now) else { return };
+            if cand_rank <= rank(&self.live[vi], now, aging) {
+                return;
+            }
+            let victim = self.live.remove(vi);
+            self.pen.push(victim);
+            let cand = self.pen.remove(ci);
+            self.live.push(cand);
+            self.preemptions += 1;
+        }
+    }
+
+    /// Lowest-ranked live sequence, deadline-aware (see
+    /// [`Scheduler::evict_for_rank`]).
+    fn victim_index(&self, now: Instant) -> Option<usize> {
+        let aging = self.cfg.aging;
+        // Sort key: rank asc, deadline-free before deadlined, farthest
+        // deadline first, newest arrival first.
+        self.live
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| {
+                (
+                    rank(*s, now, aging),
+                    s.deadline().is_some(),
+                    s.deadline().map(Reverse),
+                    Reverse(s.arrived()),
+                )
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Remove and return every defunct sequence (live set AND the pen
+    /// bypass) so the caller can deliver their terminal events.
+    pub fn drain_defunct(&mut self) -> Vec<T> {
+        extract(&mut self.live, |t| t.defunct())
+    }
+
+    /// Remove and return every finished sequence.
+    pub fn drain_done(&mut self) -> Vec<T> {
+        extract(&mut self.live, |t| t.done())
+    }
+
+    pub fn live(&self) -> &[T] {
+        &self.live
+    }
+
+    pub fn live_mut(&mut self) -> &mut [T] {
+        &mut self.live
+    }
+
+    pub fn live_len(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Requests admitted off the queue but not currently live
+    /// (overflow + preempted).
+    pub fn pen_len(&self) -> usize {
+        self.pen.len()
+    }
+
+    /// Evictions since the last call (worker metrics drain this).
+    pub fn take_preemptions(&mut self) -> u64 {
+        std::mem::take(&mut self.preemptions)
+    }
+
+    /// Plan one iteration over the current live set: one scheduling
+    /// quantum per sequence, packed into fixed-size step batches.
+    ///
+    /// * decoding sequence → one emit row over its full window;
+    /// * prefilling sequence, chunked → one row carrying
+    ///   `min(chunk, seq_len, remaining)` new prompt tokens, emitting
+    ///   only when that completes the prompt;
+    /// * prefilling sequence, whole-prompt (`chunk == 0`) → one row
+    ///   per `seq_len` stride of the ENTIRE remaining prompt, all this
+    ///   iteration (the head-of-line-blocking baseline).
+    ///
+    /// Rows are packed in live order into `ceil(rows / batch)` step
+    /// batches — the "one-or-more padded step batches per iteration"
+    /// that lets `max_live` exceed the compiled batch.
+    pub fn plan(&self) -> IterationPlan {
+        let mut rows = Vec::new();
+        for (i, s) in self.live.iter().enumerate() {
+            let total = s.prompt_len();
+            let fed = s.fed().min(total);
+            let remaining = total - fed;
+            if remaining == 0 {
+                rows.push(PlanRow { seq: i, window_end: None, advance: 0, emit: true });
+                continue;
+            }
+            let chunk = s.prefill_chunk().unwrap_or(self.cfg.prefill_chunk);
+            if chunk == 0 {
+                let mut end = fed;
+                while end < total {
+                    let take = (total - end).min(self.cfg.seq_len);
+                    end += take;
+                    rows.push(PlanRow {
+                        seq: i,
+                        window_end: Some(end),
+                        advance: take,
+                        emit: end == total,
+                    });
+                }
+            } else {
+                let take = remaining.min(chunk).min(self.cfg.seq_len);
+                let end = fed + take;
+                rows.push(PlanRow {
+                    seq: i,
+                    window_end: Some(end),
+                    advance: take,
+                    emit: end == total,
+                });
+            }
+        }
+        let steps = rows.chunks(self.cfg.batch).map(|c| c.to_vec()).collect();
+        IterationPlan { steps }
+    }
+}
+
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Test sequence: every policy input is a plain field.
+    struct TS {
+        v: i32,
+        prio: Priority,
+        arrived: Instant,
+        deadline: Option<Instant>,
+        prompt: usize,
+        fed: usize,
+        chunk: Option<usize>,
+        done: bool,
+        dead: Arc<AtomicBool>,
+    }
+
+    impl TS {
+        fn new(v: i32, prio: Priority) -> TS {
+            TS {
+                v,
+                prio,
+                arrived: Instant::now(),
+                deadline: None,
+                prompt: 0,
+                fed: 0,
+                chunk: None,
+                done: false,
+                dead: Arc::new(AtomicBool::new(false)),
+            }
+        }
+
+        fn prompt(mut self, len: usize) -> TS {
+            self.prompt = len;
+            self
+        }
+
+        fn chunk(mut self, c: usize) -> TS {
+            self.chunk = Some(c);
+            self
+        }
+    }
+
+    impl SchedSeq for TS {
+        fn priority(&self) -> Priority {
+            self.prio
+        }
+
+        fn arrived(&self) -> Instant {
+            self.arrived
+        }
+
+        fn defunct(&self) -> bool {
+            self.dead.load(Ordering::Relaxed)
+        }
+
+        fn deadline(&self) -> Option<Instant> {
+            self.deadline
+        }
+
+        fn prompt_len(&self) -> usize {
+            self.prompt
+        }
+
+        fn fed(&self) -> usize {
+            self.fed
+        }
+
+        fn prefill_chunk(&self) -> Option<usize> {
+            self.chunk
+        }
+
+        fn done(&self) -> bool {
+            self.done
+        }
+    }
+
+    fn normal(v: i32) -> TS {
+        TS::new(v, Priority::Normal)
+    }
+
+    fn queue_of(cap: usize, items: Vec<TS>) -> Arc<Bounded<TS>> {
+        let q = Arc::new(Bounded::new(cap));
+        for i in items {
+            assert!(q.try_push(i).is_ok());
+        }
+        q
+    }
+
+    /// No aging (rank == static priority), tiny idle window.
+    fn cfg(batch: usize, max_live: usize) -> SchedConfig {
+        SchedConfig {
+            batch,
+            seq_len: 8,
+            max_live,
+            prefill_chunk: 0,
+            idle_window: Duration::from_millis(5),
+            aging: Duration::ZERO,
+        }
+    }
+
+    fn vals(s: &Scheduler<TS>) -> Vec<i32> {
+        s.live().iter().map(|t| t.v).collect()
+    }
+
+    // -- admission (ported from the retired ContinuousBatcher tests) --
+
+    #[test]
+    fn fills_live_set_up_to_cap() {
+        let q = queue_of(64, (1..=5).map(normal).collect());
+        let mut s = Scheduler::new(q, cfg(3, 3));
+        assert!(s.admit());
+        assert_eq!(vals(&s), vec![1, 2, 3]);
+        // full set: another pass changes nothing but pens the overflow
+        assert!(s.admit());
+        assert_eq!(s.live_len(), 3);
+        assert_eq!(s.pen_len(), 2);
+        // two sequences retire -> their slots refill from the pen
+        s.live_mut()[1].done = true;
+        s.live_mut()[2].done = true;
+        let gone = s.drain_done();
+        assert_eq!(gone.len(), 2);
+        assert!(s.admit());
+        assert_eq!(vals(&s), vec![1, 4, 5]);
+    }
+
+    #[test]
+    fn admission_is_priority_then_arrival() {
+        let q = queue_of(
+            64,
+            vec![
+                TS::new(1, Priority::Low),
+                TS::new(2, Priority::Normal),
+                TS::new(3, Priority::High),
+                TS::new(4, Priority::Normal),
+            ],
+        );
+        let mut s = Scheduler::new(q, cfg(4, 4));
+        assert!(s.admit());
+        // High first, Normals keep arrival order, Low last
+        assert_eq!(vals(&s), vec![3, 2, 4, 1]);
+    }
+
+    #[test]
+    fn busy_scheduler_never_blocks_on_an_empty_queue() {
+        let q: Arc<Bounded<TS>> = Arc::new(Bounded::new(8));
+        let mut s = Scheduler::new(q.clone(), cfg(4, 4));
+        q.try_push(normal(9)).ok();
+        assert!(s.admit());
+        assert_eq!(s.live_len(), 1);
+        let t0 = Instant::now();
+        assert!(s.admit(), "queue still open");
+        assert!(t0.elapsed() < Duration::from_millis(50), "busy admit must not wait");
+        assert_eq!(s.live_len(), 1);
+    }
+
+    #[test]
+    fn idle_scheduler_coalesces_within_the_window_only() {
+        let q = queue_of(64, vec![normal(7)]);
+        let q2 = q.clone();
+        // A second request arrives well AFTER the idle window: the
+        // first iteration must start without it.
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(250));
+            let _ = q2.try_push(normal(8));
+        });
+        let mut s = Scheduler::new(
+            q,
+            SchedConfig { idle_window: Duration::from_millis(30), ..cfg(8, 8) },
+        );
+        let t0 = Instant::now();
+        assert!(s.admit());
+        assert_eq!(vals(&s), vec![7]);
+        assert!(t0.elapsed() < Duration::from_millis(200), "idle window must cut");
+        t.join().unwrap();
+        s.live_mut()[0].done = true;
+        s.drain_done();
+        assert!(s.admit());
+        assert_eq!(vals(&s), vec![8]);
+    }
+
+    #[test]
+    fn shutdown_drains_queue_and_pen_then_reports_closed() {
+        let q = queue_of(64, (1..=5).map(normal).collect());
+        q.close();
+        let mut s = Scheduler::new(q, cfg(2, 2));
+        let mut seen = Vec::new();
+        loop {
+            let open = s.admit();
+            for t in s.live_mut() {
+                t.done = true;
+            }
+            seen.extend(s.drain_done().iter().map(|t| t.v));
+            if !open {
+                break;
+            }
+        }
+        assert_eq!(seen, vec![1, 2, 3, 4, 5], "no admitted request may be dropped");
+        assert_eq!(s.pen_len(), 0);
+    }
+
+    #[test]
+    fn closed_empty_queue_reports_no_more_work() {
+        let q: Arc<Bounded<TS>> = Arc::new(Bounded::new(4));
+        q.close();
+        let mut s = Scheduler::new(q, cfg(2, 2));
+        assert!(!s.admit());
+        assert_eq!(s.live_len(), 0);
+    }
+
+    #[test]
+    fn defunct_pen_items_surface_past_a_full_live_set() {
+        let q: Arc<Bounded<TS>> = Arc::new(Bounded::new(8));
+        let flag = Arc::new(AtomicBool::new(false));
+        for i in 0..2 {
+            q.try_push(normal(i)).ok();
+        }
+        let mut doomed = normal(2);
+        doomed.dead = flag.clone();
+        q.try_push(doomed).ok();
+        let mut s = Scheduler::new(q, cfg(2, 2));
+        assert!(s.admit());
+        assert_eq!(s.live_len(), 2, "live set full");
+        // a second (busy) pass pulls the overflow off the queue
+        assert!(s.admit());
+        assert_eq!(s.pen_len(), 1, "overflow waits in the pen");
+        // cancel the penned item: the next admit must surface it even
+        // though no live slot is free
+        flag.store(true, Ordering::Relaxed);
+        assert!(s.admit());
+        assert_eq!(s.pen_len(), 0);
+        let dead = s.drain_defunct();
+        assert_eq!(dead.len(), 1, "defunct item bypasses the cap for retirement");
+        assert_eq!(dead[0].v, 2);
+        assert_eq!(s.live_len(), 2, "live survivors untouched");
+    }
+
+    #[test]
+    fn defunct_queued_items_surface_past_a_full_pen() {
+        // live full AND pen full: a cancelled request still in the
+        // QUEUE must not wait behind either for its terminal event.
+        let q: Arc<Bounded<TS>> = Arc::new(Bounded::new(8));
+        let flag = Arc::new(AtomicBool::new(false));
+        for i in 0..4 {
+            q.try_push(normal(i)).ok();
+        }
+        let mut doomed = normal(4);
+        doomed.dead = flag.clone();
+        q.try_push(doomed).ok();
+        let mut s = Scheduler::new(q, cfg(2, 2));
+        assert!(s.admit());
+        assert!(s.admit());
+        assert_eq!((s.live_len(), s.pen_len()), (2, 2), "live and pen both saturated");
+        flag.store(true, Ordering::Relaxed);
+        assert!(s.admit());
+        let dead = s.drain_defunct();
+        assert_eq!(dead.len(), 1, "queued defunct item must surface immediately");
+        assert_eq!(dead[0].v, 4);
+        assert_eq!((s.live_len(), s.pen_len()), (2, 2), "healthy backlog untouched");
+    }
+
+    // -- aging: the starvation fix ------------------------------------
+
+    #[test]
+    fn saturating_high_priority_load_cannot_starve_an_aged_low_ticket() {
+        let aging = Duration::from_millis(30);
+        let q: Arc<Bounded<TS>> = Arc::new(Bounded::new(64));
+        let mut s = Scheduler::new(q.clone(), SchedConfig { aging, ..cfg(2, 2) });
+        // the live set is saturated by high-priority generations...
+        q.try_push(TS::new(0, Priority::High)).ok();
+        q.try_push(TS::new(1, Priority::High)).ok();
+        assert!(s.admit());
+        assert_eq!(vals(&s), vec![0, 1]);
+        // ...a Low ticket arrives, then a fresher High behind it
+        q.try_push(TS::new(2, Priority::Low)).ok();
+        assert!(s.admit());
+        q.try_push(TS::new(3, Priority::High)).ok();
+        assert!(s.admit());
+        assert_eq!(vals(&s), vec![0, 1], "live items keep their slots");
+        assert_eq!(s.pen_len(), 2);
+        // age the Low past two promotion intervals (Low -> High rank)
+        std::thread::sleep(aging * 2 + Duration::from_millis(10));
+        // a running High finishes; the freed slot MUST go to the aged
+        // Low (rank High now, and the earliest arrival at that rank),
+        // not the fresher High that arrived after it
+        s.live_mut()[0].done = true;
+        s.drain_done();
+        assert!(s.admit());
+        assert!(
+            vals(&s).contains(&2),
+            "aged Low must outrank the fresher High by arrival (live: {:?})",
+            vals(&s)
+        );
+        // and at equal rank the fresh High cannot evict it back out
+        assert_eq!(s.take_preemptions(), 0);
+    }
+
+    #[test]
+    fn without_aging_low_priority_waits_behind_every_high() {
+        let q: Arc<Bounded<TS>> = Arc::new(Bounded::new(64));
+        let mut s = Scheduler::new(q.clone(), cfg(2, 2));
+        q.try_push(TS::new(0, Priority::High)).ok();
+        q.try_push(TS::new(1, Priority::High)).ok();
+        assert!(s.admit());
+        q.try_push(TS::new(2, Priority::Low)).ok();
+        assert!(s.admit());
+        std::thread::sleep(Duration::from_millis(20));
+        q.try_push(TS::new(3, Priority::High)).ok();
+        assert!(s.admit());
+        s.live_mut()[0].done = true;
+        s.drain_done();
+        assert!(s.admit());
+        assert!(
+            vals(&s).contains(&3) && !vals(&s).contains(&2),
+            "aging disabled: the fresh High wins the slot (live: {:?})",
+            vals(&s)
+        );
+    }
+
+    // -- preemption ----------------------------------------------------
+
+    #[test]
+    fn high_priority_arrival_preempts_the_lowest_ranked_live_sequence() {
+        let q = queue_of(64, vec![TS::new(1, Priority::Low), TS::new(2, Priority::Normal)]);
+        let mut s = Scheduler::new(q.clone(), cfg(2, 2));
+        assert!(s.admit());
+        assert_eq!(s.live_len(), 2);
+        q.try_push(TS::new(3, Priority::High)).ok();
+        assert!(s.admit());
+        assert_eq!(s.take_preemptions(), 1);
+        assert!(vals(&s).contains(&3), "High must be live");
+        assert!(vals(&s).contains(&2), "Normal keeps its slot");
+        assert_eq!(s.pen_len(), 1, "the Low waits in the pen");
+        // the victim resumes when a slot frees, state intact
+        let idx = s.live().iter().position(|t| t.v == 3).unwrap();
+        s.live_mut()[idx].done = true;
+        s.drain_done();
+        assert!(s.admit());
+        assert!(vals(&s).contains(&1), "preempted sequence resumes");
+    }
+
+    #[test]
+    fn eviction_is_deadline_aware() {
+        let q = queue_of(64, vec![normal(1), normal(2)]);
+        let mut s = Scheduler::new(q.clone(), cfg(2, 2));
+        assert!(s.admit());
+        // live[0] has a tight deadline, live[1] has none
+        s.live_mut()[0].deadline = Some(Instant::now() + Duration::from_secs(5));
+        q.try_push(TS::new(3, Priority::High)).ok();
+        assert!(s.admit());
+        assert_eq!(s.take_preemptions(), 1);
+        assert!(
+            vals(&s).contains(&1),
+            "the deadlined sequence keeps its slot; the deadline-free one is evicted"
+        );
+        assert!(!vals(&s).contains(&2));
+    }
+
+    #[test]
+    fn equal_rank_never_preempts() {
+        let q = queue_of(64, vec![normal(1), normal(2)]);
+        let mut s = Scheduler::new(q.clone(), cfg(2, 2));
+        assert!(s.admit());
+        q.try_push(normal(3)).ok();
+        assert!(s.admit());
+        assert_eq!(s.take_preemptions(), 0);
+        assert_eq!(vals(&s), vec![1, 2]);
+        assert_eq!(s.pen_len(), 1);
+    }
+
+    // -- planning ------------------------------------------------------
+
+    #[test]
+    fn plan_decode_rows_cover_the_live_set_in_fixed_size_steps() {
+        let q = queue_of(64, (1..=7).map(normal).collect());
+        q.close();
+        let mut s = Scheduler::new(q, cfg(3, 7));
+        s.admit();
+        assert_eq!(s.live_len(), 7);
+        let plan = s.plan();
+        assert_eq!(plan.rows(), 7, "every live sequence advances each iteration");
+        assert_eq!(plan.steps.len(), 3, "ceil(7/3) fixed-size step batches");
+        assert_eq!(plan.steps[0].len(), 3);
+        assert_eq!(plan.steps[2].len(), 1);
+        for row in plan.steps.iter().flatten() {
+            assert_eq!((row.window_end, row.advance, row.emit), (None, 0, true));
+        }
+    }
+
+    #[test]
+    fn plan_chunked_prefill_is_one_bounded_row_per_iteration() {
+        let q = queue_of(64, vec![normal(1).prompt(20).chunk(3), normal(2)]);
+        q.close();
+        let mut s = Scheduler::new(q, cfg(4, 4));
+        s.admit();
+        let plan = s.plan();
+        assert_eq!(plan.steps.len(), 1);
+        assert_eq!(
+            plan.steps[0][0],
+            PlanRow { seq: 0, window_end: Some(3), advance: 3, emit: false }
+        );
+        assert_eq!(
+            plan.steps[0][1],
+            PlanRow { seq: 1, window_end: None, advance: 0, emit: true },
+            "co-resident decode keeps streaming"
+        );
+        // advance the cursor to the final chunk: it must emit
+        s.live_mut()[0].fed = 18;
+        let plan = s.plan();
+        assert_eq!(
+            plan.steps[0][0],
+            PlanRow { seq: 0, window_end: Some(20), advance: 2, emit: true },
+            "the completing chunk reads the first token from the full-prompt window"
+        );
+    }
+
+    #[test]
+    fn plan_whole_prompt_prefill_monopolizes_rows() {
+        // seq_len 8, prompt 20 -> 3 rows (8+8+4) walked in ONE iteration
+        let q = queue_of(64, vec![normal(1).prompt(20), normal(2)]);
+        q.close();
+        let mut s = Scheduler::new(q, cfg(2, 4));
+        s.admit();
+        let plan = s.plan();
+        let rows: Vec<PlanRow> = plan.steps.iter().flatten().copied().collect();
+        assert_eq!(rows.len(), 4, "3 prefill rows + 1 decode row");
+        assert_eq!(rows[0], PlanRow { seq: 0, window_end: Some(8), advance: 8, emit: false });
+        assert_eq!(rows[1], PlanRow { seq: 0, window_end: Some(16), advance: 8, emit: false });
+        assert_eq!(rows[2], PlanRow { seq: 0, window_end: Some(20), advance: 4, emit: true });
+        assert_eq!(rows[3], PlanRow { seq: 1, window_end: None, advance: 0, emit: true });
+        assert_eq!(plan.steps.len(), 2, "the whole prompt stalls everyone for extra steps");
+    }
+
+    #[test]
+    fn plan_chunk_is_clamped_to_row_capacity() {
+        let q = queue_of(64, vec![normal(1).prompt(30).chunk(100)]);
+        q.close();
+        let mut s = Scheduler::new(q, cfg(2, 2));
+        s.admit();
+        let plan = s.plan();
+        assert_eq!(
+            plan.steps[0][0],
+            PlanRow { seq: 0, window_end: Some(8), advance: 8, emit: false },
+            "one row cannot carry more than seq_len new tokens"
+        );
+    }
+
+    #[test]
+    fn plan_resumes_a_preempted_prefill_mid_prompt() {
+        let q = queue_of(64, vec![normal(1).prompt(10).chunk(4)]);
+        q.close();
+        let mut s = Scheduler::new(q, cfg(2, 2));
+        s.admit();
+        s.live_mut()[0].fed = 4; // evicted after one chunk, resumed
+        let plan = s.plan();
+        assert_eq!(
+            plan.steps[0][0],
+            PlanRow { seq: 0, window_end: Some(8), advance: 4, emit: false },
+            "resume continues from the fed cursor without recompute"
+        );
+    }
+}

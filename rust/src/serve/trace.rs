@@ -1,0 +1,120 @@
+//! Recorded arrival traces: replay a real load shape instead of the
+//! synthetic Poisson process.
+//!
+//! A trace is a JSON array of arrival records:
+//!
+//! ```json
+//! [
+//!   {"offset_us": 0,     "prompt_len": 32,  "max_new_tokens": 4},
+//!   {"offset_us": 1800,  "prompt_len": 512, "max_new_tokens": 8}
+//! ]
+//! ```
+//!
+//! `offset_us` is microseconds from the start of the replay (absolute
+//! schedule, not inter-arrival gaps — replay lateness does not
+//! compound), `prompt_len` the prompt window sampled from the token
+//! stream, `max_new_tokens` the decode budget. `run_workload` replays
+//! a trace when `WorkloadSpec::trace` is set (`--trace file.json` on
+//! `serve-demo`); every entry is submitted and accounted under exactly
+//! one terminal [`crate::serve::Finish`] reason, so tail-latency
+//! numbers survive bursty real-world load shapes instead of being an
+//! artifact of the Poisson smoothing. A bursty example lives at
+//! `rust/tests/data/bursty_trace.json`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One recorded arrival.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceArrival {
+    /// Microseconds from replay start (absolute, monotone after load).
+    pub offset_us: u64,
+    /// Prompt window length sampled from the token stream.
+    pub prompt_len: usize,
+    /// Decode budget for the request.
+    pub max_new_tokens: usize,
+}
+
+/// Parse a trace from a JSON value (the file's root array).
+pub fn parse_trace(j: &Json) -> Result<Vec<TraceArrival>> {
+    let arr = j.as_arr().context("trace root must be a JSON array of arrivals")?;
+    let mut out = Vec::with_capacity(arr.len());
+    // A replay sleeps to each offset, so a garbage offset must be an
+    // error, not a 584,000-year hang (f64 -> int casts saturate).
+    const MAX_OFFSET_US: f64 = 86_400. * 1e6; // 24h of replay
+    for (i, e) in arr.iter().enumerate() {
+        let ctx = |k: &str| format!("trace entry {i}: {k}");
+        let offset = e.get("offset_us").with_context(|| ctx("offset_us"))?.as_f64()?;
+        anyhow::ensure!(
+            offset.is_finite() && (0.0..=MAX_OFFSET_US).contains(&offset),
+            "trace entry {i}: offset_us {offset} outside [0, {MAX_OFFSET_US}]"
+        );
+        let prompt_len = e.get("prompt_len").with_context(|| ctx("prompt_len"))?.as_usize()?;
+        let max_new_tokens =
+            e.get("max_new_tokens").with_context(|| ctx("max_new_tokens"))?.as_usize()?;
+        anyhow::ensure!(prompt_len >= 1, "trace entry {i}: prompt_len must be >= 1");
+        anyhow::ensure!(max_new_tokens >= 1, "trace entry {i}: max_new_tokens must be >= 1");
+        out.push(TraceArrival { offset_us: offset as u64, prompt_len, max_new_tokens });
+    }
+    // Out-of-order recordings are legal input; replay wants a schedule.
+    out.sort_by_key(|e| e.offset_us);
+    Ok(out)
+}
+
+/// Load a trace file (see the module docs for the format).
+pub fn load_trace(path: &Path) -> Result<Vec<TraceArrival>> {
+    let j = Json::read_file(path).with_context(|| format!("trace {}", path.display()))?;
+    parse_trace(&j).with_context(|| format!("trace {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_sorts_arrivals() {
+        let j = Json::parse(
+            r#"[
+                {"offset_us": 900, "prompt_len": 16, "max_new_tokens": 2},
+                {"offset_us": 0, "prompt_len": 32, "max_new_tokens": 4}
+            ]"#,
+        )
+        .unwrap();
+        let t = parse_trace(&j).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0], TraceArrival { offset_us: 0, prompt_len: 32, max_new_tokens: 4 });
+        assert_eq!(t[1], TraceArrival { offset_us: 900, prompt_len: 16, max_new_tokens: 2 });
+    }
+
+    #[test]
+    fn rejects_degenerate_entries() {
+        for bad in [
+            r#"[{"offset_us": 0, "prompt_len": 0, "max_new_tokens": 1}]"#,
+            r#"[{"offset_us": 0, "prompt_len": 4, "max_new_tokens": 0}]"#,
+            r#"[{"offset_us": 0, "prompt_len": 4}]"#,
+            r#"{"offset_us": 0}"#,
+            // saturating casts must not turn these into eternal sleeps
+            r#"[{"offset_us": -5, "prompt_len": 4, "max_new_tokens": 1}]"#,
+            r#"[{"offset_us": 1e20, "prompt_len": 4, "max_new_tokens": 1}]"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(parse_trace(&j).is_err(), "must reject {bad}");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let path = std::env::temp_dir().join("scalebits_trace_test.json");
+        std::fs::write(
+            &path,
+            r#"[{"offset_us": 10, "prompt_len": 8, "max_new_tokens": 3}]"#,
+        )
+        .unwrap();
+        let t = load_trace(&path).unwrap();
+        assert_eq!(t, vec![TraceArrival { offset_us: 10, prompt_len: 8, max_new_tokens: 3 }]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

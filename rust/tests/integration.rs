@@ -726,6 +726,336 @@ fn continuous_batched_decode_matches_sequential_decode_bitwise() {
     }
 }
 
+/// Sequential reference: one sequence per step batch, full prompt fed
+/// whole, appending each sampled token manually. Chunked prefill, the
+/// virtual live set and preemption must all reproduce this bitwise.
+fn sequential_decode(session: &Session, prompt: &[i32], max_new: usize) -> Vec<i32> {
+    let mut toks = prompt.to_vec();
+    let mut generated = Vec::new();
+    for _ in 0..max_new {
+        let next = session.decode_step("qpredict", &[toks.as_slice()]).unwrap()[0];
+        toks.push(next);
+        generated.push(next);
+    }
+    generated
+}
+
+/// THE scheduler acceptance property: decoding through chunked
+/// prefill, a virtual live set beyond the compiled batch, AND forced
+/// preemption produces bitwise-identical tokens to decoding each
+/// sequence alone — for every (prefill_chunk, max_live) combination in
+/// the sweep. Eviction is forced by saturating the live set with
+/// low-priority generations (first token observed, so they are
+/// genuinely live) and then submitting high-priority requests.
+#[test]
+fn chunked_prefill_and_virtual_live_set_match_sequential_decode_bitwise() {
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut alloc = BitAlloc::uniform(&index, 4);
+    for (i, b) in alloc.bits.iter_mut().enumerate() {
+        *b = [2, 4, 8][i % 3];
+    }
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let seq = m.config.seq_len;
+    let batch = m
+        .exec(if m.executables.contains_key("qpredict") { "qpredict" } else { "qlogits" })
+        .unwrap()
+        .batch;
+    let max_new = 6usize;
+    // Low-priority saturators: EQUAL-length prompts so they prefill in
+    // lockstep and are all mid-generation together when the
+    // high-priority phase arrives (a mixed-length low set would let
+    // the short ones complete while a long one still prefills,
+    // de-saturating the live set and defeating forced preemption).
+    let low_prompts: Vec<Vec<i32>> =
+        (0..3 * batch + 1).map(|i| stream.tokens[i * 23..i * 23 + seq].to_vec()).collect();
+    // High-priority arrivals carry the mixed prompt lengths — several
+    // LONGER than the window, so prefill really spans iterations (and
+    // rows, in whole-prompt mode).
+    let high_prompts: Vec<Vec<i32>> = [seq, 2 * seq + 5, seq / 2, seq + 9]
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| stream.tokens[400 + i * 80..400 + i * 80 + len].to_vec())
+        .collect();
+    let session =
+        Session::open_with(BackendKind::Interp, &dir, &["qpredict"], &alloc.grids(&index))
+            .unwrap();
+    let low_ref: Vec<Vec<i32>> =
+        low_prompts.iter().map(|p| sequential_decode(&session, p, max_new)).collect();
+    let high_ref: Vec<Vec<i32>> =
+        high_prompts.iter().map(|p| sequential_decode(&session, p, max_new)).collect();
+
+    for &chunk in &[1usize, 8, 0] {
+        // 0 = whole-prompt
+        for &max_live in &[batch, 2 * batch, 3 * batch + 1] {
+            let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), alloc.clone());
+            cfg.backend = BackendKind::Interp;
+            cfg.prefill_chunk = chunk;
+            cfg.max_live = max_live;
+            // Static ranks: a slow CI machine must not age the Lows to
+            // High and defeat the forced preemption below.
+            cfg.aging = std::time::Duration::from_secs(600);
+            let mut server = scalebits::serve::Router::start(cfg).unwrap();
+            // Phase 1: saturate the live set with low-priority work...
+            let n_low = max_live;
+            let mut lows = Vec::new();
+            for p in low_prompts.iter().take(n_low) {
+                lows.push(
+                    server
+                        .submit_request(
+                            scalebits::serve::GenRequest::new(p.clone())
+                                .max_new_tokens(max_new)
+                                .priority(scalebits::serve::Priority::Low),
+                        )
+                        .unwrap(),
+                );
+            }
+            // ...observed live: each has emitted its first token, and
+            // owes max_new - 1 more iterations.
+            for t in lows.iter_mut() {
+                assert!(t.recv_token().unwrap().is_some());
+            }
+            // Phase 2: high-priority arrivals must preempt.
+            let mut highs = Vec::new();
+            for p in &high_prompts {
+                highs.push(
+                    server
+                        .submit_request(
+                            scalebits::serve::GenRequest::new(p.clone())
+                                .max_new_tokens(max_new)
+                                .priority(scalebits::serve::Priority::High),
+                        )
+                        .unwrap(),
+                );
+            }
+            let mut low_served = Vec::with_capacity(n_low);
+            for t in lows.iter_mut() {
+                let o = t.wait().unwrap();
+                assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+                low_served.push(o.tokens.clone());
+            }
+            let mut high_served = Vec::with_capacity(high_prompts.len());
+            for t in highs.iter_mut() {
+                let o = t.wait().unwrap();
+                assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+                high_served.push(o.tokens.clone());
+            }
+            let rep = server.shutdown().unwrap();
+            for (i, s) in low_served.iter().enumerate() {
+                assert_eq!(
+                    s, &low_ref[i],
+                    "chunk={chunk} max_live={max_live} low {i}: \
+                     scheduled decode diverged from sequential decode"
+                );
+            }
+            for (i, s) in high_served.iter().enumerate() {
+                assert_eq!(
+                    s, &high_ref[i],
+                    "chunk={chunk} max_live={max_live} high {i}: \
+                     scheduled decode diverged from sequential decode"
+                );
+            }
+            assert!(
+                rep.total.preempted >= 1,
+                "chunk={chunk} max_live={max_live}: high-priority load over a \
+                 saturated live set must preempt"
+            );
+            if chunk != 0 {
+                assert!(
+                    rep.total.prefill_rows > 0,
+                    "chunk={chunk}: chunked prefill must feed slices"
+                );
+            }
+            if max_live > batch {
+                // phase 1 holds max_live > batch sequences live, so at
+                // least one iteration must have dispatched several
+                // fixed-size step batches
+                assert!(
+                    rep.total.batches > rep.total.iterations,
+                    "virtual live set beyond the compiled batch must time-slice \
+                     over multiple step batches per iteration ({} batches, {} iterations)",
+                    rep.total.batches,
+                    rep.total.iterations
+                );
+            }
+        }
+    }
+}
+
+/// Preemption round-trip: a sequence evicted mid-generation (and, with
+/// chunking, mid-PREFILL) must resume from its kept state and produce
+/// exactly the tokens an uninterrupted run produces.
+#[test]
+fn preempted_sequence_resumes_with_identical_tokens() {
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut alloc = BitAlloc::uniform(&index, 4);
+    for (i, b) in alloc.bits.iter_mut().enumerate() {
+        *b = [2, 4, 8][i % 3];
+    }
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let seq = m.config.seq_len;
+    let batch = m
+        .exec(if m.executables.contains_key("qpredict") { "qpredict" } else { "qlogits" })
+        .unwrap()
+        .batch;
+    let session =
+        Session::open_with(BackendKind::Interp, &dir, &["qpredict"], &alloc.grids(&index))
+            .unwrap();
+    let max_new = 8usize;
+    let prompts: Vec<Vec<i32>> =
+        (0..batch).map(|i| stream.tokens[i * 31..i * 31 + seq].to_vec()).collect();
+    let reference: Vec<Vec<i32>> =
+        prompts.iter().map(|p| sequential_decode(&session, p, max_new)).collect();
+
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), alloc.clone());
+    cfg.backend = BackendKind::Interp;
+    cfg.prefill_chunk = 4;
+    cfg.aging = std::time::Duration::from_secs(600); // static ranks
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    // Fill every live slot with low-priority generations and observe
+    // their first tokens (they are decoding, not queued).
+    let mut lows = Vec::new();
+    for p in &prompts {
+        lows.push(
+            server
+                .submit_request(
+                    scalebits::serve::GenRequest::new(p.clone())
+                        .max_new_tokens(max_new)
+                        .priority(scalebits::serve::Priority::Low),
+                )
+                .unwrap(),
+        );
+    }
+    for t in lows.iter_mut() {
+        assert!(t.recv_token().unwrap().is_some());
+    }
+    // High-priority burst: evicts the lows mid-generation.
+    let mut highs = Vec::new();
+    for p in &prompts {
+        highs.push(
+            server
+                .submit_request(
+                    scalebits::serve::GenRequest::new(p.clone())
+                        .max_new_tokens(2)
+                        .priority(scalebits::serve::Priority::High),
+                )
+                .unwrap(),
+        );
+    }
+    for t in highs.iter_mut() {
+        assert_eq!(t.wait().unwrap().finish, scalebits::serve::Finish::Completed);
+    }
+    for (i, t) in lows.iter_mut().enumerate() {
+        let o = t.wait().unwrap();
+        assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+        assert_eq!(
+            o.tokens, reference[i],
+            "request {i}: an evicted-and-resumed sequence must decode \
+             exactly as an uninterrupted one"
+        );
+    }
+    let rep = server.shutdown().unwrap();
+    assert!(rep.total.preempted >= 1, "the high-priority burst must have evicted");
+}
+
+/// Chunked prefill removes prompt head-of-line blocking: short
+/// requests admitted behind a LONG prompt stream tokens and complete
+/// while the long prompt is still prefilling.
+#[test]
+fn long_prompt_chunked_prefill_does_not_block_short_decodes() {
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let seq = m.config.seq_len;
+    let mut cfg =
+        scalebits::serve::ServeConfig::new(dir.clone(), BitAlloc::uniform(&index, 4));
+    cfg.backend = BackendKind::Interp;
+    // an 8*seq prompt at chunk 2 needs 4*seq (~128) prefill iterations,
+    // while the shorts finish in ~seq/2 + 19 — a margin wide enough
+    // that a descheduled test thread cannot flake the ordering check
+    cfg.prefill_chunk = 2;
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let mut warm = server.submit_warmup(stream.tokens[..seq].to_vec()).unwrap();
+    warm.wait().unwrap();
+
+    let mut long = server
+        .submit_request(
+            scalebits::serve::GenRequest::new(stream.tokens[..8 * seq].to_vec())
+                .max_new_tokens(2),
+        )
+        .unwrap();
+    let mut shorts = Vec::new();
+    for i in 1..=3 {
+        shorts.push(
+            server
+                .submit_request(
+                    scalebits::serve::GenRequest::new(
+                        stream.tokens[i * 40..i * 40 + seq].to_vec(),
+                    )
+                    .max_new_tokens(3),
+                )
+                .unwrap(),
+        );
+    }
+    for t in shorts.iter_mut() {
+        let o = t.wait().unwrap();
+        assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+        assert_eq!(o.tokens.len(), 3);
+    }
+    assert!(
+        long.poll().unwrap().is_none(),
+        "the long prompt must still be prefilling after every short request completed"
+    );
+    let o = long.wait().unwrap();
+    assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+    assert_eq!(o.tokens.len(), 2);
+    let rep = server.shutdown().unwrap();
+    assert!(rep.total.prefill_rows as usize >= 4 * seq, "chunked slices must be counted");
+    assert_eq!(rep.total.prefill_tokens, 8 * seq as u64 + 3 * seq as u64);
+}
+
+/// Trace replay (ROADMAP item): every recorded arrival is submitted
+/// and lands under exactly one terminal reason — the report accounts
+/// for the full trace, bursts and long prompts included.
+#[test]
+fn trace_replay_accounts_every_entry() {
+    let trace_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("data")
+        .join("bursty_trace.json");
+    let entries = scalebits::serve::load_trace(&trace_path).unwrap();
+    assert!(entries.len() >= 16, "example trace should be a real burst set");
+    let expected_tokens: u64 = entries.iter().map(|e| e.max_new_tokens as u64).sum();
+
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let mut cfg =
+        scalebits::serve::ServeConfig::new(dir.clone(), BitAlloc::uniform(&index, 4));
+    cfg.backend = BackendKind::Interp;
+    cfg.workers = 2;
+    cfg.prefill_chunk = m.config.seq_len; // long trace prompts prefill chunked
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let spec = scalebits::serve::WorkloadSpec::new(m.config.seq_len, entries.len(), 1.0, 3)
+        .trace(entries.clone());
+    let wl = scalebits::serve::run_workload(&mut server, &stream, &spec).unwrap();
+    server.shutdown().unwrap();
+
+    let accounted = wl.completed + wl.cancelled + wl.deadline_exceeded + wl.rejected;
+    assert_eq!(accounted, entries.len() as u64, "every trace entry must be accounted");
+    assert_eq!(wl.completed, entries.len() as u64, "no deadlines: all must complete");
+    assert_eq!(wl.decode_tokens, expected_tokens, "each entry decodes its own budget");
+    assert!(
+        !wl.ttft_long.is_empty(),
+        "the bursty trace carries long prompts; their TTFT must be classed long"
+    );
+}
+
 /// The acceptance check for grid residency: once a Session is built,
 /// the serve path's only host→device transfer per batch is the token
 /// batch itself (weights AND bit grids stay resident). The interpreter
