@@ -64,7 +64,9 @@ cargo build --release --offline --examples
 
 if [[ "$LANE" == "bench-smoke" ]]; then
   # Fast regression lane: the kernel bench verifies the fused packed
-  # GEMM bitwise against dequantize+reference before timing, and the
+  # GEMM bitwise against dequantize+reference AND the active SIMD path
+  # bitwise against forced-scalar (every mix, dense f32 included)
+  # before timing anything, and the
   # serve bench runs the decode-mode serving stack end-to-end
   # (multi-token continuous batching, the chunked-prefill lifecycle —
   # a long prompt must complete AFTER short requests stream past it —
@@ -99,9 +101,24 @@ fi
 echo "== cargo test -q (${LANE} lane)"
 cargo test -q --offline
 
+echo "== cargo test (kernel + f32-serving net, SCALEBITS_SIMD=off)"
+# Second pass of the SIMD-sensitive tests with the runtime override
+# forcing the scalar mirror, so the scalar decode/dot paths stay green
+# on hosts where AVX2/NEON would otherwise shadow them. The SIMD==scalar
+# bitwise property tests run in BOTH passes: under `off` they degenerate
+# to scalar==scalar (trivially green) but the forced-scalar serving and
+# GEMM tests are the real coverage here.
+SCALEBITS_SIMD=off cargo test -q --offline --lib kernel
+SCALEBITS_SIMD=off cargo test -q --offline --lib f32_serving
+SCALEBITS_SIMD=off cargo test -q --offline --test integration -- \
+  f32_serving packed_serving
+
 echo "== cargo clippy -- -D warnings"
 # Allow-list: seed-era idioms kept for diff hygiene, not new code style.
+# undocumented_unsafe_blocks is opt-in (allow-by-default): every unsafe
+# block in the SIMD kernels must carry a `// SAFETY:` comment.
 cargo clippy --offline --all-targets -- -D warnings \
+  -D clippy::undocumented_unsafe_blocks \
   -A clippy::ptr_arg \
   -A clippy::too_many_arguments \
   -A clippy::needless_range_loop \

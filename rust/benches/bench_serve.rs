@@ -65,6 +65,17 @@ fn main() -> anyhow::Result<()> {
     let resolved = kind.resolve(&m);
     let mut out = Json::obj();
     out.set("backend", Json::Str(resolved.name().to_string()));
+    // Serving activation precision: routers here run the ServeConfig
+    // default (f32 SIMD kernels under the tolerance gate).
+    out.set(
+        "activations",
+        Json::Str(
+            ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 4))
+                .activations
+                .name()
+                .to_string(),
+        ),
+    );
 
     // 1. raw single-request floor: qlogits_b1, weights + grids resident
     {

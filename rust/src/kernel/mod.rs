@@ -8,9 +8,9 @@
 //! specialized unpack-and-FMA routine operating on whole `u64` code
 //! words — no per-element branching, no index scatter.
 //!
-//! Two kernel families live here:
+//! Three kernel families live here:
 //!
-//! * **Fused dequant×matmul** ([`matmul_nt_packed`]): consumes a
+//! * **Fused dequant×matmul, f64** ([`matmul_nt_packed`]): consumes a
 //!   [`PackedMat`] directly. For each weight row it decodes the packed
 //!   row segments (per-block bitwidth dispatch: specialized 1/2/4/8-bit
 //!   word loops, a generic path for 3/5/6/7, raw-f32 passthrough for
@@ -19,7 +19,16 @@
 //!   matrix is NEVER materialized: scratch is one row (`cols` f64s),
 //!   and the packed stream — 4-16x smaller than dense f64 — is read
 //!   exactly once per GEMM. Work is parallelized across weight
-//!   row-blocks with [`crate::util::threadpool::par_map`].
+//!   row-blocks with [`crate::util::threadpool::par_map`]. This is the
+//!   search/eval-parity path: its scalar arithmetic and accumulation
+//!   order are frozen so the interp goldens never move.
+//! * **Fused dequant×matmul, f32** ([`matmul_nt_packed_f32`] +
+//!   [`matmul_nt_f32`]): the serving path. Same stripe structure, but
+//!   row decode and dot products run through the explicit SIMD
+//!   implementations in [`simd`] (AVX2 / NEON / portable scalar,
+//!   runtime-detected, `SCALEBITS_SIMD=off` to force scalar). All
+//!   three paths share one pinned lane algebra, so the f32 results are
+//!   bitwise identical across ISAs and across the env override.
 //! * **Dense f64 kernels** ([`matmul_nt`], [`matmul_nn_acc`],
 //!   [`accum_wgrad`], [`gram`]): the interpreter's forward/backward
 //!   primitives, re-implemented with tile-parallel scheduling over
@@ -32,6 +41,8 @@
 //! serving path produces the exact logits the dense path produced
 //! before this module existed, and goldens never move.
 
+pub mod simd;
+
 use crate::quant::{PackedMat, FP_SENTINEL_BITS};
 use crate::util::threadpool;
 
@@ -40,6 +51,25 @@ use crate::util::threadpool;
 /// (the synthetic test model's 32x32 matmuls stay serial; real-model
 /// projections and the bench shapes go parallel).
 pub const PAR_MIN_FLOPS: usize = 1 << 22;
+
+/// Minimum weight-stream bytes before a *skinny* GEMM fans out. Decode
+/// GEMVs (m ∈ {1..8}) are bandwidth-bound, not FLOP-bound: at m=1 the
+/// FLOP threshold alone would leave every decode step single-threaded
+/// even though the row-block split gives each worker an independent
+/// slice of the weight stream to pull. Either trigger engages the
+/// parallel path; the synthetic test models (a few KiB per matrix)
+/// stay serial under both.
+pub const PAR_MIN_STREAM_BYTES: usize = 1 << 18;
+
+/// Worker count for the fused packed GEMMs: FLOP-bound (large m) or
+/// stream-bound (skinny m over a big packed matrix) both go wide.
+fn packed_gemm_threads(m: usize, w: &PackedMat) -> usize {
+    if m * w.rows * w.cols >= PAR_MIN_FLOPS || w.stream_bytes() >= PAR_MIN_STREAM_BYTES {
+        threadpool::n_workers()
+    } else {
+        1
+    }
+}
 
 #[inline]
 fn dot(a: &[f64], b: &[f64]) -> f64 {
@@ -120,26 +150,41 @@ fn decode_fp_row_segment(seg: &[u64], out: &mut [f64]) {
 pub fn dequant_row_into(w: &PackedMat, row: usize, out: &mut [f64]) {
     assert_eq!(out.len(), w.cols, "row buffer size mismatch");
     assert!(row < w.rows);
-    let nbc = w.n_block_cols();
-    let bi = row / w.block_rows;
-    let lr = row - bi * w.block_rows;
-    for bj in 0..nbc {
-        let blk = bi * nbc + bj;
-        let b = w.bits[blk];
-        let c0 = bj * w.block_cols;
-        let bw = w.block_cols.min(w.cols - c0);
-        let dst = &mut out[c0..c0 + bw];
-        if b <= 0 {
+    for bj in 0..w.n_block_cols() {
+        let rs = w.row_segment(row, bj);
+        let dst = &mut out[rs.c0..rs.c0 + rs.width];
+        if rs.bits <= 0 {
             dst.fill(0.0);
-            continue;
-        }
-        let wpr = PackedMat::words_per_row(bw, b);
-        let s0 = w.word_off[blk] + lr * wpr;
-        let seg = &w.words[s0..s0 + wpr];
-        if b >= FP_SENTINEL_BITS {
-            decode_fp_row_segment(seg, dst);
+        } else if rs.bits >= FP_SENTINEL_BITS {
+            decode_fp_row_segment(rs.seg, dst);
         } else {
-            decode_row_segment(seg, b, w.scales[row * nbc + bj], dst);
+            decode_row_segment(rs.seg, rs.bits, rs.scale, dst);
+        }
+    }
+}
+
+/// f32 twin of [`dequant_row_into`] on the process-wide SIMD path: the
+/// serving kernels' row decode. Values are bitwise the f32 narrowing
+/// of the f64 path's output (both compute `code as f32 * scale`).
+pub fn dequant_row_into_f32(w: &PackedMat, row: usize, out: &mut [f32]) {
+    dequant_row_into_f32_with(simd::active(), w, row, out);
+}
+
+/// [`dequant_row_into_f32`] with an explicit SIMD path — exposed so the
+/// property tests and the bench's scalar/SIMD bitwise gate can run both
+/// paths in one process regardless of `SCALEBITS_SIMD`.
+pub fn dequant_row_into_f32_with(path: simd::SimdPath, w: &PackedMat, row: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), w.cols, "row buffer size mismatch");
+    assert!(row < w.rows);
+    for bj in 0..w.n_block_cols() {
+        let rs = w.row_segment(row, bj);
+        let dst = &mut out[rs.c0..rs.c0 + rs.width];
+        if rs.bits <= 0 {
+            dst.fill(0.0);
+        } else if rs.bits >= FP_SENTINEL_BITS {
+            simd::decode_fp_row_segment_f32(rs.seg, dst);
+        } else {
+            simd::decode_row_segment_f32_with(path, rs.seg, rs.bits, rs.scale, dst);
         }
     }
 }
@@ -148,10 +193,10 @@ pub fn dequant_row_into(w: &PackedMat, row: usize, out: &mut [f64]) {
 // fused dequant×matmul
 
 /// `y[m, n] = x[m, k] @ dequantize(w)[n, k]^T`, computed directly from
-/// the packed bit-plane blocks. Parallelism is chosen by problem size.
+/// the packed bit-plane blocks. Parallelism is chosen by problem size
+/// (FLOP-bound) or packed-stream size (bandwidth-bound skinny GEMVs).
 pub fn matmul_nt_packed(x: &[f64], w: &PackedMat, m: usize) -> Vec<f64> {
-    let threads = if m * w.rows * w.cols >= PAR_MIN_FLOPS { threadpool::n_workers() } else { 1 };
-    matmul_nt_packed_threads(x, w, m, threads)
+    matmul_nt_packed_threads(x, w, m, packed_gemm_threads(m, w))
 }
 
 /// [`matmul_nt_packed`] with an explicit thread count (`<= 1` forces
@@ -219,6 +264,141 @@ pub fn matmul_nt_packed_threads(x: &[f64], w: &PackedMat, m: usize, threads: usi
 }
 
 // ---------------------------------------------------------------------
+// fused dequant×matmul, f32 (the serving path)
+
+/// f32 serving twin of [`matmul_nt_packed`]: `y[m, n] = x[m, k] @
+/// dequantize(w)[n, k]^T` with f32 activations and accumulation, row
+/// decode and dots running on the active SIMD path. Same stripe /
+/// scatter structure and the same determinism contract: one task, one
+/// pinned-algebra accumulation per output element, so results are
+/// bitwise identical at every thread count *and* on every SIMD path.
+pub fn matmul_nt_packed_f32(x: &[f32], w: &PackedMat, m: usize) -> Vec<f32> {
+    matmul_nt_packed_f32_threads(x, w, m, packed_gemm_threads(m, w))
+}
+
+/// [`matmul_nt_packed_f32`] with an explicit thread count.
+pub fn matmul_nt_packed_f32_threads(x: &[f32], w: &PackedMat, m: usize, threads: usize) -> Vec<f32> {
+    matmul_nt_packed_f32_with(simd::active(), x, w, m, threads)
+}
+
+/// [`matmul_nt_packed_f32`] with an explicit SIMD path and thread
+/// count — the property tests and the bench's scalar/SIMD bitwise gate
+/// drive both paths in one process through this.
+pub fn matmul_nt_packed_f32_with(
+    path: simd::SimdPath,
+    x: &[f32],
+    w: &PackedMat,
+    m: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let (n, k) = (w.rows, w.cols);
+    assert_eq!(x.len(), m * k, "x is [m={m}, k={k}]");
+    let nbr = w.n_block_rows();
+    let mut y = vec![0.0f32; m * n];
+
+    let stripe = |bi: usize| -> Vec<f32> {
+        let r0 = bi * w.block_rows;
+        let bh = w.block_rows.min(n - r0);
+        let mut tile = vec![0.0f32; bh * m];
+        let mut rowbuf = vec![0.0f32; k];
+        for lr in 0..bh {
+            dequant_row_into_f32_with(path, w, r0 + lr, &mut rowbuf);
+            for i in 0..m {
+                tile[lr * m + i] = simd::dot_f32_with(path, &x[i * k..(i + 1) * k], &rowbuf);
+            }
+        }
+        tile
+    };
+    let scatter = |y: &mut [f32], bi: usize, tile: &[f32]| {
+        let r0 = bi * w.block_rows;
+        let bh = w.block_rows.min(n - r0);
+        for lr in 0..bh {
+            for i in 0..m {
+                y[i * n + r0 + lr] = tile[lr * m + i];
+            }
+        }
+    };
+
+    if threads <= 1 || nbr <= 1 {
+        for bi in 0..nbr {
+            let tile = stripe(bi);
+            scatter(&mut y, bi, &tile[..]);
+        }
+    } else {
+        let per_group = nbr.div_ceil(threads.min(nbr));
+        let groups: Vec<usize> = (0..nbr.div_ceil(per_group)).collect();
+        let group_tiles = threadpool::par_map(&groups, |_, &gr| {
+            let lo = gr * per_group;
+            let hi = (lo + per_group).min(nbr);
+            (lo..hi).map(&stripe).collect::<Vec<Vec<f32>>>()
+        });
+        for (&gr, tiles) in groups.iter().zip(group_tiles.iter()) {
+            for (off, tile) in tiles.iter().enumerate() {
+                scatter(&mut y, gr * per_group + off, &tile[..]);
+            }
+        }
+    }
+    y
+}
+
+/// Dense f32 GEMM `y[m, dout] = x[m, din] @ w[dout, din]^T` on the
+/// active SIMD path — the uncompressed-weight serving baseline and the
+/// kernel behind dense (unquantized) parameters in the f32 forward.
+/// Tile-parallel over output-column stripes; like the packed kernels
+/// it also fans out when the weight stream alone is large (skinny m).
+pub fn matmul_nt_f32(x: &[f32], w: &[f32], m: usize, din: usize, dout: usize) -> Vec<f32> {
+    matmul_nt_f32_with(simd::active(), x, w, m, din, dout)
+}
+
+/// [`matmul_nt_f32`] with an explicit SIMD path (for tests/bench).
+pub fn matmul_nt_f32_with(
+    path: simd::SimdPath,
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    din: usize,
+    dout: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * din);
+    debug_assert_eq!(w.len(), dout * din);
+    let mut y = vec![0.0f32; m * dout];
+    let wide = m * din * dout >= PAR_MIN_FLOPS || dout * din * 4 >= PAR_MIN_STREAM_BYTES;
+    let workers = if wide { threadpool::n_workers().min(dout) } else { 1 };
+    if workers <= 1 {
+        for i in 0..m {
+            let xr = &x[i * din..(i + 1) * din];
+            for (o, yo) in y[i * dout..(i + 1) * dout].iter_mut().enumerate() {
+                *yo = simd::dot_f32_with(path, xr, &w[o * din..(o + 1) * din]);
+            }
+        }
+        return y;
+    }
+    let stripe = dout.div_ceil(workers);
+    let ids: Vec<usize> = (0..dout.div_ceil(stripe)).collect();
+    let tiles = threadpool::par_map(&ids, |_, &s| {
+        let o0 = s * stripe;
+        let o1 = (o0 + stripe).min(dout);
+        let mut tile = vec![0.0f32; m * (o1 - o0)];
+        for i in 0..m {
+            let xr = &x[i * din..(i + 1) * din];
+            for (lo, t) in tile[i * (o1 - o0)..(i + 1) * (o1 - o0)].iter_mut().enumerate() {
+                *t = simd::dot_f32_with(path, xr, &w[(o0 + lo) * din..(o0 + lo + 1) * din]);
+            }
+        }
+        tile
+    });
+    for (&s, tile) in ids.iter().zip(&tiles) {
+        let o0 = s * stripe;
+        let width = ((o0 + stripe).min(dout)) - o0;
+        for i in 0..m {
+            y[i * dout + o0..i * dout + o0 + width]
+                .copy_from_slice(&tile[i * width..(i + 1) * width]);
+        }
+    }
+    y
+}
+
+// ---------------------------------------------------------------------
 // dense f64 kernels (the interpreter's forward/backward primitives)
 
 /// `y[m, dout] = x[m, din] @ w[dout, din]^T`. Tile-parallel over output
@@ -228,8 +408,10 @@ pub fn matmul_nt(x: &[f64], w: &[f64], m: usize, din: usize, dout: usize) -> Vec
     debug_assert_eq!(x.len(), m * din);
     debug_assert_eq!(w.len(), dout * din);
     let mut y = vec![0.0f64; m * dout];
-    let workers =
-        if m * din * dout >= PAR_MIN_FLOPS { threadpool::n_workers().min(dout) } else { 1 };
+    // FLOP-bound or (for skinny m) stream-bound — parallelism never
+    // changes the bits, so widening the trigger is a pure perf choice.
+    let wide = m * din * dout >= PAR_MIN_FLOPS || dout * din * 8 >= PAR_MIN_STREAM_BYTES;
+    let workers = if wide { threadpool::n_workers().min(dout) } else { 1 };
     if workers <= 1 {
         for i in 0..m {
             let xr = &x[i * din..(i + 1) * din];
@@ -563,5 +745,182 @@ mod tests {
         let x = rand_x(2, 16, 32);
         let y = matmul_nt_packed(&x, &pm, 2);
         assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    // -----------------------------------------------------------------
+    // f32 serving kernels
+
+    fn rand_xf(m: usize, k: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..m * k).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn dequant_row_f32_is_exact_f64_narrowing() {
+        // The f32 decode must produce, bitwise, the f32 narrowing of
+        // the f64 decode (both are `code as f32 * scale`; the f64 path
+        // merely widens afterwards) — for every bitwidth incl. pruned
+        // + FP sentinel, ragged blocks, and every available SIMD path.
+        forall("dequant-row-f32", Config { cases: 48, ..Config::default() }, |g| {
+            let br = *g.pick(&[4usize, 8, 16]);
+            let bc = *g.pick(&[4usize, 8, 16, 32]);
+            let rows = g.usize_in(1, 40);
+            let cols = g.usize_in(1, 48);
+            let w = {
+                let mut rng = Rng::new(g.rng.next_u64());
+                Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal_f32()).collect())
+                    .unwrap()
+            };
+            let nblocks = rows.div_ceil(br) * cols.div_ceil(bc);
+            let bits: Vec<i32> =
+                (0..nblocks).map(|_| *g.pick(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 16])).collect();
+            let pm = PackedMat::quantize(&w, &bits, br, bc);
+            let mut want64 = vec![0.0f64; cols];
+            let mut got = vec![0.0f32; cols];
+            for r in 0..rows {
+                dequant_row_into(&pm, r, &mut want64);
+                for path in simd::available_paths() {
+                    dequant_row_into_f32_with(path, &pm, r, &mut got);
+                    for c in 0..cols {
+                        crate::prop_assert!(
+                            got[c].to_bits() == (want64[c] as f32).to_bits(),
+                            "path={} ({r},{c}): {} vs {}",
+                            path.name(),
+                            got[c],
+                            want64[c]
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_gemm_f32_simd_matches_scalar_bitwise() {
+        // The tentpole property: the fused f32 GEMM produces identical
+        // bits on every available SIMD path (and any thread count),
+        // across all bitwidths and ragged shapes.
+        forall("packed-gemm-f32-simd", Config { cases: 32, ..Config::default() }, |g| {
+            let br = *g.pick(&[4usize, 8, 16]);
+            let bc = *g.pick(&[4usize, 8, 16]);
+            let rows = g.usize_in(1, 33);
+            let cols = g.usize_in(1, 72);
+            let m = g.usize_in(1, 5);
+            let w = {
+                let mut rng = Rng::new(g.rng.next_u64());
+                Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal_f32()).collect())
+                    .unwrap()
+            };
+            let nblocks = rows.div_ceil(br) * cols.div_ceil(bc);
+            let bits: Vec<i32> =
+                (0..nblocks).map(|_| *g.pick(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9])).collect();
+            let pm = PackedMat::quantize(&w, &bits, br, bc);
+            let x = rand_xf(m, cols, g.rng.next_u64());
+            let want = matmul_nt_packed_f32_with(simd::SimdPath::Scalar, &x, &pm, m, 1);
+            for path in simd::available_paths() {
+                for threads in [1usize, 3] {
+                    let got = matmul_nt_packed_f32_with(path, &x, &pm, m, threads);
+                    for i in 0..want.len() {
+                        crate::prop_assert!(
+                            got[i].to_bits() == want[i].to_bits(),
+                            "path={} threads={threads} elem {i}: {} vs {}",
+                            path.name(),
+                            got[i],
+                            want[i]
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_f32_gemm_simd_matches_scalar_bitwise() {
+        // Same pinned-algebra property for the dense f32 baseline.
+        for (m, din, dout, seed) in [(1usize, 97usize, 33usize, 41u64), (6, 128, 64, 42)] {
+            let x = rand_xf(m, din, seed);
+            let w = rand_xf(dout, din, seed + 7);
+            let want = matmul_nt_f32_with(simd::SimdPath::Scalar, &x, &w, m, din, dout);
+            for path in simd::available_paths() {
+                let got = matmul_nt_f32_with(path, &x, &w, m, din, dout);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "path={}",
+                    path.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_f32_tracks_f64_within_tolerance() {
+        // The serving-precision contract at kernel level: f32 fused
+        // GEMM tracks the f64 fused GEMM to f32-roundoff accumulation
+        // error (the product-level gate lives in the interp/serve
+        // tests as token-ID equality + bounded logit divergence).
+        let w = rand_mat(48, 64, 51);
+        let bits = vec![4, 2, 8, 1, 3, 9, 4, 5, 2, 8, 16, 4];
+        assert_eq!(bits.len(), (48 / 8) * (64 / 16));
+        let pm = PackedMat::quantize(&w, &bits, 8, 16);
+        let x64 = rand_x(6, 64, 52);
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let y64 = matmul_nt_packed(&x64, &pm, 6);
+        let y32 = matmul_nt_packed_f32(&x32, &pm, 6);
+        for i in 0..y64.len() {
+            let tol = 1e-4 * y64[i].abs().max(1.0);
+            assert!(
+                (y32[i] as f64 - y64[i]).abs() <= tol,
+                "elem {i}: f32 {} vs f64 {}",
+                y32[i],
+                y64[i]
+            );
+        }
+    }
+
+    #[test]
+    fn packed_gemm_f32_deterministic_across_worker_counts() {
+        let w = rand_mat(64, 64, 61);
+        let bits: Vec<i32> =
+            (0..(64 / 16) * (64 / 16)).map(|i| [1, 2, 3, 4, 8, 9][i % 6]).collect();
+        let pm = PackedMat::quantize(&w, &bits, 16, 16);
+        let x = rand_xf(8, 64, 62);
+        let serial = matmul_nt_packed_f32_threads(&x, &pm, 8, 1);
+        let par4 = matmul_nt_packed_f32_threads(&x, &pm, 8, 4);
+        let auto = matmul_nt_packed_f32(&x, &pm, 8);
+        let many = matmul_nt_packed_f32_threads(&x, &pm, 8, threadpool::n_workers().max(2));
+        assert_eq!(serial, par4);
+        assert_eq!(serial, auto);
+        assert_eq!(serial, many);
+    }
+
+    #[test]
+    fn skinny_gemv_engages_parallel_path_by_stream_bytes() {
+        // m=1 decode GEMV over a serving-sized packed matrix: the FLOP
+        // threshold alone says serial, but the stream threshold must
+        // fan it out (and the bits must not move when it does).
+        let w = rand_mat(512, 1024, 71);
+        let nblocks = (512 / 32) * (1024 / 32);
+        let bits: Vec<i32> = (0..nblocks).map(|i| [2, 4, 8][i % 3]).collect();
+        let pm = PackedMat::quantize(&w, &bits, 32, 32);
+        assert!(pm.stream_bytes() >= PAR_MIN_STREAM_BYTES, "test matrix too small");
+        assert!(512 * 1024 < PAR_MIN_FLOPS, "m=1 FLOPs must sit under the FLOP trigger");
+        if threadpool::n_workers() > 1 {
+            assert!(packed_gemm_threads(1, &pm) > 1, "skinny GEMV stayed single-threaded");
+        }
+        // Tiny matrices still run serial (thread-spawn overhead).
+        let small = PackedMat::quantize(&rand_mat(32, 32, 72), &[4], 32, 32);
+        assert_eq!(packed_gemm_threads(1, &small), 1);
+
+        let x = rand_xf(1, 1024, 73);
+        let serial = matmul_nt_packed_f32_threads(&x, &pm, 1, 1);
+        let auto = matmul_nt_packed_f32(&x, &pm, 1);
+        assert_eq!(serial, auto);
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let serial64 = matmul_nt_packed_threads(&x64, &pm, 1, 1);
+        let auto64 = matmul_nt_packed(&x64, &pm, 1);
+        assert_eq!(serial64, auto64);
     }
 }

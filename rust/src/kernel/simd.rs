@@ -1,0 +1,688 @@
+//! Explicit SIMD unpack-and-FMA paths for the f32 serving kernels.
+//!
+//! The packed serving GEMMs ([`super::matmul_nt_packed_f32`]) spend all
+//! their time in two loops: decoding bit-plane row segments into an
+//! L1-resident f32 row buffer, and running dot products of activation
+//! rows against that buffer. This module provides three interchangeable
+//! implementations of both loops — AVX2 (+FMA) on x86_64, NEON on
+//! aarch64, and a portable scalar fallback — selected once per process
+//! by runtime feature detection ([`active`]).
+//!
+//! **Bitwise-equality contract** (load-bearing, property-tested):
+//!
+//! * *Decode* is elementwise and exact: every path computes
+//!   `(sign_extended_code as f32) * scale` with a single f32 rounding
+//!   (integer widening is exact, one multiply). Therefore SIMD and
+//!   scalar decode agree bit-for-bit on every bitwidth by construction.
+//! * *Dot products* pin one accumulation algebra shared by all paths:
+//!   [`LANES`] = 32 stride-separated f32 accumulators (lane `l` owns
+//!   elements `j ≡ l (mod 32)` of the blocked prefix, then the ragged
+//!   tail), each updated with a **fused** multiply-add (`f32::mul_add`
+//!   in the scalar mirror, `vfmadd`/`vfmaq` in the SIMD paths — both
+//!   IEEE single-rounding), reduced by a fixed binary tree
+//!   (`l ← l + l+half` for half = 16, 8, 4, 2, 1). AVX2 materializes
+//!   the 32 lanes as 4 ymm registers, NEON as 8 q registers, scalar as
+//!   an `[f32; 32]` array — same algebra, same bits out.
+//!
+//! Because every path produces identical bits, the serving numerics do
+//! not depend on the host ISA, and `SCALEBITS_SIMD=off` (force scalar)
+//! is a pure performance switch — CI runs the kernel test net both
+//! ways to prove it.
+//!
+//! Per-bitwidth vectorization (see the README dispatch table):
+//! 1/2/4/8-bit planes decode whole `u64` words with shift-and-mask +
+//! nibble-LUT lane tricks; 3/5/6/7-bit planes (word-straddling fields)
+//! and FP-sentinel blocks share the scalar path on every ISA.
+
+use std::sync::OnceLock;
+
+/// Which kernel implementation family is active for this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPath {
+    /// x86_64 with AVX2 and FMA detected at runtime.
+    Avx2,
+    /// aarch64 with NEON (baseline on that architecture).
+    Neon,
+    /// Portable scalar mirror of the same lane algebra (any host).
+    Scalar,
+}
+
+impl SimdPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Neon => "neon",
+            SimdPath::Scalar => "scalar",
+        }
+    }
+}
+
+/// Pure runtime feature detection, ignoring the env override.
+pub fn detected() -> SimdPath {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            return SimdPath::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SimdPath::Neon;
+        }
+    }
+    SimdPath::Scalar
+}
+
+/// The path used by the dispatching entry points, cached per process.
+/// `SCALEBITS_SIMD=off` (also `scalar` / `0`) forces the scalar mirror
+/// so both paths run under `cargo test` on any host; any other value
+/// (or unset) means auto-detect.
+pub fn active() -> SimdPath {
+    static PATH: OnceLock<SimdPath> = OnceLock::new();
+    *PATH.get_or_init(|| {
+        if let Ok(v) = std::env::var("SCALEBITS_SIMD") {
+            let v = v.to_ascii_lowercase();
+            if v == "off" || v == "scalar" || v == "0" {
+                return SimdPath::Scalar;
+            }
+        }
+        detected()
+    })
+}
+
+/// Every path runnable on this host (scalar always, plus the detected
+/// SIMD path). The property tests compare each against scalar
+/// regardless of the `SCALEBITS_SIMD` override.
+pub fn available_paths() -> Vec<SimdPath> {
+    let mut v = vec![SimdPath::Scalar];
+    let d = detected();
+    if d != SimdPath::Scalar {
+        v.push(d);
+    }
+    v
+}
+
+/// Number of independent f32 accumulator lanes in the pinned dot
+/// algebra (4 × 8-lane AVX2 registers == 8 × 4-lane NEON registers).
+pub const LANES: usize = 32;
+
+/// Fixed binary reduction tree over the accumulator lanes:
+/// `l ← l + l+half` for half = 16, 8, 4, 2, then the final pair.
+/// Every path (scalar and SIMD) sums its lanes in exactly this order.
+#[inline]
+fn reduce_lanes(acc: &[f32; LANES]) -> f32 {
+    let mut v = *acc;
+    let mut half = LANES / 2;
+    loop {
+        for l in 0..half {
+            v[l] += v[l + half];
+        }
+        if half == 1 {
+            return v[0];
+        }
+        half /= 2;
+    }
+}
+
+/// Shared epilogue: fold the ragged tail (`from..n`) into the lane
+/// accumulators with the same fused multiply-add, then reduce. Both
+/// the scalar mirror and the SIMD paths funnel through this, so the
+/// tail handling is identical by construction.
+#[inline]
+fn finish_dot(lanes: &mut [f32; LANES], a: &[f32], b: &[f32], from: usize) -> f32 {
+    for j in from..a.len() {
+        lanes[j % LANES] = a[j].mul_add(b[j], lanes[j % LANES]);
+    }
+    reduce_lanes(lanes)
+}
+
+/// Portable mirror of the SIMD dot product: the pinned lane algebra
+/// executed with scalar `f32::mul_add` (IEEE fused, single rounding —
+/// the same rounding as the hardware FMA instructions, so the result
+/// is bitwise identical to the AVX2/NEON paths).
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let nb = a.len() / LANES;
+    for t in 0..nb {
+        let base = t * LANES;
+        for l in 0..LANES {
+            lanes[l] = a[base + l].mul_add(b[base + l], lanes[l]);
+        }
+    }
+    finish_dot(&mut lanes, a, b, nb * LANES)
+}
+
+/// Dot product via an explicit path (fetch [`active`] once per GEMM
+/// stripe and pass it down — keeps the dispatch out of the hot loop).
+#[inline]
+pub fn dot_f32_with(path: SimdPath, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `SimdPath::Avx2` is only ever produced by `detected()`
+        // after `is_x86_feature_detected!("avx2")` and `("fma")` both
+        // returned true on this machine.
+        SimdPath::Avx2 => unsafe { x86::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `SimdPath::Neon` is only produced by `detected()` after
+        // `is_aarch64_feature_detected!("neon")` returned true.
+        SimdPath::Neon => unsafe { neon::dot(a, b) },
+        _ => dot_f32_scalar(a, b),
+    }
+}
+
+/// Dot product on the process-wide active path.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    dot_f32_with(active(), a, b)
+}
+
+// ---------------------------------------------------------------------
+// packed row-segment decode (f32 targets)
+
+/// Scalar decode of codes `from..out.len()` of one packed row segment —
+/// the exact integer extraction of the f64 kernel
+/// (`kernel::decode_row_segment`) with an f32 destination. Also serves
+/// as the ragged-tail epilogue for the word-granular SIMD decoders.
+fn decode_scalar_range(seg: &[u64], bits: i32, scale: f32, out: &mut [f32], from: usize) {
+    let b = bits as usize;
+    match bits {
+        1 => {
+            // 1-bit codes are sign bits: 1 -> +scale, 0 -> -scale.
+            for t in from..out.len() {
+                let bit = (seg[t >> 6] >> (t & 63)) & 1;
+                out[t] = if bit == 1 { scale } else { -scale };
+            }
+        }
+        2 | 4 | 8 => {
+            // Power-of-two widths never straddle a word: shift the
+            // field to the top and sign-extend with one arithmetic
+            // shift — branch-free two's-complement decode.
+            let cpw = 64 / b;
+            for t in from..out.len() {
+                let word = seg[t / cpw];
+                let off = (t % cpw) * b;
+                let code = ((word << (64 - off - b)) as i64) >> (64 - b);
+                out[t] = code as f32 * scale;
+            }
+        }
+        _ => {
+            // Generic path (3/5/6/7 bits): fields may straddle word
+            // boundaries within the row segment.
+            let mask = (1u64 << b) - 1;
+            let sign = 1u64 << (b - 1);
+            for t in from..out.len() {
+                let bitpos = t * b;
+                let wi = bitpos >> 6;
+                let off = bitpos & 63;
+                let mut v = seg[wi] >> off;
+                if off + b > 64 {
+                    v |= seg[wi + 1] << (64 - off);
+                }
+                v &= mask;
+                let code = if v & sign != 0 { (v | !mask) as i64 } else { v as i64 };
+                out[t] = code as f32 * scale;
+            }
+        }
+    }
+}
+
+/// Scalar decode of one full packed row segment into f32 values.
+pub fn decode_row_segment_f32_scalar(seg: &[u64], bits: i32, scale: f32, out: &mut [f32]) {
+    decode_scalar_range(seg, bits, scale, out, 0);
+}
+
+/// Decode one packed row segment via an explicit path. Bitwidths with
+/// a vector decoder (1/2/4/8 — whole-word lane tricks) dispatch to it;
+/// word-straddling widths (3/5/6/7) use the scalar loop on every ISA.
+#[inline]
+pub fn decode_row_segment_f32_with(
+    path: SimdPath,
+    seg: &[u64],
+    bits: i32,
+    scale: f32,
+    out: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if path == SimdPath::Avx2 && matches!(bits, 1 | 2 | 4 | 8) {
+        // SAFETY: `SimdPath::Avx2` is only produced by `detected()` after
+        // runtime AVX2+FMA detection succeeded on this machine.
+        unsafe { x86::decode_row_segment(seg, bits, scale, out) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if path == SimdPath::Neon && matches!(bits, 1 | 2 | 4 | 8) {
+        // SAFETY: `SimdPath::Neon` is only produced by `detected()` after
+        // runtime NEON detection succeeded on this machine.
+        unsafe { neon::decode_row_segment(seg, bits, scale, out) };
+        return;
+    }
+    let _ = path;
+    decode_scalar_range(seg, bits, scale, out, 0);
+}
+
+/// Decode one packed row segment on the process-wide active path.
+#[inline]
+pub fn decode_row_segment_f32(seg: &[u64], bits: i32, scale: f32, out: &mut [f32]) {
+    decode_row_segment_f32_with(active(), seg, bits, scale, out);
+}
+
+/// Decode one FP-sentinel row segment (raw f32 bit patterns, two per
+/// word, low half first). This is a pure bit reinterpretation — there
+/// is nothing to vectorize beyond what the memcpy-like loop already
+/// compiles to, so every path shares it.
+pub fn decode_fp_row_segment_f32(seg: &[u64], out: &mut [f32]) {
+    for (t, d) in out.iter_mut().enumerate() {
+        let word = seg[t >> 1];
+        let bits32 = if t & 1 == 1 { (word >> 32) as u32 } else { word as u32 };
+        *d = f32::from_bits(bits32);
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 (+FMA) implementations
+//
+// Decode processes whole u64 words: 8/16/32/64 codes per word for
+// 8/4/2/1-bit planes. Any ragged tail (fewer codes than a full word)
+// falls back to `decode_scalar_range`, which is bitwise identical.
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{decode_scalar_range, finish_dot, LANES};
+    use std::arch::x86_64::*;
+
+    /// Pinned-lane dot: 4 ymm accumulators = lanes 0..8, 8..16, 16..24,
+    /// 24..32; tail + reduction shared with the scalar mirror.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let nb = n / LANES;
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        for t in 0..nb {
+            let base = t * LANES;
+            // Unaligned loads of 32 consecutive f32; base+32 <= n by
+            // construction of nb.
+            let a0 = _mm256_loadu_ps(pa.add(base));
+            let a1 = _mm256_loadu_ps(pa.add(base + 8));
+            let a2 = _mm256_loadu_ps(pa.add(base + 16));
+            let a3 = _mm256_loadu_ps(pa.add(base + 24));
+            let b0 = _mm256_loadu_ps(pb.add(base));
+            let b1 = _mm256_loadu_ps(pb.add(base + 8));
+            let b2 = _mm256_loadu_ps(pb.add(base + 16));
+            let b3 = _mm256_loadu_ps(pb.add(base + 24));
+            acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+            acc1 = _mm256_fmadd_ps(a1, b1, acc1);
+            acc2 = _mm256_fmadd_ps(a2, b2, acc2);
+            acc3 = _mm256_fmadd_ps(a3, b3, acc3);
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(8), acc1);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(16), acc2);
+        _mm256_storeu_ps(lanes.as_mut_ptr().add(24), acc3);
+        finish_dot(&mut lanes, a, b, nb * LANES)
+    }
+
+    /// Per-bitwidth word-level decode; `bits` must be in {1,2,4,8}.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn decode_row_segment(seg: &[u64], bits: i32, scale: f32, out: &mut [f32]) {
+        match bits {
+            1 => decode1(seg, scale, out),
+            2 => decode2(seg, scale, out),
+            4 => decode4(seg, scale, out),
+            8 => decode8(seg, scale, out),
+            _ => unreachable!("vector decode only handles 1/2/4/8-bit planes"),
+        }
+    }
+
+    /// 8-bit: one word = 8 bytes; sign-extend to i32 lanes, convert,
+    /// scale. `_mm256_cvtepi8_epi32` + `_mm256_cvtepi32_ps` are exact.
+    #[target_feature(enable = "avx2")]
+    unsafe fn decode8(seg: &[u64], scale: f32, out: &mut [f32]) {
+        let full = out.len() / 8;
+        let vscale = _mm256_set1_ps(scale);
+        let dst = out.as_mut_ptr();
+        for wi in 0..full {
+            let codes = _mm256_cvtepi8_epi32(_mm_set_epi64x(0, seg[wi] as i64));
+            let v = _mm256_mul_ps(_mm256_cvtepi32_ps(codes), vscale);
+            _mm256_storeu_ps(dst.add(wi * 8), v);
+        }
+        decode_scalar_range(seg, 8, scale, out, full * 8);
+    }
+
+    /// 4-bit: one word = 16 nibbles. Split low/high nibbles per byte,
+    /// interleave back into code order, sign-extend through a 16-entry
+    /// pshufb LUT, then widen/convert/scale.
+    #[target_feature(enable = "avx2")]
+    unsafe fn decode4(seg: &[u64], scale: f32, out: &mut [f32]) {
+        let full = out.len() / 16;
+        let vscale = _mm256_set1_ps(scale);
+        let mnib = _mm_set1_epi8(0x0f);
+        // LUT maps the raw nibble value 0..15 to its two's-complement
+        // sign extension as i8: 0..7 -> 0..7, 8..15 -> -8..-1.
+        let lut = _mm_setr_epi8(0, 1, 2, 3, 4, 5, 6, 7, -8, -7, -6, -5, -4, -3, -2, -1);
+        let dst = out.as_mut_ptr();
+        for wi in 0..full {
+            let x = _mm_set_epi64x(0, seg[wi] as i64);
+            let lo = _mm_and_si128(x, mnib);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(x), mnib);
+            // Byte j of the word holds codes 2j (low nibble) and 2j+1
+            // (high nibble); interleaving restores code order 0..15.
+            let nib = _mm_unpacklo_epi8(lo, hi);
+            let codes = _mm_shuffle_epi8(lut, nib);
+            let v0 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(codes));
+            let v1 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128::<8>(codes)));
+            _mm256_storeu_ps(dst.add(wi * 16), _mm256_mul_ps(v0, vscale));
+            _mm256_storeu_ps(dst.add(wi * 16 + 8), _mm256_mul_ps(v1, vscale));
+        }
+        decode_scalar_range(seg, 4, scale, out, full * 16);
+    }
+
+    /// 2-bit: one word = 32 crumbs. Two interleave stages (nibbles,
+    /// then crumbs) restore code order; a 4-entry pshufb LUT applies
+    /// the two's-complement sign extension {0,1,-2,-1}.
+    #[target_feature(enable = "avx2")]
+    unsafe fn decode2(seg: &[u64], scale: f32, out: &mut [f32]) {
+        let full = out.len() / 32;
+        let vscale = _mm256_set1_ps(scale);
+        let mnib = _mm_set1_epi8(0x0f);
+        let mcrumb = _mm_set1_epi8(0x03);
+        let lut = _mm_setr_epi8(0, 1, -2, -1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0);
+        let dst = out.as_mut_ptr();
+        for wi in 0..full {
+            let x = _mm_set_epi64x(0, seg[wi] as i64);
+            let lo = _mm_and_si128(x, mnib);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(x), mnib);
+            let nib = _mm_unpacklo_epi8(lo, hi); // 16 nibble-bytes, in nibble order
+            let clo = _mm_and_si128(nib, mcrumb); // codes 0,2,4,.. of the nibble seq
+            let chi = _mm_and_si128(_mm_srli_epi16::<2>(nib), mcrumb); // codes 1,3,5,..
+            let ca = _mm_unpacklo_epi8(clo, chi); // codes 0..15
+            let cb = _mm_unpackhi_epi8(clo, chi); // codes 16..31
+            let sa = _mm_shuffle_epi8(lut, ca);
+            let sb = _mm_shuffle_epi8(lut, cb);
+            let v0 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(sa));
+            let v1 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128::<8>(sa)));
+            let v2 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(sb));
+            let v3 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_srli_si128::<8>(sb)));
+            _mm256_storeu_ps(dst.add(wi * 32), _mm256_mul_ps(v0, vscale));
+            _mm256_storeu_ps(dst.add(wi * 32 + 8), _mm256_mul_ps(v1, vscale));
+            _mm256_storeu_ps(dst.add(wi * 32 + 16), _mm256_mul_ps(v2, vscale));
+            _mm256_storeu_ps(dst.add(wi * 32 + 24), _mm256_mul_ps(v3, vscale));
+        }
+        decode_scalar_range(seg, 2, scale, out, full * 32);
+    }
+
+    /// 1-bit: one word = 64 sign bits. Broadcast each byte, test its 8
+    /// bits against a per-lane selector, blend ±scale — exactly the
+    /// scalar `if bit { scale } else { -scale }`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn decode1(seg: &[u64], scale: f32, out: &mut [f32]) {
+        let full = out.len() / 64;
+        let vpos = _mm256_set1_ps(scale);
+        let vneg = _mm256_set1_ps(-scale);
+        let sel = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+        let dst = out.as_mut_ptr();
+        for wi in 0..full {
+            let w = seg[wi];
+            for by in 0..8 {
+                let byte = ((w >> (8 * by)) & 0xff) as i32;
+                let hit = _mm256_and_si256(_mm256_set1_epi32(byte), sel);
+                let mask = _mm256_cmpeq_epi32(hit, sel);
+                let v = _mm256_blendv_ps(vneg, vpos, _mm256_castsi256_ps(mask));
+                _mm256_storeu_ps(dst.add(wi * 64 + by * 8), v);
+            }
+        }
+        decode_scalar_range(seg, 1, scale, out, full * 64);
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON implementations (aarch64; NEON is baseline on that target)
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{decode_scalar_range, finish_dot, LANES};
+    use std::arch::aarch64::*;
+
+    /// Pinned-lane dot: 8 q accumulators = lanes 0..4, 4..8, ..., 28..32;
+    /// tail + reduction shared with the scalar mirror.
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let nb = n / LANES;
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = [vdupq_n_f32(0.0); 8];
+        for t in 0..nb {
+            let base = t * LANES;
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let va = vld1q_f32(pa.add(base + 4 * r));
+                let vb = vld1q_f32(pb.add(base + 4 * r));
+                *accr = vfmaq_f32(*accr, va, vb);
+            }
+        }
+        let mut lanes = [0.0f32; LANES];
+        for (r, accr) in acc.iter().enumerate() {
+            vst1q_f32(lanes.as_mut_ptr().add(4 * r), *accr);
+        }
+        finish_dot(&mut lanes, a, b, nb * LANES)
+    }
+
+    /// Per-bitwidth word-level decode; `bits` must be in {1,2,4,8}.
+    pub unsafe fn decode_row_segment(seg: &[u64], bits: i32, scale: f32, out: &mut [f32]) {
+        match bits {
+            1 => decode1(seg, scale, out),
+            2 => decode2(seg, scale, out),
+            4 => decode4(seg, scale, out),
+            8 => decode8(seg, scale, out),
+            _ => unreachable!("vector decode only handles 1/2/4/8-bit planes"),
+        }
+    }
+
+    /// Widen 16 sign-extended i8 codes to f32 and store, scaled.
+    unsafe fn store16(codes: int8x16_t, scale: f32, dst: *mut f32) {
+        let lo16 = vmovl_s8(vget_low_s8(codes));
+        let hi16 = vmovl_s8(vget_high_s8(codes));
+        let c0 = vmovl_s16(vget_low_s16(lo16));
+        let c1 = vmovl_s16(vget_high_s16(lo16));
+        let c2 = vmovl_s16(vget_low_s16(hi16));
+        let c3 = vmovl_s16(vget_high_s16(hi16));
+        vst1q_f32(dst, vmulq_n_f32(vcvtq_f32_s32(c0), scale));
+        vst1q_f32(dst.add(4), vmulq_n_f32(vcvtq_f32_s32(c1), scale));
+        vst1q_f32(dst.add(8), vmulq_n_f32(vcvtq_f32_s32(c2), scale));
+        vst1q_f32(dst.add(12), vmulq_n_f32(vcvtq_f32_s32(c3), scale));
+    }
+
+    /// 8-bit: one word = 8 bytes; widen and convert (exact), scale.
+    unsafe fn decode8(seg: &[u64], scale: f32, out: &mut [f32]) {
+        let full = out.len() / 8;
+        let dst = out.as_mut_ptr();
+        for wi in 0..full {
+            let w16 = vmovl_s8(vcreate_s8(seg[wi]));
+            let c0 = vmovl_s16(vget_low_s16(w16));
+            let c1 = vmovl_s16(vget_high_s16(w16));
+            vst1q_f32(dst.add(wi * 8), vmulq_n_f32(vcvtq_f32_s32(c0), scale));
+            vst1q_f32(dst.add(wi * 8 + 4), vmulq_n_f32(vcvtq_f32_s32(c1), scale));
+        }
+        decode_scalar_range(seg, 8, scale, out, full * 8);
+    }
+
+    /// 4-bit: nibble split + zip restores code order; vqtbl1 LUT does
+    /// the two's-complement sign extension.
+    unsafe fn decode4(seg: &[u64], scale: f32, out: &mut [f32]) {
+        let full = out.len() / 16;
+        let lut_bytes: [i8; 16] = [0, 1, 2, 3, 4, 5, 6, 7, -8, -7, -6, -5, -4, -3, -2, -1];
+        let lut = vld1q_s8(lut_bytes.as_ptr());
+        let dst = out.as_mut_ptr();
+        for wi in 0..full {
+            let x = vcreate_u8(seg[wi]);
+            let lo = vand_u8(x, vdup_n_u8(0x0f));
+            let hi = vshr_n_u8::<4>(x);
+            // Byte j holds codes 2j (low nibble) and 2j+1 (high nibble);
+            // zipping restores code order 0..15.
+            let nib = vcombine_u8(vzip1_u8(lo, hi), vzip2_u8(lo, hi));
+            let codes = vqtbl1q_s8(lut, nib);
+            store16(codes, scale, dst.add(wi * 16));
+        }
+        decode_scalar_range(seg, 4, scale, out, full * 16);
+    }
+
+    /// 2-bit: two zip stages (nibbles, then crumbs) + a 4-entry LUT
+    /// {0,1,-2,-1} for sign extension.
+    unsafe fn decode2(seg: &[u64], scale: f32, out: &mut [f32]) {
+        let full = out.len() / 32;
+        let lut_bytes: [i8; 16] = [0, 1, -2, -1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0];
+        let lut = vld1q_s8(lut_bytes.as_ptr());
+        let dst = out.as_mut_ptr();
+        for wi in 0..full {
+            let x = vcreate_u8(seg[wi]);
+            let lo = vand_u8(x, vdup_n_u8(0x0f));
+            let hi = vshr_n_u8::<4>(x);
+            let nib = vcombine_u8(vzip1_u8(lo, hi), vzip2_u8(lo, hi));
+            let clo = vandq_u8(nib, vdupq_n_u8(0x03));
+            let chi = vandq_u8(vshrq_n_u8::<2>(nib), vdupq_n_u8(0x03));
+            let ca = vzip1q_u8(clo, chi); // codes 0..15
+            let cb = vzip2q_u8(clo, chi); // codes 16..31
+            store16(vqtbl1q_s8(lut, ca), scale, dst.add(wi * 32));
+            store16(vqtbl1q_s8(lut, cb), scale, dst.add(wi * 32 + 16));
+        }
+        decode_scalar_range(seg, 2, scale, out, full * 32);
+    }
+
+    /// 1-bit: broadcast each byte, test bits, bit-select ±scale.
+    unsafe fn decode1(seg: &[u64], scale: f32, out: &mut [f32]) {
+        let full = out.len() / 64;
+        let vpos = vdupq_n_f32(scale);
+        let vneg = vdupq_n_f32(-scale);
+        let sel_lo_bits: [u32; 4] = [1, 2, 4, 8];
+        let sel_hi_bits: [u32; 4] = [16, 32, 64, 128];
+        let sel_lo = vld1q_u32(sel_lo_bits.as_ptr());
+        let sel_hi = vld1q_u32(sel_hi_bits.as_ptr());
+        let dst = out.as_mut_ptr();
+        for wi in 0..full {
+            let w = seg[wi];
+            for by in 0..8 {
+                let byte = vdupq_n_u32(((w >> (8 * by)) & 0xff) as u32);
+                let m0 = vtstq_u32(byte, sel_lo);
+                let m1 = vtstq_u32(byte, sel_hi);
+                vst1q_f32(dst.add(wi * 64 + by * 8), vbslq_f32(m0, vpos, vneg));
+                vst1q_f32(dst.add(wi * 64 + by * 8 + 4), vbslq_f32(m1, vpos, vneg));
+            }
+        }
+        decode_scalar_range(seg, 1, scale, out, full * 64);
+    }
+}
+
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_words(n: usize, seed: u64) -> Vec<u64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn reduce_tree_is_fixed_order() {
+        // The tree must be l <- l + l+half, not a left-to-right fold:
+        // pick lane values whose fold order changes the f32 result.
+        let mut acc = [0.0f32; LANES];
+        acc[0] = 1.0e8;
+        acc[16] = -1.0e8;
+        acc[1] = 1.0;
+        acc[17] = 1.0e-3;
+        let tree = reduce_lanes(&acc);
+        // Stage 1 cancels 1e8 exactly; a sequential fold would lose the
+        // small addend into the 1e8 term first.
+        assert_eq!(tree, (1.0f32 + 1.0e-3f32) + 0.0);
+    }
+
+    #[test]
+    fn simd_decode_matches_scalar_bitwise_all_bitwidths() {
+        // Decode is elementwise-exact, so every available path must
+        // agree with scalar bit-for-bit on every width and every
+        // ragged length (word-boundary tails included).
+        let mut rng = Rng::new(0x51_D0);
+        for &bits in &[1i32, 2, 3, 4, 5, 6, 7, 8] {
+            for &len in &[1usize, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 200] {
+                let words = (len * bits as usize).div_ceil(64);
+                let seg = rand_words(words, rng.next_u64());
+                let scale = (rng.normal_f32()).abs() + 1e-3;
+                let mut want = vec![0.0f32; len];
+                decode_row_segment_f32_scalar(&seg, bits, scale, &mut want);
+                for path in available_paths() {
+                    let mut got = vec![0.0f32; len];
+                    decode_row_segment_f32_with(path, &seg, bits, scale, &mut got);
+                    for t in 0..len {
+                        assert!(
+                            got[t].to_bits() == want[t].to_bits(),
+                            "path={} bits={bits} len={len} t={t}: {} vs {}",
+                            path.name(),
+                            got[t],
+                            want[t]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_dot_matches_scalar_bitwise() {
+        // The pinned lane algebra: every available path agrees with the
+        // scalar mirror bit-for-bit, for lengths spanning empty, sub-
+        // block, exact-block, and ragged-tail cases.
+        let mut rng = Rng::new(0xD07);
+        for &len in &[0usize, 1, 5, 31, 32, 33, 64, 95, 96, 127, 128, 257, 1024, 1031] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let want = dot_f32_scalar(&a, &b);
+            for path in available_paths() {
+                let got = dot_f32_with(path, &a, &b);
+                assert!(
+                    got.to_bits() == want.to_bits(),
+                    "path={} len={len}: {got} vs {want}",
+                    path.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp_passthrough_reinterprets_exactly() {
+        let vals: Vec<f32> = vec![0.0, -1.5, 3.25e7, f32::MIN_POSITIVE, -0.0];
+        let mut seg = vec![0u64; vals.len().div_ceil(2)];
+        for (t, v) in vals.iter().enumerate() {
+            seg[t >> 1] |= (v.to_bits() as u64) << (32 * (t & 1));
+        }
+        let mut out = vec![0.0f32; vals.len()];
+        decode_fp_row_segment_f32(&seg, &mut out);
+        for (o, v) in out.iter().zip(&vals) {
+            assert_eq!(o.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn env_override_forces_scalar() {
+        // `active()` is cached per process, so we only assert the
+        // parsing contract here: when the var is set to "off" in CI the
+        // active path must be scalar.
+        if std::env::var("SCALEBITS_SIMD").map(|v| v == "off").unwrap_or(false) {
+            assert_eq!(active(), SimdPath::Scalar);
+        }
+        // available_paths always includes scalar and is deduped.
+        let paths = available_paths();
+        assert!(paths.contains(&SimdPath::Scalar));
+        assert!(paths.len() <= 2);
+    }
+}

@@ -448,6 +448,54 @@ impl PackedMat {
     pub fn storage_bytes(&self) -> usize {
         self.words.len() * 8 + self.scales.len() * 2 // f16 scales on disk
     }
+
+    /// Bytes the kernels actually stream per full pass over the packed
+    /// matrix: the u64 word stream plus in-memory f32 scales. This is
+    /// the numerator of the effective-GB/s column in `bench_kernel`.
+    pub fn stream_bytes(&self) -> usize {
+        self.words.len() * 8 + self.scales.len() * 4
+    }
+
+    /// Resolve one (row, block-column) segment of the packed stream to
+    /// the word slice + decode parameters the kernels need — O(1) via
+    /// the precomputed `word_off` table. Both the f64 and f32 decode
+    /// paths in `kernel` share this so the offset math exists once.
+    pub fn row_segment(&self, row: usize, bj: usize) -> RowSeg<'_> {
+        debug_assert!(row < self.rows);
+        let nbc = self.n_block_cols();
+        let bi = row / self.block_rows;
+        let lr = row - bi * self.block_rows;
+        let blk = bi * nbc + bj;
+        let b = self.bits[blk];
+        let c0 = bj * self.block_cols;
+        let bw = self.block_cols.min(self.cols - c0);
+        let wpr = Self::words_per_row(bw, b);
+        let s0 = self.word_off[blk] + lr * wpr;
+        RowSeg {
+            seg: &self.words[s0..s0 + wpr],
+            bits: b,
+            scale: self.scales[row * nbc + bj],
+            c0,
+            width: bw,
+        }
+    }
+}
+
+/// One row's slice of a packed block: the code words plus everything a
+/// decoder needs to expand them. `seg` is empty for pruned blocks
+/// (`bits == 0`); `scale` is 1.0 for FP-sentinel blocks and unset
+/// (0.0) for pruned ones.
+pub struct RowSeg<'a> {
+    /// Packed code words for this row segment.
+    pub seg: &'a [u64],
+    /// Effective bitwidth of the owning block (0, 1..=8, or sentinel).
+    pub bits: i32,
+    /// RTN group scale for this (row, block-col).
+    pub scale: f32,
+    /// First column the segment covers.
+    pub c0: usize,
+    /// Number of codes (columns) in the segment.
+    pub width: usize,
 }
 
 #[cfg(test)]

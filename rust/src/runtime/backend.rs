@@ -149,6 +149,43 @@ impl BackendKind {
     }
 }
 
+/// Activation precision for the *serving* graphs (`qlogits`,
+/// `qlogits_b1`, `qpredict`).
+///
+/// Search/eval graphs (`qloss`, `qgrad`, `grams`) always run the f64
+/// interpreter path — its ~1e-10 parity with the compiled artifacts is
+/// a load-bearing test asset and never changes with this knob. Serving
+/// only surfaces argmax token IDs (plus logits for diagnostics), so it
+/// may trade activation precision for kernel speed under a documented
+///// tolerance gate: f32 serving must produce *identical token IDs* on
+/// the decode acceptance sweeps and bounded logit divergence vs f64
+/// (see the README kernel section and `tests/integration.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActPrecision {
+    /// f64 activations — bitwise-parity serving (the pre-SIMD path).
+    F64,
+    /// f32 activations on the SIMD kernels — the serving default.
+    F32,
+}
+
+impl ActPrecision {
+    /// Parse an `--activations` flag value.
+    pub fn parse(s: &str) -> Result<ActPrecision> {
+        match s {
+            "f64" => Ok(ActPrecision::F64),
+            "f32" => Ok(ActPrecision::F32),
+            other => bail!("unknown activation precision {other:?}; expected f32|f64"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ActPrecision::F64 => "f64",
+            ActPrecision::F32 => "f32",
+        }
+    }
+}
+
 /// Validate one allocation's per-matrix bit grids against the manifest
 /// block shapes (shared by every backend's `upload_grids`, so the
 /// serving-path contract cannot diverge between them).
@@ -296,6 +333,23 @@ pub trait ExecBackend {
     /// of that allocation. This is the serving fast path.
     fn upload_grids(&self, grids: &[Vec<i32>]) -> Result<DeviceGrids>;
 
+    /// Select the activation precision used by the *serving* graphs.
+    /// The interpreter honors both settings; backends whose serving
+    /// numerics are fixed at compile time (PJRT executables are
+    /// lowered f32 end-to-end) accept the call as a no-op — the knob
+    /// is a kernel-precision selector, not a recompilation request.
+    /// Defaults to [`ActPrecision::F64`] so search/eval pipelines and
+    /// golden tests that call serving graphs directly keep bitwise
+    /// parity unless a server explicitly opts into f32.
+    fn set_activations(&self, _act: ActPrecision) -> Result<()> {
+        Ok(())
+    }
+
+    /// The activation precision currently in effect for serving graphs.
+    fn activations(&self) -> ActPrecision {
+        ActPrecision::F64
+    }
+
     /// Run a model executable `(tokens, *bits, *params)` against
     /// resident grids + weights. The ONLY per-call host→device
     /// transfer is the row-major `[batch, seq_len]` token batch.
@@ -362,6 +416,14 @@ mod tests {
         assert_eq!(BackendKind::parse("interpreter").unwrap(), BackendKind::Interp);
         assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::PjrtCpu);
         assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn act_precision_parse_roundtrip() {
+        for a in [ActPrecision::F32, ActPrecision::F64] {
+            assert_eq!(ActPrecision::parse(a.name()).unwrap(), a);
+        }
+        assert!(ActPrecision::parse("f16").is_err());
     }
 
     #[test]

@@ -27,13 +27,25 @@
 //!   are never materialized on the serving hot path.
 //!
 //! Numerics: weights and fake-quantization stay in f32 (bit-exact with
-//! the Pallas kernel mirror); all forward/backward arithmetic runs in
-//! f64 so the interpreter agrees with the recorded float64 Python
-//! golden (`rust/tests/data/interp_golden.json`) to ~1e-10 and with
-//! the PJRT f32 executables to f32 tolerance. The kernel module's
-//! accumulation-order contract makes the packed and dense forwards
-//! BITWISE identical, so switching the serving path onto compressed
-//! weights moved no goldens (tested).
+//! the Pallas kernel mirror); all forward/backward arithmetic for the
+//! search/eval graphs runs in f64 so the interpreter agrees with the
+//! recorded float64 Python golden (`rust/tests/data/interp_golden.json`)
+//! to ~1e-10 and with the PJRT f32 executables to f32 tolerance. The
+//! kernel module's accumulation-order contract makes the packed and
+//! dense forwards BITWISE identical, so switching the serving path onto
+//! compressed weights moved no goldens (tested).
+//!
+//! Serving activation precision: the serving graphs additionally
+//! support an **f32 activation path** ([`ActPrecision::F32`], selected
+//! via [`ExecBackend::set_activations`]) that runs the whole forward in
+//! f32 on the SIMD kernels ([`kernel::matmul_nt_packed_f32`] /
+//! [`kernel::matmul_nt_f32`]) — the serve workers' default, roughly
+//! halving streamed activation bytes and engaging the vector dot. The
+//! backend default stays [`ActPrecision::F64`] so search/eval pipelines
+//! and golden tests keep bitwise parity. Tolerance gate: f32 serving
+//! must produce identical argmax token IDs on the decode acceptance
+//! sweeps and logits within ~1e-3 relative of the f64 path (tested
+//! here and in `tests/integration.rs`).
 //!
 //! Transfer accounting mirrors the PJRT backend one-for-one (one
 //! "upload" per parameter / grid / token batch), so the serving
@@ -41,7 +53,7 @@
 //! identically on either backend.
 
 use std::any::Any;
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -50,8 +62,8 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use super::backend::{
-    BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut, ExecStats, Ledger,
-    TransferStats,
+    ActPrecision, BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut, ExecStats,
+    Ledger, TransferStats,
 };
 use crate::kernel;
 use crate::model::{Manifest, WeightStore};
@@ -80,6 +92,11 @@ pub const SUPPORTED_EXECS: &[&str] =
 /// iterations without copying them.
 pub(crate) type ParamMap = HashMap<String, Rc<Vec<f64>>>;
 
+/// Named f32 parameter set: the unquantized parameters in their native
+/// width for the f32 serving forward (no widening, half the stream
+/// bytes of the f64 copies).
+pub(crate) type ParamMap32 = HashMap<String, Rc<Vec<f32>>>;
+
 /// Memoized dense fake-quantized parameters for one (weights, grids)
 /// handle pair, plus the grid VALUES behind the handle so the next
 /// call can re-quantize only the blocks that changed.
@@ -91,11 +108,15 @@ struct QuantCache {
 }
 
 /// Memoized packed parameters for the serving path: bit-plane blocks
-/// for every quantized matrix + f64 copies of the unquantized rest.
+/// for every quantized matrix + f64 AND f32 copies of the unquantized
+/// rest (the f64 copies feed the bitwise-parity serving path, the f32
+/// copies the SIMD serving path — both are built once per resident
+/// pair, so holding both costs memory only for embeddings/norms).
 struct PackedCache {
     wid: u64,
     gid: u64,
     dense: Rc<ParamMap>,
+    dense32: Rc<ParamMap32>,
     packed: Rc<HashMap<String, PackedMat>>,
 }
 
@@ -118,6 +139,11 @@ pub struct InterpBackend {
     /// (weights, grids) pair, then every dispatch runs the fused
     /// kernels off the same compressed blocks.
     pcache: RefCell<Option<PackedCache>>,
+    /// Activation precision for the serving graphs (`qlogits*`,
+    /// `qpredict`). Defaults to f64 — bitwise parity with the golden
+    /// path — and is switched to f32 by serve workers via
+    /// [`ExecBackend::set_activations`].
+    activations: Cell<ActPrecision>,
 }
 
 /// "Device" weights for the interpreter: one pristine f32 copy per
@@ -183,6 +209,7 @@ impl InterpBackend {
             ledger: Ledger::default(),
             qcache: RefCell::new(None),
             pcache: RefCell::new(None),
+            activations: Cell::new(ActPrecision::F64),
         })
     }
 
@@ -271,20 +298,23 @@ impl InterpBackend {
 
     /// Packed parameter set for the serving graphs: every quantized
     /// matrix as bit-plane blocks (the fused kernels' native input),
-    /// the unquantized rest as f64. Serving pins one (weights, grids)
-    /// pair, so this is built once per session and hit thereafter.
+    /// the unquantized rest as f64 (bitwise-parity path) and f32 (SIMD
+    /// path). Serving pins one (weights, grids) pair, so this is built
+    /// once per session and hit thereafter.
+    #[allow(clippy::type_complexity)]
     fn packed_params(
         &self,
         weights: &InterpWeights,
         grids: &InterpGrids,
-    ) -> Result<(Rc<ParamMap>, Rc<HashMap<String, PackedMat>>)> {
+    ) -> Result<(Rc<ParamMap>, Rc<ParamMap32>, Rc<HashMap<String, PackedMat>>)> {
         if let Some(c) = self.pcache.borrow().as_ref() {
             if c.wid == weights.id && c.gid == grids.id {
-                return Ok((c.dense.clone(), c.packed.clone()));
+                return Ok((c.dense.clone(), c.dense32.clone(), c.packed.clone()));
             }
         }
         let cfg = &self.manifest.config;
         let mut dense = ParamMap::new();
+        let mut dense32 = ParamMap32::new();
         let mut packed = HashMap::with_capacity(self.manifest.quantized.len());
         for p in &self.manifest.params {
             let w = weights
@@ -303,18 +333,21 @@ impl InterpBackend {
                         p.name.clone(),
                         Rc::new(w.data.iter().map(|&x| x as f64).collect()),
                     );
+                    dense32.insert(p.name.clone(), Rc::new(w.data.clone()));
                 }
             }
         }
         let dense = Rc::new(dense);
+        let dense32 = Rc::new(dense32);
         let packed = Rc::new(packed);
         *self.pcache.borrow_mut() = Some(PackedCache {
             wid: weights.id,
             gid: grids.id,
             dense: dense.clone(),
+            dense32: dense32.clone(),
             packed: packed.clone(),
         });
-        Ok((dense, packed))
+        Ok((dense, dense32, packed))
     }
 }
 
@@ -336,6 +369,15 @@ impl ExecBackend for InterpBackend {
             bail!("executable {name:?} not loaded");
         }
         Ok(self.manifest.exec(name)?.batch)
+    }
+
+    fn set_activations(&self, act: ActPrecision) -> Result<()> {
+        self.activations.set(act);
+        Ok(())
+    }
+
+    fn activations(&self) -> ActPrecision {
+        self.activations.get()
     }
 
     fn upload_weights(&self, store: &WeightStore) -> Result<DeviceWeights> {
@@ -391,11 +433,40 @@ impl ExecBackend for InterpBackend {
         // weights; loss/gradient/gram graphs keep the dense f64 set
         // (the reverse pass and gram sites need dense operands anyway).
         let serving = matches!(name, "qlogits" | "qlogits_b1" | "qpredict");
+
+        // f32 serving path: forward-only, SIMD kernels, f32 end-to-end.
+        // Token IDs must match the f64 path on the acceptance sweeps
+        // (the documented tolerance gate); logits differ within ~1e-3.
+        if serving && self.activations.get() == ActPrecision::F32 {
+            let (_, dense32, packed) = self.packed_params(w, g)?;
+            let model = ModelF32::new(&self.manifest, batch, &dense32, &packed);
+            let logits = model.forward(tokens);
+            let out = match name {
+                "qpredict" => {
+                    let v = model.dims.v;
+                    let mut preds = Vec::with_capacity(batch * seq);
+                    for row in logits.chunks_exact(v) {
+                        let mut best = 0usize;
+                        for (i, &x) in row.iter().enumerate() {
+                            if x > row[best] {
+                                best = i;
+                            }
+                        }
+                        preds.push(best as i32);
+                    }
+                    vec![ExecOut::I32(preds)]
+                }
+                _ => vec![ExecOut::F32(logits)],
+            };
+            self.ledger.note_exec(name, t0.elapsed().as_secs_f64());
+            return Ok(out);
+        }
+
         let dense_params;
-        let packed_pair;
+        let packed_triple;
         let model = if serving {
-            packed_pair = self.packed_params(w, g)?;
-            Model::new(&self.manifest, batch, &packed_pair.0).with_packed(&packed_pair.1)
+            packed_triple = self.packed_params(w, g)?;
+            Model::new(&self.manifest, batch, &packed_triple.0).with_packed(&packed_triple.2)
         } else {
             dense_params = self.quantized_params(w, g)?;
             Model::new(&self.manifest, batch, &dense_params)
@@ -980,6 +1051,201 @@ fn silu_grad(z: f64) -> f64 {
 }
 
 // ---------------------------------------------------------------------
+// model evaluation (f32 serving forward)
+
+/// Forward-only f32 evaluation for the serving graphs: the same
+/// MiniLlama as [`Model`], activations in f32 end-to-end on the SIMD
+/// kernels ([`kernel::matmul_nt_packed_f32`] for quantized matrices,
+/// [`kernel::matmul_nt_f32`] for the rest). No layer caches and no
+/// reverse pass — serving only needs logits/argmax, and skipping the
+/// caches keeps the decode working set small. RoPE angles are computed
+/// in f64 and rounded once, so the tables match the f64 path's to the
+/// last f32 bit.
+struct ModelF32<'a> {
+    dims: Dims,
+    /// Unquantized parameters (embeddings, norms) in native f32.
+    params: &'a ParamMap32,
+    /// Quantized matrices as bit-plane blocks; projections run the
+    /// fused dequant×matmul straight off the compressed stream.
+    packed: &'a HashMap<String, PackedMat>,
+    /// cos/sin tables, `[seq, head_dim/2]`.
+    rope_cos: Vec<f32>,
+    rope_sin: Vec<f32>,
+}
+
+impl<'a> ModelF32<'a> {
+    fn new(
+        manifest: &Manifest,
+        batch: usize,
+        params: &'a ParamMap32,
+        packed: &'a HashMap<String, PackedMat>,
+    ) -> ModelF32<'a> {
+        let c = &manifest.config;
+        let dims = Dims {
+            b: batch,
+            t: c.seq_len,
+            v: c.vocab,
+            d: c.d_model,
+            h: c.n_heads,
+            hd: c.head_dim(),
+            f: c.d_ff,
+            l: c.n_layers,
+        };
+        let half = dims.hd / 2;
+        let mut rope_cos = vec![0.0f32; dims.t * half];
+        let mut rope_sin = vec![0.0f32; dims.t * half];
+        for t in 0..dims.t {
+            for i in 0..half {
+                let freq = ROPE_THETA.powf(-(i as f64) / half as f64);
+                let ang = t as f64 * freq;
+                rope_cos[t * half + i] = ang.cos() as f32;
+                rope_sin[t * half + i] = ang.sin() as f32;
+            }
+        }
+        ModelF32 { dims, params, packed, rope_cos, rope_sin }
+    }
+
+    fn p(&self, name: &str) -> &[f32] {
+        &self.params[name]
+    }
+
+    /// `x[m, din] @ W[dout, din]^T`: the fused packed f32 kernel for
+    /// quantized matrices, the dense f32 SIMD kernel otherwise.
+    fn mm_nt(&self, x: &[f32], name: &str, m: usize, din: usize, dout: usize) -> Vec<f32> {
+        if let Some(pm) = self.packed.get(name) {
+            debug_assert_eq!((pm.rows, pm.cols), (dout, din), "{name}");
+            return kernel::matmul_nt_packed_f32(x, pm, m);
+        }
+        kernel::matmul_nt_f32(x, self.p(name), m, din, dout)
+    }
+
+    /// Rotate pairs (i, half+i) of every head by the position angle.
+    fn rope(&self, x: &mut [f32]) {
+        let Dims { b, t, d, h, hd, .. } = self.dims;
+        let half = hd / 2;
+        for bi in 0..b {
+            for ti in 0..t {
+                let row = (bi * t + ti) * d;
+                for hi in 0..h {
+                    let base = row + hi * hd;
+                    for i in 0..half {
+                        let c = self.rope_cos[ti * half + i];
+                        let s = self.rope_sin[ti * half + i];
+                        let x1 = x[base + i];
+                        let x2 = x[base + half + i];
+                        x[base + i] = x1 * c - x2 * s;
+                        x[base + half + i] = x1 * s + x2 * c;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Full forward; returns the `[M, V]` logits.
+    fn forward(&self, tokens: &[i32]) -> Vec<f32> {
+        let Dims { t, v: _, d, h, hd, f, l, .. } = self.dims;
+        let m = self.dims.m();
+        let embed = self.p("embed");
+        let mut x = vec![0.0f32; m * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let src = tok as usize * d;
+            x[i * d..(i + 1) * d].copy_from_slice(&embed[src..src + d]);
+        }
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        for li in 0..l {
+            let ln = |leaf: &str| format!("layers.{li}.{leaf}");
+            let h_attn = rmsnorm_fwd_f32(&x, self.p(&ln("attn_norm")), d);
+
+            let mut q = self.mm_nt(&h_attn, &ln("wq"), m, d, d);
+            let mut k = self.mm_nt(&h_attn, &ln("wk"), m, d, d);
+            let v = self.mm_nt(&h_attn, &ln("wv"), m, d, d);
+            self.rope(&mut q);
+            self.rope(&mut k);
+
+            let mut ctx = vec![0.0f32; m * d];
+            let mut sc = vec![0.0f32; t];
+            for bi in 0..self.dims.b {
+                for hi in 0..h {
+                    for ti in 0..t {
+                        let qoff = ((bi * t + ti) * d) + hi * hd;
+                        let mut maxv = f32::NEG_INFINITY;
+                        for s in 0..=ti {
+                            let koff = ((bi * t + s) * d) + hi * hd;
+                            let mut dot = 0.0f32;
+                            for dd in 0..hd {
+                                dot += q[qoff + dd] * k[koff + dd];
+                            }
+                            let val = dot * scale;
+                            sc[s] = val;
+                            if val > maxv {
+                                maxv = val;
+                            }
+                        }
+                        let mut denom = 0.0f32;
+                        for s in 0..=ti {
+                            let e = (sc[s] - maxv).exp();
+                            sc[s] = e;
+                            denom += e;
+                        }
+                        for s in 0..=ti {
+                            let a = sc[s] / denom;
+                            let voff = ((bi * t + s) * d) + hi * hd;
+                            for dd in 0..hd {
+                                ctx[qoff + dd] += a * v[voff + dd];
+                            }
+                        }
+                    }
+                }
+            }
+
+            let y = self.mm_nt(&ctx, &ln("wo"), m, d, d);
+            for i in 0..m * d {
+                x[i] += y[i];
+            }
+
+            let h_mlp = rmsnorm_fwd_f32(&x, self.p(&ln("mlp_norm")), d);
+            let gate = self.mm_nt(&h_mlp, &ln("w_gate"), m, d, f);
+            let up = self.mm_nt(&h_mlp, &ln("w_up"), m, d, f);
+            let mut hprod = vec![0.0f32; m * f];
+            for i in 0..m * f {
+                hprod[i] = silu_f32(gate[i]) * up[i];
+            }
+            let y = self.mm_nt(&hprod, &ln("w_down"), m, f, d);
+            for i in 0..m * d {
+                x[i] += y[i];
+            }
+        }
+
+        let xf = rmsnorm_fwd_f32(&x, self.p("final_norm"), d);
+        self.mm_nt(&xf, "lm_head", m, d, self.dims.v)
+    }
+}
+
+/// y = x * rsqrt(mean(x^2) + eps) * g per row, all in f32.
+fn rmsnorm_fwd_f32(x: &[f32], g: &[f32], d: usize) -> Vec<f32> {
+    let rows = x.len() / d;
+    let mut out = vec![0.0f32; x.len()];
+    for i in 0..rows {
+        let xr = &x[i * d..(i + 1) * d];
+        let mut ms = 0.0f32;
+        for &v in xr {
+            ms += v * v;
+        }
+        let r = 1.0 / (ms / d as f32 + RMS_EPS as f32).sqrt();
+        let yr = &mut out[i * d..(i + 1) * d];
+        for j in 0..d {
+            yr[j] = xr[j] * r * g[j];
+        }
+    }
+    out
+}
+
+fn silu_f32(z: f32) -> f32 {
+    z / (1.0 + (-z).exp())
+}
+
+// ---------------------------------------------------------------------
 
 #[cfg(test)]
 mod tests {
@@ -1088,6 +1354,61 @@ mod tests {
             }
             assert_eq!(preds[i], best as i32, "position {i}");
         }
+    }
+
+    /// The f32 serving tolerance gate, at the backend level: switching
+    /// activations to f32 must keep every argmax token ID and hold the
+    /// logits within a small relative envelope of the f64 path — and
+    /// switching back must restore bitwise-f64 serving (the caches are
+    /// precision-agnostic).
+    #[test]
+    fn f32_serving_keeps_tokens_and_bounds_logit_divergence() {
+        let (be, store, tokens) = tiny_backend();
+        let index = BlockIndex::from_manifest(&be.manifest).unwrap();
+        let mut alloc = BitAlloc::uniform(&index, 2);
+        for (i, b) in alloc.bits.iter_mut().enumerate() {
+            *b = [1, 2, 3, 4, 8, 16][i % 6];
+        }
+        let w = be.upload_weights(&store).unwrap();
+        let g = be.upload_grids(&alloc.grids(&index)).unwrap();
+
+        assert_eq!(be.activations(), ActPrecision::F64);
+        let logits64 = be.run_model("qlogits", &tokens, &g, &w).unwrap()[0].to_vec_f32().unwrap();
+        let preds64 = be.run_model("qpredict", &tokens, &g, &w).unwrap()[0].to_vec_i32().unwrap();
+
+        be.set_activations(ActPrecision::F32).unwrap();
+        assert_eq!(be.activations(), ActPrecision::F32);
+        let logits32 = be.run_model("qlogits", &tokens, &g, &w).unwrap()[0].to_vec_f32().unwrap();
+        let preds32 = be.run_model("qpredict", &tokens, &g, &w).unwrap()[0].to_vec_i32().unwrap();
+
+        // token IDs must not move
+        assert_eq!(preds32, preds64, "f32 activations changed argmax token IDs");
+        // qpredict must be the argmax of the f32 logits (same-precision
+        // consistency, independent of the f64 comparison)
+        let v = be.manifest.config.vocab;
+        for (i, row) in logits32.chunks_exact(v).enumerate() {
+            let mut best = 0usize;
+            for (j, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = j;
+                }
+            }
+            assert_eq!(preds32[i], best as i32, "position {i}");
+        }
+        // bounded logit divergence (the documented tolerance gate)
+        assert_eq!(logits32.len(), logits64.len());
+        for (i, (&a, &b)) in logits32.iter().zip(logits64.iter()).enumerate() {
+            let tol = 1e-3 + 1e-3 * (b.abs() as f64);
+            assert!(
+                ((a - b) as f64).abs() <= tol,
+                "logit {i}: f32 {a} vs f64 {b} exceeds tolerance {tol}"
+            );
+        }
+
+        // switching back restores the bitwise-f64 serving path
+        be.set_activations(ActPrecision::F64).unwrap();
+        let again = be.run_model("qlogits", &tokens, &g, &w).unwrap()[0].to_vec_f32().unwrap();
+        assert_eq!(again, logits64, "f64 serving path changed after an f32 round trip");
     }
 
     /// Delta re-quantization must be indistinguishable from a full

@@ -36,8 +36,8 @@ pub mod pjrt;
 pub mod session;
 
 pub use backend::{
-    open_backend, BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut, ExecStats,
-    TransferStats,
+    open_backend, ActPrecision, BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut,
+    ExecStats, TransferStats,
 };
 pub use interp::InterpBackend;
 pub use pjrt::{

@@ -21,7 +21,9 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use super::backend::{open_backend, BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut};
+use super::backend::{
+    open_backend, ActPrecision, BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut,
+};
 use super::pjrt::Engine;
 use crate::model::{Manifest, WeightStore};
 
@@ -81,6 +83,15 @@ impl Session {
 
     pub fn weights(&self) -> &DeviceWeights {
         &self.weights
+    }
+
+    /// Select the activation precision for the serving graphs (see
+    /// [`ExecBackend::set_activations`]): f32 runs the SIMD forward
+    /// under the documented tolerance gate (identical token IDs,
+    /// bounded logit divergence); f64 keeps bitwise golden parity.
+    /// No re-upload — weights and grids stay resident.
+    pub fn set_activations(&self, act: ActPrecision) -> Result<()> {
+        self.backend.set_activations(act)
     }
 
     /// Swap the served allocation: one grid re-upload, weights untouched.

@@ -43,7 +43,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::model::{Manifest, WeightStore};
 use crate::quant::{BitAlloc, BlockIndex};
-use crate::runtime::{open_backend, BackendKind, Session, StepRow};
+use crate::runtime::{open_backend, ActPrecision, BackendKind, Session, StepRow};
 
 use super::admission::Bounded;
 use super::api::{Client, Event, Finish, GenRequest, Outcome, Priority, Shared, Ticket, TokenEvent};
@@ -85,6 +85,12 @@ pub struct ServeConfig {
     /// Arrival-age promotion interval for the holding pen (the
     /// anti-starvation knob; `Duration::ZERO` disables aging).
     pub aging: Duration,
+    /// Activation precision for the serving forward
+    /// (`--activations {f32,f64}`). Defaults to f32 — the SIMD
+    /// kernels under the documented tolerance gate (identical token
+    /// IDs, bounded logit divergence vs f64). `f64` restores bitwise
+    /// parity with the search/eval goldens at decode-throughput cost.
+    pub activations: ActPrecision,
 }
 
 impl ServeConfig {
@@ -99,6 +105,7 @@ impl ServeConfig {
             prefill_chunk: 0,
             max_live: 0,
             aging: DEFAULT_AGING,
+            activations: ActPrecision::F32,
         }
     }
 }
@@ -318,6 +325,7 @@ struct SchedKnobs {
     prefill_chunk: usize,
     max_live: usize,
     aging: Duration,
+    activations: ActPrecision,
 }
 
 /// Worker lifecycle handle: spawns the decode workers, hands out
@@ -356,6 +364,7 @@ impl Router {
             prefill_chunk: cfg.prefill_chunk,
             max_live: cfg.max_live,
             aging: cfg.aging,
+            activations: cfg.activations,
         };
         let mut queues = Vec::with_capacity(cfg.workers);
         let mut joins = Vec::with_capacity(cfg.workers);
@@ -484,6 +493,10 @@ fn worker_loop(
     // each step-batch execution uploads exactly one buffer: the tokens.
     let session = Session::with_backend(backend, &store, &grids)?;
     drop(store);
+    // Serving activation precision (f32 SIMD by default; f64 restores
+    // bitwise golden parity). PJRT accepts this as a no-op — its
+    // executables are lowered f32 end-to-end already.
+    session.set_activations(knobs.activations)?;
 
     let sched_cfg = SchedConfig {
         batch,

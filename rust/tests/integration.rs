@@ -19,7 +19,7 @@ use scalebits::coordinator::Pipeline;
 use scalebits::model::synth::{self, SynthSpec};
 use scalebits::model::{Manifest, WeightStore};
 use scalebits::quant::{fakequant_mat, quant_group_codes, BitAlloc, BlockIndex};
-use scalebits::runtime::{BackendKind, Engine, ExecBackend, InterpBackend, Session};
+use scalebits::runtime::{ActPrecision, BackendKind, Engine, ExecBackend, InterpBackend, Session};
 use scalebits::search::SearchConfig;
 use scalebits::tensor::Mat;
 use scalebits::util::json::Json;
@@ -707,10 +707,14 @@ fn continuous_batched_decode_matches_sequential_decode_bitwise() {
     server.shutdown().unwrap();
 
     // Sequential reference: the same model state, one sequence per
-    // step batch, appending each sampled token manually.
+    // step batch, appending each sampled token manually. Serve workers
+    // default to f32 activations, so the reference runs f32 too —
+    // like-for-like bitwise (cross-precision token parity has its own
+    // test below).
     let session =
         Session::open_with(BackendKind::Interp, &dir, &["qpredict"], &alloc.grids(&index))
             .unwrap();
+    session.set_activations(ActPrecision::F32).unwrap();
     for i in 0..n {
         let mut toks = stream.tokens[i * 17..i * 17 + seq].to_vec();
         let mut generated = Vec::new();
@@ -723,6 +727,67 @@ fn continuous_batched_decode_matches_sequential_decode_bitwise() {
             served[i], generated,
             "request {i}: continuous-batched decode diverged from sequential decode"
         );
+    }
+}
+
+/// The f32 serving tolerance gate, end-to-end through the decode loop:
+/// the same autoregressive decode sweep run with f32 activations (the
+/// serve workers' default — SIMD kernels) and with f64 activations
+/// (bitwise golden parity) must emit IDENTICAL token IDs at every step,
+/// and the final-window logits must stay within a small relative
+/// envelope. This is the acceptance contract behind `--activations f32`.
+#[test]
+fn f32_serving_decode_sweep_matches_f64_token_for_token() {
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut alloc = BitAlloc::uniform(&index, 4);
+    for (i, b) in alloc.bits.iter_mut().enumerate() {
+        *b = [1, 2, 3, 4, 8, 16][i % 6]; // every SIMD decode family + FP + generic
+    }
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let seq = m.config.seq_len;
+    let grids = alloc.grids(&index);
+    let execs: &[&str] = &["qpredict", "qlogits"];
+    let s64 = Session::open_with(BackendKind::Interp, &dir, execs, &grids).unwrap();
+    assert_eq!(s64.backend().activations(), ActPrecision::F64, "f64 must stay the default");
+    let s32 = Session::open_with(BackendKind::Interp, &dir, execs, &grids).unwrap();
+    s32.set_activations(ActPrecision::F32).unwrap();
+
+    let batch = m.exec("qlogits").unwrap().batch;
+    let vocab = m.config.vocab;
+    let max_new = 6usize;
+    for i in 0..4usize {
+        let prompt = stream.tokens[i * 29..i * 29 + seq].to_vec();
+        let mut toks = prompt.clone();
+        for step in 0..max_new {
+            let n64 = s64.decode_step("qpredict", &[toks.as_slice()]).unwrap()[0];
+            let n32 = s32.decode_step("qpredict", &[toks.as_slice()]).unwrap()[0];
+            assert_eq!(
+                n32, n64,
+                "prompt {i} step {step}: f32 serving emitted a different token"
+            );
+            // the logits path must agree with the argmax fast path
+            let l32 = s32.decode_step("qlogits", &[toks.as_slice()]).unwrap()[0];
+            assert_eq!(l32, n32, "prompt {i} step {step}: qlogits/qpredict argmax mismatch");
+            toks.push(n64);
+        }
+        // bounded logit divergence on the final window (all batch rows)
+        let (step_toks, _) = scalebits::runtime::session::assemble_step(
+            &[toks.as_slice()],
+            batch,
+            seq,
+        );
+        let l64 = s64.run("qlogits", &step_toks).unwrap()[0].to_vec_f32().unwrap();
+        let l32 = s32.run("qlogits", &step_toks).unwrap()[0].to_vec_f32().unwrap();
+        assert_eq!(l32.len(), batch * seq * vocab);
+        for (j, (&a, &b)) in l32.iter().zip(l64.iter()).enumerate() {
+            let tol = 1e-3 + 1e-3 * (b.abs() as f64);
+            assert!(
+                ((a - b) as f64).abs() <= tol,
+                "prompt {i} logit {j}: f32 {a} vs f64 {b} exceeds tolerance {tol}"
+            );
+        }
     }
 }
 
@@ -781,6 +846,8 @@ fn chunked_prefill_and_virtual_live_set_match_sequential_decode_bitwise() {
     let session =
         Session::open_with(BackendKind::Interp, &dir, &["qpredict"], &alloc.grids(&index))
             .unwrap();
+    // match the serve workers' default precision (f32 SIMD serving)
+    session.set_activations(ActPrecision::F32).unwrap();
     let low_ref: Vec<Vec<i32>> =
         low_prompts.iter().map(|p| sequential_decode(&session, p, max_new)).collect();
     let high_ref: Vec<Vec<i32>> =
@@ -904,6 +971,8 @@ fn preempted_sequence_resumes_with_identical_tokens() {
     let session =
         Session::open_with(BackendKind::Interp, &dir, &["qpredict"], &alloc.grids(&index))
             .unwrap();
+    // match the serve workers' default precision (f32 SIMD serving)
+    session.set_activations(ActPrecision::F32).unwrap();
     let max_new = 8usize;
     let prompts: Vec<Vec<i32>> =
         (0..batch).map(|i| stream.tokens[i * 31..i * 31 + seq].to_vec()).collect();
