@@ -70,8 +70,9 @@ if [[ "$LANE" == "bench-smoke" ]]; then
   # serve bench runs the decode-mode serving stack end-to-end
   # (multi-token continuous batching, the chunked-prefill lifecycle —
   # a long prompt must complete AFTER short requests stream past it —
-  # and the deadline/cancel round-trip); both run artifact-less
-  # (synthetic model on the interpreter backend).
+  # the deadline/cancel round-trip and the prefix-cache round-trip: a
+  # repeated prompt must skip every whole cached block bitwise); both
+  # run artifact-less (synthetic model on the interpreter backend).
   echo "== bench smoke: bench_kernel"
   cargo bench --offline --bench bench_kernel -- --smoke
   echo "== bench smoke: bench_serve (decode mode)"
@@ -112,6 +113,19 @@ SCALEBITS_SIMD=off cargo test -q --offline --lib kernel
 SCALEBITS_SIMD=off cargo test -q --offline --lib f32_serving
 SCALEBITS_SIMD=off cargo test -q --offline --test integration -- \
   f32_serving packed_serving
+
+echo "== cargo test (serving net, SCALEBITS_KV=off)"
+# Second pass of the KV-sensitive serving tests with the runtime
+# override forcing full-window recompute, so the recompute fallback
+# (slid windows, kv-off deployments) stays bitwise-green. The
+# KV==recompute property tests degenerate to recompute==recompute
+# under `off`; the real coverage is the serving decode sweeps, the
+# prefix-cache sweep (the cache must skip prefill WITHOUT seedable KV
+# blobs) and the preemption/resume path all running on the forced
+# recompute ledger.
+SCALEBITS_KV=off cargo test -q --offline --lib kv
+SCALEBITS_KV=off cargo test -q --offline --test integration -- \
+  decode prefix preempted shared
 
 echo "== cargo clippy -- -D warnings"
 # Allow-list: seed-era idioms kept for diff hygiene, not new code style.

@@ -18,7 +18,14 @@
 //!      load (10% prompts at 16x the chunk): decode tok/s and
 //!      short-request TTFT p50/p95 — chunked prefill must beat
 //!      whole-prompt on short-request TTFT p95 (`--prefill-chunk` /
-//!      `--max-live` on serve-demo drive the same knobs).
+//!      `--max-live` on serve-demo drive the same knobs),
+//!   5. incremental KV decode: long-generation decode tok/s with the
+//!      per-sequence KV state on vs off (`--kv`) — with KV on each
+//!      decode step feeds ONE new token instead of re-running the
+//!      whole window,
+//!   6. radix prefix cache: the shared-template multi-turn trace with
+//!      the cache off vs on (`--cache-bytes`) — prefill tokens saved,
+//!      TTFT and decode tok/s under cache-aware placement.
 //!
 //! Backend: auto-detected. With `rust/artifacts/` present the sweep
 //! runs on PJRT; without artifacts it generates a deterministic
@@ -38,7 +45,9 @@ use scalebits::calib::TokenStream;
 use scalebits::model::Manifest;
 use scalebits::quant::{BitAlloc, BlockIndex};
 use scalebits::runtime::{BackendKind, Session};
-use scalebits::serve::{percentile, run_workload, Router, ServeConfig, WorkloadSpec};
+use scalebits::serve::{
+    percentile, run_workload, shared_template_trace, Router, ServeConfig, WorkloadSpec,
+};
 use scalebits::util::json::Json;
 use scalebits::util::rng::Rng;
 use scalebits::util::timer;
@@ -261,6 +270,111 @@ fn main() -> anyhow::Result<()> {
         out.set("prefill_sweep", sweep);
     }
 
+    // 5. incremental KV decode: long-generation decode throughput with
+    // the per-sequence KV state on vs off (recompute). Prompts are
+    // sized so prompt + decode stays inside one window (a slid window
+    // falls back to recompute permanently), so with KV on every decode
+    // step feeds exactly ONE new token instead of re-running the whole
+    // window — the per-iteration cost scales with new tokens, not
+    // window length.
+    if !smoke {
+        let p_len = (seq / 4).max(1);
+        let gen = seq - p_len; // fill the window: the longest unslid generation
+        let (n5, rate5) = if interp { (24usize, 400.0) } else { (12, 50.0) };
+        let mut kv_tps = [f64::NAN; 2];
+        for (slot, kv) in [(0usize, true), (1, false)] {
+            let mut cfg = ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 4));
+            cfg.backend = kind;
+            cfg.kv = kv;
+            let mut server = Router::start(cfg)?;
+            let spec = WorkloadSpec::new(p_len, n5, rate5, 5).max_new_tokens(gen);
+            let wl = run_workload(&mut server, &stream, &spec)?;
+            let rep = server.shutdown()?;
+            kv_tps[slot] = wl.decode_tps();
+            println!(
+                "kv {} | {:.1} decode tok/s, itl p50 {:.0}us ({gen} new tokens, {seq} window)",
+                if kv { "on " } else { "off" },
+                wl.decode_tps(),
+                rep.total.inter_token.p50_us(),
+            );
+        }
+        let ratio = kv_tps[0] / kv_tps[1].max(1e-9);
+        println!("  incremental-KV long-generation decode speedup: {ratio:.2}x");
+        out.set(
+            "kv_decode",
+            Json::from_pairs(vec![
+                ("decode_tps_kv_on", Json::Num(kv_tps[0])),
+                ("decode_tps_kv_off", Json::Num(kv_tps[1])),
+                ("kv_on_over_off", Json::Num(ratio)),
+            ]),
+        );
+    }
+
+    // 6. radix prefix cache: the shared-template multi-turn trace with
+    // the cache off vs on. Every turn's prompt extends the previous
+    // turn's EXACTLY, so with the cache on each turn re-prefills only
+    // its tail and cache-aware placement homes turns on the worker
+    // already holding the prefix.
+    if !smoke {
+        let (templates, turns) = (4usize, 4usize);
+        let (tpl_len, turn_len) = (seq / 2, (seq / 8).max(1));
+        let rate6 = if interp { 600.0 } else { 60.0 };
+        let mut section = Json::obj();
+        let mut saved_frac_on = f64::NAN;
+        for (label, bytes) in [("cache_off", 0usize), ("cache_on", 64 << 20)] {
+            let trace = shared_template_trace(
+                templates,
+                turns,
+                rate6,
+                tpl_len,
+                turn_len,
+                (seq / 8).max(1),
+                13,
+            );
+            let total_prompt: u64 = trace.iter().map(|e| e.prompt_len as u64).sum();
+            let mut cfg = ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 4));
+            cfg.backend = kind;
+            cfg.workers = 2;
+            cfg.cache_bytes = bytes;
+            cfg.cache_block = (seq / 4).max(1);
+            let mut server = Router::start(cfg)?;
+            let spec = WorkloadSpec::new(tpl_len, trace.len(), 1.0, 13)
+                .max_new_tokens((seq / 8).max(1))
+                .trace(trace);
+            let wl = run_workload(&mut server, &stream, &spec)?;
+            let rep = server.shutdown()?;
+            let t = &rep.total;
+            let frac = t.prefill_tokens_saved as f64 / (total_prompt as f64).max(1.0);
+            if bytes > 0 {
+                saved_frac_on = frac;
+            }
+            println!(
+                "{label:<9} | {:.1} decode tok/s | ttft p50 {:.0}us | prefill {} + saved {} \
+                 of {total_prompt} prompt tokens ({:.0}% saved)",
+                wl.decode_tps(),
+                t.first_token.p50_us(),
+                t.prefill_tokens,
+                t.prefill_tokens_saved,
+                100.0 * frac,
+            );
+            section.set(
+                label,
+                Json::from_pairs(vec![
+                    ("decode_tps", Json::Num(wl.decode_tps())),
+                    ("ttft_p50_us", Json::Num(t.first_token.p50_us())),
+                    ("prefill_tokens", Json::Num(t.prefill_tokens as f64)),
+                    ("prefill_tokens_saved", Json::Num(t.prefill_tokens_saved as f64)),
+                    ("saved_fraction", Json::Num(frac)),
+                    ("cache_hits", Json::Num(t.cache_hits as f64)),
+                    ("cache_misses", Json::Num(t.cache_misses as f64)),
+                    ("cache_evictions", Json::Num(t.cache_evictions as f64)),
+                ]),
+            );
+        }
+        println!("  prefix-cache prompt tokens saved (cache on): {:.0}%", 100.0 * saved_frac_on);
+        out.set("prefix_cache", section);
+    }
+
     // Smoke-gated chunked-prefill lifecycle: a LONG prompt served with
     // a small chunk must not block short requests — they stream tokens
     // and complete while the long prompt is still prefilling (this is
@@ -331,6 +445,42 @@ fn main() -> anyhow::Result<()> {
         println!("lifecycle round-trip: deadline + cancel terminal states OK");
     }
 
+    // Smoke-gated prefix-cache round-trip: an identical prompt served
+    // twice must decode identically, and the repeat must skip every
+    // whole cached block below prompt_len (the emit row still feeds at
+    // least one token) — `ci.sh --bench-smoke` gates this on both the
+    // KV and the SCALEBITS_KV=off recompute lanes.
+    {
+        let block = (seq / 4).max(1);
+        let mut cfg = ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 4));
+        cfg.backend = kind;
+        cfg.cache_bytes = 1 << 20;
+        cfg.cache_block = block;
+        let mut server = Router::start(cfg)?;
+        let mut warm = server.submit_warmup(stream.tokens[..seq].to_vec())?;
+        warm.wait().expect("warmup");
+        // disjoint from the warmup prompt so the match depth is exact
+        let prompt = stream.tokens[2 * seq..2 * seq + seq - 4].to_vec();
+        let mut runs = Vec::new();
+        for _ in 0..2 {
+            let mut t = server.submit_request(
+                scalebits::serve::GenRequest::new(prompt.clone()).max_new_tokens(2),
+            )?;
+            let o = t.wait().expect("cached ticket");
+            assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+            runs.push(o.tokens.clone());
+        }
+        let rep = server.shutdown()?;
+        assert_eq!(runs[0], runs[1], "cache-hit decode must be bitwise identical");
+        let want = ((prompt.len() - 1) / block * block) as u64;
+        assert_eq!(
+            rep.total.prefill_tokens_saved, want,
+            "the repeat must skip every whole cached block below prompt_len"
+        );
+        assert_eq!((rep.total.cache_hits, rep.total.cache_misses), (1, 1));
+        println!("prefix-cache round-trip: {want} prompt tokens skipped, decode bitwise OK");
+    }
+
     out.set(
         "environment",
         Json::Str(format!(
@@ -346,7 +496,10 @@ fn main() -> anyhow::Result<()> {
              multi-token decode sessions through the scheduler; latencies are \
              server-side (queue + decode loop), itl_* are inter-token gaps; \
              prefill_sweep: ttft_short_* covers seq-length prompts only, under a \
-             10% long-prompt mix (see the sweep keys for chunk/max_live/workers)"
+             10% long-prompt mix (see the sweep keys for chunk/max_live/workers); \
+             kv_decode compares incremental KV decode vs recompute on a \
+             long-generation load; prefix_cache compares the shared-template \
+             multi-turn trace with the radix prefix cache off vs on"
                 .to_string(),
         ),
     );

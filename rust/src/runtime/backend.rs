@@ -306,6 +306,18 @@ impl ExecOut {
     }
 }
 
+/// One row of a KV-backed step (see [`ExecBackend::kv_step`]).
+pub struct KvRow<'a> {
+    /// Opaque per-sequence handle (the serving request id).
+    pub seq: u64,
+    /// The UNSLID window `tokens[0..end]`: absolute positions `0..end`,
+    /// `end <= seq_len`. The backend feeds `window[cached_len..]`.
+    pub window: &'a [i32],
+    /// Emit rows return the next token (argmax at the last position);
+    /// pure-prefill rows only extend the cached state.
+    pub emit: bool,
+}
+
 // ---------------------------------------------------------------------
 // the trait
 
@@ -373,6 +385,82 @@ pub trait ExecBackend {
     ) -> Result<Vec<ExecOut>> {
         let g = self.upload_grids(grids)?;
         self.run_model(name, tokens, &g, weights)
+    }
+
+    // -----------------------------------------------------------------
+    // incremental per-sequence K/V decode state (serving fast path)
+    //
+    // All defaulted: a backend without KV support (PJRT — its lowered
+    // executables recompute the full window) reports `kv_active() ==
+    // false` and the session falls back to the stateless recompute
+    // path, which is the bitwise reference. The interpreter implements
+    // the full set on its f32 serving path (`SCALEBITS_KV=off` forces
+    // recompute there too).
+
+    /// True when this backend keeps per-sequence incremental K/V state
+    /// for the serving graphs under the current activation precision.
+    fn kv_active(&self) -> bool {
+        false
+    }
+
+    /// One iteration of KV-backed rows: each row feeds only the tokens
+    /// of its window beyond the sequence's cached length (a decode row
+    /// feeds exactly one token, a prefill row its chunk), accumulating
+    /// attention over the cached K/V with the same ascending-k pinned
+    /// algebra as the batched recompute path — emitted tokens are
+    /// bitwise identical to it. Windows must be UNSLID (`window ==
+    /// tokens[0..end]` with `end <= seq_len`); the session routes slid
+    /// windows to recompute. Returns one `Some(next_token)` per emit
+    /// row, `None` per pure-prefill row.
+    fn kv_step(
+        &self,
+        name: &str,
+        rows: &[KvRow<'_>],
+        grids: &DeviceGrids,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<Option<i32>>> {
+        let _ = (name, rows, grids, weights);
+        bail!("backend {:?} has no incremental KV state", self.kind().name())
+    }
+
+    /// Materialized K/V length (tokens) of a sequence; 0 when unknown.
+    fn kv_len(&self, seq: u64) -> usize {
+        let _ = seq;
+        0
+    }
+
+    /// Drop a sequence's K/V state (retire/cancel/expiry).
+    fn kv_free(&self, seq: u64) {
+        let _ = seq;
+    }
+
+    /// Bytes of K/V state per materialized token (all layers, K and V)
+    /// — the unit the prefix cache's byte budget is accounted in. 0
+    /// when the backend keeps no KV state.
+    fn kv_token_bytes(&self) -> usize {
+        0
+    }
+
+    /// Snapshot K/V of positions `[start, end)` of `seq` into an
+    /// immutable blob (prefix-cache node payload). `None` if the range
+    /// is not fully materialized.
+    fn kv_snapshot(&self, seq: u64, start: usize, end: usize) -> Option<u64> {
+        let _ = (seq, start, end);
+        None
+    }
+
+    /// Drop a snapshot blob (prefix-cache eviction).
+    fn kv_blob_free(&self, blob: u64) {
+        let _ = blob;
+    }
+
+    /// Seed a FRESH sequence's K/V state from consecutive snapshot
+    /// blobs covering positions `[0, n)` (prefix-cache hit: the seeded
+    /// positions never re-run prefill). Returns the seeded length (0 if
+    /// `seq` already has state or a blob is missing).
+    fn kv_seed(&self, seq: u64, blobs: &[u64]) -> usize {
+        let _ = (seq, blobs);
+        0
     }
 
     /// Per-executable execution counters since the last reset.

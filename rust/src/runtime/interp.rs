@@ -57,13 +57,14 @@ use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use super::backend::{
     ActPrecision, BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut, ExecStats,
-    Ledger, TransferStats,
+    KvRow, Ledger, TransferStats,
 };
 use crate::kernel;
 use crate::model::{Manifest, WeightStore};
@@ -86,6 +87,22 @@ pub const RMS_EPS: f64 = 1e-5;
 /// Executables the interpreter implements.
 pub const SUPPORTED_EXECS: &[&str] =
     &["qloss", "qgrad", "qlogits", "qlogits_b1", "qpredict", "grams"];
+
+/// `SCALEBITS_KV` environment override: `off` / `recompute` / `0`
+/// force the recompute path even where incremental K/V state is
+/// available (same shape as the `SCALEBITS_SIMD` override). Read once.
+fn kv_env_on() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        if let Ok(v) = std::env::var("SCALEBITS_KV") {
+            let v = v.to_ascii_lowercase();
+            if v == "off" || v == "recompute" || v == "0" {
+                return false;
+            }
+        }
+        true
+    })
+}
 
 /// Named f64 parameter set. Values are `Rc`-shared so the delta
 /// re-quantization path can reuse unchanged matrices across search
@@ -120,6 +137,22 @@ struct PackedCache {
     packed: Rc<HashMap<String, PackedMat>>,
 }
 
+/// Per-sequence incremental K/V state for the f32 serving decode path:
+/// post-RoPE key/value rows per layer, `[len, d_model]` row-major —
+/// the exact `b = 1` layout of the batched forward, so the attention
+/// loops index cached and freshly-computed rows identically.
+struct SeqKv {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    len: usize,
+}
+
+impl SeqKv {
+    fn new(n_layers: usize) -> SeqKv {
+        SeqKv { k: vec![Vec::new(); n_layers], v: vec![Vec::new(); n_layers], len: 0 }
+    }
+}
+
 /// The interpreter backend: manifest + counters. Stateless between
 /// calls apart from the accounting ledgers and the parameter caches.
 pub struct InterpBackend {
@@ -144,6 +177,14 @@ pub struct InterpBackend {
     /// path — and is switched to f32 by serve workers via
     /// [`ExecBackend::set_activations`].
     activations: Cell<ActPrecision>,
+    /// Per-sequence incremental K/V state (f32 serving decode path),
+    /// keyed by the opaque sequence handle the session passes down.
+    kv: RefCell<HashMap<u64, SeqKv>>,
+    /// Detached K/V block snapshots owned by the prefix cache, keyed by
+    /// blob id. A blob is a COPY: freeing a sequence never invalidates
+    /// a blob and freeing a blob never invalidates a live sequence.
+    kv_blobs: RefCell<HashMap<u64, SeqKv>>,
+    next_blob: Cell<u64>,
 }
 
 /// "Device" weights for the interpreter: one pristine f32 copy per
@@ -210,6 +251,9 @@ impl InterpBackend {
             qcache: RefCell::new(None),
             pcache: RefCell::new(None),
             activations: Cell::new(ActPrecision::F64),
+            kv: RefCell::new(HashMap::new()),
+            kv_blobs: RefCell::new(HashMap::new()),
+            next_blob: Cell::new(1),
         })
     }
 
@@ -528,6 +572,125 @@ impl ExecBackend for InterpBackend {
         };
         self.ledger.note_exec(name, t0.elapsed().as_secs_f64());
         Ok(out)
+    }
+
+    fn kv_active(&self) -> bool {
+        self.activations.get() == ActPrecision::F32 && kv_env_on()
+    }
+
+    fn kv_step(
+        &self,
+        name: &str,
+        rows: &[KvRow<'_>],
+        grids: &DeviceGrids,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<Option<i32>>> {
+        if !self.prepared(name) {
+            bail!("executable {name:?} not loaded");
+        }
+        if name != "qpredict" {
+            bail!("kv_step only serves qpredict, got {name:?}");
+        }
+        if !self.kv_active() {
+            bail!("kv_step called while the incremental KV path is inactive");
+        }
+        let cfg = &self.manifest.config;
+        let seq = cfg.seq_len;
+        let g = grids.downcast::<InterpGrids>()?;
+        let w = weights.downcast::<InterpWeights>()?;
+        let (_, dense32, packed) = self.packed_params(w, g)?;
+        let model = ModelF32::new(&self.manifest, 1, &dense32, &packed);
+
+        let t0 = Instant::now();
+        let mut kv = self.kv.borrow_mut();
+        let mut out = Vec::with_capacity(rows.len());
+        let mut moved = 0usize;
+        for row in rows {
+            if row.window.is_empty() || row.window.len() > seq {
+                bail!("kv_step: window len {} outside 1..={seq}", row.window.len());
+            }
+            for &t in row.window {
+                if t < 0 || t as usize >= cfg.vocab {
+                    bail!("kv_step: token {t} outside vocab {}", cfg.vocab);
+                }
+            }
+            let state = kv.entry(row.seq).or_insert_with(|| SeqKv::new(cfg.n_layers));
+            let cached = state.len;
+            if cached > row.window.len() || (row.emit && cached == row.window.len()) {
+                bail!(
+                    "kv_step: seq {} holds {cached} cached tokens, window len {} (emit {})",
+                    row.seq,
+                    row.window.len(),
+                    row.emit
+                );
+            }
+            let new = &row.window[cached..];
+            moved += new.len();
+            out.push(model.forward_kv(new, cached, state, row.emit));
+        }
+        // The per-call "upload" is only the NEW tokens — this is the
+        // whole point of the incremental path.
+        self.ledger.note_transfer(moved * 4);
+        self.ledger.note_exec(name, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    fn kv_len(&self, seq: u64) -> usize {
+        self.kv.borrow().get(&seq).map_or(0, |s| s.len)
+    }
+
+    fn kv_free(&self, seq: u64) {
+        self.kv.borrow_mut().remove(&seq);
+    }
+
+    fn kv_token_bytes(&self) -> usize {
+        let c = &self.manifest.config;
+        c.n_layers * 2 * c.d_model * 4
+    }
+
+    fn kv_snapshot(&self, seq: u64, start: usize, end: usize) -> Option<u64> {
+        let kv = self.kv.borrow();
+        let state = kv.get(&seq)?;
+        if start >= end || end > state.len {
+            return None;
+        }
+        let d = self.manifest.config.d_model;
+        let mut blob = SeqKv::new(state.k.len());
+        for li in 0..state.k.len() {
+            blob.k[li].extend_from_slice(&state.k[li][start * d..end * d]);
+            blob.v[li].extend_from_slice(&state.v[li][start * d..end * d]);
+        }
+        blob.len = end - start;
+        drop(kv);
+        let id = self.next_blob.get();
+        self.next_blob.set(id + 1);
+        self.kv_blobs.borrow_mut().insert(id, blob);
+        Some(id)
+    }
+
+    fn kv_blob_free(&self, blob: u64) {
+        self.kv_blobs.borrow_mut().remove(&blob);
+    }
+
+    fn kv_seed(&self, seq: u64, blobs: &[u64]) -> usize {
+        if blobs.is_empty() || self.kv.borrow().contains_key(&seq) {
+            return 0;
+        }
+        let store = self.kv_blobs.borrow();
+        let l = self.manifest.config.n_layers;
+        let mut state = SeqKv::new(l);
+        for id in blobs {
+            let Some(b) = store.get(id) else { return 0 };
+            for li in 0..l {
+                state.k[li].extend_from_slice(&b.k[li]);
+                state.v[li].extend_from_slice(&b.v[li]);
+            }
+            state.len += b.len;
+        }
+        let n = state.len;
+        drop(store);
+        self.kv.borrow_mut().insert(seq, state);
+        n
     }
 
     fn stats(&self) -> HashMap<String, ExecStats> {
@@ -1220,6 +1383,138 @@ impl<'a> ModelF32<'a> {
         let xf = rmsnorm_fwd_f32(&x, self.p("final_norm"), d);
         self.mm_nt(&xf, "lm_head", m, d, self.dims.v)
     }
+
+    /// RoPE at explicit absolute positions: row `i` of the `[m, d]`
+    /// buffer rotates by the angle of position `pos0 + i`, same pair
+    /// math and same tables as [`ModelF32::rope`].
+    fn rope_at(&self, x: &mut [f32], m: usize, pos0: usize) {
+        let Dims { d, h, hd, .. } = self.dims;
+        let half = hd / 2;
+        for ri in 0..m {
+            let ti = pos0 + ri;
+            let row = ri * d;
+            for hi in 0..h {
+                let base = row + hi * hd;
+                for i in 0..half {
+                    let c = self.rope_cos[ti * half + i];
+                    let s = self.rope_sin[ti * half + i];
+                    let x1 = x[base + i];
+                    let x2 = x[base + half + i];
+                    x[base + i] = x1 * c - x2 * s;
+                    x[base + half + i] = x1 * s + x2 * c;
+                }
+            }
+        }
+    }
+
+    /// Incremental forward: feed `new` tokens at absolute positions
+    /// `pos0 .. pos0 + new.len()`, attending over `kv` (which must
+    /// already hold exactly positions `0..pos0`) plus the new rows, and
+    /// append the new post-RoPE K/V rows to `kv`. Returns the argmax
+    /// token of the LAST new row when `emit`.
+    ///
+    /// Bitwise contract: every matmul computes one ascending-k
+    /// accumulation per output element (row results independent of m),
+    /// every elementwise op is row-local, and the attention 3-pass
+    /// walks keys in the same ascending-s order as [`Self::forward`] —
+    /// so each row's activations, and therefore the cached K/V rows and
+    /// the emitted argmax, are bitwise identical to the same positions
+    /// inside a full-window recompute.
+    fn forward_kv(&self, new: &[i32], pos0: usize, kv: &mut SeqKv, emit: bool) -> Option<i32> {
+        let Dims { d, h, hd, f, l, .. } = self.dims;
+        let m = new.len();
+        if m == 0 {
+            return None;
+        }
+        let embed = self.p("embed");
+        let mut x = vec![0.0f32; m * d];
+        for (i, &tok) in new.iter().enumerate() {
+            let src = tok as usize * d;
+            x[i * d..(i + 1) * d].copy_from_slice(&embed[src..src + d]);
+        }
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        for li in 0..l {
+            let ln = |leaf: &str| format!("layers.{li}.{leaf}");
+            let h_attn = rmsnorm_fwd_f32(&x, self.p(&ln("attn_norm")), d);
+
+            let mut q = self.mm_nt(&h_attn, &ln("wq"), m, d, d);
+            let mut k = self.mm_nt(&h_attn, &ln("wk"), m, d, d);
+            let v = self.mm_nt(&h_attn, &ln("wv"), m, d, d);
+            self.rope_at(&mut q, m, pos0);
+            self.rope_at(&mut k, m, pos0);
+            kv.k[li].extend_from_slice(&k);
+            kv.v[li].extend_from_slice(&v);
+
+            let kc = &kv.k[li];
+            let vc = &kv.v[li];
+            let mut ctx = vec![0.0f32; m * d];
+            let mut sc = vec![0.0f32; pos0 + m];
+            for hi in 0..h {
+                for i in 0..m {
+                    let ti = pos0 + i;
+                    let qoff = i * d + hi * hd;
+                    let mut maxv = f32::NEG_INFINITY;
+                    for s in 0..=ti {
+                        let koff = s * d + hi * hd;
+                        let mut dot = 0.0f32;
+                        for dd in 0..hd {
+                            dot += q[qoff + dd] * kc[koff + dd];
+                        }
+                        let val = dot * scale;
+                        sc[s] = val;
+                        if val > maxv {
+                            maxv = val;
+                        }
+                    }
+                    let mut denom = 0.0f32;
+                    for s in 0..=ti {
+                        let e = (sc[s] - maxv).exp();
+                        sc[s] = e;
+                        denom += e;
+                    }
+                    for s in 0..=ti {
+                        let a = sc[s] / denom;
+                        let voff = s * d + hi * hd;
+                        for dd in 0..hd {
+                            ctx[qoff + dd] += a * vc[voff + dd];
+                        }
+                    }
+                }
+            }
+
+            let y = self.mm_nt(&ctx, &ln("wo"), m, d, d);
+            for i in 0..m * d {
+                x[i] += y[i];
+            }
+
+            let h_mlp = rmsnorm_fwd_f32(&x, self.p(&ln("mlp_norm")), d);
+            let gate = self.mm_nt(&h_mlp, &ln("w_gate"), m, d, f);
+            let up = self.mm_nt(&h_mlp, &ln("w_up"), m, d, f);
+            let mut hprod = vec![0.0f32; m * f];
+            for i in 0..m * f {
+                hprod[i] = silu_f32(gate[i]) * up[i];
+            }
+            let y = self.mm_nt(&hprod, &ln("w_down"), m, f, d);
+            for i in 0..m * d {
+                x[i] += y[i];
+            }
+        }
+        kv.len += m;
+
+        if !emit {
+            return None;
+        }
+        let xf = rmsnorm_fwd_f32(&x[(m - 1) * d..m * d], self.p("final_norm"), d);
+        let logits = self.mm_nt(&xf, "lm_head", 1, d, self.dims.v);
+        let mut best = 0usize;
+        for (j, &lx) in logits.iter().enumerate() {
+            if lx > logits[best] {
+                best = j;
+            }
+        }
+        Some(best as i32)
+    }
 }
 
 /// y = x * rsqrt(mean(x^2) + eps) * g per row, all in f32.
@@ -1519,5 +1814,195 @@ mod tests {
         assert!(be.run_model("qloss", &t2, &g, &w).is_err());
         // unknown executable
         assert!(be.run_model("nonexistent", &tokens, &g, &w).is_err());
+    }
+
+    // -----------------------------------------------------------------
+    // incremental KV state
+
+    /// Serving-shape backend with f32 activations and a mixed grid, the
+    /// configuration the KV path runs under in production.
+    fn kv_backend() -> (InterpBackend, DeviceWeights, DeviceGrids, Vec<i32>) {
+        let (be, store, tokens) = tiny_backend();
+        let index = BlockIndex::from_manifest(&be.manifest).unwrap();
+        let mut alloc = BitAlloc::uniform(&index, 2);
+        for (i, b) in alloc.bits.iter_mut().enumerate() {
+            *b = [2, 4, 8][i % 3];
+        }
+        let w = be.upload_weights(&store).unwrap();
+        let g = be.upload_grids(&alloc.grids(&index)).unwrap();
+        be.set_activations(ActPrecision::F32).unwrap();
+        (be, w, g, tokens)
+    }
+
+    /// Full-window recompute reference: the batched `qpredict` argmax
+    /// at the last real position of a zero-padded window.
+    fn recompute_emit(
+        be: &InterpBackend,
+        w: &DeviceWeights,
+        g: &DeviceGrids,
+        window: &[i32],
+    ) -> i32 {
+        let batch = be.manifest.exec("qpredict").unwrap().batch;
+        let seq = be.manifest.config.seq_len;
+        let mut toks = vec![0i32; batch * seq];
+        toks[..window.len()].copy_from_slice(window);
+        let preds = be.run_model("qpredict", &toks, g, w).unwrap()[0].to_vec_i32().unwrap();
+        preds[window.len() - 1]
+    }
+
+    /// The tentpole acceptance property at the backend level: prefill
+    /// in chunks of 1, 3, or the whole prompt, then decode one token a
+    /// step off the cache — every emitted token identical to the
+    /// full-window recompute argmax.
+    #[test]
+    fn kv_decode_matches_full_window_recompute_bitwise() {
+        let (be, w, g, tokens) = kv_backend();
+        if !be.kv_active() {
+            return; // SCALEBITS_KV=off lane: recompute covered elsewhere
+        }
+        let seq = be.manifest.config.seq_len;
+        let prompt = &tokens[..5];
+        for (si, chunk) in [1usize, 3, prompt.len()].iter().enumerate() {
+            let sid = 100 + si as u64;
+            // chunked prefill: every chunk but the last is a non-emit row
+            let mut fed = 0usize;
+            let mut toks = prompt.to_vec();
+            while fed + chunk < prompt.len() {
+                fed += chunk;
+                let rows = [KvRow { seq: sid, window: &prompt[..fed], emit: false }];
+                let out = be.kv_step("qpredict", &rows, &g, &w).unwrap();
+                assert_eq!(out, vec![None]);
+            }
+            // emit chunk + decode loop: one new token per step
+            while toks.len() < seq {
+                let rows = [KvRow { seq: sid, window: &toks, emit: true }];
+                let got = be.kv_step("qpredict", &rows, &g, &w).unwrap()[0].unwrap();
+                assert_eq!(
+                    got,
+                    recompute_emit(&be, &w, &g, &toks),
+                    "chunk {chunk}, window {}",
+                    toks.len()
+                );
+                toks.push(got);
+            }
+            assert_eq!(be.kv_len(sid), seq);
+            be.kv_free(sid);
+            assert_eq!(be.kv_len(sid), 0);
+        }
+    }
+
+    /// Snapshot/seed round trip: blocks snapshotted from one sequence
+    /// seed another with the same prompt prefix; the seeded sequence
+    /// decodes bitwise-identically, and freeing the blobs afterwards
+    /// does not disturb it (blobs are copies, not aliases).
+    #[test]
+    fn kv_snapshot_seeds_fresh_sequence_bitwise() {
+        let (be, w, g, tokens) = kv_backend();
+        if !be.kv_active() {
+            return;
+        }
+        let prompt = &tokens[..6];
+        let rows = [KvRow { seq: 1, window: prompt, emit: true }];
+        let a_tok = be.kv_step("qpredict", &rows, &g, &w).unwrap()[0].unwrap();
+
+        let b1 = be.kv_snapshot(1, 0, 3).unwrap();
+        let b2 = be.kv_snapshot(1, 3, 5).unwrap();
+        assert!(be.kv_snapshot(1, 5, 9).is_none(), "snapshot past cached length");
+        assert!(be.kv_snapshot(1, 3, 3).is_none(), "empty snapshot");
+        let c = &be.manifest.config;
+        assert_eq!(be.kv_token_bytes(), c.n_layers * 2 * c.d_model * 4);
+
+        // seeding an existing sequence or from a missing blob is a no-op
+        assert_eq!(be.kv_seed(1, &[b1]), 0);
+        assert_eq!(be.kv_seed(2, &[b1, 987_654]), 0);
+
+        assert_eq!(be.kv_seed(2, &[b1, b2]), 5);
+        assert_eq!(be.kv_len(2), 5);
+        let rows = [KvRow { seq: 2, window: prompt, emit: true }];
+        let b_tok = be.kv_step("qpredict", &rows, &g, &w).unwrap()[0].unwrap();
+        assert_eq!(b_tok, a_tok, "seeded decode diverged from own-prefill decode");
+        assert_eq!(b_tok, recompute_emit(&be, &w, &g, prompt));
+
+        // freeing the blobs must not disturb the seeded live sequence
+        be.kv_blob_free(b1);
+        be.kv_blob_free(b2);
+        let mut toks = prompt.to_vec();
+        toks.push(b_tok);
+        let rows = [KvRow { seq: 2, window: &toks, emit: true }];
+        let nxt = be.kv_step("qpredict", &rows, &g, &w).unwrap()[0].unwrap();
+        assert_eq!(nxt, recompute_emit(&be, &w, &g, &toks));
+    }
+
+    /// The perf contract the ledger witnesses: a decode step moves only
+    /// the NEW tokens to the backend, not the whole window.
+    #[test]
+    fn kv_step_transfers_only_new_tokens() {
+        let (be, w, g, tokens) = kv_backend();
+        if !be.kv_active() {
+            return;
+        }
+        let prompt = &tokens[..6];
+        let rows = [KvRow { seq: 7, window: prompt, emit: true }];
+        be.reset_transfer_stats();
+        let tok = be.kv_step("qpredict", &rows, &g, &w).unwrap()[0].unwrap();
+        let t = be.transfer_stats();
+        assert_eq!((t.uploads, t.bytes), (1, prompt.len() as u64 * 4));
+
+        let mut toks = prompt.to_vec();
+        toks.push(tok);
+        let rows = [KvRow { seq: 7, window: &toks, emit: true }];
+        be.reset_transfer_stats();
+        be.kv_step("qpredict", &rows, &g, &w).unwrap();
+        let t = be.transfer_stats();
+        assert_eq!((t.uploads, t.bytes), (1, 4), "decode step should move ONE token");
+    }
+
+    #[test]
+    fn kv_step_rejects_malformed_rows() {
+        let (be, w, g, tokens) = kv_backend();
+        // inactive under f64 activations
+        be.set_activations(ActPrecision::F64).unwrap();
+        assert!(!be.kv_active());
+        let rows = [KvRow { seq: 9, window: &tokens[..4], emit: true }];
+        assert!(be.kv_step("qpredict", &rows, &g, &w).is_err());
+        be.set_activations(ActPrecision::F32).unwrap();
+        if !be.kv_active() {
+            return;
+        }
+        // non-qpredict executables have no incremental path
+        assert!(be.kv_step("qlogits", &rows, &g, &w).is_err());
+        // window longer than the compiled sequence length
+        let long = vec![0i32; be.manifest.config.seq_len + 1];
+        let rows = [KvRow { seq: 9, window: &long, emit: true }];
+        assert!(be.kv_step("qpredict", &rows, &g, &w).is_err());
+        // empty window
+        let rows = [KvRow { seq: 9, window: &[], emit: false }];
+        assert!(be.kv_step("qpredict", &rows, &g, &w).is_err());
+        // out-of-vocab token
+        let bad = [be.manifest.config.vocab as i32];
+        let rows = [KvRow { seq: 9, window: &bad, emit: true }];
+        assert!(be.kv_step("qpredict", &rows, &g, &w).is_err());
+        // an emit row whose window holds nothing new
+        let rows = [KvRow { seq: 10, window: &tokens[..4], emit: false }];
+        be.kv_step("qpredict", &rows, &g, &w).unwrap();
+        let rows = [KvRow { seq: 10, window: &tokens[..4], emit: true }];
+        assert!(be.kv_step("qpredict", &rows, &g, &w).is_err());
+        // windows must only grow: a shorter window than the cache errors
+        let rows = [KvRow { seq: 10, window: &tokens[..2], emit: false }];
+        assert!(be.kv_step("qpredict", &rows, &g, &w).is_err());
+    }
+
+    /// Mirror of the SIMD override test: when the environment forces
+    /// the KV path off, `kv_active` must report false even with f32
+    /// serving activations.
+    #[test]
+    fn kv_env_override_forces_recompute() {
+        if let Ok(v) = std::env::var("SCALEBITS_KV") {
+            let v = v.to_ascii_lowercase();
+            if v == "off" || v == "recompute" || v == "0" {
+                let (be, _w, _g, _tokens) = kv_backend();
+                assert!(!be.kv_active(), "SCALEBITS_KV={v} must force recompute");
+            }
+        }
     }
 }

@@ -23,6 +23,7 @@ use anyhow::Result;
 
 use super::backend::{
     open_backend, ActPrecision, BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut,
+    KvRow,
 };
 use super::pjrt::Engine;
 use crate::model::{Manifest, WeightStore};
@@ -122,7 +123,8 @@ impl Session {
     /// emitting (the pre-scheduler call shape, kept for sequential
     /// references and tests).
     pub fn decode_step(&self, name: &str, rows: &[&[i32]]) -> Result<Vec<i32>> {
-        let step: Vec<StepRow> = rows.iter().map(|w| StepRow { window: w, emit: true }).collect();
+        let step: Vec<StepRow> =
+            rows.iter().map(|w| StepRow { window: w, emit: true, seq: None, pos0: 0 }).collect();
         self.decode_step_rows(name, &step)?
             .into_iter()
             .map(|o| o.ok_or_else(|| anyhow::anyhow!("emit row returned no token")))
@@ -159,20 +161,56 @@ impl Session {
             rows.len()
         );
         anyhow::ensure!(rows.iter().all(|r| !r.window.is_empty()), "empty window in decode step");
-        let windows: Vec<&[i32]> = rows.iter().map(|r| r.window).collect();
+        let mut next: Vec<Option<i32>> = vec![None; rows.len()];
+
+        // Partition: a row runs the incremental KV path when the
+        // backend keeps per-sequence state, the row carries a handle,
+        // and its window is UNSLID (pos0 == 0 — cached post-RoPE keys
+        // hold absolute positions, so a slid window would need them
+        // re-rotated; a sequence that outgrows seq_len falls back to
+        // recompute permanently). Both paths share the ascending-k
+        // pinned-lane kernel algebra, so the emitted tokens are bitwise
+        // identical either way — the split is purely a cost decision.
+        let kv_on = name == "qpredict" && self.backend.kv_active();
+        let mut kv_rows: Vec<KvRow> = Vec::new();
+        let mut kv_idx: Vec<usize> = Vec::new();
+        let mut rc_rows: Vec<&StepRow> = Vec::new();
+        let mut rc_idx: Vec<usize> = Vec::new();
+        for (i, r) in rows.iter().enumerate() {
+            match r.seq {
+                Some(sid) if kv_on && r.pos0 == 0 && r.window.len() <= seq => {
+                    kv_rows.push(KvRow { seq: sid, window: r.window, emit: r.emit });
+                    kv_idx.push(i);
+                }
+                _ => {
+                    rc_rows.push(r);
+                    rc_idx.push(i);
+                }
+            }
+        }
+
+        if !kv_rows.is_empty() {
+            let out = self.backend.kv_step(name, &kv_rows, &self.grids, &self.weights)?;
+            for (i, t) in kv_idx.into_iter().zip(out) {
+                next[i] = t;
+            }
+        }
+        if rc_rows.is_empty() {
+            return Ok(next);
+        }
+
+        let windows: Vec<&[i32]> = rc_rows.iter().map(|r| r.window).collect();
         let (tokens, pos) = assemble_step(&windows, batch, seq);
         let out = self.run(name, &tokens)?;
-        let mut next = Vec::with_capacity(rows.len());
         if name == "qpredict" {
             let preds = out[0].to_vec_i32()?;
-            for (b, row) in rows.iter().enumerate() {
-                next.push(row.emit.then(|| preds[b * seq + pos[b]]));
+            for (b, row) in rc_rows.iter().enumerate() {
+                next[rc_idx[b]] = row.emit.then(|| preds[b * seq + pos[b]]);
             }
         } else {
             let logits = out[0].to_vec_f32()?;
-            for (b, row) in rows.iter().enumerate() {
+            for (b, row) in rc_rows.iter().enumerate() {
                 if !row.emit {
-                    next.push(None);
                     continue;
                 }
                 let base = (b * seq + pos[b]) * vocab;
@@ -183,7 +221,7 @@ impl Session {
                         best = v;
                     }
                 }
-                next.push(Some(best as i32));
+                next[rc_idx[b]] = Some(best as i32);
             }
         }
         Ok(next)
@@ -197,6 +235,12 @@ impl Session {
 pub struct StepRow<'a> {
     pub window: &'a [i32],
     pub emit: bool,
+    /// Stable per-sequence handle for the backend's incremental KV
+    /// state. `None` = stateless recompute (the pre-KV call shape).
+    pub seq: Option<u64>,
+    /// Absolute position of `window[0]`. Non-zero means the window has
+    /// SLID past the compiled seq_len; such rows always recompute.
+    pub pos0: usize,
 }
 
 /// Assemble the padded row-major `[batch, seq]` token tensor for one

@@ -35,12 +35,25 @@ struct State<T> {
     closed: bool,
 }
 
+/// Effective-rank function for a rank-aware queue: higher pops first.
+/// The `Instant` is "now", so a ranker can promote by waited time (the
+/// same aging semantics as the scheduler's holding pen — see
+/// `serve::sched`). Must be cheap: it runs once per queued item per pop.
+pub type Ranker<T> = Box<dyn Fn(&T, Instant) -> u8 + Send + Sync>;
+
 /// Bounded blocking queue. Share via `Arc`.
+///
+/// Plain `new` pops FIFO. [`Bounded::with_ranker`] pops the
+/// highest-ranked item instead (FIFO *within* a rank — the scan takes
+/// the FIRST occurrence of the maximum), so a High-priority request
+/// never waits behind a deep Low backlog just to reach the holding
+/// pen, while an aging ranker keeps the backlog starvation-free.
 pub struct Bounded<T> {
     cap: usize,
     state: Mutex<State<T>>,
     not_empty: Condvar,
     not_full: Condvar,
+    ranker: Option<Ranker<T>>,
 }
 
 impl<T> Bounded<T> {
@@ -51,7 +64,36 @@ impl<T> Bounded<T> {
             state: Mutex::new(State { q: VecDeque::new(), closed: false }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
+            ranker: None,
         }
+    }
+
+    /// A queue whose pops are rank-ordered (stable within a class).
+    pub fn with_ranker(cap: usize, ranker: Ranker<T>) -> Bounded<T> {
+        let mut q = Bounded::new(cap);
+        q.ranker = Some(ranker);
+        q
+    }
+
+    /// Dequeue one item: FIFO head, or — under a ranker — the first
+    /// occurrence of the maximum effective rank (`>` keeps the scan
+    /// stable, so equal-ranked items leave in arrival order).
+    fn take(&self, s: &mut State<T>) -> Option<T> {
+        let Some(ranker) = &self.ranker else { return s.q.pop_front() };
+        if s.q.is_empty() {
+            return None;
+        }
+        let now = Instant::now();
+        let mut best = 0usize;
+        let mut best_rank = ranker(&s.q[0], now);
+        for (i, v) in s.q.iter().enumerate().skip(1) {
+            let r = ranker(v, now);
+            if r > best_rank {
+                best = i;
+                best_rank = r;
+            }
+        }
+        s.q.remove(best)
     }
 
     /// Non-blocking push; hands the value back on a full or closed queue.
@@ -89,7 +131,7 @@ impl<T> Bounded<T> {
     pub fn pop(&self) -> Option<T> {
         let mut s = self.state.lock().unwrap();
         loop {
-            if let Some(v) = s.q.pop_front() {
+            if let Some(v) = self.take(&mut s) {
                 self.not_full.notify_one();
                 return Some(v);
             }
@@ -105,7 +147,7 @@ impl<T> Bounded<T> {
     /// `Timeout` doubles as "empty right now".
     pub fn try_pop(&self) -> Pop<T> {
         let mut s = self.state.lock().unwrap();
-        if let Some(v) = s.q.pop_front() {
+        if let Some(v) = self.take(&mut s) {
             self.not_full.notify_one();
             return Pop::Item(v);
         }
@@ -121,7 +163,7 @@ impl<T> Bounded<T> {
         let deadline = Instant::now() + timeout;
         let mut s = self.state.lock().unwrap();
         loop {
-            if let Some(v) = s.q.pop_front() {
+            if let Some(v) = self.take(&mut s) {
                 self.not_full.notify_one();
                 return Pop::Item(v);
             }
@@ -316,6 +358,59 @@ mod tests {
         assert_eq!(q.close_and_drain(), 2);
         assert_eq!(q.pop(), None, "drained queue must be empty and closed");
         assert!(q.try_push(3).is_err());
+    }
+
+    // -- rank-aware pops ----------------------------------------------
+
+    /// (priority, payload) items under a static ranker: higher class
+    /// pops first, FIFO within a class.
+    #[test]
+    fn ranked_pops_are_class_ordered_and_stable_within_class() {
+        let q: Bounded<(u8, i32)> = Bounded::with_ranker(8, Box::new(|v, _| v.0));
+        for item in [(0, 1), (0, 2), (2, 3), (1, 4), (2, 5), (0, 6)] {
+            q.try_push(item).unwrap();
+        }
+        let mut order = Vec::new();
+        while let Pop::Item(v) = q.try_pop() {
+            order.push(v.1);
+        }
+        assert_eq!(order, vec![3, 5, 4, 1, 2, 6], "class desc, arrival order within class");
+    }
+
+    #[test]
+    fn ranked_pop_reaches_a_high_item_behind_a_deep_low_backlog() {
+        let q: Bounded<(u8, i32)> = Bounded::with_ranker(64, Box::new(|v, _| v.0));
+        for i in 0..20 {
+            q.try_push((0, i)).unwrap();
+        }
+        q.try_push((2, 99)).unwrap();
+        match q.pop() {
+            Some(v) => assert_eq!(v.1, 99, "High must not wait FIFO behind 20 Lows"),
+            None => panic!("expected an item"),
+        }
+    }
+
+    /// The no-starvation property at the queue: under an AGING ranker
+    /// (one class per interval waited, capped), an old Low ranks equal
+    /// to a fresh High — and then wins on arrival order.
+    #[test]
+    fn aging_ranker_never_starves_an_old_low_item() {
+        let aging = Duration::from_millis(10);
+        let q: Bounded<(u8, Instant)> = Bounded::with_ranker(
+            8,
+            Box::new(move |v, now| {
+                let waited = now.saturating_duration_since(v.1);
+                let promoted = (waited.as_nanos() / aging.as_nanos().max(1)).min(2) as u8;
+                (v.0 + promoted).min(2)
+            }),
+        );
+        q.try_push((0, Instant::now())).unwrap(); // Low, will age to rank 2
+        std::thread::sleep(aging * 2 + Duration::from_millis(5));
+        q.try_push((2, Instant::now())).unwrap(); // fresh High, rank 2
+        let first = q.pop().unwrap();
+        assert_eq!(first.0, 0, "aged Low ties the fresh High and wins FIFO");
+        let second = q.pop().unwrap();
+        assert_eq!(second.0, 2);
     }
 
     #[test]

@@ -34,13 +34,47 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use super::admission::{Bounded, PushError};
+use super::cache::PrefixCache;
 use super::router::DecodeSeq;
+
+/// How the client picks a request's home worker.
+///
+/// Prefix caches are PER WORKER (each worker owns its K/V state), so
+/// placement decides whether shared-template traffic ever hits: under
+/// pure round-robin two requests with identical prompts land on
+/// different workers and each pays full prefill.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Placement {
+    /// Cache-aware: probe every worker's prefix cache with the prompt
+    /// and home the request on the longest match; no match anywhere
+    /// falls back to round-robin. Spill-over on a full queue is
+    /// unchanged — a hot worker's backlog still overflows to its
+    /// neighbors rather than blocking the client.
+    #[default]
+    Prefix,
+    /// Ignore the caches: pure round-robin with spill-over (the
+    /// pre-cache behavior; also what `Prefix` degrades to when the
+    /// cache is disabled).
+    RoundRobin,
+}
+
+impl std::str::FromStr for Placement {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Placement, String> {
+        match s {
+            "prefix" => Ok(Placement::Prefix),
+            "rr" | "round-robin" => Ok(Placement::RoundRobin),
+            other => Err(format!("unknown placement '{other}' (expected prefix|rr)")),
+        }
+    }
+}
 
 // ---------------------------------------------------------------------
 // request
@@ -360,6 +394,10 @@ pub struct Client {
     shared: Arc<Shared>,
     rr: usize,
     vocab: usize,
+    /// Per-worker prefix caches, probed read-only for placement
+    /// (empty when the server runs without a cache).
+    caches: Vec<Arc<Mutex<PrefixCache>>>,
+    placement: Placement,
 }
 
 impl Clone for Client {
@@ -368,7 +406,14 @@ impl Clone for Client {
         // beginning at worker 0 would skew load to low-index workers.
         let rr = self.shared.clone_cursor.fetch_add(1, Ordering::Relaxed) as usize
             % self.queues.len().max(1);
-        Client { queues: self.queues.clone(), shared: self.shared.clone(), rr, vocab: self.vocab }
+        Client {
+            queues: self.queues.clone(),
+            shared: self.shared.clone(),
+            rr,
+            vocab: self.vocab,
+            caches: self.caches.clone(),
+            placement: self.placement,
+        }
     }
 }
 
@@ -377,10 +422,29 @@ impl Client {
         queues: Vec<Arc<Bounded<DecodeSeq>>>,
         shared: Arc<Shared>,
         vocab: usize,
+        caches: Vec<Arc<Mutex<PrefixCache>>>,
+        placement: Placement,
     ) -> Client {
         let rr =
             shared.clone_cursor.fetch_add(1, Ordering::Relaxed) as usize % queues.len().max(1);
-        Client { queues, shared, rr, vocab }
+        Client { queues, shared, rr, vocab, caches, placement }
+    }
+
+    /// Cache-aware home choice: the worker whose prefix cache matches
+    /// the prompt deepest, `None` when nothing matches (or placement
+    /// is round-robin / no caches exist).
+    fn prefix_home(&self, tokens: &[i32]) -> Option<usize> {
+        if self.placement != Placement::Prefix || self.caches.is_empty() {
+            return None;
+        }
+        let mut best: Option<(usize, usize)> = None; // (depth, worker)
+        for (w, cache) in self.caches.iter().enumerate() {
+            let d = cache.lock().expect("cache lock").match_depth(tokens);
+            if d > best.map_or(0, |(bd, _)| bd) {
+                best = Some((d, w));
+            }
+        }
+        best.map(|(_, w)| w)
     }
 
     /// Validate a request; `Some(reason)` means reject at admission.
@@ -415,11 +479,21 @@ impl Client {
         let (tx, rx) = mpsc::channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let submitted = Instant::now();
+        let prefix_home = self.prefix_home(&req.tokens);
         let mut msg = DecodeSeq::admit(id, req, tx, cancel.clone(), submitted);
 
         let n = self.queues.len();
-        let home = self.rr % n;
-        self.rr = (self.rr + 1) % n;
+        let home = match prefix_home {
+            // cache-aware: land where the prefix already lives; the
+            // round-robin cursor does not advance, so cold requests
+            // still spread evenly
+            Some(w) => w % n,
+            None => {
+                let h = self.rr % n;
+                self.rr = (self.rr + 1) % n;
+                h
+            }
+        };
         let mut any_live = false;
         for k in 0..n {
             match self.queues[(home + k) % n].try_push(msg) {
@@ -595,6 +669,39 @@ mod tests {
         assert_eq!(r.priority, Priority::High);
         assert!(!r.record);
         assert_eq!(r.prefill_chunk, Some(16));
+    }
+
+    #[test]
+    fn placement_parses() {
+        assert_eq!("prefix".parse::<Placement>(), Ok(Placement::Prefix));
+        assert_eq!("rr".parse::<Placement>(), Ok(Placement::RoundRobin));
+        assert_eq!("round-robin".parse::<Placement>(), Ok(Placement::RoundRobin));
+        assert!("random".parse::<Placement>().is_err());
+        assert_eq!(Placement::default(), Placement::Prefix);
+    }
+
+    #[test]
+    fn prefix_placement_homes_on_the_deepest_match() {
+        let queues: Vec<Arc<Bounded<DecodeSeq>>> =
+            vec![Arc::new(Bounded::new(4)), Arc::new(Bounded::new(4))];
+        let caches: Vec<Arc<Mutex<PrefixCache>>> = (0..2)
+            .map(|_| Arc::new(Mutex::new(PrefixCache::new(4, 1 << 20, 0))))
+            .collect();
+        let t: Vec<i32> = (0..8).collect();
+        caches[1].lock().unwrap().insert_path(&t, 8, |_, _| None);
+        let c = Client::new(
+            queues.clone(),
+            Arc::new(Shared::default()),
+            1000,
+            caches.clone(),
+            Placement::Prefix,
+        );
+        assert_eq!(c.prefix_home(&t), Some(1), "worker 1 holds the prefix");
+        assert_eq!(c.prefix_home(&[900, 901, 902, 903]), None, "cold prompt -> round-robin");
+        // round-robin placement never consults the caches
+        let c =
+            Client::new(queues, Arc::new(Shared::default()), 1000, caches, Placement::RoundRobin);
+        assert_eq!(c.prefix_home(&t), None);
     }
 
     #[test]

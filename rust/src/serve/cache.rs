@@ -1,0 +1,423 @@
+//! Radix prefix cache over prompt token blocks (per worker).
+//!
+//! Real traffic is shared-prefix-heavy: system prompts, few-shot
+//! templates, multi-turn continuations. This module caches completed
+//! prompt prefixes in fixed-size TOKEN BLOCKS arranged as a radix tree
+//! — each edge is one block of tokens, each node the prefix spelled by
+//! the path to it — so a new request whose prompt extends a cached
+//! prefix skips exactly the prefill iterations covering the matched
+//! blocks (the worker starts its prefill cursor at the matched depth).
+//!
+//! Payloads: when the backend keeps incremental K/V state, each node
+//! carries a snapshot blob id ([`crate::runtime::ExecBackend::kv_snapshot`])
+//! so a hit also seeds the new sequence's K/V — the skipped tokens
+//! never touch the engine at all. Without KV (recompute mode) a hit
+//! still skips the prefill ROWS: the emit row recomputes the full
+//! window anyway, so intermediate prefill rows are pure scheduling
+//! cost and skipping them cannot change emitted tokens.
+//!
+//! Lifecycle rules:
+//! * **Pinning** — `lookup_pin` refcounts every matched node; a live
+//!   sequence pins its prefix until the worker retires it (`unpin`),
+//!   so eviction can never free K/V a sequence is decoding against.
+//! * **Eviction** — leaf-only LRU against a byte budget: the least
+//!   recently touched unpinned LEAF is evicted first (a radix interior
+//!   node is by construction at least as recently used as its
+//!   descendants' pins), freeing its K/V blob for the backend to drop.
+//! * **Fixed blocks, no edge splits** — prompts are cached in whole
+//!   blocks only (`depth` is always a multiple of `block_tokens`);
+//!   the tail short of a block boundary is never cached. This keeps
+//!   the tree append-only under concurrent-looking access patterns
+//!   and makes byte accounting exact: every node costs the same.
+//!
+//! The cache itself is single-worker state (one per worker thread,
+//! behind a mutex only for the router's read-side placement probe);
+//! hit/miss/saved accounting lives in [`super::metrics::ServeMetrics`].
+
+use std::collections::HashMap;
+
+/// One radix node: the edge INTO this node is `block_tokens` tokens
+/// (the key in the parent's `children` map).
+#[derive(Debug, Default)]
+struct Node {
+    children: HashMap<Box<[i32]>, Node>,
+    /// Backend K/V snapshot covering this node's block (`None` when
+    /// the cache runs without incremental KV state).
+    blob: Option<u64>,
+    /// Logical LRU clock value of the last touch.
+    last: u64,
+    /// Live sequences currently pinning this node.
+    refs: u32,
+}
+
+/// The per-worker prefix cache. See the module docs for semantics.
+pub struct PrefixCache {
+    block: usize,
+    /// Byte budget; `0` disables caching entirely (every lookup
+    /// misses, inserts are dropped).
+    budget: usize,
+    /// K/V bytes per cached token (backend-reported; may be 0 in
+    /// recompute mode — node cost still counts the token key).
+    token_bytes: usize,
+    bytes: usize,
+    clock: u64,
+    root: Node,
+}
+
+impl PrefixCache {
+    pub fn new(block_tokens: usize, budget_bytes: usize, token_bytes: usize) -> PrefixCache {
+        assert!(block_tokens > 0, "prefix-cache block must be positive");
+        PrefixCache {
+            block: block_tokens,
+            budget: budget_bytes,
+            token_bytes,
+            bytes: 0,
+            clock: 0,
+            root: Node::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block
+    }
+
+    /// Accounted bytes currently held.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Cost of one node: its K/V payload plus the token key itself, so
+    /// the budget stays meaningful even in recompute mode (where
+    /// `token_bytes == 0` but the tree still holds the tokens).
+    fn node_bytes(&self) -> usize {
+        self.block * (self.token_bytes + 4)
+    }
+
+    /// Longest cached prefix of `tokens`, in tokens (a multiple of the
+    /// block size). Read-only: no pins, no LRU touch — this is the
+    /// router's placement probe, called from other threads' submits.
+    pub fn match_depth(&self, tokens: &[i32]) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        let mut node = &self.root;
+        let mut depth = 0usize;
+        while depth + self.block <= tokens.len() {
+            match node.children.get(&tokens[depth..depth + self.block]) {
+                Some(child) => {
+                    node = child;
+                    depth += self.block;
+                }
+                None => break,
+            }
+        }
+        depth
+    }
+
+    /// Match, PIN and touch the longest cached prefix of `tokens` not
+    /// exceeding `max_depth` tokens (the caller clamps to
+    /// `prompt_len - 1`: the emit row must feed at least one token).
+    /// Returns the pinned depth and the K/V blob ids covering
+    /// `[0, blobs.len() * block)` — truncated at the first node with no
+    /// blob, so the ids always seed a CONSECUTIVE prefix.
+    pub fn lookup_pin(&mut self, tokens: &[i32], max_depth: usize) -> (usize, Vec<u64>) {
+        if !self.enabled() {
+            return (0, Vec::new());
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let mut node = &mut self.root;
+        let mut depth = 0usize;
+        let mut blobs = Vec::new();
+        let mut contiguous = true;
+        while depth + self.block <= tokens.len().min(max_depth) {
+            match node.children.get_mut(&tokens[depth..depth + self.block]) {
+                Some(child) => {
+                    child.refs += 1;
+                    child.last = clock;
+                    match child.blob {
+                        Some(b) if contiguous => blobs.push(b),
+                        _ => contiguous = false,
+                    }
+                    depth += self.block;
+                    node = child;
+                }
+                None => break,
+            }
+        }
+        (depth, blobs)
+    }
+
+    /// Release the pins `lookup_pin` took down to `depth` (the exact
+    /// depth it returned). Every worker retire path calls this.
+    pub fn unpin(&mut self, tokens: &[i32], depth: usize) {
+        let mut node = &mut self.root;
+        let mut d = 0usize;
+        while d + self.block <= depth {
+            match node.children.get_mut(&tokens[d..d + self.block]) {
+                Some(child) => {
+                    child.refs = child.refs.saturating_sub(1);
+                    d += self.block;
+                    node = child;
+                }
+                None => return,
+            }
+        }
+    }
+
+    /// Insert the block-aligned prefix of `tokens[..upto]`, creating
+    /// missing nodes. `make_blob(start, end)` is called ONLY for newly
+    /// created nodes (never for blocks already cached — the existing
+    /// blob stays, so duplicate inserts cannot leak backend blobs).
+    /// Existing path nodes get an LRU touch. Returns tokens newly
+    /// cached. Does NOT evict — callers run [`Self::evict_to_budget`]
+    /// after, so a sequence's own fresh blocks are not starved out by
+    /// insertion order.
+    pub fn insert_path(
+        &mut self,
+        tokens: &[i32],
+        upto: usize,
+        mut make_blob: impl FnMut(usize, usize) -> Option<u64>,
+    ) -> usize {
+        if !self.enabled() {
+            return 0;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let node_bytes = self.node_bytes();
+        let end = (upto.min(tokens.len()) / self.block) * self.block;
+        let mut node = &mut self.root;
+        let mut depth = 0usize;
+        let mut created = 0usize;
+        while depth + self.block <= end {
+            let key = &tokens[depth..depth + self.block];
+            if !node.children.contains_key(key) {
+                let blob = make_blob(depth, depth + self.block);
+                node.children.insert(key.into(), Node { blob, ..Node::default() });
+                self.bytes += node_bytes;
+                created += self.block;
+            }
+            let child = node.children.get_mut(key).expect("just ensured");
+            child.last = clock;
+            depth += self.block;
+            node = child;
+        }
+        created
+    }
+
+    /// Leaf-only LRU eviction until the accounted bytes fit the
+    /// budget (or nothing evictable remains — pinned nodes and
+    /// interior nodes with surviving children never go). Returns the
+    /// K/V blob ids freed, for the caller to hand back to the backend.
+    pub fn evict_to_budget(&mut self) -> Vec<u64> {
+        let mut freed = Vec::new();
+        while self.bytes > self.budget {
+            let Some(clock) = oldest_evictable(&self.root) else { break };
+            let Some(blob) = remove_leaf(&mut self.root, clock) else { break };
+            self.bytes -= self.node_bytes().min(self.bytes);
+            if let Some(b) = blob {
+                freed.push(b);
+            }
+        }
+        freed
+    }
+}
+
+/// Smallest LRU clock among evictable leaves (no children, no pins).
+fn oldest_evictable(node: &Node) -> Option<u64> {
+    let mut best: Option<u64> = None;
+    for c in node.children.values() {
+        let m = if c.children.is_empty() {
+            if c.refs == 0 {
+                Some(c.last)
+            } else {
+                None
+            }
+        } else {
+            oldest_evictable(c)
+        };
+        if let Some(m) = m {
+            best = Some(best.map_or(m, |b| b.min(m)));
+        }
+    }
+    best
+}
+
+/// Remove ONE evictable leaf with the given clock value; returns its
+/// blob slot (`Some(None)` = removed a KV-less node).
+fn remove_leaf(node: &mut Node, clock: u64) -> Option<Option<u64>> {
+    let key = node
+        .children
+        .iter()
+        .find(|(_, c)| c.children.is_empty() && c.refs == 0 && c.last == clock)
+        .map(|(k, _)| k.clone());
+    if let Some(k) = key {
+        let gone = node.children.remove(&k).expect("key just found");
+        return Some(gone.blob);
+    }
+    for c in node.children.values_mut() {
+        if let Some(b) = remove_leaf(c, clock) {
+            return Some(b);
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize) -> Vec<i32> {
+        (0..n as i32).collect()
+    }
+
+    type BlobLog = std::rc::Rc<std::cell::RefCell<Vec<(usize, usize)>>>;
+
+    /// Blob maker that records which ranges were materialized.
+    fn counting_blobs() -> (impl FnMut(usize, usize) -> Option<u64>, BlobLog) {
+        let log: BlobLog = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let l2 = log.clone();
+        let mut next = 100u64;
+        (
+            move |s, e| {
+                l2.borrow_mut().push((s, e));
+                next += 1;
+                Some(next)
+            },
+            log,
+        )
+    }
+
+    #[test]
+    fn match_depth_walks_whole_blocks_only() {
+        let mut c = PrefixCache::new(4, 1 << 20, 8);
+        let t = toks(16);
+        assert_eq!(c.match_depth(&t), 0, "empty cache misses");
+        let (mk, _log) = counting_blobs();
+        assert_eq!(c.insert_path(&t, 10, mk), 8, "10 tokens -> two whole blocks");
+        assert_eq!(c.match_depth(&t), 8);
+        assert_eq!(c.match_depth(&t[..7]), 4, "partial last block does not match");
+        assert_eq!(c.match_depth(&t[..3]), 0);
+        // diverging tokens stop the walk at the shared prefix
+        let mut other = t.clone();
+        other[5] = 999;
+        assert_eq!(c.match_depth(&other), 4);
+    }
+
+    #[test]
+    fn lookup_pin_returns_consecutive_blobs_and_respects_max_depth() {
+        let mut c = PrefixCache::new(4, 1 << 20, 8);
+        let t = toks(16);
+        let (mk, log) = counting_blobs();
+        c.insert_path(&t, 16, mk);
+        assert_eq!(&*log.borrow(), &[(0, 4), (4, 8), (8, 12), (12, 16)]);
+
+        let (d, blobs) = c.lookup_pin(&t, usize::MAX);
+        assert_eq!(d, 16);
+        assert_eq!(blobs.len(), 4);
+        // max_depth clamps to whole blocks below it (emit row must eat)
+        let (d2, blobs2) = c.lookup_pin(&t, 15);
+        assert_eq!(d2, 12);
+        assert_eq!(blobs2.len(), 3);
+        c.unpin(&t, d);
+        c.unpin(&t, d2);
+    }
+
+    #[test]
+    fn duplicate_insert_never_remakes_blobs() {
+        let mut c = PrefixCache::new(4, 1 << 20, 8);
+        let t = toks(12);
+        let (mk, log) = counting_blobs();
+        assert_eq!(c.insert_path(&t, 8, mk), 8);
+        assert_eq!(log.borrow().len(), 2);
+        // re-insert a longer path: only the NEW block materializes
+        let (mk2, log2) = counting_blobs();
+        assert_eq!(c.insert_path(&t, 12, mk2), 4);
+        assert_eq!(&*log2.borrow(), &[(8, 12)]);
+        let bytes = c.bytes();
+        let (mk3, _log3) = counting_blobs();
+        assert_eq!(c.insert_path(&t, 12, mk3), 0, "full duplicate is a no-op");
+        assert_eq!(c.bytes(), bytes);
+    }
+
+    #[test]
+    fn missing_blob_truncates_the_seedable_prefix() {
+        let mut c = PrefixCache::new(4, 1 << 20, 8);
+        let t = toks(12);
+        // middle block has no KV payload (e.g. cached under kv-off)
+        let mut i = 0;
+        c.insert_path(&t, 12, |_, _| {
+            i += 1;
+            if i == 2 {
+                None
+            } else {
+                Some(i)
+            }
+        });
+        let (d, blobs) = c.lookup_pin(&t, usize::MAX);
+        assert_eq!(d, 12, "row-skip depth is the full match");
+        assert_eq!(blobs, vec![1], "seedable K/V stops at the gap");
+        c.unpin(&t, d);
+    }
+
+    #[test]
+    fn eviction_is_lru_leaf_only_and_respects_pins() {
+        // node cost: 4 * (8 + 4) = 48 bytes; budget fits 2 nodes
+        let mut c = PrefixCache::new(4, 96, 8);
+        let a = toks(8); // blocks A1 A2
+        let mut b = toks(4);
+        b[0] = 50; // block B1 (diverges immediately)
+        let mut n = 0u64;
+        c.insert_path(&a, 8, |_, _| {
+            n += 1;
+            Some(n)
+        });
+        assert_eq!(c.bytes(), 96);
+        assert!(c.evict_to_budget().is_empty(), "within budget: nothing goes");
+
+        // touch A's path (pin + unpin) so B becomes the LRU leaf later
+        let (d, _) = c.lookup_pin(&a, usize::MAX);
+        c.unpin(&a, d);
+        c.insert_path(&b, 4, |_, _| {
+            n += 1;
+            Some(n)
+        });
+        assert_eq!(c.bytes(), 144);
+        // over budget by one node: the LRU leaf is A2 (deepest A node,
+        // touched before B was inserted — but B is newer, so A2 goes;
+        // A1 is interior and cannot)
+        let freed = c.evict_to_budget();
+        assert_eq!(freed, vec![2], "LRU leaf A2 evicted, blob returned");
+        assert_eq!(c.bytes(), 96);
+        assert_eq!(c.match_depth(&a), 4, "A1 survives as a shorter prefix");
+        assert_eq!(c.match_depth(&b), 4);
+
+        // pin everything: nothing is evictable even at budget 0
+        let (da, _) = c.lookup_pin(&a, usize::MAX);
+        let (db, _) = c.lookup_pin(&b, usize::MAX);
+        c.budget = 0;
+        assert!(c.evict_to_budget().is_empty(), "pinned nodes never go");
+        c.unpin(&a, da);
+        c.unpin(&b, db);
+        let freed = c.evict_to_budget();
+        assert_eq!(freed.len(), 2, "unpinned: everything evicts to zero budget");
+        assert_eq!(c.match_depth(&a), 0);
+    }
+
+    #[test]
+    fn zero_budget_disables_the_cache() {
+        let mut c = PrefixCache::new(4, 0, 8);
+        let t = toks(8);
+        assert!(!c.enabled());
+        assert_eq!(c.insert_path(&t, 8, |_, _| Some(1)), 0);
+        assert_eq!(c.match_depth(&t), 0);
+        assert_eq!(c.lookup_pin(&t, usize::MAX), (0, Vec::new()));
+        assert_eq!(c.bytes(), 0);
+    }
+}

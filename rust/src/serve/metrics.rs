@@ -160,6 +160,18 @@ pub struct ServeMetrics {
     /// prompt fed at once counts one row per `seq_len` stride).
     pub prefill_rows: u64,
     pub prefill_tokens: u64,
+    /// Prompt tokens NOT prefilled because a prefix-cache hit seeded
+    /// them (`serve::cache`). Accounting identity: for recorded
+    /// requests, `prefill_tokens + prefill_tokens_saved` equals the
+    /// sum of their prompt lengths exactly.
+    pub prefill_tokens_saved: u64,
+    /// Prefix-cache outcomes per recorded request: a hit matched at
+    /// least one block, a miss matched none (hits + misses = recorded
+    /// admissions with the cache enabled; both zero when disabled).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Blocks evicted from the prefix cache under byte pressure.
+    pub cache_evictions: u64,
     /// Sequences evicted from the live set back to the holding pen in
     /// favor of higher-ranked work (they resume later with their
     /// generated tokens intact — see `serve::sched`).
@@ -267,6 +279,10 @@ impl ServeMetrics {
         self.total_batch_occupancy += other.total_batch_occupancy;
         self.prefill_rows += other.prefill_rows;
         self.prefill_tokens += other.prefill_tokens;
+        self.prefill_tokens_saved += other.prefill_tokens_saved;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.cache_evictions += other.cache_evictions;
         self.preempted += other.preempted;
         self.blocked_submits += other.blocked_submits;
         self.queue_depth_sum += other.queue_depth_sum;
@@ -436,12 +452,22 @@ mod tests {
             prefill_depth_sum: 1,
             ..Default::default()
         };
+        let c = ServeMetrics {
+            prefill_tokens_saved: 32,
+            cache_hits: 3,
+            cache_misses: 1,
+            cache_evictions: 2,
+            ..Default::default()
+        };
         assert!((a.mean_live_depth() - 6.0).abs() < 1e-12);
         assert!((a.mean_prefill_depth() - 2.0).abs() < 1e-12);
         a.merge(&b);
+        a.merge(&c);
         assert_eq!(a.iterations, 6);
         assert_eq!(a.batches, 12);
         assert_eq!((a.prefill_rows, a.prefill_tokens, a.preempted), (7, 56, 3));
+        assert_eq!(a.prefill_tokens_saved, 32);
+        assert_eq!((a.cache_hits, a.cache_misses, a.cache_evictions), (3, 1, 2));
         assert!((a.mean_live_depth() - 28.0 / 6.0).abs() < 1e-12);
         assert!((a.mean_prefill_depth() - 9.0 / 6.0).abs() < 1e-12);
     }

@@ -66,16 +66,18 @@
 
 pub mod admission;
 pub mod api;
+pub mod cache;
 pub mod metrics;
 pub mod router;
 pub mod sched;
 pub mod trace;
 
-pub use api::{Client, Event, Finish, GenRequest, Outcome, Priority, Ticket, TokenEvent};
+pub use api::{Client, Event, Finish, GenRequest, Outcome, Placement, Priority, Ticket, TokenEvent};
+pub use cache::PrefixCache;
 pub use metrics::{Histogram, ServeMetrics};
 pub use router::{Router, SeqState, ServeConfig, ServeReport};
 pub use sched::{IterationPlan, PlanRow, SchedConfig, SchedSeq, Scheduler};
-pub use trace::{load_trace, TraceArrival};
+pub use trace::{load_trace, shared_template_trace, TraceArrival};
 
 use std::time::{Duration, Instant};
 
@@ -270,6 +272,17 @@ pub fn run_workload(
                 stream.len()
             );
         }
+        if let Some(bad) = entries
+            .iter()
+            .find(|e| e.prompt_start.is_some_and(|s| s + e.prompt_len > stream.len()))
+        {
+            anyhow::bail!(
+                "trace prompt_start {}..+{} does not fit the token stream ({} tokens)",
+                bad.prompt_start.unwrap_or(0),
+                bad.prompt_len,
+                stream.len()
+            );
+        }
     }
     anyhow::ensure!(
         spec.long_prompt_len < stream.len(),
@@ -291,15 +304,18 @@ pub fn run_workload(
         t.wait().context("warmup failed")?;
     }
 
-    // One request: sample a `len`-token prompt anywhere in the stream,
-    // attach the decode contract, submit. Returns (ticket, is_long).
+    // One request: a `len`-token prompt from the stream — sampled
+    // anywhere, or at a trace-pinned `start` (how shared-template
+    // traces make distinct requests spell IDENTICAL prefixes) — with
+    // the decode contract attached. Returns (ticket, is_long).
     let submit_one = |server: &mut Router,
                           rng: &mut crate::util::rng::Rng,
                           len: usize,
-                          max_new: usize|
+                          max_new: usize,
+                          start: Option<usize>|
      -> Result<(Ticket, bool)> {
         let len = len.clamp(1, stream.len() - 1);
-        let start = rng.below(stream.len() - len);
+        let start = start.unwrap_or_else(|| rng.below(stream.len() - len));
         let mut req =
             GenRequest::new(stream.tokens[start..start + len].to_vec()).max_new_tokens(max_new);
         if let Some(d) = spec.deadline {
@@ -323,7 +339,13 @@ pub fn run_workload(
             if target > now {
                 std::thread::sleep(target - now);
             }
-            tickets.push(submit_one(server, &mut rng, e.prompt_len, e.max_new_tokens)?);
+            tickets.push(submit_one(
+                server,
+                &mut rng,
+                e.prompt_len,
+                e.max_new_tokens,
+                e.prompt_start,
+            )?);
         }
     } else {
         for _ in 0..spec.n_requests {
@@ -332,7 +354,7 @@ pub fn run_workload(
             } else {
                 spec.seq_len
             };
-            tickets.push(submit_one(server, &mut rng, len, spec.max_new_tokens)?);
+            tickets.push(submit_one(server, &mut rng, len, spec.max_new_tokens, None)?);
             let gap = rng.exp(spec.rate_per_sec);
             // non-finite gaps can't reach a Duration (from_secs_f64 panics)
             if gap.is_finite() && gap > 0.0 {

@@ -35,7 +35,7 @@
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -46,13 +46,17 @@ use crate::quant::{BitAlloc, BlockIndex};
 use crate::runtime::{open_backend, ActPrecision, BackendKind, Session, StepRow};
 
 use super::admission::Bounded;
-use super::api::{Client, Event, Finish, GenRequest, Outcome, Priority, Shared, Ticket, TokenEvent};
+use super::api::{
+    Client, Event, Finish, GenRequest, Outcome, Placement, Priority, Shared, Ticket, TokenEvent,
+};
+use super::cache::PrefixCache;
 use super::metrics::ServeMetrics;
 use super::sched::{SchedConfig, SchedSeq, Scheduler};
 
 pub const DEFAULT_QUEUE_CAP: usize = 256;
 pub const DEFAULT_IDLE_WINDOW: Duration = Duration::from_millis(3);
 pub const DEFAULT_AGING: Duration = Duration::from_millis(250);
+pub const DEFAULT_CACHE_BLOCK: usize = 16;
 
 /// Server configuration. `alloc` fixes the bit grids served (the
 /// quantized model); weights and grids are uploaded once per worker at
@@ -91,6 +95,26 @@ pub struct ServeConfig {
     /// IDs, bounded logit divergence vs f64). `f64` restores bitwise
     /// parity with the search/eval goldens at decode-throughput cost.
     pub activations: ActPrecision,
+    /// Incremental KV decode state (`--kv {on,off}`). On (default),
+    /// eligible step rows feed only their NEW tokens; the backend
+    /// accumulates attention over per-sequence cached K/V with the
+    /// same ascending-order algebra, so emitted tokens are BITWISE
+    /// identical to the recompute path. Off forces recompute (the
+    /// `SCALEBITS_KV=off` env does the same underneath the flag).
+    /// Backends without KV support (or f64 activations) fall back to
+    /// recompute row by row either way.
+    pub kv: bool,
+    /// Per-worker radix prefix-cache budget in bytes
+    /// (`--cache-bytes`). `0` (default) disables the cache: no prompt
+    /// sharing, exact pre-cache prefill accounting.
+    pub cache_bytes: usize,
+    /// Prefix-cache granularity: prompt tokens per radix block
+    /// (`--cache-block`). Prompts share in whole blocks only.
+    pub cache_block: usize,
+    /// How the client homes requests onto workers (`--placement`):
+    /// longest-prefix-match against the per-worker caches, or pure
+    /// round-robin. With the cache disabled both behave identically.
+    pub placement: Placement,
 }
 
 impl ServeConfig {
@@ -106,6 +130,10 @@ impl ServeConfig {
             max_live: 0,
             aging: DEFAULT_AGING,
             activations: ActPrecision::F32,
+            kv: true,
+            cache_bytes: 0,
+            cache_block: DEFAULT_CACHE_BLOCK,
+            placement: Placement::Prefix,
         }
     }
 }
@@ -164,6 +192,13 @@ pub(crate) struct DecodeSeq {
     /// Timestamp of submission, then of each generated token — the
     /// inter-token-latency clock.
     last_event: Instant,
+    /// Prefix-cache pin depth: `None` until the worker's one-time
+    /// cache lookup, then `Some(matched tokens)` — the pins released
+    /// at retire (0 = looked up, nothing matched/cache disabled).
+    cache_depth: Option<usize>,
+    /// The completed prompt was offered to the prefix cache (one-shot,
+    /// at the Prefilling → Decoding transition).
+    cache_inserted: bool,
 }
 
 impl SchedSeq for DecodeSeq {
@@ -232,6 +267,8 @@ impl DecodeSeq {
             deadline,
             generated: Vec::new(),
             last_event: submitted,
+            cache_depth: None,
+            cache_inserted: false,
         }
     }
 
@@ -326,6 +363,7 @@ struct SchedKnobs {
     max_live: usize,
     aging: Duration,
     activations: ActPrecision,
+    kv: bool,
 }
 
 /// Worker lifecycle handle: spawns the decode workers, hands out
@@ -357,6 +395,11 @@ impl Router {
         // same backend even if the artifact dir changes under us.
         let backend = cfg.backend.resolve(&manifest);
         let vocab = manifest.config.vocab;
+        // K/V bytes per cached token for the cache's byte accounting
+        // (n_layers x {K,V} x d_model f32 rows — what the interpreter's
+        // `kv_token_bytes` reports; backends without KV still budget
+        // as if, so the knob means the same thing everywhere).
+        let kv_token_bytes = manifest.config.n_layers * 2 * manifest.config.d_model * 4;
         drop(manifest);
 
         let knobs = SchedKnobs {
@@ -365,12 +408,41 @@ impl Router {
             max_live: cfg.max_live,
             aging: cfg.aging,
             activations: cfg.activations,
+            kv: cfg.kv,
         };
         let mut queues = Vec::with_capacity(cfg.workers);
+        let mut caches = Vec::with_capacity(cfg.workers);
         let mut joins = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
-            let queue = Arc::new(Bounded::new(cfg.queue_cap));
+            // Rank-aware admission: the queue pops the highest
+            // effective rank first (same semantics as the scheduler's
+            // pen — base priority plus arrival-age promotion, capped),
+            // stable FIFO within a rank class.
+            let aging = cfg.aging;
+            let queue = Arc::new(Bounded::with_ranker(
+                cfg.queue_cap,
+                Box::new(move |s: &DecodeSeq, now: Instant| {
+                    let base = match s.priority {
+                        Priority::Low => 0u8,
+                        Priority::Normal => 1,
+                        Priority::High => 2,
+                    };
+                    if aging.is_zero() {
+                        return base;
+                    }
+                    let waited = now.saturating_duration_since(s.submitted);
+                    let bump =
+                        (waited.as_nanos() / aging.as_nanos().max(1)).min(2) as u8;
+                    (base + bump).min(2)
+                }),
+            ));
+            let cache = Arc::new(Mutex::new(PrefixCache::new(
+                cfg.cache_block,
+                cfg.cache_bytes,
+                kv_token_bytes,
+            )));
             let worker_queue = queue.clone();
+            let worker_cache = cache.clone();
             let artifacts = cfg.artifacts.clone();
             let worker_grids = grids.clone();
             let join = std::thread::Builder::new()
@@ -381,14 +453,16 @@ impl Router {
                     // any still-pending requests, so waiting clients
                     // see a channel error instead of hanging forever.
                     let _guard = CloseOnExit(worker_queue.clone());
-                    worker_loop(w, artifacts, backend, worker_grids, worker_queue, knobs)
+                    let q = worker_queue;
+                    worker_loop(w, artifacts, backend, worker_grids, q, worker_cache, knobs)
                 })
                 .map_err(|e| anyhow!("spawn worker {w}: {e}"))?;
             queues.push(queue);
+            caches.push(cache);
             joins.push(join);
         }
         let shared = Arc::new(Shared::default());
-        let client = Client::new(queues.clone(), shared.clone(), vocab);
+        let client = Client::new(queues.clone(), shared.clone(), vocab, caches, cfg.placement);
         Ok(Router { queues, joins, shared, client })
     }
 
@@ -478,6 +552,7 @@ fn worker_loop(
     kind: BackendKind,
     grids: Vec<Vec<i32>>,
     queue: Arc<Bounded<DecodeSeq>>,
+    cache: Arc<Mutex<PrefixCache>>,
     knobs: SchedKnobs,
 ) -> Result<ServeMetrics> {
     let manifest = Manifest::load(&artifacts)?;
@@ -508,13 +583,19 @@ fn worker_loop(
     };
     let mut sched: Scheduler<DecodeSeq> = Scheduler::new(queue.clone(), sched_cfg);
     let mut metrics = ServeMetrics::default();
+    // KV decode state is live only when the config says so AND the
+    // backend supports it under the current activation precision
+    // (recompute otherwise — bitwise identical either way).
+    let kv_on = knobs.kv && session.backend().kv_active();
     loop {
         let open = sched.admit();
 
         // Retire cancelled/expired sequences BEFORE planning: a
         // defunct request must never occupy a step-batch row, and its
-        // slot refills on the next admit.
+        // slot refills on the next admit. Retiring releases the
+        // sequence's prefix-cache pins and K/V state.
         for s in sched.drain_defunct() {
+            release_seq(&cache, &session, &s);
             if s.cancelled() {
                 s.finish(Finish::Cancelled, worker, &mut metrics);
             } else {
@@ -527,6 +608,46 @@ fn worker_loop(
                 continue;
             }
             break; // queue closed + drained, live set empty: done
+        }
+
+        // One-time prefix-cache lookup for every live sequence that
+        // has not started prefilling: pin the longest cached prefix
+        // (at most prompt_len-1 — the emit row must feed a token),
+        // seed the K/V state from its blobs, and start the prefill
+        // cursor past the matched depth. The skipped tokens are what
+        // `prefill_tokens_saved` counts, keeping
+        // `prefill_tokens + prefill_tokens_saved == sum(prompt_len)`
+        // exact. Correct in BOTH modes: with KV the seeded state (or
+        // `kv_step`'s feed-from-cached-cursor) covers the gap; without
+        // KV the emit row recomputes the full window regardless.
+        for s in sched.live_mut() {
+            if s.state() != SeqState::Prefilling || s.fed != 0 || s.cache_depth.is_some() {
+                continue;
+            }
+            let prompt = &s.tokens[..s.prompt_len];
+            let (depth, blobs) = {
+                let mut c = cache.lock().expect("prefix cache lock");
+                if !c.enabled() {
+                    s.cache_depth = Some(0);
+                    continue;
+                }
+                c.lookup_pin(prompt, s.prompt_len.saturating_sub(1))
+            };
+            s.cache_depth = Some(depth);
+            if depth > 0 {
+                if kv_on && !blobs.is_empty() {
+                    session.backend().kv_seed(s.id, &blobs);
+                }
+                s.advance_fed(depth);
+            }
+            if s.record {
+                if depth > 0 {
+                    metrics.cache_hits += 1;
+                    metrics.prefill_tokens_saved += depth as u64;
+                } else {
+                    metrics.cache_misses += 1;
+                }
+            }
         }
 
         // One scheduler iteration: every live sequence advances one
@@ -543,7 +664,22 @@ fn worker_loop(
         for step in &plan.steps {
             let rows: Vec<StepRow> = step
                 .iter()
-                .map(|r| StepRow { window: sched.live()[r.seq].window(r.window_end), emit: r.emit })
+                .map(|r| {
+                    let s = &sched.live()[r.seq];
+                    // Absolute position of the served window's first
+                    // token once the session slides its tail: 0 while
+                    // the window fits `seq_len` (the KV-eligible
+                    // regime), positive once slid (KV falls back to
+                    // recompute — RoPE positions restart under a slid
+                    // window, so the cached K rows no longer apply).
+                    let end = r.window_end.unwrap_or(s.tokens.len()).min(s.tokens.len());
+                    StepRow {
+                        window: s.window(r.window_end),
+                        emit: r.emit,
+                        seq: kv_on.then_some(s.id),
+                        pos0: end.saturating_sub(seq_len),
+                    }
+                })
                 .collect();
             let t0 = Instant::now();
             let outs = session.decode_step_rows(exec_name, &rows)?;
@@ -566,6 +702,32 @@ fn worker_loop(
                 if let Some(tok) = *out {
                     s.push_token(tok, now, &mut metrics);
                 }
+                // Prefill just completed: offer the prompt's whole
+                // blocks to the prefix cache (new blocks snapshot this
+                // sequence's K/V), then evict LRU leaves past the byte
+                // budget, freeing their blobs backend-side.
+                if s.state() == SeqState::Decoding && !s.cache_inserted {
+                    s.cache_inserted = true;
+                    let (id, record) = (s.id, s.record);
+                    let prompt = &sched.live()[r.seq].tokens[..sched.live()[r.seq].prompt_len];
+                    let mut c = cache.lock().expect("prefix cache lock");
+                    if c.enabled() {
+                        c.insert_path(prompt, prompt.len(), |a, b| {
+                            if kv_on {
+                                session.backend().kv_snapshot(id, a, b)
+                            } else {
+                                None
+                            }
+                        });
+                        let freed = c.evict_to_budget();
+                        if record {
+                            metrics.cache_evictions += freed.len() as u64;
+                        }
+                        for blob in freed {
+                            session.backend().kv_blob_free(blob);
+                        }
+                    }
+                }
             }
         }
         if recorded > 0 {
@@ -580,8 +742,23 @@ fn worker_loop(
         }
         // Retire completed sequences; everyone else decodes on.
         for s in sched.drain_done() {
+            release_seq(&cache, &session, &s);
             s.finish(Finish::Completed, worker, &mut metrics);
         }
     }
     Ok(metrics)
+}
+
+/// Retire-side bookkeeping, run for EVERY sequence leaving a worker
+/// (completed, cancelled or expired; recorded or warmup): release its
+/// prefix-cache pins so its blocks become evictable, and drop its
+/// per-sequence K/V state.
+fn release_seq(cache: &Mutex<PrefixCache>, session: &Session, s: &DecodeSeq) {
+    if let Some(depth) = s.cache_depth {
+        if depth > 0 {
+            let prompt = &s.tokens[..s.prompt_len];
+            cache.lock().expect("prefix cache lock").unpin(prompt, depth);
+        }
+    }
+    session.backend().kv_free(s.id);
 }

@@ -195,6 +195,23 @@ fn rank<T: SchedSeq>(s: &T, now: Instant, aging: Duration) -> u8 {
     (base + promoted).min(2)
 }
 
+/// Adaptive prefill budget: scale the configured chunk DOWN when the
+/// backlog (pen + admission queue) is deep relative to the live cap —
+/// one halving per `max_live` of backlog, at most three (so the chunk
+/// never drops below an eighth, clamped to ≥ 1 new token). Backlog 0 is
+/// the identity; whole-prompt mode (`cfg_chunk == 0`) is left alone —
+/// it is an explicit "no time-slicing" choice. Deterministic in its
+/// inputs, and chunk size never changes WHICH tokens a sequence emits
+/// (the chunk-independence acceptance tests), so this is purely a
+/// latency/fairness trade.
+pub fn adaptive_chunk(cfg_chunk: usize, backlog: usize, max_live: usize) -> usize {
+    if cfg_chunk == 0 {
+        return 0;
+    }
+    let shift = (backlog / max_live.max(1)).min(3) as u32;
+    (cfg_chunk >> shift).max(1)
+}
+
 impl<T: SchedSeq> Scheduler<T> {
     pub fn new(queue: Arc<Bounded<T>>, cfg: SchedConfig) -> Scheduler<T> {
         let cfg = cfg.normalize();
@@ -367,6 +384,10 @@ impl<T: SchedSeq> Scheduler<T> {
     /// batches — the "one-or-more padded step batches per iteration"
     /// that lets `max_live` exceed the compiled batch.
     pub fn plan(&self) -> IterationPlan {
+        // Backlog-adaptive default chunk (per-request overrides are
+        // honored verbatim below — they are an explicit caller choice).
+        let backlog = self.queue.len() + self.pen.len();
+        let cfg_chunk = adaptive_chunk(self.cfg.prefill_chunk, backlog, self.cfg.max_live);
         let mut rows = Vec::new();
         for (i, s) in self.live.iter().enumerate() {
             let total = s.prompt_len();
@@ -376,7 +397,7 @@ impl<T: SchedSeq> Scheduler<T> {
                 rows.push(PlanRow { seq: i, window_end: None, advance: 0, emit: true });
                 continue;
             }
-            let chunk = s.prefill_chunk().unwrap_or(self.cfg.prefill_chunk);
+            let chunk = s.prefill_chunk().unwrap_or(cfg_chunk);
             if chunk == 0 {
                 let mut end = fed;
                 while end < total {
@@ -852,6 +873,51 @@ mod tests {
             plan.steps[0][0],
             PlanRow { seq: 0, window_end: Some(8), advance: 8, emit: false },
             "one row cannot carry more than seq_len new tokens"
+        );
+    }
+
+    // -- adaptive prefill budget --------------------------------------
+
+    #[test]
+    fn adaptive_chunk_halves_per_live_set_of_backlog() {
+        // backlog 0 is the identity
+        assert_eq!(adaptive_chunk(8, 0, 4), 8);
+        assert_eq!(adaptive_chunk(8, 3, 4), 8, "sub-cap backlog leaves the chunk alone");
+        // one halving per max_live of backlog...
+        assert_eq!(adaptive_chunk(8, 4, 4), 4);
+        assert_eq!(adaptive_chunk(8, 8, 4), 2);
+        assert_eq!(adaptive_chunk(8, 12, 4), 1);
+        // ...capped at three halvings, clamped to >= 1 token
+        assert_eq!(adaptive_chunk(64, 1000, 4), 8);
+        assert_eq!(adaptive_chunk(2, 1000, 4), 1);
+        // whole-prompt mode and zero-live-cap degenerate safely
+        assert_eq!(adaptive_chunk(0, 1000, 4), 0);
+        assert_eq!(adaptive_chunk(8, 8, 0), 1);
+    }
+
+    #[test]
+    fn plan_shrinks_the_default_chunk_under_queue_backlog() {
+        // live cap 1, chunked default 4; 2 queued behind the live one
+        let q = queue_of(64, vec![normal(1).prompt(20), normal(2), normal(3)]);
+        let mut s = Scheduler::new(
+            q,
+            SchedConfig { prefill_chunk: 4, ..cfg(1, 1) },
+        );
+        s.admit();
+        assert_eq!(s.live_len(), 1);
+        // backlog = queue + pen = 2 -> two halvings of the default 4
+        let plan = s.plan();
+        assert_eq!(
+            plan.steps[0][0],
+            PlanRow { seq: 0, window_end: Some(1), advance: 1, emit: false },
+            "deep backlog shrinks the default prefill chunk"
+        );
+        // a per-request override is honored verbatim regardless
+        s.live_mut()[0].chunk = Some(4);
+        let plan = s.plan();
+        assert_eq!(
+            plan.steps[0][0],
+            PlanRow { seq: 0, window_end: Some(4), advance: 4, emit: false }
         );
     }
 

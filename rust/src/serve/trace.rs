@@ -36,6 +36,11 @@ pub struct TraceArrival {
     pub prompt_len: usize,
     /// Decode budget for the request.
     pub max_new_tokens: usize,
+    /// Pin the prompt to `stream[start..start+prompt_len]` instead of
+    /// a random stream position — how a trace makes distinct requests
+    /// spell IDENTICAL token prefixes (the prefix-cache load shape).
+    /// `None` keeps the replayer's random sampling.
+    pub prompt_start: Option<usize>,
 }
 
 /// Parse a trace from a JSON value (the file's root array).
@@ -57,7 +62,12 @@ pub fn parse_trace(j: &Json) -> Result<Vec<TraceArrival>> {
             e.get("max_new_tokens").with_context(|| ctx("max_new_tokens"))?.as_usize()?;
         anyhow::ensure!(prompt_len >= 1, "trace entry {i}: prompt_len must be >= 1");
         anyhow::ensure!(max_new_tokens >= 1, "trace entry {i}: max_new_tokens must be >= 1");
-        out.push(TraceArrival { offset_us: offset as u64, prompt_len, max_new_tokens });
+        let prompt_start = match e.get("prompt_start") {
+            Ok(v) => Some(v.as_usize().with_context(|| ctx("prompt_start"))?),
+            Err(_) => None,
+        };
+        let offset_us = offset as u64;
+        out.push(TraceArrival { offset_us, prompt_len, max_new_tokens, prompt_start });
     }
     // Out-of-order recordings are legal input; replay wants a schedule.
     out.sort_by_key(|e| e.offset_us);
@@ -68,6 +78,52 @@ pub fn parse_trace(j: &Json) -> Result<Vec<TraceArrival>> {
 pub fn load_trace(path: &Path) -> Result<Vec<TraceArrival>> {
     let j = Json::read_file(path).with_context(|| format!("trace {}", path.display()))?;
     parse_trace(&j).with_context(|| format!("trace {}", path.display()))
+}
+
+/// Synthesize a shared-template multi-turn load: `templates`
+/// conversations, each replayed for `turns` turns, arrivals
+/// interleaved round-robin across templates with exponential gaps at
+/// `rate_per_sec`.
+///
+/// Template `t` owns the DISJOINT stream range starting at
+/// `t * (template_len + turns * turn_len)`; its turn `j` submits the
+/// pinned prompt `stream[start .. start + template_len + j*turn_len]`
+/// — so every turn's prompt extends the previous turn's prompt
+/// EXACTLY (the radix-prefix sharing shape: first turn pays full
+/// prefill, each later turn re-prefills only its `turn_len` tail when
+/// the prefix cache is on), and distinct templates never alias. The
+/// token stream must hold at least
+/// `templates * (template_len + turns * turn_len)` tokens plus one.
+pub fn shared_template_trace(
+    templates: usize,
+    turns: usize,
+    rate_per_sec: f64,
+    template_len: usize,
+    turn_len: usize,
+    max_new_tokens: usize,
+    seed: u64,
+) -> Vec<TraceArrival> {
+    assert!(templates >= 1 && turns >= 1, "need at least one template and one turn");
+    assert!(template_len >= 1 && turn_len >= 1 && max_new_tokens >= 1);
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let span = template_len + turns * turn_len;
+    let mut out = Vec::with_capacity(templates * turns);
+    let mut at_us = 0u64;
+    for turn in 0..turns {
+        for tpl in 0..templates {
+            let gap = rng.exp(rate_per_sec.max(1e-9));
+            if gap.is_finite() && gap > 0.0 {
+                at_us += (gap * 1e6) as u64;
+            }
+            out.push(TraceArrival {
+                offset_us: at_us,
+                prompt_len: template_len + turn * turn_len,
+                max_new_tokens,
+                prompt_start: Some(tpl * span),
+            });
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -85,8 +141,38 @@ mod tests {
         .unwrap();
         let t = parse_trace(&j).unwrap();
         assert_eq!(t.len(), 2);
-        assert_eq!(t[0], TraceArrival { offset_us: 0, prompt_len: 32, max_new_tokens: 4 });
-        assert_eq!(t[1], TraceArrival { offset_us: 900, prompt_len: 16, max_new_tokens: 2 });
+        let want0 =
+            TraceArrival { offset_us: 0, prompt_len: 32, max_new_tokens: 4, prompt_start: None };
+        let want1 =
+            TraceArrival { offset_us: 900, prompt_len: 16, max_new_tokens: 2, prompt_start: None };
+        assert_eq!(t[0], want0);
+        assert_eq!(t[1], want1);
+    }
+
+    #[test]
+    fn parses_pinned_prompt_starts() {
+        let j = Json::parse(
+            r#"[{"offset_us": 0, "prompt_len": 8, "max_new_tokens": 1, "prompt_start": 40}]"#,
+        )
+        .unwrap();
+        assert_eq!(parse_trace(&j).unwrap()[0].prompt_start, Some(40));
+    }
+
+    #[test]
+    fn shared_template_trace_extends_prefixes_exactly() {
+        let t = shared_template_trace(2, 3, 50.0, 16, 4, 2, 7);
+        assert_eq!(t.len(), 6);
+        // monotone schedule, interleaved templates round-robin
+        assert!(t.windows(2).all(|w| w[0].offset_us <= w[1].offset_us));
+        let span = 16 + 3 * 4;
+        for (i, e) in t.iter().enumerate() {
+            let (turn, tpl) = (i / 2, i % 2);
+            assert_eq!(e.prompt_start, Some(tpl * span));
+            assert_eq!(e.prompt_len, 16 + turn * 4, "turn {turn} extends by turn_len");
+            assert_eq!(e.max_new_tokens, 2);
+        }
+        // deterministic for a fixed seed
+        assert_eq!(t, shared_template_trace(2, 3, 50.0, 16, 4, 2, 7));
     }
 
     #[test]
@@ -114,7 +200,9 @@ mod tests {
         )
         .unwrap();
         let t = load_trace(&path).unwrap();
-        assert_eq!(t, vec![TraceArrival { offset_us: 10, prompt_len: 8, max_new_tokens: 3 }]);
+        let want =
+            TraceArrival { offset_us: 10, prompt_len: 8, max_new_tokens: 3, prompt_start: None };
+        assert_eq!(t, vec![want]);
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -1125,6 +1125,205 @@ fn trace_replay_accounts_every_entry() {
     );
 }
 
+/// THE acceptance sweep for incremental KV decode state + the radix
+/// prefix cache: a shared-prefix multi-turn request mix decoded under
+/// every {KV on/off} x {cache off/on/eviction-under-pressure}
+/// combination emits BITWISE-identical tokens to sequential decode,
+/// and the `prefill_tokens + prefill_tokens_saved == sum(prompt_len)`
+/// accounting identity holds exactly — with the big-budget cache
+/// hitting the exact block-aligned depths.
+#[test]
+fn shared_prefix_kv_and_cache_sweep_matches_sequential_decode_bitwise() {
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut alloc = BitAlloc::uniform(&index, 4);
+    for (i, b) in alloc.bits.iter_mut().enumerate() {
+        *b = [2, 4, 8][i % 3];
+    }
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let max_new = 4usize;
+    let b = 8usize; // cache block (tokens)
+    // Multi-turn template A (each prompt extends the previous one
+    // exactly; the last one outgrows seq_len, exercising the slid
+    // window's permanent KV fallback), a second template B, then a
+    // repeat of an A turn (a pure cache hit).
+    let prompts: Vec<Vec<i32>> = vec![
+        stream.tokens[..2 * b].to_vec(),
+        stream.tokens[..3 * b].to_vec(),
+        stream.tokens[..4 * b].to_vec(),
+        stream.tokens[..5 * b].to_vec(),
+        stream.tokens[100..100 + 3 * b].to_vec(),
+        stream.tokens[..3 * b].to_vec(),
+    ];
+    let total_prompt: u64 = prompts.iter().map(|p| p.len() as u64).sum();
+    let session =
+        Session::open_with(BackendKind::Interp, &dir, &["qpredict"], &alloc.grids(&index))
+            .unwrap();
+    session.set_activations(ActPrecision::F32).unwrap();
+    let reference: Vec<Vec<i32>> =
+        prompts.iter().map(|p| sequential_decode(&session, p, max_new)).collect();
+
+    // node cost = block * (kv_token_bytes + 4); a 2-node budget forces
+    // eviction under this mix (each template inserts 2-5 blocks)
+    let kv_token_bytes = m.config.n_layers * 2 * m.config.d_model * 4;
+    let two_nodes = 2 * b * (kv_token_bytes + 4);
+    for kv in [true, false] {
+        for (mode, cache_bytes) in [("off", 0usize), ("on", 1 << 20), ("tiny", two_nodes)] {
+            let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), alloc.clone());
+            cfg.backend = BackendKind::Interp;
+            cfg.kv = kv;
+            cfg.cache_bytes = cache_bytes;
+            cfg.cache_block = b;
+            cfg.prefill_chunk = 4;
+            let mut server = scalebits::serve::Router::start(cfg).unwrap();
+            // Sequential submit+wait: each prompt's blocks are cached
+            // (and evicted) before the next lookup — deterministic
+            // depths, so the accounting asserts below can be exact.
+            let mut served = Vec::new();
+            for p in &prompts {
+                let mut t = server
+                    .submit_request(
+                        scalebits::serve::GenRequest::new(p.clone()).max_new_tokens(max_new),
+                    )
+                    .unwrap();
+                let o = t.wait().unwrap();
+                assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+                served.push(o.tokens.clone());
+            }
+            let rep = server.shutdown().unwrap();
+            for (i, s) in served.iter().enumerate() {
+                assert_eq!(
+                    s, &reference[i],
+                    "kv={kv} cache={mode} prompt {i}: decode diverged from sequential"
+                );
+            }
+            let t = &rep.total;
+            assert_eq!(
+                t.prefill_tokens + t.prefill_tokens_saved,
+                total_prompt,
+                "kv={kv} cache={mode}: prefill accounting identity broke"
+            );
+            match mode {
+                "off" => {
+                    assert_eq!(t.prefill_tokens_saved, 0);
+                    assert_eq!((t.cache_hits, t.cache_misses, t.cache_evictions), (0, 0, 0));
+                }
+                "on" => {
+                    // exact block-aligned depths: turn 2 matches 2
+                    // blocks, turn 3 matches 3 (max depth is always
+                    // prompt_len-1: the emit row must feed a token),
+                    // turn 4 matches 4, the repeat matches 2 again
+                    let want = (2 + 3 + 4 + 2) as u64 * b as u64;
+                    assert_eq!(t.prefill_tokens_saved, want, "kv={kv}: wrong saved depth");
+                    assert_eq!((t.cache_hits, t.cache_misses), (4, 2));
+                    assert_eq!(t.cache_evictions, 0, "1 MiB budget must not evict here");
+                }
+                _ => {
+                    assert!(
+                        t.cache_evictions > 0,
+                        "kv={kv}: a 2-node budget must evict under this mix"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The shared-template trace generator through the full workload
+/// driver, cache-aware placement on: the accounting identity holds
+/// exactly across workers and every recorded request gets exactly one
+/// cache lookup — under CONCURRENT (not sequential) arrivals.
+#[test]
+fn shared_template_workload_keeps_exact_prefill_accounting() {
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let (templates, turns, template_len, turn_len) = (2usize, 3usize, 16usize, 8usize);
+    let trace = scalebits::serve::shared_template_trace(
+        templates,
+        turns,
+        500.0,
+        template_len,
+        turn_len,
+        2,
+        11,
+    );
+    let total_prompt: u64 = trace.iter().map(|e| e.prompt_len as u64).sum();
+    assert_eq!(total_prompt, 144, "2 templates x (16+24+32)");
+
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), BitAlloc::uniform(&index, 4));
+    cfg.backend = BackendKind::Interp;
+    cfg.workers = 2;
+    cfg.cache_bytes = 1 << 20;
+    cfg.cache_block = 8;
+    cfg.prefill_chunk = 4;
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let spec = scalebits::serve::WorkloadSpec::new(m.config.seq_len, trace.len(), 1.0, 5)
+        .max_new_tokens(2)
+        .trace(trace.clone());
+    let wl = scalebits::serve::run_workload(&mut server, &stream, &spec).unwrap();
+    let rep = server.shutdown().unwrap();
+    assert_eq!(wl.completed, trace.len() as u64);
+    let t = &rep.total;
+    assert_eq!(
+        t.prefill_tokens + t.prefill_tokens_saved,
+        total_prompt,
+        "identity must hold exactly under concurrent arrivals and placement"
+    );
+    assert_eq!(
+        t.cache_hits + t.cache_misses,
+        trace.len() as u64,
+        "every recorded request gets exactly one cache lookup (warmups excluded)"
+    );
+}
+
+/// Cache-aware placement: with per-worker caches, a request repeating
+/// an already-served prompt must land on the worker that holds the
+/// prefix (longest-prefix-match admission) and skip the matched
+/// blocks; a cold prompt falls back to round-robin.
+#[test]
+fn prefix_placement_routes_repeats_to_the_caching_worker() {
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let b = 8usize;
+    let prompt = stream.tokens[200..200 + 4 * b].to_vec();
+
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), BitAlloc::uniform(&index, 4));
+    cfg.backend = BackendKind::Interp;
+    cfg.workers = 2;
+    cfg.cache_bytes = 1 << 20;
+    cfg.cache_block = b;
+    assert_eq!(cfg.placement, scalebits::serve::Placement::Prefix, "cache-aware by default");
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let first = {
+        let mut t = server
+            .submit_request(scalebits::serve::GenRequest::new(prompt.clone()).max_new_tokens(2))
+            .unwrap();
+        t.wait().unwrap().clone()
+    };
+    let second = {
+        let mut t = server
+            .submit_request(scalebits::serve::GenRequest::new(prompt.clone()).max_new_tokens(2))
+            .unwrap();
+        t.wait().unwrap().clone()
+    };
+    let rep = server.shutdown().unwrap();
+    assert_eq!(first.finish, scalebits::serve::Finish::Completed);
+    assert_eq!(second.finish, scalebits::serve::Finish::Completed);
+    assert_eq!(first.tokens, second.tokens, "identical prompts decode identically");
+    assert_eq!(
+        second.worker, first.worker,
+        "the repeat must home on the worker holding the cached prefix"
+    );
+    // 4*b prompt, emit needs a token: the repeat matches 3 blocks
+    assert_eq!(rep.total.prefill_tokens_saved, 3 * b as u64);
+    assert_eq!((rep.total.cache_hits, rep.total.cache_misses), (1, 1));
+}
+
 /// The acceptance check for grid residency: once a Session is built,
 /// the serve path's only host→device transfer per batch is the token
 /// batch itself (weights AND bit grids stay resident). The interpreter
