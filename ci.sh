@@ -127,6 +127,17 @@ SCALEBITS_KV=off cargo test -q --offline --lib kv
 SCALEBITS_KV=off cargo test -q --offline --test integration -- \
   decode prefix preempted shared
 
+echo "== cargo test (serving net, SCALEBITS_SPEC=off)"
+# Second pass of the speculation-sensitive tests with the kill-switch
+# forcing plain decode, so the non-speculative serving path stays
+# bitwise-green while spec_k knobs are set. The draft/verify property
+# tests degenerate (drafting disabled, counters stay zero); the real
+# coverage is the decode sweeps and the degenerate-draft control all
+# still completing bitwise with speculation requested but switched off.
+SCALEBITS_SPEC=off cargo test -q --offline --lib spec
+SCALEBITS_SPEC=off cargo test -q --offline --test integration -- \
+  decode draft speculative
+
 echo "== cargo clippy -- -D warnings"
 # Allow-list: seed-era idioms kept for diff hygiene, not new code style.
 # undocumented_unsafe_blocks is opt-in (allow-by-default): every unsafe

@@ -7,10 +7,14 @@
 //! `--serve-requests N` (default 8, 0 disables) every operating point
 //! is additionally served through the continuous-batching router for N
 //! multi-token sessions and the measured decode tokens/sec lands in
-//! the `serve_tps` column.
+//! the `serve_tps` column. A second serving pass per point runs with
+//! self-speculative decoding on (`--serve-spec-k`, default 4, 0
+//! disables): the `accept_rate` column is the draft accept-rate of the
+//! 2-bit self-draft against that point's allocation and
+//! `effective_tps` is the decode tok/s it actually yields.
 //!
 //! Run: cargo run --release --offline --example pareto_sweep
-//!      [-- --points 5 --serve-requests 8 --iters 100]
+//!      [-- --points 5 --serve-requests 8 --serve-spec-k 4 --iters 100]
 
 use std::io::Write;
 
@@ -20,32 +24,50 @@ use scalebits::search::SearchConfig;
 use scalebits::serve::{run_workload, Router, ServeConfig, WorkloadSpec};
 use scalebits::util::cli::Args;
 
-/// Decode throughput of one allocation through the serving stack
-/// (0.0 when serving is disabled).
-fn served_tps(
+/// One operating point through the serving stack: plain decode tok/s,
+/// then the same short-prompt workload again with self-speculative
+/// decoding on — draft accept-rate and EFFECTIVE decode tok/s (what
+/// the point actually yields once the 2-bit draft of the same weights
+/// proposes and the mixed-precision target verifies). Prompts sit at
+/// seq/2 so decode windows stay unslid and unfilled (drafting is only
+/// eligible there); all zeros when serving is disabled.
+fn served_point(
     artifacts: &std::path::Path,
     p: &Pipeline,
     alloc: &BitAlloc,
     n_requests: usize,
-) -> anyhow::Result<f64> {
+    spec_k: usize,
+) -> anyhow::Result<(f64, f64, f64)> {
     if n_requests == 0 {
-        return Ok(0.0);
+        return Ok((0.0, 0.0, 0.0));
     }
     let stream = scalebits::calib::TokenStream::from_manifest(p.manifest(), "eval")?;
-    let seq = p.manifest().config.seq_len;
-    let mut cfg = ServeConfig::new(artifacts.to_path_buf(), alloc.clone());
-    cfg.backend = p.backend.kind();
-    let mut server = Router::start(cfg)?;
-    let spec = WorkloadSpec::new(seq, n_requests, 200.0, 13).max_new_tokens(4);
-    let wl = run_workload(&mut server, &stream, &spec)?;
-    server.shutdown()?;
-    Ok(wl.decode_tps())
+    let p_len = (p.manifest().config.seq_len / 2).max(1);
+    let mut run = |k: usize| -> anyhow::Result<(f64, f64)> {
+        let mut cfg = ServeConfig::new(artifacts.to_path_buf(), alloc.clone());
+        cfg.backend = p.backend.kind();
+        cfg.spec_k = k;
+        let mut server = Router::start(cfg)?;
+        let spec = WorkloadSpec::new(p_len, n_requests, 200.0, 13).max_new_tokens(4);
+        let wl = run_workload(&mut server, &stream, &spec)?;
+        let rep = server.shutdown()?;
+        Ok((wl.decode_tps(), rep.total.spec_accept_rate()))
+    };
+    let (tps, _) = run(0)?;
+    if spec_k == 0 {
+        return Ok((tps, 0.0, 0.0));
+    }
+    let (effective_tps, accept_rate) = run(spec_k)?;
+    Ok((tps, accept_rate, effective_tps))
 }
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&[]);
     let points = args.usize_or("points", 7)?;
     let serve_requests = args.usize_or("serve-requests", 8)?;
+    // self-speculative serving pass per point (0 skips it; the
+    // accept_rate/effective_tps columns are then 0)
+    let serve_spec_k = args.usize_or("serve-spec-k", 4)?;
     // search budget per operating point (the examples-smoke CI lane
     // passes a small value so the sweep finishes in seconds)
     let iters = args.usize_or("iters", SearchConfig::default().max_iters)?;
@@ -59,19 +81,21 @@ fn main() -> anyhow::Result<()> {
     )?;
 
     let mut p = Pipeline::load_full(&artifacts)?;
-    let mut rows: Vec<(String, f64, f64, f64, f64)> = Vec::new();
+    let mut rows: Vec<(String, f64, f64, f64, f64, f64, f64)> = Vec::new();
 
     println!("== uniform RTN operating points ==");
     for bits in [2, 3, 4] {
         let alloc = BitAlloc::uniform(&p.index, bits);
         let r = p.eval_alloc(&alloc)?;
-        let tps = served_tps(&artifacts, &p, &alloc, serve_requests)?;
+        let (tps, ar, etps) =
+            served_point(&artifacts, &p, &alloc, serve_requests, serve_spec_k)?;
         println!(
-            "  uniform {bits}b: ppl {:8.2}  acc {:5.1}%  serve {tps:7.1} tok/s",
+            "  uniform {bits}b: ppl {:8.2}  acc {:5.1}%  serve {tps:7.1} tok/s  \
+             accept {ar:4.2}  effective {etps:7.1} tok/s",
             r.perplexity,
             100.0 * r.task_accuracy
         );
-        rows.push(("uniform".into(), r.avg_bits, r.perplexity, r.task_accuracy, tps));
+        rows.push(("uniform".into(), r.avg_bits, r.perplexity, r.task_accuracy, tps, ar, etps));
     }
 
     println!("== ScaleBITS frontier ==");
@@ -81,24 +105,25 @@ fn main() -> anyhow::Result<()> {
         let cfg = SearchConfig { budget, seed: 42, max_iters: iters, ..Default::default() };
         let res = p.search(&cfg)?;
         let r = p.eval_alloc(&res.alloc)?;
-        let tps = served_tps(&artifacts, &p, &res.alloc, serve_requests)?;
+        let (tps, ar, etps) =
+            served_point(&artifacts, &p, &res.alloc, serve_requests, serve_spec_k)?;
         println!(
             "  budget {budget:4.2}: avg {:4.2}b  ppl {:8.2}  acc {:5.1}%  serve {tps:7.1} tok/s  \
-             ({} iters, {:.1}s)",
+             accept {ar:4.2}  effective {etps:7.1} tok/s  ({} iters, {:.1}s)",
             r.avg_bits,
             r.perplexity,
             100.0 * r.task_accuracy,
             res.iters.len(),
             res.wall_secs
         );
-        rows.push(("scalebits".into(), r.avg_bits, r.perplexity, r.task_accuracy, tps));
+        rows.push(("scalebits".into(), r.avg_bits, r.perplexity, r.task_accuracy, tps, ar, etps));
     }
 
     std::fs::create_dir_all("results")?;
     let mut f = std::fs::File::create("results/pareto.csv")?;
-    writeln!(f, "method,bits,ppl,task_acc,serve_tps")?;
-    for (m, b, ppl, acc, tps) in &rows {
-        writeln!(f, "{m},{b:.3},{ppl:.4},{acc:.4},{tps:.2}")?;
+    writeln!(f, "method,bits,ppl,task_acc,serve_tps,accept_rate,effective_tps")?;
+    for (m, b, ppl, acc, tps, ar, etps) in &rows {
+        writeln!(f, "{m},{b:.3},{ppl:.4},{acc:.4},{tps:.2},{ar:.4},{etps:.2}")?;
     }
     println!("wrote results/pareto.csv ({} rows)", rows.len());
     Ok(())

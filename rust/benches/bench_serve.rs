@@ -25,7 +25,13 @@
 //!      whole window,
 //!   6. radix prefix cache: the shared-template multi-turn trace with
 //!      the cache off vs on (`--cache-bytes`) — prefill tokens saved,
-//!      TTFT and decode tok/s under cache-aware placement.
+//!      TTFT and decode tok/s under cache-aware placement,
+//!   7. self-speculative decoding: spec_k {0,2,4,8} x workers on a
+//!      short-prompt decode-heavy load at the mixed 2/4/8 allocation
+//!      (`--spec-k`/`--spec-bits`) — decode tok/s, draft accept-rate
+//!      and the spec-over-plain uplift (a verify round emits
+//!      accepted+1 tokens for one target step plus k cheap 2-bit
+//!      draft steps; bitwise-identical output by construction).
 //!
 //! Backend: auto-detected. With `rust/artifacts/` present the sweep
 //! runs on PJRT; without artifacts it generates a deterministic
@@ -375,6 +381,83 @@ fn main() -> anyhow::Result<()> {
         out.set("prefix_cache", section);
     }
 
+    // 7. self-speculative decoding: the uniform low-bit draft proposes
+    // spec_k tokens off the SAME device weights, one multi-row target
+    // step verifies them, and the longest agreeing prefix lands — so
+    // every operating point below emits bitwise-identical tokens and
+    // differs only in decode throughput. Prompts are short and
+    // generations stay inside the window (drafting needs an unslid,
+    // unfilled window).
+    if !smoke {
+        let mut mixed = BitAlloc::uniform(&index, 4);
+        let mut rng = Rng::new(7);
+        for b in mixed.bits.iter_mut() {
+            *b = match rng.below(10) {
+                0..=3 => 2,
+                4..=7 => 4,
+                _ => 8,
+            };
+        }
+        let p_len = (seq / 4).max(1);
+        let gen = (seq / 2).max(2); // p_len + gen stays inside the window
+        let (n7, rate7) = if interp { (24usize, 400.0) } else { (12, 50.0) };
+        let mut section = Json::obj();
+        let mut plain_tps_1w = f64::NAN;
+        let mut best_spec_1w = f64::NAN;
+        let mut best_rate_1w = f64::NAN;
+        for &workers in worker_counts {
+            for &spec_k in &[0usize, 2, 4, 8] {
+                let mut cfg = ServeConfig::new(artifacts.clone(), mixed.clone());
+                cfg.backend = kind;
+                cfg.workers = workers;
+                cfg.spec_k = spec_k;
+                cfg.spec_bits = 2;
+                let mut server = Router::start(cfg)?;
+                let spec = WorkloadSpec::new(p_len, n7, rate7, 17).max_new_tokens(gen);
+                let wl = run_workload(&mut server, &stream, &spec)?;
+                let rep = server.shutdown()?;
+                let t = &rep.total;
+                let tps = wl.decode_tps();
+                let rate = t.spec_accept_rate();
+                if workers == 1 {
+                    if spec_k == 0 {
+                        plain_tps_1w = tps;
+                    } else if !(tps <= best_spec_1w) {
+                        best_spec_1w = tps;
+                        best_rate_1w = rate;
+                    }
+                }
+                println!(
+                    "spec_k {spec_k} x{workers}w | {tps:.1} decode tok/s | accept-rate \
+                     {:.2} ({} drafted, {} accepted) | itl p50 {:.0}us",
+                    rate,
+                    t.spec_drafted,
+                    t.spec_accepted,
+                    t.inter_token.p50_us(),
+                );
+                section.set(
+                    &format!("w{workers}_k{spec_k}"),
+                    Json::from_pairs(vec![
+                        ("decode_tps", Json::Num(tps)),
+                        ("accept_rate", Json::Num(rate)),
+                        ("drafted", Json::Num(t.spec_drafted as f64)),
+                        ("accepted", Json::Num(t.spec_accepted as f64)),
+                        ("itl_p50_us", Json::Num(t.inter_token.p50_us())),
+                    ]),
+                );
+            }
+        }
+        let uplift = best_spec_1w / plain_tps_1w.max(1e-9);
+        println!(
+            "  self-speculative decode uplift over spec_k=0 (1 worker): {uplift:.2}x at \
+             accept-rate {best_rate_1w:.2}"
+        );
+        section.set("spec_bits", Json::Num(2.0));
+        section.set("best_spec_over_plain_1w", Json::Num(uplift));
+        section.set("best_accept_rate_1w", Json::Num(best_rate_1w));
+        out.set("spec_decode", section);
+    }
+
     // Smoke-gated chunked-prefill lifecycle: a LONG prompt served with
     // a small chunk must not block short requests — they stream tokens
     // and complete while the long prompt is still prefilling (this is
@@ -481,6 +564,56 @@ fn main() -> anyhow::Result<()> {
         println!("prefix-cache round-trip: {want} prompt tokens skipped, decode bitwise OK");
     }
 
+    // Smoke-gated speculative round-trip: the same prompt served plain
+    // (spec_k 0) and speculative (spec_k 4) must emit bitwise-identical
+    // tokens, and the degenerate pairing (uniform 2-bit allocation +
+    // spec_bits 2: draft == target) must accept every drafted token —
+    // accept-rate exactly 1.0. Under SCALEBITS_SPEC=off drafting is
+    // disabled, so only the bitwise identity is asserted there.
+    {
+        let spec_off = matches!(
+            std::env::var("SCALEBITS_SPEC").ok().map(|v| v.to_ascii_lowercase()).as_deref(),
+            Some("off") | Some("0")
+        );
+        let prompt = stream.tokens[3 * seq..3 * seq + seq / 2].to_vec();
+        let mut runs = Vec::new();
+        let mut spec_rep = None;
+        for spec_k in [0usize, 4] {
+            let mut cfg = ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 2));
+            cfg.backend = kind;
+            cfg.spec_k = spec_k;
+            cfg.spec_bits = 2;
+            let mut server = Router::start(cfg)?;
+            let mut warm = server.submit_warmup(stream.tokens[..seq].to_vec())?;
+            warm.wait().expect("warmup");
+            let mut t = server.submit_request(
+                scalebits::serve::GenRequest::new(prompt.clone()).max_new_tokens(6),
+            )?;
+            let o = t.wait().expect("spec ticket");
+            assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+            runs.push(o.tokens.clone());
+            let rep = server.shutdown()?;
+            if spec_k > 0 {
+                spec_rep = Some(rep);
+            }
+        }
+        assert_eq!(runs[0], runs[1], "speculative decode must be bitwise identical to plain");
+        let t = &spec_rep.expect("spec report").total;
+        if !spec_off && resolved == BackendKind::Interp {
+            assert!(t.spec_drafted > 0, "the spec_k=4 server must have drafted");
+            assert_eq!(
+                t.spec_accepted, t.spec_drafted,
+                "degenerate draft (uniform-2 target at spec_bits 2) must accept all"
+            );
+            assert!(t.spec_accept_rate() > 0.0, "accept-rate must be positive");
+        }
+        println!(
+            "speculative round-trip: bitwise OK, accept-rate {:.2} ({} drafted)",
+            t.spec_accept_rate(),
+            t.spec_drafted
+        );
+    }
+
     out.set(
         "environment",
         Json::Str(format!(
@@ -499,7 +632,10 @@ fn main() -> anyhow::Result<()> {
              10% long-prompt mix (see the sweep keys for chunk/max_live/workers); \
              kv_decode compares incremental KV decode vs recompute on a \
              long-generation load; prefix_cache compares the shared-template \
-             multi-turn trace with the radix prefix cache off vs on"
+             multi-turn trace with the radix prefix cache off vs on; \
+             spec_decode sweeps the self-speculative draft depth (spec_bits=2 \
+             uniform draft off the same weights; accept_rate = accepted/drafted; \
+             emitted tokens are bitwise-identical at every spec_k)"
                 .to_string(),
         ),
     );

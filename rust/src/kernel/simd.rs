@@ -31,8 +31,14 @@
 //!
 //! Per-bitwidth vectorization (see the README dispatch table):
 //! 1/2/4/8-bit planes decode whole `u64` words with shift-and-mask +
-//! nibble-LUT lane tricks; 3/5/6/7-bit planes (word-straddling fields)
-//! and FP-sentinel blocks share the scalar path on every ISA.
+//! nibble-LUT lane tricks; 3-bit planes decode 64 codes per THREE-word
+//! (192-bit) group — the fields straddle `u64` boundaries, but 24 bits
+//! (8 codes) always start on a byte boundary, so each 8-code round
+//! broadcasts one scalar-extracted 24-bit window and applies per-lane
+//! variable shifts (`_mm256_srlv_epi32` / `vshlq_u32` with negative
+//! counts), mask, and `(v ^ 4) - 4` sign extension — elementwise-exact
+//! like every other decoder. 5/6/7-bit planes and FP-sentinel blocks
+//! share the scalar path on every ISA.
 
 use std::sync::OnceLock;
 
@@ -210,8 +216,8 @@ fn decode_scalar_range(seg: &[u64], bits: i32, scale: f32, out: &mut [f32], from
             }
         }
         _ => {
-            // Generic path (3/5/6/7 bits): fields may straddle word
-            // boundaries within the row segment.
+            // Generic path (3/5/6/7 bits; also the 3-bit ragged tail):
+            // fields may straddle word boundaries within the segment.
             let mask = (1u64 << b) - 1;
             let sign = 1u64 << (b - 1);
             for t in from..out.len() {
@@ -236,8 +242,9 @@ pub fn decode_row_segment_f32_scalar(seg: &[u64], bits: i32, scale: f32, out: &m
 }
 
 /// Decode one packed row segment via an explicit path. Bitwidths with
-/// a vector decoder (1/2/4/8 — whole-word lane tricks) dispatch to it;
-/// word-straddling widths (3/5/6/7) use the scalar loop on every ISA.
+/// a vector decoder (1/2/4/8 — whole-word lane tricks — and 3, via
+/// 192-bit groups) dispatch to it; the remaining word-straddling
+/// widths (5/6/7) use the scalar loop on every ISA.
 #[inline]
 pub fn decode_row_segment_f32_with(
     path: SimdPath,
@@ -247,14 +254,14 @@ pub fn decode_row_segment_f32_with(
     out: &mut [f32],
 ) {
     #[cfg(target_arch = "x86_64")]
-    if path == SimdPath::Avx2 && matches!(bits, 1 | 2 | 4 | 8) {
+    if path == SimdPath::Avx2 && matches!(bits, 1 | 2 | 3 | 4 | 8) {
         // SAFETY: `SimdPath::Avx2` is only produced by `detected()` after
         // runtime AVX2+FMA detection succeeded on this machine.
         unsafe { x86::decode_row_segment(seg, bits, scale, out) };
         return;
     }
     #[cfg(target_arch = "aarch64")]
-    if path == SimdPath::Neon && matches!(bits, 1 | 2 | 4 | 8) {
+    if path == SimdPath::Neon && matches!(bits, 1 | 2 | 3 | 4 | 8) {
         // SAFETY: `SimdPath::Neon` is only produced by `detected()` after
         // runtime NEON detection succeeded on this machine.
         unsafe { neon::decode_row_segment(seg, bits, scale, out) };
@@ -282,16 +289,37 @@ pub fn decode_fp_row_segment_f32(seg: &[u64], out: &mut [f32]) {
     }
 }
 
+/// The 24-bit (8-code) window starting at byte `3*r` (`r` in 0..8) of
+/// one 192-bit 3-bit-plane group — the scalar extraction the vector
+/// 3-bit decoders broadcast. `24*r` is always byte-aligned, and only
+/// rounds 2 and 5 straddle a word boundary (`off + 24 > 64`), so at
+/// most two of the three words contribute; bits above 24 may carry
+/// garbage, which the per-lane `& 0x7` masks off after shifts of at
+/// most 21.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline]
+fn win24_3bit(w: &[u64; 3], r: usize) -> u32 {
+    let p = 24 * r;
+    let wi = p >> 6;
+    let off = p & 63;
+    let mut v = w[wi] >> off;
+    if off + 24 > 64 {
+        v |= w[wi + 1] << (64 - off);
+    }
+    v as u32
+}
+
 // ---------------------------------------------------------------------
 // AVX2 (+FMA) implementations
 //
 // Decode processes whole u64 words: 8/16/32/64 codes per word for
-// 8/4/2/1-bit planes. Any ragged tail (fewer codes than a full word)
-// falls back to `decode_scalar_range`, which is bitwise identical.
+// 8/4/2/1-bit planes (and 64 codes per THREE words for 3-bit planes).
+// Any ragged tail (fewer codes than a full word/group) falls back to
+// `decode_scalar_range`, which is bitwise identical.
 
 #[cfg(target_arch = "x86_64")]
 mod x86 {
-    use super::{decode_scalar_range, finish_dot, LANES};
+    use super::{decode_scalar_range, finish_dot, win24_3bit, LANES};
     use std::arch::x86_64::*;
 
     /// Pinned-lane dot: 4 ymm accumulators = lanes 0..8, 8..16, 16..24,
@@ -331,16 +359,44 @@ mod x86 {
         finish_dot(&mut lanes, a, b, nb * LANES)
     }
 
-    /// Per-bitwidth word-level decode; `bits` must be in {1,2,4,8}.
+    /// Per-bitwidth word-level decode; `bits` must be in {1,2,3,4,8}.
     #[target_feature(enable = "avx2")]
     pub unsafe fn decode_row_segment(seg: &[u64], bits: i32, scale: f32, out: &mut [f32]) {
         match bits {
             1 => decode1(seg, scale, out),
             2 => decode2(seg, scale, out),
+            3 => decode3(seg, scale, out),
             4 => decode4(seg, scale, out),
             8 => decode8(seg, scale, out),
-            _ => unreachable!("vector decode only handles 1/2/4/8-bit planes"),
+            _ => unreachable!("vector decode only handles 1/2/3/4/8-bit planes"),
         }
+    }
+
+    /// 3-bit: 64 codes per 192-bit (three-word) group, 8 codes per
+    /// round. Each round broadcasts the byte-aligned 24-bit window
+    /// (`win24_3bit`), right-shifts it by {0,3,..,21} per lane
+    /// (`srlv`), masks to 3 bits, and sign-extends with `(v ^ 4) - 4`
+    /// — integer ops plus one exact i32→f32 convert and one multiply,
+    /// so the result is bitwise identical to the scalar straddle loop.
+    #[target_feature(enable = "avx2")]
+    unsafe fn decode3(seg: &[u64], scale: f32, out: &mut [f32]) {
+        let full = out.len() / 64;
+        let vscale = _mm256_set1_ps(scale);
+        let shifts = _mm256_setr_epi32(0, 3, 6, 9, 12, 15, 18, 21);
+        let m3 = _mm256_set1_epi32(0x7);
+        let sign = _mm256_set1_epi32(4);
+        let dst = out.as_mut_ptr();
+        for g in 0..full {
+            let w = [seg[3 * g], seg[3 * g + 1], seg[3 * g + 2]];
+            for r in 0..8 {
+                let win = _mm256_set1_epi32(win24_3bit(&w, r) as i32);
+                let field = _mm256_and_si256(_mm256_srlv_epi32(win, shifts), m3);
+                let codes = _mm256_sub_epi32(_mm256_xor_si256(field, sign), sign);
+                let v = _mm256_mul_ps(_mm256_cvtepi32_ps(codes), vscale);
+                _mm256_storeu_ps(dst.add(g * 64 + r * 8), v);
+            }
+        }
+        decode_scalar_range(seg, 3, scale, out, full * 64);
     }
 
     /// 8-bit: one word = 8 bytes; sign-extend to i32 lanes, convert,
@@ -449,7 +505,7 @@ mod x86 {
 
 #[cfg(target_arch = "aarch64")]
 mod neon {
-    use super::{decode_scalar_range, finish_dot, LANES};
+    use super::{decode_scalar_range, finish_dot, win24_3bit, LANES};
     use std::arch::aarch64::*;
 
     /// Pinned-lane dot: 8 q accumulators = lanes 0..4, 4..8, ..., 28..32;
@@ -475,15 +531,45 @@ mod neon {
         finish_dot(&mut lanes, a, b, nb * LANES)
     }
 
-    /// Per-bitwidth word-level decode; `bits` must be in {1,2,4,8}.
+    /// Per-bitwidth word-level decode; `bits` must be in {1,2,3,4,8}.
     pub unsafe fn decode_row_segment(seg: &[u64], bits: i32, scale: f32, out: &mut [f32]) {
         match bits {
             1 => decode1(seg, scale, out),
             2 => decode2(seg, scale, out),
+            3 => decode3(seg, scale, out),
             4 => decode4(seg, scale, out),
             8 => decode8(seg, scale, out),
-            _ => unreachable!("vector decode only handles 1/2/4/8-bit planes"),
+            _ => unreachable!("vector decode only handles 1/2/3/4/8-bit planes"),
         }
+    }
+
+    /// 3-bit: 64 codes per 192-bit (three-word) group, 8 codes per
+    /// round — the NEON twin of the AVX2 decoder. `vshlq_u32` with
+    /// NEGATIVE per-lane counts is the variable right shift; mask to 3
+    /// bits, sign-extend with `(v ^ 4) - 4`, convert and scale —
+    /// elementwise-exact, so bitwise identical to the scalar loop.
+    unsafe fn decode3(seg: &[u64], scale: f32, out: &mut [f32]) {
+        let full = out.len() / 64;
+        let shl_lo: [i32; 4] = [0, -3, -6, -9];
+        let shl_hi: [i32; 4] = [-12, -15, -18, -21];
+        let s_lo = vld1q_s32(shl_lo.as_ptr());
+        let s_hi = vld1q_s32(shl_hi.as_ptr());
+        let m3 = vdupq_n_u32(0x7);
+        let sign = vdupq_n_s32(4);
+        let dst = out.as_mut_ptr();
+        for g in 0..full {
+            let w = [seg[3 * g], seg[3 * g + 1], seg[3 * g + 2]];
+            for r in 0..8 {
+                let win = vdupq_n_u32(win24_3bit(&w, r));
+                let f0 = vandq_u32(vshlq_u32(win, s_lo), m3);
+                let f1 = vandq_u32(vshlq_u32(win, s_hi), m3);
+                let c0 = vsubq_s32(veorq_s32(vreinterpretq_s32_u32(f0), sign), sign);
+                let c1 = vsubq_s32(veorq_s32(vreinterpretq_s32_u32(f1), sign), sign);
+                vst1q_f32(dst.add(g * 64 + r * 8), vmulq_n_f32(vcvtq_f32_s32(c0), scale));
+                vst1q_f32(dst.add(g * 64 + r * 8 + 4), vmulq_n_f32(vcvtq_f32_s32(c1), scale));
+            }
+        }
+        decode_scalar_range(seg, 3, scale, out, full * 64);
     }
 
     /// Widen 16 sign-extended i8 codes to f32 and store, scaled.

@@ -463,6 +463,52 @@ pub trait ExecBackend {
         0
     }
 
+    /// Truncate a sequence's K/V state to its first `len` tokens (the
+    /// speculative-verify rollback: drop the K/V of rejected draft
+    /// positions). A no-op when the state is already `<= len` or the
+    /// backend keeps none.
+    fn kv_truncate(&self, seq: u64, len: usize) {
+        let _ = (seq, len);
+    }
+
+    // -----------------------------------------------------------------
+    // self-speculative decoding (draft = a uniform low-bit allocation
+    // of the SAME resident weights; target = the served allocation)
+    //
+    // All defaulted to inert: a backend without a draft path (PJRT)
+    // reports `spec_active() == false` and the session never expands
+    // speculative rows there — decode behaves exactly as before. The
+    // interpreter memoizes a second uniform `PackedCache` per
+    // (weights, bits) and drafts greedily off it; `SCALEBITS_SPEC=off`
+    // kills the path at runtime, mirroring SIMD/KV.
+
+    /// True when this backend can draft speculative tokens for the
+    /// serving graphs under the current activation precision.
+    fn spec_active(&self) -> bool {
+        false
+    }
+
+    /// Greedily draft up to `k` continuation tokens for the UNSLID
+    /// window `window` (absolute positions `pos0 == 0`), using a
+    /// uniform `bits`-bit quantization of the same resident weights.
+    /// `seq` names the target sequence whose K/V state (if any) the
+    /// draft forks a scratch copy of — the target state itself is
+    /// never mutated. Fewer than `k` tokens (or none) may come back
+    /// when the window headroom runs out.
+    fn spec_draft(
+        &self,
+        name: &str,
+        seq: Option<u64>,
+        window: &[i32],
+        bits: i32,
+        k: usize,
+        grids: &DeviceGrids,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<i32>> {
+        let _ = (name, seq, window, bits, k, grids, weights);
+        Ok(Vec::new())
+    }
+
     /// Per-executable execution counters since the last reset.
     fn stats(&self) -> HashMap<String, ExecStats>;
 

@@ -104,6 +104,22 @@ fn kv_env_on() -> bool {
     })
 }
 
+/// `SCALEBITS_SPEC` environment override: `off` / `0` disable the
+/// self-speculative draft path even where it is available (same shape
+/// as the `SCALEBITS_SIMD` / `SCALEBITS_KV` overrides). Read once.
+fn spec_env_on() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        if let Ok(v) = std::env::var("SCALEBITS_SPEC") {
+            let v = v.to_ascii_lowercase();
+            if v == "off" || v == "0" {
+                return false;
+            }
+        }
+        true
+    })
+}
+
 /// Named f64 parameter set. Values are `Rc`-shared so the delta
 /// re-quantization path can reuse unchanged matrices across search
 /// iterations without copying them.
@@ -137,10 +153,25 @@ struct PackedCache {
     packed: Rc<HashMap<String, PackedMat>>,
 }
 
+/// Memoized DRAFT parameters for self-speculative decoding: the same
+/// resident weights re-quantized under one uniform low-bit grid (the
+/// "free draft model" — zero extra weight downloads). Keyed by
+/// (weights handle, bits); the unquantized f32 parameters are shared
+/// with the target's [`PackedCache`], so a draft set costs only the
+/// packed planes.
+struct SpecCache {
+    wid: u64,
+    bits: i32,
+    packed: Rc<HashMap<String, PackedMat>>,
+}
+
 /// Per-sequence incremental K/V state for the f32 serving decode path:
 /// post-RoPE key/value rows per layer, `[len, d_model]` row-major —
 /// the exact `b = 1` layout of the batched forward, so the attention
-/// loops index cached and freshly-computed rows identically.
+/// loops index cached and freshly-computed rows identically. `Clone`
+/// so the speculative draft can fork a scratch copy without touching
+/// the target's state.
+#[derive(Clone)]
 struct SeqKv {
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
@@ -177,6 +208,10 @@ pub struct InterpBackend {
     /// path — and is switched to f32 by serve workers via
     /// [`ExecBackend::set_activations`].
     activations: Cell<ActPrecision>,
+    /// Draft parameter cache for self-speculative decoding: one packed
+    /// set per (weights, uniform bits) pair, built lazily on the first
+    /// draft and hit thereafter.
+    scache: RefCell<Option<SpecCache>>,
     /// Per-sequence incremental K/V state (f32 serving decode path),
     /// keyed by the opaque sequence handle the session passes down.
     kv: RefCell<HashMap<u64, SeqKv>>,
@@ -250,6 +285,7 @@ impl InterpBackend {
             ledger: Ledger::default(),
             qcache: RefCell::new(None),
             pcache: RefCell::new(None),
+            scache: RefCell::new(None),
             activations: Cell::new(ActPrecision::F64),
             kv: RefCell::new(HashMap::new()),
             kv_blobs: RefCell::new(HashMap::new()),
@@ -392,6 +428,39 @@ impl InterpBackend {
             packed: packed.clone(),
         });
         Ok((dense, dense32, packed))
+    }
+
+    /// Draft parameter set: every quantized matrix re-packed under ONE
+    /// uniform `bits`-bit grid from the same resident weights. Built
+    /// once per (weights, bits) pair — serving pins its weights, so
+    /// after the first draft this always hits.
+    fn draft_params(
+        &self,
+        weights: &InterpWeights,
+        bits: i32,
+    ) -> Result<Rc<HashMap<String, PackedMat>>> {
+        if let Some(c) = self.scache.borrow().as_ref() {
+            if c.wid == weights.id && c.bits == bits {
+                return Ok(c.packed.clone());
+            }
+        }
+        let cfg = &self.manifest.config;
+        let mut packed = HashMap::with_capacity(self.manifest.quantized.len());
+        for name in &self.manifest.quantized {
+            let w = weights
+                .mats
+                .get(name)
+                .ok_or_else(|| anyhow!("interp weights missing {name:?}"))?;
+            let nb = w.rows.div_ceil(cfg.block_rows) * w.cols.div_ceil(cfg.block_cols);
+            packed.insert(
+                name.clone(),
+                PackedMat::quantize(w, &vec![bits; nb], cfg.block_rows, cfg.block_cols),
+            );
+        }
+        let packed = Rc::new(packed);
+        *self.scache.borrow_mut() =
+            Some(SpecCache { wid: weights.id, bits, packed: packed.clone() });
+        Ok(packed)
     }
 }
 
@@ -691,6 +760,96 @@ impl ExecBackend for InterpBackend {
         drop(store);
         self.kv.borrow_mut().insert(seq, state);
         n
+    }
+
+    fn kv_truncate(&self, seq: u64, len: usize) {
+        let mut kv = self.kv.borrow_mut();
+        let Some(state) = kv.get_mut(&seq) else { return };
+        if state.len <= len {
+            return;
+        }
+        let d = self.manifest.config.d_model;
+        for li in 0..state.k.len() {
+            state.k[li].truncate(len * d);
+            state.v[li].truncate(len * d);
+        }
+        state.len = len;
+    }
+
+    fn spec_active(&self) -> bool {
+        self.activations.get() == ActPrecision::F32 && spec_env_on()
+    }
+
+    fn spec_draft(
+        &self,
+        name: &str,
+        seq: Option<u64>,
+        window: &[i32],
+        bits: i32,
+        k: usize,
+        grids: &DeviceGrids,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<i32>> {
+        if !self.prepared(name) {
+            bail!("executable {name:?} not loaded");
+        }
+        if name != "qpredict" {
+            bail!("spec_draft only serves qpredict, got {name:?}");
+        }
+        if !self.spec_active() {
+            bail!("spec_draft called while the speculative path is inactive");
+        }
+        if !((1..=8).contains(&bits) || bits == 16) {
+            bail!("spec_draft: unsupported draft bitwidth {bits}");
+        }
+        let cfg = &self.manifest.config;
+        let seq_len = cfg.seq_len;
+        if window.is_empty() || window.len() > seq_len {
+            bail!("spec_draft: window len {} outside 1..={seq_len}", window.len());
+        }
+        for &t in window {
+            if t < 0 || t as usize >= cfg.vocab {
+                bail!("spec_draft: token {t} outside vocab {}", cfg.vocab);
+            }
+        }
+        let budget = k.min(seq_len - window.len());
+        if budget == 0 {
+            return Ok(Vec::new());
+        }
+        let g = grids.downcast::<InterpGrids>()?;
+        let w = weights.downcast::<InterpWeights>()?;
+        // Unquantized f32 params are shared with the target; only the
+        // packed planes come from the uniform draft grid.
+        let (_, dense32, _) = self.packed_params(w, g)?;
+        let draft = self.draft_params(w, bits)?;
+        let model = ModelF32::new(&self.manifest, 1, &dense32, &draft);
+
+        let t0 = Instant::now();
+        // Shared-prefix self-speculation: fork a SCRATCH copy of the
+        // target's K/V state when one covers a prefix of this window —
+        // the draft attends over the target-computed prefix and appends
+        // only its own new rows. Without target state (KV off, or a
+        // slid window) the draft recomputes the whole window into a
+        // fresh scratch state. The target's state is never mutated.
+        let mut state = {
+            let kv = self.kv.borrow();
+            match seq.and_then(|sid| kv.get(&sid)) {
+                Some(s) if s.len <= window.len() => s.clone(),
+                _ => SeqKv::new(cfg.n_layers),
+            }
+        };
+        let mut toks = window.to_vec();
+        let mut out = Vec::with_capacity(budget);
+        for _ in 0..budget {
+            let cached = state.len;
+            let Some(t) = model.forward_kv(&toks[cached..], cached, &mut state, true) else {
+                break;
+            };
+            out.push(t);
+            toks.push(t);
+        }
+        self.ledger.note_exec("spec_draft", t0.elapsed().as_secs_f64());
+        Ok(out)
     }
 
     fn stats(&self) -> HashMap<String, ExecStats> {
@@ -2002,6 +2161,145 @@ mod tests {
             if v == "off" || v == "recompute" || v == "0" {
                 let (be, _w, _g, _tokens) = kv_backend();
                 assert!(!be.kv_active(), "SCALEBITS_KV={v} must force recompute");
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // self-speculative drafting + KV rollback
+
+    /// KV rollback exactness: truncating a sequence's state back to a
+    /// prefix length and re-decoding from there is bitwise identical to
+    /// never having cached the dropped positions at all.
+    #[test]
+    fn kv_truncate_rolls_back_bitwise() {
+        let (be, w, g, tokens) = kv_backend();
+        if !be.kv_active() {
+            return;
+        }
+        let prompt = &tokens[..4];
+        let rows = [KvRow { seq: 40, window: prompt, emit: true }];
+        let t0 = be.kv_step("qpredict", &rows, &g, &w).unwrap()[0].unwrap();
+        let mut toks = prompt.to_vec();
+        toks.push(t0);
+        let rows = [KvRow { seq: 40, window: &toks, emit: true }];
+        let t1 = be.kv_step("qpredict", &rows, &g, &w).unwrap()[0].unwrap();
+        assert_eq!(be.kv_len(40), toks.len());
+
+        // roll back past the decoded token, re-decode the SAME window
+        be.kv_truncate(40, prompt.len());
+        assert_eq!(be.kv_len(40), prompt.len());
+        let rows = [KvRow { seq: 40, window: &toks, emit: true }];
+        let t1b = be.kv_step("qpredict", &rows, &g, &w).unwrap()[0].unwrap();
+        assert_eq!(t1b, t1, "decode after rollback diverged");
+        assert_eq!(t1b, recompute_emit(&be, &w, &g, &toks));
+
+        // truncating to >= the cached length is a no-op
+        be.kv_truncate(40, 100);
+        assert_eq!(be.kv_len(40), toks.len());
+        // unknown sequences are ignored
+        be.kv_truncate(999, 0);
+    }
+
+    /// The degenerate-draft control at the backend level: when the
+    /// TARGET allocation is the same uniform grid the draft uses, the
+    /// draft model IS the target model, so every drafted token equals
+    /// the greedy target decode bitwise — with and without target K/V
+    /// state to fork.
+    #[test]
+    fn spec_draft_degenerate_equals_target_decode() {
+        let (be, store, tokens) = tiny_backend();
+        let index = BlockIndex::from_manifest(&be.manifest).unwrap();
+        let w = be.upload_weights(&store).unwrap();
+        let g = be.upload_grids(&BitAlloc::uniform(&index, 2).grids(&index)).unwrap();
+        be.set_activations(ActPrecision::F32).unwrap();
+        if !be.spec_active() {
+            return; // SCALEBITS_SPEC=off lane
+        }
+        let seq = be.manifest.config.seq_len;
+        let prompt = &tokens[..3];
+        let k = seq - prompt.len();
+
+        // no K/V state: the draft recomputes the window from scratch
+        let drafted = be.spec_draft("qpredict", None, prompt, 2, k, &g, &w).unwrap();
+        assert_eq!(drafted.len(), k);
+        let mut toks = prompt.to_vec();
+        for (i, &d) in drafted.iter().enumerate() {
+            assert_eq!(d, recompute_emit(&be, &w, &g, &toks), "draft {i}");
+            toks.push(d);
+        }
+
+        // with target K/V state: fork-and-extend drafts the same tokens
+        if be.kv_active() {
+            let rows = [KvRow { seq: 50, window: prompt, emit: false }];
+            be.kv_step("qpredict", &rows, &g, &w).unwrap();
+            let kv_len = be.kv_len(50);
+            let forked = be.spec_draft("qpredict", Some(50), prompt, 2, k, &g, &w).unwrap();
+            assert_eq!(forked, drafted, "forked draft diverged from scratch draft");
+            assert_eq!(be.kv_len(50), kv_len, "drafting mutated the target K/V state");
+        }
+    }
+
+    /// Drafting with a DIFFERENT (lower-bit) allocation than the target
+    /// produces a plausible but not necessarily agreeing stream — the
+    /// contract is only shape + determinism, never mutation of target
+    /// state.
+    #[test]
+    fn spec_draft_is_deterministic_and_clamped() {
+        let (be, w, g, tokens) = kv_backend();
+        if !be.spec_active() {
+            return;
+        }
+        let seq = be.manifest.config.seq_len;
+        let prompt = &tokens[..5];
+        let a = be.spec_draft("qpredict", None, prompt, 2, 64, &g, &w).unwrap();
+        let b = be.spec_draft("qpredict", None, prompt, 2, 64, &g, &w).unwrap();
+        assert_eq!(a, b, "drafting is not deterministic");
+        assert!(a.len() <= seq - prompt.len(), "draft overran the window headroom");
+        for &t in &a {
+            assert!(t >= 0 && (t as usize) < be.manifest.config.vocab);
+        }
+        // zero budget: a full window cannot draft
+        let full: Vec<i32> = (0..seq as i32).map(|i| i % 4).collect();
+        assert!(be.spec_draft("qpredict", None, &full, 2, 4, &g, &w).unwrap().is_empty());
+        assert!(be.spec_draft("qpredict", None, prompt, 2, 0, &g, &w).unwrap().is_empty());
+    }
+
+    #[test]
+    fn spec_draft_rejects_malformed_calls() {
+        let (be, w, g, tokens) = kv_backend();
+        // inactive under f64 activations
+        be.set_activations(ActPrecision::F64).unwrap();
+        assert!(!be.spec_active());
+        assert!(be.spec_draft("qpredict", None, &tokens[..4], 2, 2, &g, &w).is_err());
+        be.set_activations(ActPrecision::F32).unwrap();
+        if !be.spec_active() {
+            return;
+        }
+        // only qpredict drafts
+        assert!(be.spec_draft("qlogits", None, &tokens[..4], 2, 2, &g, &w).is_err());
+        // bad bitwidths
+        assert!(be.spec_draft("qpredict", None, &tokens[..4], 0, 2, &g, &w).is_err());
+        assert!(be.spec_draft("qpredict", None, &tokens[..4], 9, 2, &g, &w).is_err());
+        // empty / oversized windows
+        assert!(be.spec_draft("qpredict", None, &[], 2, 2, &g, &w).is_err());
+        let long = vec![0i32; be.manifest.config.seq_len + 1];
+        assert!(be.spec_draft("qpredict", None, &long, 2, 2, &g, &w).is_err());
+        // out-of-vocab token
+        let bad = [be.manifest.config.vocab as i32];
+        assert!(be.spec_draft("qpredict", None, &bad, 2, 2, &g, &w).is_err());
+    }
+
+    /// Mirror of the SIMD/KV override tests: when the environment
+    /// forces the speculative path off, `spec_active` must report false
+    /// even with f32 serving activations.
+    #[test]
+    fn spec_env_override_forces_off() {
+        if let Ok(v) = std::env::var("SCALEBITS_SPEC") {
+            let v = v.to_ascii_lowercase();
+            if v == "off" || v == "0" {
+                let (be, _w, _g, _tokens) = kv_backend();
+                assert!(!be.spec_active(), "SCALEBITS_SPEC={v} must disable drafting");
             }
         }
     }

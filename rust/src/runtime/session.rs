@@ -123,8 +123,10 @@ impl Session {
     /// emitting (the pre-scheduler call shape, kept for sequential
     /// references and tests).
     pub fn decode_step(&self, name: &str, rows: &[&[i32]]) -> Result<Vec<i32>> {
-        let step: Vec<StepRow> =
-            rows.iter().map(|w| StepRow { window: w, emit: true, seq: None, pos0: 0 }).collect();
+        let step: Vec<StepRow> = rows
+            .iter()
+            .map(|w| StepRow { window: w, emit: true, seq: None, pos0: 0, spec_k: 0 })
+            .collect();
         self.decode_step_rows(name, &step)?
             .into_iter()
             .map(|o| o.ok_or_else(|| anyhow::anyhow!("emit row returned no token")))
@@ -226,6 +228,147 @@ impl Session {
         }
         Ok(next)
     }
+
+    /// Speculative step-batch entry point: like
+    /// [`Session::decode_step_rows`], but rows with `spec_k > 0` run
+    /// **draft → verify → rollback** and may emit SEVERAL tokens:
+    ///
+    /// 1. **Draft.** The backend's uniform `spec_bits` quantization of
+    ///    the same resident weights greedily proposes up to `spec_k`
+    ///    tokens `d_1..d_k` (advancing a scratch fork of the row's K/V
+    ///    state; the target state is untouched).
+    /// 2. **Verify.** The row expands into `k + 1` target rows — the
+    ///    original window, then the window extended by each draft
+    ///    prefix — inside ONE step batch. Row `j`'s readout `g_{j+1}`
+    ///    is exactly what plain decode would emit after accepting
+    ///    `d_1..d_j`, so the longest prefix with `d_i == g_i` (length
+    ///    `a`) yields `a + 1` emittable tokens `g_1..g_{a+1}` — the
+    ///    `a` agreed drafts re-read from the target, plus the target's
+    ///    own correction/bonus token. Emitted tokens are therefore
+    ///    **bitwise identical** to plain decode by construction.
+    /// 3. **Rollback.** The target's K/V state (which grew through the
+    ///    rejected positions during verification) is truncated back to
+    ///    the last accepted token, so the next iteration resumes as if
+    ///    the accepted tokens had been decoded one at a time.
+    ///
+    /// Rows with `spec_k == 0` (and every non-emit / slid row) behave
+    /// exactly as in [`Session::decode_step_rows`]; when the backend
+    /// has no draft path ([`ExecBackend::spec_active`] false — PJRT,
+    /// or `SCALEBITS_SPEC=off`) ALL rows do. Each returned [`StepOut`]
+    /// carries the emitted tokens plus drafted/accepted counts for the
+    /// accept-rate metrics.
+    pub fn decode_step_rows_spec(
+        &self,
+        name: &str,
+        rows: &[StepRow],
+        spec_bits: i32,
+    ) -> Result<Vec<StepOut>> {
+        let seq = self.manifest().config.seq_len;
+        let spec_on = name == "qpredict" && self.backend.spec_active();
+
+        // 1. draft: greedy low-bit proposals per eligible row. A row is
+        // eligible when it emits from an unslid window with headroom —
+        // the verify windows `W ++ d[..j]` must all fit in seq_len.
+        let mut drafts: Vec<Vec<i32>> = Vec::with_capacity(rows.len());
+        for r in rows {
+            let k = if spec_on && r.emit && r.pos0 == 0 && r.window.len() < seq {
+                r.spec_k.min(seq - r.window.len())
+            } else {
+                0
+            };
+            drafts.push(if k == 0 {
+                Vec::new()
+            } else {
+                self.backend.spec_draft(
+                    name,
+                    r.seq,
+                    r.window,
+                    spec_bits,
+                    k,
+                    &self.grids,
+                    &self.weights,
+                )?
+            });
+        }
+
+        // 2. expand: k extra verify rows per drafting row, windows
+        // owned here (`W ++ d[..1]` .. `W ++ d[..k]`). `base[i]` is row
+        // i's offset into the expanded batch.
+        let mut owned: Vec<Vec<i32>> = Vec::new();
+        let mut base: Vec<usize> = Vec::with_capacity(rows.len());
+        let mut off = 0usize;
+        for (r, d) in rows.iter().zip(&drafts) {
+            base.push(off);
+            off += 1 + d.len();
+            for j in 1..=d.len() {
+                let mut w = Vec::with_capacity(r.window.len() + j);
+                w.extend_from_slice(r.window);
+                w.extend_from_slice(&d[..j]);
+                owned.push(w);
+            }
+        }
+        let mut oi = 0usize;
+        let mut erows: Vec<StepRow> = Vec::with_capacity(off);
+        for (r, d) in rows.iter().zip(&drafts) {
+            erows.push(StepRow { spec_k: 0, ..*r });
+            for _ in 0..d.len() {
+                erows.push(StepRow {
+                    window: &owned[oi],
+                    emit: true,
+                    seq: r.seq,
+                    pos0: 0,
+                    spec_k: 0,
+                });
+                oi += 1;
+            }
+        }
+
+        // one target step scores every position (same-seq verify rows
+        // are consecutive, so the KV path grows the state row by row)
+        let emitted = self.decode_step_rows(name, &erows)?;
+
+        // 3. accept + rollback
+        let kv_on = name == "qpredict" && self.backend.kv_active();
+        let mut out = Vec::with_capacity(rows.len());
+        for (i, (r, d)) in rows.iter().zip(&drafts).enumerate() {
+            let g = &emitted[base[i]..base[i] + 1 + d.len()];
+            if d.is_empty() {
+                out.push(StepOut { tokens: g[0].into_iter().collect(), drafted: 0, accepted: 0 });
+                continue;
+            }
+            let mut a = 0usize;
+            while a < d.len() && g[a] == Some(d[a]) {
+                a += 1;
+            }
+            let tokens: Vec<i32> = g[..a + 1]
+                .iter()
+                .map(|t| t.ok_or_else(|| anyhow::anyhow!("verify row returned no token")))
+                .collect::<Result<_>>()?;
+            if kv_on {
+                if let Some(sid) = r.seq {
+                    // drop the K/V of rejected positions: the state must
+                    // hold exactly everything but the newest token
+                    self.backend.kv_truncate(sid, r.window.len() + a);
+                }
+            }
+            out.push(StepOut { tokens, drafted: d.len(), accepted: a });
+        }
+        Ok(out)
+    }
+}
+
+/// Result of one row in a speculative step batch (see
+/// [`Session::decode_step_rows_spec`]): the emitted tokens in order —
+/// empty for a non-emit row, one token for a plain decode row, up to
+/// `spec_k + 1` for a drafting row — plus the draft accounting.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StepOut {
+    pub tokens: Vec<i32>,
+    /// Draft tokens proposed for this row this step.
+    pub drafted: usize,
+    /// Drafted tokens the target verified and accepted (`<= drafted`;
+    /// `tokens.len() == accepted + 1` for a drafting row).
+    pub accepted: usize,
 }
 
 /// One row of a scheduler-planned step batch: the token window to
@@ -241,6 +384,11 @@ pub struct StepRow<'a> {
     /// Absolute position of `window[0]`. Non-zero means the window has
     /// SLID past the compiled seq_len; such rows always recompute.
     pub pos0: usize,
+    /// Speculative-decode budget: draft up to this many tokens and
+    /// verify them in the same step (see
+    /// [`Session::decode_step_rows_spec`]). `0` = plain decode; the
+    /// plain [`Session::decode_step_rows`] entry point ignores it.
+    pub spec_k: usize,
 }
 
 /// Assemble the padded row-major `[batch, seq]` token tensor for one

@@ -114,6 +114,13 @@ pub struct GenRequest {
     /// `ServeConfig::prefill_chunk`; `Some(0)` is rejected at
     /// admission). See `serve::sched` for the policy.
     pub prefill_chunk: Option<usize>,
+    /// Per-request speculative-drafting cap: at most this many draft
+    /// tokens per verify round for THIS request (`None` = the server's
+    /// `--spec-k`; `Some(0)` opts the request out of speculation —
+    /// valid, unlike `prefill_chunk`, because plain decode is always
+    /// available). The scheduler still clamps to the server-wide knob,
+    /// so this can only lower the budget, never raise it.
+    pub spec_k: Option<usize>,
 }
 
 impl GenRequest {
@@ -127,6 +134,7 @@ impl GenRequest {
             priority: Priority::Normal,
             record: true,
             prefill_chunk: None,
+            spec_k: None,
         }
     }
 
@@ -154,6 +162,12 @@ impl GenRequest {
     /// Override the server's prefill-chunk budget for this request.
     pub fn prefill_chunk(mut self, chunk: usize) -> GenRequest {
         self.prefill_chunk = Some(chunk);
+        self
+    }
+
+    /// Cap speculative drafting for this request (`0` opts out).
+    pub fn spec_k(mut self, k: usize) -> GenRequest {
+        self.spec_k = Some(k);
         self
     }
 }
@@ -658,17 +672,20 @@ mod tests {
         assert_eq!(r.priority, Priority::Normal);
         assert!(r.record);
         assert!(r.prefill_chunk.is_none(), "default = server-wide prefill policy");
+        assert!(r.spec_k.is_none(), "default = server-wide speculation policy");
         let r = r
             .max_new_tokens(8)
             .deadline(Duration::from_millis(50))
             .priority(Priority::High)
             .prefill_chunk(16)
+            .spec_k(0)
             .unrecorded();
         assert_eq!(r.max_new_tokens, 8);
         assert!(r.deadline.is_some());
         assert_eq!(r.priority, Priority::High);
         assert!(!r.record);
         assert_eq!(r.prefill_chunk, Some(16));
+        assert_eq!(r.spec_k, Some(0), "Some(0) = per-request opt-out, valid at admission");
     }
 
     #[test]

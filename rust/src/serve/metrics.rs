@@ -200,8 +200,16 @@ pub struct ServeMetrics {
     /// each iteration; same sample count as `live_depth_samples`).
     pub prefill_depth_sum: u64,
     /// Tokens generated across all recorded requests (decode
-    /// throughput numerator).
+    /// throughput numerator). Includes tokens accepted from
+    /// speculative verify rounds — they are real generated tokens,
+    /// bitwise identical to plain decode.
     pub decode_tokens: u64,
+    /// Self-speculative decoding: draft tokens proposed by the low-bit
+    /// draft pass across all recorded verify rounds, and how many of
+    /// them the mixed-precision target accepted. `spec_accept_rate` is
+    /// the ratio; both stay zero with speculation off.
+    pub spec_drafted: u64,
+    pub spec_accepted: u64,
     /// Terminal-state counters for recorded requests. `served` is
     /// their sum; rejected requests never reach a worker and are
     /// counted router-side.
@@ -263,6 +271,18 @@ impl ServeMetrics {
         }
     }
 
+    /// Fraction of drafted tokens the target accepted (0.0 when no
+    /// drafting happened). The per-round token yield is
+    /// `accepted + 1`, so at accept-rate `a` and draft depth `k` a
+    /// verify round replaces `~a*k + 1` plain decode iterations.
+    pub fn spec_accept_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        }
+    }
+
     /// Mean count of still-prefilling live sequences per iteration.
     pub fn mean_prefill_depth(&self) -> f64 {
         if self.live_depth_samples == 0 {
@@ -293,6 +313,8 @@ impl ServeMetrics {
         self.live_depth_samples += other.live_depth_samples;
         self.prefill_depth_sum += other.prefill_depth_sum;
         self.decode_tokens += other.decode_tokens;
+        self.spec_drafted += other.spec_drafted;
+        self.spec_accepted += other.spec_accepted;
         self.completed += other.completed;
         self.cancelled += other.cancelled;
         self.deadline_exceeded += other.deadline_exceeded;
@@ -457,6 +479,8 @@ mod tests {
             cache_hits: 3,
             cache_misses: 1,
             cache_evictions: 2,
+            spec_drafted: 8,
+            spec_accepted: 6,
             ..Default::default()
         };
         assert!((a.mean_live_depth() - 6.0).abs() < 1e-12);
@@ -470,5 +494,17 @@ mod tests {
         assert_eq!((a.cache_hits, a.cache_misses, a.cache_evictions), (3, 1, 2));
         assert!((a.mean_live_depth() - 28.0 / 6.0).abs() < 1e-12);
         assert!((a.mean_prefill_depth() - 9.0 / 6.0).abs() < 1e-12);
+        assert_eq!((a.spec_drafted, a.spec_accepted), (8, 6));
+        assert!((a.spec_accept_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_accept_rate_is_zero_without_drafting() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.spec_accept_rate(), 0.0);
+        // accepted can never exceed drafted in real runs, but the
+        // ratio itself must stay well-defined whatever the counters say
+        let m = ServeMetrics { spec_drafted: 4, spec_accepted: 4, ..Default::default() };
+        assert_eq!(m.spec_accept_rate(), 1.0);
     }
 }

@@ -35,6 +35,11 @@
 //!   PJRT handles are `!Send`; per-step host→device transfer is the
 //!   padded token batch alone. Workers select their backend via
 //!   `ServeConfig::backend` (`--backend {auto,pjrt-cpu,interp}`).
+//!   With `--spec-k N`, eligible decode rows become draft-and-verify
+//!   rows: a uniform `--spec-bits` quantization of the SAME weights
+//!   drafts up to N tokens and the served mixed-precision allocation
+//!   verifies them in one multi-row step — accepted tokens are bitwise
+//!   identical to plain decode (see `runtime::session`).
 //!
 //! Threading model in one picture:
 //!

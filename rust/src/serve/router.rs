@@ -1,7 +1,9 @@
 //! Worker lifecycle + the scheduler drive loop behind the request API.
 //! All scheduling POLICY lives in [`super::sched`]; this module is
 //! wiring: it owns the engines, the worker threads, and the loop that
-//! turns a [`Scheduler`] plan into `Session::decode_step_rows` calls.
+//! turns a [`Scheduler`] plan into `Session::decode_step_rows_spec`
+//! calls (plain decode rows and speculative draft-and-verify rows go
+//! through the same entry point).
 //!
 //! Threading model
 //! ---------------
@@ -115,6 +117,20 @@ pub struct ServeConfig {
     /// longest-prefix-match against the per-worker caches, or pure
     /// round-robin. With the cache disabled both behave identically.
     pub placement: Placement,
+    /// Self-speculative decoding budget (`--spec-k`): eligible decode
+    /// rows draft up to this many tokens from a uniform low-bit
+    /// quantization of the SAME resident weights and verify them in
+    /// one target step. `0` (default) disables speculation. Accepted
+    /// tokens are BITWISE identical to plain decode (greedy target
+    /// verification); the knob trades step slots for accept-rate-
+    /// dependent decode throughput. Backends without a draft path
+    /// (PJRT), f64 activations, and `SCALEBITS_SPEC=off` all force it
+    /// off regardless.
+    pub spec_k: usize,
+    /// Draft bitwidth for speculative decoding (`--spec-bits`,
+    /// default 2): the uniform allocation the draft PackedCache is
+    /// quantized at. Lower = cheaper drafts, lower accept-rate.
+    pub spec_bits: i32,
 }
 
 impl ServeConfig {
@@ -134,6 +150,8 @@ impl ServeConfig {
             cache_bytes: 0,
             cache_block: DEFAULT_CACHE_BLOCK,
             placement: Placement::Prefix,
+            spec_k: 0,
+            spec_bits: 2,
         }
     }
 }
@@ -199,6 +217,17 @@ pub(crate) struct DecodeSeq {
     /// The completed prompt was offered to the prefix cache (one-shot,
     /// at the Prefilling → Decoding transition).
     cache_inserted: bool,
+    /// Whether this sequence currently HOLDS its prefix-cache pins.
+    /// Diverges from `cache_depth` across preemption: the worker drops
+    /// the pins when the sequence enters the scheduler's pen (so a
+    /// penned sequence can never wedge eviction under a tiny cache
+    /// budget) and re-pins on resume — `cache_depth` keeps the last
+    /// pinned depth either way so the re-pin knows its cap.
+    cache_pinned: bool,
+    /// Per-request speculative-drafting cap from [`GenRequest::spec_k`]
+    /// (`None` = the server's `--spec-k`; `Some(0)` opts this request
+    /// out of speculation entirely).
+    spec_k: Option<usize>,
 }
 
 impl SchedSeq for DecodeSeq {
@@ -239,6 +268,21 @@ impl SchedSeq for DecodeSeq {
     fn done(&self) -> bool {
         self.generated.len() >= self.max_new
     }
+
+    /// Draft headroom for this iteration. Zero until the prompt is
+    /// fully fed (a prefill slice can't draft), then remaining budget
+    /// MINUS ONE — a verify round emits up to `accepted + 1` tokens,
+    /// so drafting `remaining - 1` is the largest k that can never
+    /// overshoot `max_new` — further capped by the per-request
+    /// override. The scheduler still clamps to its own `--spec-k`
+    /// and to `batch - 1` slots.
+    fn spec_budget(&self) -> usize {
+        if self.state != SeqState::Decoding {
+            return 0;
+        }
+        let headroom = self.max_new.saturating_sub(self.generated.len()).saturating_sub(1);
+        self.spec_k.unwrap_or(usize::MAX).min(headroom)
+    }
 }
 
 impl DecodeSeq {
@@ -269,6 +313,8 @@ impl DecodeSeq {
             last_event: submitted,
             cache_depth: None,
             cache_inserted: false,
+            cache_pinned: false,
+            spec_k: req.spec_k,
         }
     }
 
@@ -364,6 +410,8 @@ struct SchedKnobs {
     aging: Duration,
     activations: ActPrecision,
     kv: bool,
+    spec_k: usize,
+    spec_bits: i32,
 }
 
 /// Worker lifecycle handle: spawns the decode workers, hands out
@@ -409,6 +457,8 @@ impl Router {
             aging: cfg.aging,
             activations: cfg.activations,
             kv: cfg.kv,
+            spec_k: cfg.spec_k,
+            spec_bits: cfg.spec_bits,
         };
         let mut queues = Vec::with_capacity(cfg.workers);
         let mut caches = Vec::with_capacity(cfg.workers);
@@ -573,6 +623,11 @@ fn worker_loop(
     // executables are lowered f32 end-to-end already.
     session.set_activations(knobs.activations)?;
 
+    // Speculation is planned only when the knob asks for it AND the
+    // backend can draft under the current activation precision (and
+    // `SCALEBITS_SPEC` hasn't killed it) — otherwise spec rows would
+    // reserve step slots the session could never use.
+    let spec_k = if session.backend().spec_active() { knobs.spec_k } else { 0 };
     let sched_cfg = SchedConfig {
         batch,
         seq_len,
@@ -580,6 +635,7 @@ fn worker_loop(
         prefill_chunk: knobs.prefill_chunk,
         idle_window: knobs.idle_window,
         aging: knobs.aging,
+        spec_k,
     };
     let mut sched: Scheduler<DecodeSeq> = Scheduler::new(queue.clone(), sched_cfg);
     let mut metrics = ServeMetrics::default();
@@ -603,6 +659,26 @@ fn worker_loop(
             }
         }
         metrics.preempted += sched.take_preemptions();
+        // Cache-aware preemption: a sequence sitting in the pen must
+        // not keep holding its prefix-cache pins — pinned nodes are
+        // never evicted, so under a tiny `--cache-bytes` budget one
+        // preempted pin owner could wedge eviction (and with it every
+        // insert) for as long as it stays preempted. Drop the pins on
+        // the way into the pen; the live walk below re-pins whatever
+        // prefix is still cached once the sequence resumes.
+        // `cache_depth` is deliberately left alone: it records the
+        // depth to re-pin up to (and marks the one-time lookup done).
+        for s in sched.pen_mut() {
+            if !s.cache_pinned {
+                continue;
+            }
+            s.cache_pinned = false;
+            let depth = s.cache_depth.unwrap_or(0);
+            if depth > 0 {
+                let prompt = &s.tokens[..s.prompt_len];
+                cache.lock().expect("prefix cache lock").unpin(prompt, depth);
+            }
+        }
         if sched.live_len() == 0 {
             if open {
                 continue;
@@ -621,6 +697,22 @@ fn worker_loop(
         // `kv_step`'s feed-from-cached-cursor) covers the gap; without
         // KV the emit row recomputes the full window regardless.
         for s in sched.live_mut() {
+            // Resume side of the pen walk above: a sequence whose pins
+            // were dropped at preemption re-pins the surviving prefix.
+            // Eviction may have shortened it while the sequence was
+            // penned, so the refreshed depth can be smaller than the
+            // original — harmless, because the K/V blobs were consumed
+            // at seed time and the prefill cursor never moves back;
+            // only the pin bookkeeping needs refreshing.
+            if let Some(prev) = s.cache_depth {
+                if prev > 0 && !s.cache_pinned {
+                    let prompt = &s.tokens[..s.prompt_len];
+                    let (depth, _blobs) =
+                        cache.lock().expect("prefix cache lock").lookup_pin(prompt, prev);
+                    s.cache_depth = Some(depth);
+                    s.cache_pinned = depth > 0;
+                }
+            }
             if s.state() != SeqState::Prefilling || s.fed != 0 || s.cache_depth.is_some() {
                 continue;
             }
@@ -634,6 +726,7 @@ fn worker_loop(
                 c.lookup_pin(prompt, s.prompt_len.saturating_sub(1))
             };
             s.cache_depth = Some(depth);
+            s.cache_pinned = depth > 0;
             if depth > 0 {
                 if kv_on && !blobs.is_empty() {
                     session.backend().kv_seed(s.id, &blobs);
@@ -678,11 +771,12 @@ fn worker_loop(
                         emit: r.emit,
                         seq: kv_on.then_some(s.id),
                         pos0: end.saturating_sub(seq_len),
+                        spec_k: r.spec_k,
                     }
                 })
                 .collect();
             let t0 = Instant::now();
-            let outs = session.decode_step_rows(exec_name, &rows)?;
+            let outs = session.decode_step_rows_spec(exec_name, &rows, knobs.spec_bits)?;
             let exec_dt = t0.elapsed().as_secs_f64();
             if recorded > 0 {
                 metrics.batches += 1;
@@ -699,8 +793,16 @@ fn worker_loop(
                         metrics.prefill_tokens += r.advance as u64;
                     }
                 }
-                if let Some(tok) = *out {
+                // A plain decode row emits one token; a draft-and-
+                // verify row emits its accepted run plus the target's
+                // next token (1..=spec_k+1 of them, bitwise identical
+                // to what plain decode would have produced one by one).
+                for &tok in &out.tokens {
                     s.push_token(tok, now, &mut metrics);
+                }
+                if s.record && out.drafted > 0 {
+                    metrics.spec_drafted += out.drafted as u64;
+                    metrics.spec_accepted += out.accepted as u64;
                 }
                 // Prefill just completed: offer the prompt's whole
                 // blocks to the prefix cache (new blocks snapshot this
@@ -754,10 +856,17 @@ fn worker_loop(
 /// prefix-cache pins so its blocks become evictable, and drop its
 /// per-sequence K/V state.
 fn release_seq(cache: &Mutex<PrefixCache>, session: &Session, s: &DecodeSeq) {
-    if let Some(depth) = s.cache_depth {
-        if depth > 0 {
-            let prompt = &s.tokens[..s.prompt_len];
-            cache.lock().expect("prefix cache lock").unpin(prompt, depth);
+    // `cache_pinned` (not just `cache_depth`) gates the unpin: a
+    // sequence retired straight out of the pen (cancelled/expired
+    // while preempted) already dropped its pins on the way in, and a
+    // second unpin would steal a reference from some OTHER sequence
+    // pinning the same prefix.
+    if s.cache_pinned {
+        if let Some(depth) = s.cache_depth {
+            if depth > 0 {
+                let prompt = &s.tokens[..s.prompt_len];
+                cache.lock().expect("prefix cache lock").unpin(prompt, depth);
+            }
         }
     }
     session.backend().kv_free(s.id);

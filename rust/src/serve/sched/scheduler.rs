@@ -56,6 +56,15 @@ pub trait SchedSeq {
     fn done(&self) -> bool {
         false
     }
+
+    /// How many speculative draft tokens this sequence could usefully
+    /// verify this iteration (0 = plain decode). The worker's sequence
+    /// derives this from its remaining generation budget and any
+    /// per-request override; the planner clamps it to the configured
+    /// [`SchedConfig::spec_k`] and the step-batch row budget.
+    fn spec_budget(&self) -> usize {
+        0
+    }
 }
 
 /// Scheduler knobs. `batch`/`seq_len` describe the compiled step
@@ -83,6 +92,11 @@ pub struct SchedConfig {
     /// priority class higher per `aging` waited (capped at `High`).
     /// `Duration::ZERO` disables aging.
     pub aging: Duration,
+    /// Speculative-decode budget: eligible decode rows draft up to this
+    /// many tokens per iteration and verify them in one step (`0`
+    /// disables speculation). A drafting row occupies `spec_k + 1` step
+    /// slots — the planner packs accordingly.
+    pub spec_k: usize,
 }
 
 impl SchedConfig {
@@ -94,6 +108,7 @@ impl SchedConfig {
             prefill_chunk: 0,
             idle_window: Duration::from_millis(3),
             aging: Duration::from_millis(250),
+            spec_k: 0,
         }
     }
 
@@ -120,12 +135,18 @@ impl SchedConfig {
 /// first generated token, computed from the window over the full
 /// prompt exactly as a whole-prompt step would, which is why chunking
 /// never changes the generated tokens).
+///
+/// `spec_k > 0` marks a DRAFT-AND-VERIFY row: the session drafts up to
+/// `spec_k` tokens from the low-bit allocation and verifies them in
+/// the same step, so the row expands into up to `spec_k + 1` physical
+/// step slots — the planner already budgeted them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PlanRow {
     pub seq: usize,
     pub window_end: Option<usize>,
     pub advance: usize,
     pub emit: bool,
+    pub spec_k: usize,
 }
 
 /// One iteration's worth of padded step batches, each at most `batch`
@@ -364,6 +385,15 @@ impl<T: SchedSeq> Scheduler<T> {
         self.pen.len()
     }
 
+    /// The penned sequences themselves, mutably — the worker walks
+    /// this after each admission pass to release resources a preempted
+    /// sequence should not hold while it waits (e.g. its prefix-cache
+    /// pins, so a tiny cache budget cannot be wedged by a large
+    /// virtual live set).
+    pub fn pen_mut(&mut self) -> &mut [T] {
+        &mut self.pen
+    }
+
     /// Evictions since the last call (worker metrics drain this).
     pub fn take_preemptions(&mut self) -> u64 {
         std::mem::take(&mut self.preemptions)
@@ -394,7 +424,15 @@ impl<T: SchedSeq> Scheduler<T> {
             let fed = s.fed().min(total);
             let remaining = total - fed;
             if remaining == 0 {
-                rows.push(PlanRow { seq: i, window_end: None, advance: 0, emit: true });
+                // Draft-and-verify budget: the configured cap, the
+                // sequence's own appetite, and the physical step batch
+                // (a drafting row needs spec_k + 1 slots) all clamp it.
+                let spec_k = self
+                    .cfg
+                    .spec_k
+                    .min(s.spec_budget())
+                    .min(self.cfg.batch.saturating_sub(1));
+                rows.push(PlanRow { seq: i, window_end: None, advance: 0, emit: true, spec_k });
                 continue;
             }
             let chunk = s.prefill_chunk().unwrap_or(cfg_chunk);
@@ -408,6 +446,7 @@ impl<T: SchedSeq> Scheduler<T> {
                         window_end: Some(end),
                         advance: take,
                         emit: end == total,
+                        spec_k: 0,
                     });
                 }
             } else {
@@ -418,10 +457,29 @@ impl<T: SchedSeq> Scheduler<T> {
                     window_end: Some(end),
                     advance: take,
                     emit: end == total,
+                    spec_k: 0,
                 });
             }
         }
-        let steps = rows.chunks(self.cfg.batch).map(|c| c.to_vec()).collect();
+        // Slot-aware packing: a plain row costs one step slot, a
+        // drafting row `spec_k + 1` (its verify expansion must fit the
+        // SAME compiled batch). Greedy in live order, so disabling
+        // speculation reproduces the old `chunks(batch)` packing.
+        let mut steps: Vec<Vec<PlanRow>> = Vec::new();
+        let mut cur: Vec<PlanRow> = Vec::new();
+        let mut slots = 0usize;
+        for row in rows {
+            let need = 1 + row.spec_k;
+            if !cur.is_empty() && slots + need > self.cfg.batch {
+                steps.push(std::mem::take(&mut cur));
+                slots = 0;
+            }
+            slots += need;
+            cur.push(row);
+        }
+        if !cur.is_empty() {
+            steps.push(cur);
+        }
         IterationPlan { steps }
     }
 }
@@ -442,6 +500,7 @@ mod tests {
         prompt: usize,
         fed: usize,
         chunk: Option<usize>,
+        spec: usize,
         done: bool,
         dead: Arc<AtomicBool>,
     }
@@ -456,6 +515,7 @@ mod tests {
                 prompt: 0,
                 fed: 0,
                 chunk: None,
+                spec: usize::MAX,
                 done: false,
                 dead: Arc::new(AtomicBool::new(false)),
             }
@@ -504,6 +564,10 @@ mod tests {
         fn done(&self) -> bool {
             self.done
         }
+
+        fn spec_budget(&self) -> usize {
+            self.spec
+        }
     }
 
     fn normal(v: i32) -> TS {
@@ -527,6 +591,7 @@ mod tests {
             prefill_chunk: 0,
             idle_window: Duration::from_millis(5),
             aging: Duration::ZERO,
+            spec_k: 0,
         }
     }
 
@@ -828,11 +893,11 @@ mod tests {
         assert_eq!(plan.steps.len(), 1);
         assert_eq!(
             plan.steps[0][0],
-            PlanRow { seq: 0, window_end: Some(3), advance: 3, emit: false }
+            PlanRow { seq: 0, window_end: Some(3), advance: 3, emit: false, spec_k: 0 }
         );
         assert_eq!(
             plan.steps[0][1],
-            PlanRow { seq: 1, window_end: None, advance: 0, emit: true },
+            PlanRow { seq: 1, window_end: None, advance: 0, emit: true, spec_k: 0 },
             "co-resident decode keeps streaming"
         );
         // advance the cursor to the final chunk: it must emit
@@ -840,7 +905,7 @@ mod tests {
         let plan = s.plan();
         assert_eq!(
             plan.steps[0][0],
-            PlanRow { seq: 0, window_end: Some(20), advance: 2, emit: true },
+            PlanRow { seq: 0, window_end: Some(20), advance: 2, emit: true, spec_k: 0 },
             "the completing chunk reads the first token from the full-prompt window"
         );
     }
@@ -855,10 +920,10 @@ mod tests {
         let plan = s.plan();
         let rows: Vec<PlanRow> = plan.steps.iter().flatten().copied().collect();
         assert_eq!(rows.len(), 4, "3 prefill rows + 1 decode row");
-        assert_eq!(rows[0], PlanRow { seq: 0, window_end: Some(8), advance: 8, emit: false });
-        assert_eq!(rows[1], PlanRow { seq: 0, window_end: Some(16), advance: 8, emit: false });
-        assert_eq!(rows[2], PlanRow { seq: 0, window_end: Some(20), advance: 4, emit: true });
-        assert_eq!(rows[3], PlanRow { seq: 1, window_end: None, advance: 0, emit: true });
+        assert_eq!(rows[0], PlanRow { seq: 0, window_end: Some(8), advance: 8, emit: false, spec_k: 0 });
+        assert_eq!(rows[1], PlanRow { seq: 0, window_end: Some(16), advance: 8, emit: false, spec_k: 0 });
+        assert_eq!(rows[2], PlanRow { seq: 0, window_end: Some(20), advance: 4, emit: true, spec_k: 0 });
+        assert_eq!(rows[3], PlanRow { seq: 1, window_end: None, advance: 0, emit: true, spec_k: 0 });
         assert_eq!(plan.steps.len(), 2, "the whole prompt stalls everyone for extra steps");
     }
 
@@ -871,7 +936,7 @@ mod tests {
         let plan = s.plan();
         assert_eq!(
             plan.steps[0][0],
-            PlanRow { seq: 0, window_end: Some(8), advance: 8, emit: false },
+            PlanRow { seq: 0, window_end: Some(8), advance: 8, emit: false, spec_k: 0 },
             "one row cannot carry more than seq_len new tokens"
         );
     }
@@ -909,7 +974,7 @@ mod tests {
         let plan = s.plan();
         assert_eq!(
             plan.steps[0][0],
-            PlanRow { seq: 0, window_end: Some(1), advance: 1, emit: false },
+            PlanRow { seq: 0, window_end: Some(1), advance: 1, emit: false, spec_k: 0 },
             "deep backlog shrinks the default prefill chunk"
         );
         // a per-request override is honored verbatim regardless
@@ -917,7 +982,7 @@ mod tests {
         let plan = s.plan();
         assert_eq!(
             plan.steps[0][0],
-            PlanRow { seq: 0, window_end: Some(4), advance: 4, emit: false }
+            PlanRow { seq: 0, window_end: Some(4), advance: 4, emit: false, spec_k: 0 }
         );
     }
 
@@ -931,8 +996,73 @@ mod tests {
         let plan = s.plan();
         assert_eq!(
             plan.steps[0][0],
-            PlanRow { seq: 0, window_end: Some(8), advance: 4, emit: false },
+            PlanRow { seq: 0, window_end: Some(8), advance: 4, emit: false, spec_k: 0 },
             "resume continues from the fed cursor without recompute"
         );
+    }
+
+    // -- speculative plan rows ----------------------------------------
+
+    #[test]
+    fn plan_spec_rows_clamp_to_config_budget_and_batch() {
+        let q = queue_of(64, vec![normal(1), normal(2).prompt(10)]);
+        q.close();
+        let mut s = Scheduler::new(q, SchedConfig { spec_k: 4, ..cfg(8, 4) });
+        s.admit();
+        s.live_mut()[1].spec = 2; // sequence wants less than the config
+        let plan = s.plan();
+        let rows: Vec<PlanRow> = plan.steps.iter().flatten().copied().collect();
+        // decoding seq 0: full config budget (TS appetite is unbounded)
+        assert_eq!(rows[0], PlanRow { seq: 0, window_end: None, advance: 0, emit: true, spec_k: 4 });
+        // seq 1 is still PREFILLING: never drafts
+        assert_eq!(rows[1].spec_k, 0);
+        assert!(rows[1].window_end.is_some());
+        // once decoded, its own budget caps the row
+        s.live_mut()[1].fed = 10;
+        let plan = s.plan();
+        let rows: Vec<PlanRow> = plan.steps.iter().flatten().copied().collect();
+        assert_eq!(rows[1], PlanRow { seq: 1, window_end: None, advance: 0, emit: true, spec_k: 2 });
+
+        // a tiny compiled batch clamps spec_k to batch - 1
+        let q = queue_of(64, vec![normal(1)]);
+        q.close();
+        let mut s = Scheduler::new(q, SchedConfig { spec_k: 7, ..cfg(3, 2) });
+        s.admit();
+        assert_eq!(s.plan().steps[0][0].spec_k, 2);
+    }
+
+    #[test]
+    fn plan_packs_spec_rows_by_slots_not_row_count() {
+        // batch 4, three decode rows drafting 2 each: 3 slots per row,
+        // so only ONE drafting row fits a step batch (3 + 3 > 4).
+        let q = queue_of(64, (1..=3).map(normal).collect());
+        q.close();
+        let mut s = Scheduler::new(q, SchedConfig { spec_k: 2, ..cfg(4, 4) });
+        s.admit();
+        let plan = s.plan();
+        assert_eq!(plan.rows(), 3, "every live sequence still advances once");
+        assert_eq!(plan.steps.len(), 3, "each 3-slot row needs its own 4-slot step");
+        for step in &plan.steps {
+            let slots: usize = step.iter().map(|r| 1 + r.spec_k).sum();
+            assert!(slots <= 4, "step overflows the compiled batch: {slots}");
+        }
+        // spec_k 0 reproduces the old chunks(batch) packing
+        let q = queue_of(64, (1..=3).map(normal).collect());
+        q.close();
+        let mut s = Scheduler::new(q, cfg(4, 4));
+        s.admit();
+        assert_eq!(s.plan().steps.len(), 1);
+    }
+
+    #[test]
+    fn pen_mut_exposes_preempted_sequences() {
+        let q = queue_of(64, vec![TS::new(1, Priority::Low), TS::new(2, Priority::Normal)]);
+        let mut s = Scheduler::new(q.clone(), cfg(2, 2));
+        assert!(s.admit());
+        q.try_push(TS::new(3, Priority::High)).ok();
+        assert!(s.admit());
+        assert_eq!(s.take_preemptions(), 1);
+        let penned: Vec<i32> = s.pen_mut().iter().map(|t| t.v).collect();
+        assert_eq!(penned, vec![1], "the evicted Low is visible in the pen");
     }
 }

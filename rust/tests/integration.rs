@@ -1654,6 +1654,349 @@ fn runtime_rejects_bad_shapes() {
     assert!(p.backend.run_model_host_grids("nonexistent", &tokens, &grids, &p.wbufs).is_err());
 }
 
+// ---------------------------------------------------------------------
+// self-speculative decoding (draft-and-verify) + cache-aware preemption
+
+/// `SCALEBITS_SPEC=off` / `=0` kill-switch (the ci.sh second pass):
+/// bitwise identity must hold either way, but the drafted/accepted
+/// counter asserts flip — drafting requested and switched off must
+/// count exactly zero.
+fn spec_disabled_by_env() -> bool {
+    matches!(
+        std::env::var("SCALEBITS_SPEC").ok().map(|v| v.to_ascii_lowercase()).as_deref(),
+        Some("off") | Some("0")
+    )
+}
+
+/// THE acceptance sweep for self-speculative decoding: for every
+/// spec_k {2,4,8} x {KV on, off} combination — under a saturated live
+/// set with a high-priority burst forcing preemption — the served
+/// tokens are BITWISE-identical to plain (non-speculative) sequential
+/// decode, and the drafted counter proves speculation actually ran.
+/// Greedy verification makes this an identity, not a tolerance: a
+/// verify round emits exactly the tokens plain decode would emit, the
+/// draft allocation only decides how many arrive per round.
+#[test]
+fn speculative_decode_sweep_matches_sequential_decode_bitwise() {
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut alloc = BitAlloc::uniform(&index, 4);
+    for (i, b) in alloc.bits.iter_mut().enumerate() {
+        *b = [2, 4, 8][i % 3];
+    }
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let seq = m.config.seq_len;
+    let batch = m
+        .exec(if m.executables.contains_key("qpredict") { "qpredict" } else { "qlogits" })
+        .unwrap()
+        .batch;
+    let max_new = 6usize;
+    // Short prompts leave window headroom: drafting needs an unslid,
+    // unfilled window (pos0 == 0, window < seq_len). Equal lengths keep
+    // the saturators in lockstep so the burst genuinely preempts.
+    let low_prompts: Vec<Vec<i32>> =
+        (0..batch).map(|i| stream.tokens[i * 23..i * 23 + seq / 2].to_vec()).collect();
+    // One longer-than-seq prompt rides along: its slid window is
+    // ineligible for drafting and must fall back to plain decode.
+    let high_prompts: Vec<Vec<i32>> = [seq / 2, 2 * seq + 5, seq / 2 + 3]
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| stream.tokens[400 + i * 80..400 + i * 80 + len].to_vec())
+        .collect();
+    let session =
+        Session::open_with(BackendKind::Interp, &dir, &["qpredict"], &alloc.grids(&index))
+            .unwrap();
+    // match the serve workers' default precision (f32 SIMD serving)
+    session.set_activations(ActPrecision::F32).unwrap();
+    let low_ref: Vec<Vec<i32>> =
+        low_prompts.iter().map(|p| sequential_decode(&session, p, max_new)).collect();
+    let high_ref: Vec<Vec<i32>> =
+        high_prompts.iter().map(|p| sequential_decode(&session, p, max_new)).collect();
+
+    for &spec_k in &[2usize, 4, 8] {
+        for &kv in &[true, false] {
+            let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), alloc.clone());
+            cfg.backend = BackendKind::Interp;
+            cfg.kv = kv;
+            cfg.spec_k = spec_k;
+            cfg.prefill_chunk = 4;
+            cfg.max_live = batch; // saturable: the burst below must preempt
+            cfg.aging = std::time::Duration::from_secs(600); // static ranks
+            let mut server = scalebits::serve::Router::start(cfg).unwrap();
+            // Phase 1: saturate the live set with low-priority work,
+            // observed live (first token received).
+            let mut lows = Vec::new();
+            for p in &low_prompts {
+                lows.push(
+                    server
+                        .submit_request(
+                            scalebits::serve::GenRequest::new(p.clone())
+                                .max_new_tokens(max_new)
+                                .priority(scalebits::serve::Priority::Low),
+                        )
+                        .unwrap(),
+                );
+            }
+            for t in lows.iter_mut() {
+                assert!(t.recv_token().unwrap().is_some());
+            }
+            // Phase 2: high-priority arrivals must preempt mid-draft.
+            let mut highs = Vec::new();
+            for p in &high_prompts {
+                highs.push(
+                    server
+                        .submit_request(
+                            scalebits::serve::GenRequest::new(p.clone())
+                                .max_new_tokens(max_new)
+                                .priority(scalebits::serve::Priority::High),
+                        )
+                        .unwrap(),
+                );
+            }
+            let mut low_served = Vec::with_capacity(low_prompts.len());
+            for t in lows.iter_mut() {
+                let o = t.wait().unwrap();
+                assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+                low_served.push(o.tokens.clone());
+            }
+            let mut high_served = Vec::with_capacity(high_prompts.len());
+            for t in highs.iter_mut() {
+                let o = t.wait().unwrap();
+                assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+                high_served.push(o.tokens.clone());
+            }
+            let rep = server.shutdown().unwrap();
+            for (i, s) in low_served.iter().enumerate() {
+                assert_eq!(
+                    s, &low_ref[i],
+                    "spec_k={spec_k} kv={kv} low {i}: speculative decode \
+                     diverged from sequential decode"
+                );
+            }
+            for (i, s) in high_served.iter().enumerate() {
+                assert_eq!(
+                    s, &high_ref[i],
+                    "spec_k={spec_k} kv={kv} high {i}: speculative decode \
+                     diverged from sequential decode"
+                );
+            }
+            let t = &rep.total;
+            if spec_disabled_by_env() {
+                assert_eq!(
+                    t.spec_drafted, 0,
+                    "spec_k={spec_k} kv={kv}: SCALEBITS_SPEC=off must kill drafting"
+                );
+            } else {
+                assert!(
+                    t.spec_drafted > 0,
+                    "spec_k={spec_k} kv={kv}: eligible short-prompt decodes must draft"
+                );
+            }
+            assert!(
+                t.spec_accepted <= t.spec_drafted,
+                "spec_k={spec_k} kv={kv}: accepted ({}) cannot exceed drafted ({})",
+                t.spec_accepted,
+                t.spec_drafted
+            );
+            assert!(
+                t.preempted >= 1,
+                "spec_k={spec_k} kv={kv}: high-priority load over a saturated \
+                 live set must preempt"
+            );
+        }
+    }
+}
+
+/// Degenerate-draft control: serving the uniform 2-bit allocation with
+/// `spec_bits = 2` makes draft and target the SAME quantized model, so
+/// every greedy draft token must verify — drafted == accepted and the
+/// accept-rate is exactly 1.0, no tolerance. A rider request opting
+/// out via `GenRequest::spec_k(0)` must still decode bitwise.
+#[test]
+fn degenerate_draft_equal_allocations_accept_every_token() {
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let alloc = BitAlloc::uniform(&index, 2);
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let seq = m.config.seq_len;
+    let max_new = 6usize;
+    let prompts: Vec<Vec<i32>> =
+        (0..4).map(|i| stream.tokens[i * 37..i * 37 + seq / 2].to_vec()).collect();
+    let session =
+        Session::open_with(BackendKind::Interp, &dir, &["qpredict"], &alloc.grids(&index))
+            .unwrap();
+    session.set_activations(ActPrecision::F32).unwrap();
+    let reference: Vec<Vec<i32>> =
+        prompts.iter().map(|p| sequential_decode(&session, p, max_new)).collect();
+
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), alloc.clone());
+    cfg.backend = BackendKind::Interp;
+    cfg.spec_k = 4;
+    cfg.spec_bits = 2; // == the served allocation: the degenerate pair
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    let mut tickets = Vec::new();
+    for p in &prompts {
+        tickets.push(
+            server
+                .submit_request(
+                    scalebits::serve::GenRequest::new(p.clone()).max_new_tokens(max_new),
+                )
+                .unwrap(),
+        );
+    }
+    // the opt-out rider: per-request spec_k = 0 disables drafting for
+    // this sequence only; its tokens must match prompt 0's reference
+    let mut rider = server
+        .submit_request(
+            scalebits::serve::GenRequest::new(prompts[0].clone())
+                .max_new_tokens(max_new)
+                .spec_k(0),
+        )
+        .unwrap();
+    for (i, t) in tickets.iter_mut().enumerate() {
+        let o = t.wait().unwrap();
+        assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+        assert_eq!(
+            o.tokens, reference[i],
+            "prompt {i}: degenerate speculative decode diverged from sequential"
+        );
+    }
+    let ro = rider.wait().unwrap();
+    assert_eq!(ro.finish, scalebits::serve::Finish::Completed);
+    assert_eq!(ro.tokens, reference[0], "the spec_k(0) opt-out must decode bitwise too");
+    let rep = server.shutdown().unwrap();
+    let t = &rep.total;
+    assert_eq!(
+        t.spec_accepted, t.spec_drafted,
+        "equal draft/target allocations must accept every drafted token"
+    );
+    if spec_disabled_by_env() {
+        assert_eq!(t.spec_drafted, 0, "SCALEBITS_SPEC=off must kill drafting");
+    } else {
+        assert!(t.spec_drafted > 0, "the degenerate pair must still draft");
+        assert_eq!(t.spec_accept_rate(), 1.0, "accept-rate must be exactly 1.0");
+    }
+}
+
+/// Cache-aware preemption: a preempted sequence must release its
+/// prefix-cache pins while it sits in the pen (and re-pin whatever is
+/// still cached on resume), so a tiny `cache_bytes` budget whose every
+/// node is pinned by the preempted owner cannot wedge insertion.
+/// Observable: after the owner's whole 2-node budget was pinned, a
+/// disjoint high-priority prompt's blocks still get cached (a repeat
+/// of it HITS), and everything decodes bitwise.
+#[test]
+fn preempted_sequence_releases_cache_pins_so_eviction_proceeds() {
+    let dir = synth_dir().clone();
+    let m = Manifest::load(&dir).unwrap();
+    let index = BlockIndex::from_manifest(&m).unwrap();
+    let mut alloc = BitAlloc::uniform(&index, 4);
+    for (i, b) in alloc.bits.iter_mut().enumerate() {
+        *b = [2, 4, 8][i % 3];
+    }
+    let stream = scalebits::calib::TokenStream::from_manifest(&m, "eval").unwrap();
+    let b = 8usize; // cache block (tokens)
+    let kv_token_bytes = m.config.n_layers * 2 * m.config.d_model * 4;
+    let two_nodes = 2 * b * (kv_token_bytes + 4);
+    let warm_prompt = stream.tokens[..2 * b].to_vec(); // seeds exactly 2 blocks
+    let low_prompt = stream.tokens[..2 * b + 4].to_vec(); // matches (and PINS) both
+    let high_prompt = stream.tokens[300..300 + 3 * b].to_vec(); // disjoint: must insert
+    let session =
+        Session::open_with(BackendKind::Interp, &dir, &["qpredict"], &alloc.grids(&index))
+            .unwrap();
+    session.set_activations(ActPrecision::F32).unwrap();
+    let max_new = 8usize;
+    let warm_ref = sequential_decode(&session, &warm_prompt, 2);
+    let low_ref = sequential_decode(&session, &low_prompt, max_new);
+    let high_ref = sequential_decode(&session, &high_prompt, 2);
+
+    let mut cfg = scalebits::serve::ServeConfig::new(dir.clone(), alloc.clone());
+    cfg.backend = BackendKind::Interp;
+    cfg.cache_bytes = two_nodes;
+    cfg.cache_block = b;
+    cfg.prefill_chunk = 4;
+    cfg.max_live = 1; // one slot: the high-priority arrival must preempt
+    cfg.aging = std::time::Duration::from_secs(600); // static ranks
+    let mut server = scalebits::serve::Router::start(cfg).unwrap();
+    // Seed the cache: completing this fills the entire 2-node budget
+    // with the shared prefix's blocks.
+    {
+        let mut t = server
+            .submit_request(
+                scalebits::serve::GenRequest::new(warm_prompt.clone()).max_new_tokens(2),
+            )
+            .unwrap();
+        let o = t.wait().unwrap();
+        assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+        assert_eq!(o.tokens, warm_ref);
+    }
+    // The pin owner: its lookup matches both cached nodes (depth 2*b),
+    // pinning the WHOLE budget, then it decodes slowly.
+    let mut low = server
+        .submit_request(
+            scalebits::serve::GenRequest::new(low_prompt.clone())
+                .max_new_tokens(max_new)
+                .priority(scalebits::serve::Priority::Low),
+        )
+        .unwrap();
+    assert!(low.recv_token().unwrap().is_some());
+    // Disjoint high-priority arrival: preempts the owner and needs
+    // cache nodes of its own — its blocks can only be admitted if the
+    // pen walk released the owner's pins.
+    let mut high = server
+        .submit_request(
+            scalebits::serve::GenRequest::new(high_prompt.clone())
+                .max_new_tokens(2)
+                .priority(scalebits::serve::Priority::High),
+        )
+        .unwrap();
+    let ho = high.wait().unwrap();
+    assert_eq!(ho.finish, scalebits::serve::Finish::Completed);
+    assert_eq!(ho.tokens, high_ref);
+    let lo = low.wait().unwrap();
+    assert_eq!(lo.finish, scalebits::serve::Finish::Completed);
+    assert_eq!(
+        lo.tokens, low_ref,
+        "the preempted pin owner must resume and decode bitwise (its pinned \
+         blocks were evicted underneath it)"
+    );
+    // The discriminating probe: a repeat of the disjoint prompt must
+    // HIT — its blocks could only have been cached by evicting the
+    // preempted owner's released pins.
+    let mut rep_t = server
+        .submit_request(
+            scalebits::serve::GenRequest::new(high_prompt.clone()).max_new_tokens(2),
+        )
+        .unwrap();
+    let po = rep_t.wait().unwrap();
+    assert_eq!(po.finish, scalebits::serve::Finish::Completed);
+    assert_eq!(po.tokens, high_ref);
+    let rep = server.shutdown().unwrap();
+    let t = &rep.total;
+    assert!(t.preempted >= 1, "the high-priority arrival must preempt the only slot");
+    assert!(
+        t.cache_evictions > 0,
+        "a fully-pinned budget must become evictable once its owner is preempted"
+    );
+    // warm misses, owner hits (2 blocks), disjoint misses, probe hits
+    // (2 blocks: its 3rd is over budget) — the probe's hit is the fix.
+    assert_eq!(
+        (t.cache_hits, t.cache_misses),
+        (2, 2),
+        "the disjoint prompt's blocks must have been admitted while the pin \
+         owner sat preempted"
+    );
+    assert_eq!(
+        t.prefill_tokens_saved,
+        4 * b as u64,
+        "owner and probe each skip exactly the 2 cached blocks"
+    );
+    let total_prompt = (warm_prompt.len() + low_prompt.len() + 2 * high_prompt.len()) as u64;
+    assert_eq!(t.prefill_tokens + t.prefill_tokens_saved, total_prompt);
+}
+
 #[test]
 fn config_presets_parse_and_build_search_configs() {
     for preset in ["ultra_low", "standard", "fast_fixed_grads"] {
