@@ -12,7 +12,8 @@
 #                            # example behavior rot invisibly)
 #
 # Matches the ROADMAP tier-1 verify (`cargo build --release &&
-# cargo test -q`) and adds rustfmt + clippy.
+# cargo test -q`) and adds rustfmt + clippy + the in-tree contract
+# linter (scalebits-lint; see rust/src/analysis/).
 #
 # Artifact-less coverage: integration tests no longer assert when
 # `rust/artifacts/` is missing — they auto-fall back to the pure-Rust
@@ -55,6 +56,17 @@ fi
 
 echo "== cargo build --release"
 cargo build --release --offline
+
+echo "== scalebits-lint"
+# In-tree contract linter (rust/src/analysis/): lock-order cycles,
+# panic-freedom on the serve/runtime paths (ratcheted against
+# rust/lint.baseline — counts may only fall), float-accumulation and
+# unsafe confinement, SCALEBITS_* registry coherence against this file
+# and the README, and metrics-merge completeness. Gating in EVERY lane:
+# it runs before the lane branches below. Suppress a reviewed site with
+# `// lint: allow(<pass>) — <reason>`; regenerate the ratchet with
+# `cargo run --release --bin scalebits-lint -- --write-baseline`.
+cargo run --release --offline --bin scalebits-lint
 
 echo "== cargo build --release --examples"
 # Examples live at ../examples and are NOT part of the default build
@@ -141,7 +153,10 @@ SCALEBITS_SPEC=off cargo test -q --offline --test integration -- \
 echo "== cargo clippy -- -D warnings"
 # Allow-list: seed-era idioms kept for diff hygiene, not new code style.
 # undocumented_unsafe_blocks is opt-in (allow-by-default): every unsafe
-# block in the SIMD kernels must carry a `// SAFETY:` comment.
+# block in the SIMD kernels must carry a `// SAFETY:` comment; the
+# scalebits-lint determinism pass additionally confines `unsafe` itself
+# to kernel/simd.rs + runtime/pjrt.rs, so the two gates compose:
+# clippy checks the comment, the linter checks the location.
 cargo clippy --offline --all-targets -- -D warnings \
   -D clippy::undocumented_unsafe_blocks \
   -A clippy::ptr_arg \

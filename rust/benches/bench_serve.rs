@@ -571,10 +571,9 @@ fn main() -> anyhow::Result<()> {
     // accept-rate exactly 1.0. Under SCALEBITS_SPEC=off drafting is
     // disabled, so only the bitwise identity is asserted there.
     {
-        let spec_off = matches!(
-            std::env::var("SCALEBITS_SPEC").ok().map(|v| v.to_ascii_lowercase()).as_deref(),
-            Some("off") | Some("0")
-        );
+        // Read through the util::env registry (the same memoized parse
+        // the interpreter's spec_active uses), not a private re-parse.
+        let spec_off = !scalebits::util::env::spec_on();
         let prompt = stream.tokens[3 * seq..3 * seq + seq / 2].to_vec();
         let mut runs = Vec::new();
         let mut spec_rep = None;

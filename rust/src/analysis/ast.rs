@@ -1,0 +1,455 @@
+//! A lightweight item-level view over the token stream.
+//!
+//! The passes do not need a real AST — they need to know, for every
+//! token, *which function* it lives in and *whether it is test code*,
+//! plus the field lists of structs and the bodies of inherent methods.
+//! This module extracts exactly that by brace matching:
+//!
+//! * `Fn` items: name, body token range, the set of called bare names.
+//! * Test regions: any item annotated `#[test]` / `#[cfg(test)]`
+//!   (attribute scanning is a token walk — the tree only ever uses the
+//!   plain spellings, never `cfg(not(test))`).
+//! * `Struct` items: name plus declared field idents.
+//! * `impl` blocks: type name, so methods can be attributed to a type.
+
+use super::lexer::{Lexed, Tok, TokKind};
+
+/// One `fn` item, free or method.
+#[derive(Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// Type name when defined inside `impl Ty { … }`.
+    pub owner: Option<String>,
+    /// Token index of the opening `{` and its matching `}` in
+    /// `Lexed::toks` (body excludes both braces).
+    pub body: (usize, usize),
+    pub line: u32,
+    /// Inside `#[cfg(test)]` or under `#[test]`.
+    pub is_test: bool,
+}
+
+/// One `struct` item with named fields.
+#[derive(Debug)]
+pub struct StructItem {
+    pub name: String,
+    pub fields: Vec<String>,
+    pub line: u32,
+    pub is_test: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct FileMap {
+    pub fns: Vec<FnItem>,
+    pub structs: Vec<StructItem>,
+    /// Token-index ranges `[start, end)` that are test code.
+    test_ranges: Vec<(usize, usize)>,
+}
+
+impl FileMap {
+    pub fn is_test_tok(&self, idx: usize) -> bool {
+        self.test_ranges.iter().any(|&(s, e)| idx >= s && idx < e)
+    }
+}
+
+/// Find the token index of the `}` matching the `{` at `open`.
+/// Unbalanced input returns the last token index (lenient by design).
+pub fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Skip one `#[…]` attribute starting at the `#`; returns the index
+/// after the closing `]` and whether the attribute marks test code.
+fn skip_attr(toks: &[Tok], at: usize) -> (usize, bool) {
+    debug_assert!(toks[at].is_punct('#'));
+    let mut depth = 0usize;
+    let mut is_test = false;
+    let mut saw_cfg = false;
+    let mut i = at + 1;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                return (i + 1, is_test);
+            }
+        } else if t.is_ident("cfg") {
+            saw_cfg = true;
+        } else if t.is_ident("test") {
+            // `#[test]` directly, or `test` inside `#[cfg(test)]`
+            if depth == 1 || saw_cfg {
+                is_test = true;
+            }
+        }
+        i += 1;
+    }
+    (toks.len(), is_test)
+}
+
+/// Build the item map for a lexed file.
+pub fn map_file(lexed: &Lexed) -> FileMap {
+    let toks = &lexed.toks;
+    let mut out = FileMap::default();
+    walk(toks, 0, toks.len(), None, false, &mut out);
+    out
+}
+
+/// Recursive walk over `toks[start..end)`; `owner` is the enclosing
+/// `impl` type, `in_test` whether an outer item was already test-marked.
+fn walk(
+    toks: &[Tok],
+    start: usize,
+    end: usize,
+    owner: Option<&str>,
+    in_test: bool,
+    out: &mut FileMap,
+) {
+    let mut i = start;
+    let mut pending_test = false;
+    while i < end {
+        let t = &toks[i];
+        if t.is_punct('#') && i + 1 < end && toks[i + 1].is_punct('[') {
+            let (next, is_test) = skip_attr(toks, i);
+            pending_test |= is_test;
+            i = next;
+            continue;
+        }
+        if t.is_ident("fn") {
+            let (next, item) = parse_fn(toks, i, end, owner, in_test || pending_test);
+            if let Some(f) = item {
+                if f.is_test {
+                    out.test_ranges.push((f.body.0, f.body.1 + 1));
+                }
+                out.fns.push(f);
+            }
+            pending_test = false;
+            i = next;
+            continue;
+        }
+        if t.is_ident("struct") {
+            let (next, item) = parse_struct(toks, i, end, in_test || pending_test);
+            if let Some(s) = item {
+                out.structs.push(s);
+            }
+            pending_test = false;
+            i = next;
+            continue;
+        }
+        if t.is_ident("impl") {
+            // `impl Ty {` or `impl Trait for Ty {` — the type is the
+            // last path segment before the opening brace (generics on
+            // the type, like `Foo<T>`, end in `>` so we remember the
+            // last plain ident seen).
+            let mut j = i + 1;
+            let mut ty: Option<String> = None;
+            let mut last_ident: Option<&str> = None;
+            while j < end && !toks[j].is_punct('{') && !toks[j].is_punct(';') {
+                if toks[j].kind == TokKind::Ident {
+                    if toks[j].text == "for" {
+                        last_ident = None; // type comes after `for`
+                    } else {
+                        last_ident = Some(&toks[j].text);
+                    }
+                }
+                j += 1;
+            }
+            if let Some(name) = last_ident {
+                ty = Some(name.to_string());
+            }
+            if j < end && toks[j].is_punct('{') {
+                let close = match_brace(toks, j);
+                let test_here = in_test || pending_test;
+                if test_here {
+                    out.test_ranges.push((j, close + 1));
+                }
+                walk(toks, j + 1, close, ty.as_deref(), test_here, out);
+                pending_test = false;
+                i = close + 1;
+                continue;
+            }
+            pending_test = false;
+            i = j + 1;
+            continue;
+        }
+        if t.is_ident("mod") {
+            // `mod name { … }`: recurse, carrying test-ness down
+            let mut j = i + 1;
+            while j < end && !toks[j].is_punct('{') && !toks[j].is_punct(';') {
+                j += 1;
+            }
+            if j < end && toks[j].is_punct('{') {
+                let close = match_brace(toks, j);
+                let test_here = in_test || pending_test;
+                if test_here {
+                    out.test_ranges.push((j, close + 1));
+                }
+                walk(toks, j + 1, close, None, test_here, out);
+                pending_test = false;
+                i = close + 1;
+                continue;
+            }
+            pending_test = false;
+            i = j + 1;
+            continue;
+        }
+        if t.is_ident("trait") || t.is_ident("enum") || t.is_ident("union") {
+            // skip the whole item body — trait default methods are rare
+            // enough here (none in-tree) that we treat them as opaque
+            let mut j = i + 1;
+            while j < end && !toks[j].is_punct('{') && !toks[j].is_punct(';') {
+                j += 1;
+            }
+            if j < end && toks[j].is_punct('{') {
+                i = match_brace(toks, j) + 1;
+            } else {
+                i = j + 1;
+            }
+            pending_test = false;
+            continue;
+        }
+        pending_test = false;
+        i += 1;
+    }
+}
+
+/// Parse `fn name … { body }` starting at the `fn` keyword.
+fn parse_fn(
+    toks: &[Tok],
+    at: usize,
+    end: usize,
+    owner: Option<&str>,
+    is_test: bool,
+) -> (usize, Option<FnItem>) {
+    let name_idx = at + 1;
+    if name_idx >= end || toks[name_idx].kind != TokKind::Ident {
+        return (at + 1, None);
+    }
+    let name = toks[name_idx].text.clone();
+    let line = toks[name_idx].line;
+    // scan to the body `{`, tracking signature nesting so `where F:
+    // Fn() -> Vec<{…}>`-ish shapes can't fool us: a body brace is one
+    // at angle/paren depth zero. `;` first means a bodyless decl.
+    let mut j = name_idx + 1;
+    let mut paren = 0i32;
+    while j < end {
+        let t = &toks[j];
+        if t.is_punct('(') || t.is_punct('[') {
+            paren += 1;
+        } else if t.is_punct(')') || t.is_punct(']') {
+            paren -= 1;
+        } else if t.is_punct(';') && paren == 0 {
+            return (j + 1, None);
+        } else if t.is_punct('{') && paren == 0 {
+            let close = match_brace(toks, j);
+            let item = FnItem { name, owner: owner.map(str::to_string), body: (j, close), line, is_test };
+            return (close + 1, Some(item));
+        }
+        j += 1;
+    }
+    (end, None)
+}
+
+/// Parse `struct Name { field: Ty, … }` (tuple/unit structs have no
+/// named fields and are recorded with an empty list).
+fn parse_struct(
+    toks: &[Tok],
+    at: usize,
+    end: usize,
+    is_test: bool,
+) -> (usize, Option<StructItem>) {
+    let name_idx = at + 1;
+    if name_idx >= end || toks[name_idx].kind != TokKind::Ident {
+        return (at + 1, None);
+    }
+    let name = toks[name_idx].text.clone();
+    let line = toks[name_idx].line;
+    let mut j = name_idx + 1;
+    // skip generics / where clause up to `{`, `(` or `;`
+    while j < end && !toks[j].is_punct('{') && !toks[j].is_punct('(') && !toks[j].is_punct(';') {
+        j += 1;
+    }
+    if j >= end || !toks[j].is_punct('{') {
+        // tuple or unit struct: skip to the terminating `;`
+        while j < end && !toks[j].is_punct(';') {
+            j += 1;
+        }
+        return (j + 1, Some(StructItem { name, fields: Vec::new(), line, is_test }));
+    }
+    let close = match_brace(toks, j);
+    // fields: idents at brace depth 1 immediately followed by `:`
+    let mut fields = Vec::new();
+    let mut depth = 0i32;
+    let mut k = j;
+    while k <= close {
+        let t = &toks[k];
+        if t.is_punct('{') || t.is_punct('(') || t.is_punct('<') {
+            depth += 1;
+        } else if t.is_punct('}') || t.is_punct(')') || t.is_punct('>') {
+            depth -= 1;
+        } else if depth == 1
+            && t.kind == TokKind::Ident
+            && k + 1 <= close
+            && toks[k + 1].is_punct(':')
+            && (k == j + 1 || field_boundary(&toks[k - 1]))
+        {
+            fields.push(t.text.clone());
+        }
+        k += 1;
+    }
+    (close + 1, Some(StructItem { name, fields, line, is_test }))
+}
+
+/// A field ident must follow `{`, `,` or the `]` closing an attribute —
+/// this keeps type parts like `HashMap<String: …>` shapes out.
+fn field_boundary(prev: &Tok) -> bool {
+    prev.is_punct('{') || prev.is_punct(',') || prev.is_punct(']') || prev.is_ident("pub")
+}
+
+/// Collect the bare names a function body calls: idents directly
+/// followed by `(`, excluding method calls (preceded by `.`) when
+/// `include_methods` is false. Keyword-ish idents are filtered.
+pub fn called_names(toks: &[Tok], body: (usize, usize), include_methods: bool) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in body.0..=body.1 {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || i + 1 > body.1 || !toks[i + 1].is_punct('(') {
+            continue;
+        }
+        if matches!(t.text.as_str(), "if" | "while" | "for" | "match" | "return" | "fn") {
+            continue;
+        }
+        let is_method = i > 0 && toks[i - 1].is_punct('.');
+        if is_method && !include_methods {
+            continue;
+        }
+        out.push(t.text.clone());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    #[test]
+    fn fns_and_owners_are_mapped() {
+        let src = "
+fn free() { a(); }
+struct S { x: u32, y: f32 }
+impl S {
+    fn method(&self) { b(); }
+}
+impl Clone for S {
+    fn clone(&self) -> S { S { x: self.x, y: self.y } }
+}
+";
+        let l = lex(src);
+        let m = map_file(&l);
+        let names: Vec<(&str, Option<&str>)> =
+            m.fns.iter().map(|f| (f.name.as_str(), f.owner.as_deref())).collect();
+        assert_eq!(
+            names,
+            vec![("free", None), ("method", Some("S")), ("clone", Some("S"))]
+        );
+        assert_eq!(m.structs.len(), 1);
+        assert_eq!(m.structs[0].fields, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn cfg_test_modules_mark_their_contents() {
+        let src = "
+fn live() { x.lock().unwrap(); }
+#[cfg(test)]
+mod tests {
+    fn helper() { y.lock().unwrap(); }
+    #[test]
+    fn case() { helper(); }
+}
+";
+        let l = lex(src);
+        let m = map_file(&l);
+        let live = m.fns.iter().find(|f| f.name == "live").unwrap();
+        assert!(!live.is_test);
+        let helper = m.fns.iter().find(|f| f.name == "helper").unwrap();
+        assert!(helper.is_test, "everything under #[cfg(test)] is test code");
+        let case = m.fns.iter().find(|f| f.name == "case").unwrap();
+        assert!(case.is_test);
+        // token-level query agrees
+        let unwraps: Vec<usize> = l
+            .toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_ident("unwrap"))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(unwraps.len(), 2);
+        assert!(!m.is_test_tok(unwraps[0]));
+        assert!(m.is_test_tok(unwraps[1]));
+    }
+
+    #[test]
+    fn test_attribute_alone_marks_one_fn() {
+        let src = "
+#[test]
+fn one() { q(); }
+fn two() { r(); }
+";
+        let m = map_file(&lex(src));
+        assert!(m.fns.iter().find(|f| f.name == "one").unwrap().is_test);
+        assert!(!m.fns.iter().find(|f| f.name == "two").unwrap().is_test);
+    }
+
+    #[test]
+    fn struct_fields_skip_defaults_and_nested_types() {
+        let src = "
+pub struct Metrics {
+    pub served: u64,
+    pub latency: Histogram,
+    pub map: Vec<(String, u64)>,
+}
+struct Unit;
+struct Tuple(u32, f64);
+";
+        let m = map_file(&lex(src));
+        assert_eq!(m.structs[0].fields, vec!["served", "latency", "map"]);
+        assert!(m.structs[1].fields.is_empty());
+        assert!(m.structs[2].fields.is_empty());
+    }
+
+    #[test]
+    fn called_names_sees_free_calls_and_optionally_methods() {
+        let src = "fn f() { alpha(); x.beta(); if cond() { gamma(1); } }";
+        let l = lex(src);
+        let m = map_file(&l);
+        let body = m.fns[0].body;
+        assert_eq!(called_names(&l.toks, body, false), vec!["alpha", "cond", "gamma"]);
+        assert_eq!(
+            called_names(&l.toks, body, true),
+            vec!["alpha", "beta", "cond", "gamma"]
+        );
+    }
+
+    #[test]
+    fn bodyless_decls_and_generics_do_not_confuse_the_scan() {
+        let src = "
+trait T { fn decl(&self); }
+fn generic<F: Fn() -> u32>(f: F) -> Vec<u32> { vec![f()] }
+";
+        let m = map_file(&lex(src));
+        assert_eq!(m.fns.len(), 1);
+        assert_eq!(m.fns[0].name, "generic");
+    }
+}

@@ -1,0 +1,332 @@
+//! Determinism pass: float accumulation stays in pinned-lane modules,
+//! `unsafe` stays in the two audited files.
+//!
+//! Bitwise-reproducible serving is a headline property of the stack:
+//! the interpreter accumulates in a fixed lane order and the SIMD
+//! kernels are written so their reduction trees match the scalar path.
+//! That property dies quietly the first time someone sums floats in
+//! iteration order of a HashMap or sneaks an FMA into shared code. Two
+//! rules enforce it:
+//!
+//! * **Float accumulation** — `.sum::<f32|f64>()`, `.mul_add(…)`, and
+//!   `+=` on float-tinged statements inside loops are forbidden in
+//!   `src/serve/` and `src/runtime/` EXCEPT the allow-listed pinned-
+//!   lane modules (`runtime/interp.rs`, anything under `src/kernel/`,
+//!   `linalg.rs`) where lane order is part of the reviewed contract.
+//!   A statement is float-tinged when it contains a float literal
+//!   (`1.5`, `2.0f32`) or an `f32`/`f64` ident — integer `+=` counters
+//!   (metrics!) never match.
+//! * **Unsafe confinement** — `unsafe` appears ONLY in
+//!   `kernel/simd.rs` (SIMD intrinsics) and `runtime/pjrt.rs` (FFI
+//!   boundary), anywhere in the tree. Everything else must be safe
+//!   Rust; this rule has no test-code exemption on purpose.
+
+use super::ast::FileMap;
+use super::lexer::{Lexed, Tok, TokKind};
+use super::{Finding, SourceFile, PASS_DETERMINISM};
+
+/// Files where float accumulation order is a reviewed, pinned contract.
+fn float_allowlisted(path: &str) -> bool {
+    path.contains("src/kernel/")
+        || path.ends_with("linalg.rs")
+        || path.ends_with("runtime/interp.rs")
+}
+
+/// Files allowed to contain `unsafe`.
+fn unsafe_allowlisted(path: &str) -> bool {
+    path.ends_with("kernel/simd.rs") || path.ends_with("runtime/pjrt.rs")
+}
+
+/// Float-accumulation scope: same live layers as the panic pass.
+fn float_in_scope(path: &str) -> bool {
+    (path.contains("src/serve/") || path.contains("src/runtime/")) && !float_allowlisted(path)
+}
+
+/// Is this numeric literal a float? `.`-bearing, `f32`/`f64`-suffixed,
+/// or true scientific notation (`1e6`, `2E-3`). The exponent check is
+/// shape-exact on purpose: `0usize` contains an `e` too.
+fn float_literal(text: &str) -> bool {
+    if text.contains('.') || text.ends_with("f32") || text.ends_with("f64") {
+        return true;
+    }
+    let Some(epos) = text.find(['e', 'E']) else { return false };
+    let (mantissa, exp) = (&text[..epos], &text[epos + 1..]);
+    let exp = exp.strip_prefix(['+', '-']).unwrap_or(exp);
+    !mantissa.is_empty()
+        && !exp.is_empty()
+        && mantissa.chars().all(|c| c.is_ascii_digit() || c == '_')
+        && exp.chars().all(|c| c.is_ascii_digit() || c == '_')
+}
+
+/// Does the statement slice look like it touches floats?
+fn float_tinged(toks: &[Tok]) -> bool {
+    toks.iter().any(|t| match t.kind {
+        TokKind::Ident => t.text == "f32" || t.text == "f64",
+        TokKind::Num => float_literal(&t.text),
+        _ => false,
+    })
+}
+
+/// Statement bounds around token `at`: back to the previous `;`/`{`/`}`
+/// and forward to the next `;` or `}`.
+fn statement_around(toks: &[Tok], at: usize) -> (usize, usize) {
+    let mut s = at;
+    while s > 0 {
+        let t = &toks[s - 1];
+        if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+            break;
+        }
+        s -= 1;
+    }
+    let mut e = at;
+    while e + 1 < toks.len() {
+        let t = &toks[e + 1];
+        if t.is_punct(';') || t.is_punct('}') {
+            break;
+        }
+        e += 1;
+    }
+    (s, e)
+}
+
+/// Names `let`-bound by a float-tinged statement anywhere in the file
+/// (`let mut acc = 0.0f32;` → `acc`). This is how a bare `acc += x;`
+/// deep in a loop is still recognized as float accumulation: the
+/// statement itself has no float token, but its target does.
+fn float_vars(toks: &[Tok]) -> std::collections::BTreeSet<String> {
+    let mut out = std::collections::BTreeSet::new();
+    for (i, t) in toks.iter().enumerate() {
+        if !t.is_ident("let") {
+            continue;
+        }
+        let mut j = i + 1;
+        if j < toks.len() && toks[j].is_ident("mut") {
+            j += 1;
+        }
+        if j >= toks.len() || toks[j].kind != TokKind::Ident {
+            continue;
+        }
+        let (s, e) = statement_around(toks, i);
+        if float_tinged(&toks[s..=e]) {
+            out.insert(toks[j].text.clone());
+        }
+    }
+    out
+}
+
+/// Token ranges of loop bodies (`for`/`while`/`loop` braces).
+fn loop_bodies(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if !(t.is_ident("for") || t.is_ident("while") || t.is_ident("loop")) {
+            continue;
+        }
+        // the loop body is the next `{` at paren depth 0 after the
+        // keyword (the header can contain parens/closures)
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        while j < toks.len() {
+            let u = &toks[j];
+            if u.is_punct('(') || u.is_punct('[') {
+                depth += 1;
+            } else if u.is_punct(')') || u.is_punct(']') {
+                depth -= 1;
+            } else if u.is_punct('{') && depth == 0 {
+                out.push((j, super::ast::match_brace(toks, j)));
+                break;
+            } else if u.is_punct(';') && depth == 0 {
+                break; // `loop` label weirdness; bail
+            }
+            j += 1;
+        }
+    }
+    out
+}
+
+pub fn run(files: &[SourceFile], lexed: &[Lexed], maps: &[FileMap]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for ((file, lx), map) in files.iter().zip(lexed.iter()).zip(maps.iter()) {
+        let toks = &lx.toks;
+
+        // -- unsafe confinement: whole tree, no test exemption --------
+        if !unsafe_allowlisted(&file.path) {
+            for t in toks.iter() {
+                if t.is_ident("unsafe") && !lx.allowed(t.line, PASS_DETERMINISM) {
+                    out.push(Finding {
+                        pass: PASS_DETERMINISM,
+                        file: file.path.clone(),
+                        line: t.line,
+                        message: "`unsafe` outside kernel/simd.rs and runtime/pjrt.rs: \
+                                  keep the audit surface to those two files"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+
+        // -- float accumulation ---------------------------------------
+        if !float_in_scope(&file.path) {
+            continue;
+        }
+        let loops = loop_bodies(toks);
+        let floats = float_vars(toks);
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || map.is_test_tok(i) {
+                continue;
+            }
+            let mut hit: Option<&str> = None;
+            // `.sum::<f32>()` / `.sum::<f64>()`
+            if t.text == "sum" && i > 0 && toks[i - 1].is_punct('.') {
+                let (s, e) = statement_around(toks, i);
+                if toks[i + 1..=e.min(toks.len() - 1)]
+                    .iter()
+                    .take(6)
+                    .any(|u| u.is_ident("f32") || u.is_ident("f64"))
+                    || float_tinged(&toks[s..=e])
+                {
+                    hit = Some("float `.sum()` reduces in iterator order");
+                }
+            }
+            // `.mul_add(` — FMA contracts rounding differently per lane
+            if t.text == "mul_add" && i > 0 && toks[i - 1].is_punct('.') {
+                hit = Some("`mul_add` fuses rounding; results differ from the pinned scalar lane");
+            }
+            // `+=` on a float statement inside a loop
+            if hit.is_none()
+                && t.kind == TokKind::Ident
+                && i + 2 < toks.len()
+                && toks[i + 1].is_punct('+')
+                && toks[i + 2].is_punct('=')
+                && loops.iter().any(|&(b0, b1)| i > b0 && i < b1)
+            {
+                let (s, e) = statement_around(toks, i);
+                if float_tinged(&toks[s..=e]) || floats.contains(&t.text) {
+                    hit = Some("float `+=` in a loop accumulates in traversal order");
+                }
+            }
+            let Some(why) = hit else { continue };
+            if lx.allowed(t.line, PASS_DETERMINISM) {
+                continue;
+            }
+            out.push(Finding {
+                pass: PASS_DETERMINISM,
+                file: file.path.clone(),
+                line: t.line,
+                message: format!(
+                    "{why}; move it into a pinned-lane module (kernel//linalg.rs/interp.rs) \
+                     or restructure to a fixed-order reduction"
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ast::map_file;
+    use crate::analysis::lexer::lex;
+
+    fn run_one(path: &str, src: &str) -> Vec<Finding> {
+        let files = vec![SourceFile { path: path.to_string(), text: src.to_string() }];
+        let lexed = vec![lex(src)];
+        let maps = vec![map_file(&lexed[0])];
+        run(&files, &lexed, &maps)
+    }
+
+    #[test]
+    fn float_sum_fires_in_serve() {
+        let src = "fn f(v: &[f32]) -> f32 { v.iter().sum::<f32>() }";
+        let f = run_one("src/serve/router.rs", src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("iterator order"));
+    }
+
+    #[test]
+    fn mul_add_fires() {
+        let src = "fn f(a: f32, b: f32, c: f32) -> f32 { a.mul_add(b, c) }";
+        assert_eq!(run_one("src/runtime/backend.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn float_plus_eq_in_loop_fires_but_integer_does_not() {
+        let src = "
+fn f(v: &[f32]) -> (f32, u64) {
+    let mut acc = 0.0f32;
+    let mut n = 0u64;
+    for x in v {
+        acc += x;
+        n += 1;
+    }
+    (acc, n)
+}
+";
+        let f = run_one("src/serve/metrics.rs", src);
+        assert_eq!(f.len(), 1, "only the float accumulator: {f:?}");
+        assert!(f[0].message.contains("float `+=`"));
+    }
+
+    #[test]
+    fn integer_metrics_counters_are_clean() {
+        let src = "
+fn merge(a: &mut u64, v: &[u64]) {
+    for x in v { *a += x; }
+}
+fn secs(t: f64) -> f64 { t }
+";
+        assert!(run_one("src/serve/metrics.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_plus_eq_outside_a_loop_is_fine() {
+        // one-shot accumulation like `metrics.exec_secs += dt` — order
+        // independent, not a reduction
+        let src = "fn f(m: &mut f64, dt: f64) { *m += dt; }";
+        assert!(run_one("src/serve/router.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pinned_lane_modules_are_exempt() {
+        let src = "fn f(v: &[f32]) -> f32 { let mut a = 0.0f32; for x in v { a += x; } a }";
+        assert!(run_one("src/runtime/interp.rs", src).is_empty());
+        assert!(run_one("src/kernel/quant.rs", src).is_empty());
+        assert!(run_one("src/linalg.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_confinement_is_tree_wide() {
+        let src = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        let f = run_one("src/serve/router.rs", src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("audit surface"));
+        assert!(run_one("src/kernel/simd.rs", src).is_empty());
+        assert!(run_one("src/runtime/pjrt.rs", src).is_empty());
+        // no test exemption: unsafe in a test module still fires
+        let test_src = "#[cfg(test)] mod tests { fn f(p: *const u8) -> u8 { unsafe { *p } } }";
+        assert_eq!(run_one("src/util/cli.rs", test_src).len(), 1);
+    }
+
+    #[test]
+    fn pragma_suppresses_a_reviewed_site() {
+        let src = "
+fn f(v: &[f32]) -> f32 {
+    // lint: allow(determinism) — slice order is pinned by construction here
+    v.iter().sum::<f32>()
+}
+";
+        assert!(run_one("src/serve/router.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_code_is_exempt_for_float_rules() {
+        let src = "
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { let s: f32 = [1.0f32].iter().sum::<f32>(); assert!(s > 0.0); }
+}
+";
+        assert!(run_one("src/serve/router.rs", src).is_empty());
+    }
+}

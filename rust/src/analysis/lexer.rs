@@ -1,0 +1,518 @@
+//! A hand-rolled Rust lexer for `scalebits-lint`.
+//!
+//! The offline crates mirror carries only the `xla` closure — no `syn`,
+//! no `proc-macro2` — so the linter tokenizes Rust source itself. The
+//! passes only need token *kinds* and line numbers, but the kinds must
+//! be RIGHT in exactly the places naive scanners go wrong, or every
+//! contract check can be silenced by an unlucky string literal:
+//!
+//! * nested block comments (`/* /* */ */` — legal Rust, one comment),
+//! * raw strings (`r"…"`, `r#"…"#`, any number of `#`s, plus `b`/`br`
+//!   byte variants) where `"` and `\` are plain bytes,
+//! * char literals vs lifetimes (`'a'` is a char, `'a` is a lifetime,
+//!   `'\''` is a char, `b'x'` is a byte char),
+//! * escaped quotes inside ordinary strings (`"say \"hi\""`).
+//!
+//! Comments are not tokens, but `// lint: allow(<pass>, …) — <reason>`
+//! pragmas are collected per line so passes can honor suppressions; a
+//! pragma with no reason is itself reported by the driver.
+
+/// Token kinds — the resolution the passes need, nothing more.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unsafe`, `unwrap`, …).
+    Ident,
+    /// `'a`, `'static`, `'_` — significantly NOT a char literal.
+    Lifetime,
+    /// String literal of any flavor (`"…"`, `r#"…"#`, `b"…"`). `text`
+    /// holds the decoded-enough content: the raw bytes between the
+    /// delimiters (escapes left as written).
+    Str,
+    /// Char or byte-char literal (`'x'`, `'\n'`, `b'a'`).
+    Char,
+    /// Numeric literal, suffix included (`1_000u64`, `1.5e-3`, `0xff`).
+    Num,
+    /// Any single punctuation byte (`{`, `.`, `!`, `+`, …).
+    Punct,
+}
+
+/// One token: kind, text and the 1-based source line it starts on.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == c.len_utf8() && self.text.starts_with(c)
+    }
+}
+
+/// A `// lint: allow(pass, …) — reason` suppression.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    pub line: u32,
+    /// Pass names inside `allow(…)` (trimmed, order kept).
+    pub passes: Vec<String>,
+    /// Whether any non-empty reason text followed the `allow(…)`.
+    pub has_reason: bool,
+}
+
+/// Lexed file: the token stream plus the pragma table.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub pragmas: Vec<Pragma>,
+}
+
+impl Lexed {
+    /// Is `pass` suppressed at `line`? A pragma covers its own line
+    /// (trailing comment) and the line directly below it (pragma on its
+    /// own line above the site). `allow(all)` suppresses every pass.
+    pub fn allowed(&self, line: u32, pass: &str) -> bool {
+        self.pragmas.iter().any(|p| {
+            (p.line == line || p.line + 1 == line)
+                && p.passes.iter().any(|n| n == pass || n == "all")
+        })
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Tokenize `src`. Never fails: unterminated constructs consume to end
+/// of file (the linter must keep scanning a broken tree, not die on it).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    // Count newlines inside b[from..to] into `line`.
+    let bump = |from: usize, to: usize, line: &mut u32| {
+        *line += b[from..to.min(n)].iter().filter(|&&c| c == b'\n').count() as u32;
+    };
+
+    while i < n {
+        let c = b[i];
+        // -- whitespace ------------------------------------------------
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // -- comments --------------------------------------------------
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            parse_pragma(&src[start..j], line, &mut out.pragmas);
+            i = j; // the \n itself is handled above
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            // nested block comments: depth counting, newline tracking
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // -- raw / byte strings ---------------------------------------
+        // b"…", r"…", r#"…"#, br#"…"#, rb is not Rust; b'…' handled with
+        // chars below. Decide by peeking past an optional b and r.
+        if c == b'r' || c == b'b' {
+            let mut j = i;
+            let mut saw_r = false;
+            if b[j] == b'b' {
+                j += 1;
+            }
+            if j < n && b[j] == b'r' {
+                saw_r = true;
+                j += 1;
+            }
+            if saw_r {
+                // raw string needs 0+ #s then a quote
+                let mut hashes = 0usize;
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == b'"' {
+                    let body_start = j + 1;
+                    // find `"` followed by `hashes` #s
+                    let mut k = body_start;
+                    let end = loop {
+                        if k >= n {
+                            break n;
+                        }
+                        if b[k] == b'"' && b[k + 1..].len() >= hashes
+                            && b[k + 1..k + 1 + hashes].iter().all(|&h| h == b'#')
+                        {
+                            break k;
+                        }
+                        k += 1;
+                    };
+                    let tok_line = line;
+                    bump(body_start, end, &mut line);
+                    out.toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: src[body_start..end.min(n)].to_string(),
+                        line: tok_line,
+                    });
+                    i = (end + 1 + hashes).min(n);
+                    continue;
+                }
+                // `r` or `br` not followed by a string: plain ident path
+            } else if j < n && b[j] == b'"' {
+                // b"…": ordinary escaped string with a b prefix
+                let (tok, next, nl) = lex_quoted(src, j, line);
+                out.toks.push(tok);
+                line += nl;
+                i = next;
+                continue;
+            }
+            // fall through to ident handling
+        }
+        // -- ordinary strings -----------------------------------------
+        if c == b'"' {
+            let (tok, next, nl) = lex_quoted(src, i, line);
+            out.toks.push(tok);
+            line += nl;
+            i = next;
+            continue;
+        }
+        // -- char literal vs lifetime ---------------------------------
+        if c == b'\'' || (c == b'b' && i + 1 < n && b[i + 1] == b'\'') {
+            let q = if c == b'b' { i + 1 } else { i };
+            if q + 1 < n {
+                let nx = b[q + 1];
+                if nx == b'\\' {
+                    // escaped char literal: skip escape, find closing '
+                    let mut j = q + 2;
+                    if j < n {
+                        j += 1; // the escaped byte ('\n', '\'', '\u', …)
+                    }
+                    // \u{…} and similar: scan to the closing quote
+                    while j < n && b[j] != b'\'' {
+                        j += 1;
+                    }
+                    out.toks.push(Tok {
+                        kind: TokKind::Char,
+                        text: src[q + 1..j.min(n)].to_string(),
+                        line,
+                    });
+                    i = (j + 1).min(n);
+                    continue;
+                }
+                if is_ident_start(nx) {
+                    // 'a' → char, 'a → lifetime: scan the ident run and
+                    // look for a closing quote right after it
+                    let mut j = q + 2;
+                    while j < n && is_ident_cont(b[j]) {
+                        j += 1;
+                    }
+                    if j < n && b[j] == b'\'' && j == q + 2 {
+                        // exactly one ident char then ': char literal
+                        out.toks.push(Tok {
+                            kind: TokKind::Char,
+                            text: src[q + 1..j].to_string(),
+                            line,
+                        });
+                        i = j + 1;
+                    } else {
+                        // multi-char ident or no closing quote: lifetime
+                        out.toks.push(Tok {
+                            kind: TokKind::Lifetime,
+                            text: src[q..j].to_string(),
+                            line,
+                        });
+                        i = j;
+                    }
+                    continue;
+                }
+                if nx != b'\'' && q + 2 < n && b[q + 2] == b'\'' {
+                    // any other single char: ' ', '.', '9', …
+                    out.toks.push(Tok {
+                        kind: TokKind::Char,
+                        text: src[q + 1..q + 2].to_string(),
+                        line,
+                    });
+                    i = q + 3;
+                    continue;
+                }
+            }
+            // bare quote (macro land): punct, keep scanning
+            out.toks.push(Tok { kind: TokKind::Punct, text: "'".to_string(), line });
+            i = q + 1;
+            continue;
+        }
+        // -- identifiers ----------------------------------------------
+        if is_ident_start(c) {
+            let start = i;
+            let mut j = i + 1;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: src[start..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // -- numbers --------------------------------------------------
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i + 1;
+            // digits, underscores, hex/type-suffix letters
+            while j < n && (is_ident_cont(b[j])) {
+                j += 1;
+            }
+            // fractional part: `.` followed by a digit (NOT `1..x` or
+            // `1.method()`)
+            if j + 1 < n && b[j] == b'.' && b[j + 1].is_ascii_digit() {
+                j += 2;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+            }
+            // exponent sign: `1e-3` — the `-`/`+` after e/E
+            if j < n
+                && (b[j] == b'-' || b[j] == b'+')
+                && (b[j - 1] == b'e' || b[j - 1] == b'E')
+                && src[start..j].chars().next().map(|ch| ch.is_ascii_digit()) == Some(true)
+                && j + 1 < n
+                && b[j + 1].is_ascii_digit()
+            {
+                j += 2;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Num, text: src[start..j].to_string(), line });
+            i = j;
+            continue;
+        }
+        // -- punctuation ----------------------------------------------
+        let ch_len = src[i..].chars().next().map(|ch| ch.len_utf8()).unwrap_or(1);
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: src[i..i + ch_len].to_string(),
+            line,
+        });
+        i += ch_len;
+    }
+    out
+}
+
+/// Lex an escape-aware `"…"` starting at the quote `start`. Returns the
+/// token, the index after the closing quote, and newlines consumed.
+fn lex_quoted(src: &str, start: usize, line: u32) -> (Tok, usize, u32) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let body = start + 1;
+    let mut j = body;
+    let mut nl = 0u32;
+    while j < n {
+        match b[j] {
+            b'\\' => j = (j + 2).min(n), // skip the escaped byte
+            b'"' => break,
+            b'\n' => {
+                nl += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    let tok = Tok { kind: TokKind::Str, text: src[body..j.min(n)].to_string(), line };
+    (tok, (j + 1).min(n), nl)
+}
+
+/// Parse `lint: allow(a, b) — reason` out of one line-comment body.
+fn parse_pragma(comment: &str, line: u32, out: &mut Vec<Pragma>) {
+    let t = comment.trim_start();
+    let Some(rest) = t.strip_prefix("lint:") else { return };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else { return };
+    let Some(close) = rest.find(')') else { return };
+    let passes: Vec<String> = rest[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if passes.is_empty() {
+        return;
+    }
+    // a reason is any text after the `)` beyond separators/dashes
+    let reason = rest[close + 1..]
+        .trim_start_matches([' ', '\t', '-', '—', '–', ':'])
+        .trim();
+    out.push(Pragma { line, passes, has_reason: !reason.is_empty() });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(l: &Lexed) -> Vec<&str> {
+        l.toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn basic_tokens_and_lines() {
+        let l = lex("fn main() {\n  let x = 1;\n}\n");
+        assert_eq!(idents(&l), vec!["fn", "main", "let", "x"]);
+        let x = l.toks.iter().find(|t| t.is_ident("x")).unwrap();
+        assert_eq!(x.line, 2);
+        let num = l.toks.iter().find(|t| t.kind == TokKind::Num).unwrap();
+        assert_eq!((num.text.as_str(), num.line), ("1", 2));
+    }
+
+    /// The edge case the panic pass depends on: `unwrap` inside a
+    /// string or comment is NOT an ident token.
+    #[test]
+    fn strings_and_comments_hide_their_contents() {
+        let l = lex("let a = \"x.unwrap() // not code\"; // b.unwrap()\n/* c.unwrap() */ d()");
+        assert_eq!(idents(&l), vec!["let", "a", "d"]);
+        let s = l.toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert!(s.text.contains("unwrap"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_the_string() {
+        let l = lex(r#"let s = "say \"hi\" now"; tail()"#);
+        assert_eq!(idents(&l), vec!["let", "s", "tail"]);
+        let s = l.toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, r#"say \"hi\" now"#);
+        // a trailing backslash-escaped backslash must not eat the quote
+        let l = lex(r#"let s = "c:\\"; tail()"#);
+        assert_eq!(idents(&l), vec!["let", "s", "tail"]);
+    }
+
+    #[test]
+    fn raw_strings_swallow_quotes_and_hashes() {
+        let l = lex(r##"let s = r#"a "quoted" \ thing"#; tail()"##);
+        assert_eq!(idents(&l), vec!["let", "s", "tail"]);
+        let s = l.toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!(s.text, r#"a "quoted" \ thing"#);
+        // plain r"…" and byte br"…" forms
+        let l = lex(r#"let a = r"no \ escapes"; let b = br"bytes"; tail()"#);
+        assert_eq!(idents(&l), vec!["let", "a", "let", "b", "tail"]);
+        // an ident that merely STARTS with r is still an ident
+        let l = lex("let row = rows[0];");
+        assert_eq!(idents(&l), vec!["let", "row", "rows"]);
+    }
+
+    #[test]
+    fn nested_block_comments_close_at_depth_zero() {
+        let l = lex("a /* one /* two */ still comment */ b");
+        assert_eq!(idents(&l), vec!["a", "b"]);
+        // newlines inside comments still advance the line counter
+        let l = lex("/* x\n y\n z */ next");
+        assert_eq!(l.toks[0].line, 3);
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'a'; let d = '\\''; let e = ' '; }");
+        let lifetimes: Vec<_> =
+            l.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2, "two 'a lifetime positions");
+        let chars: Vec<_> = l.toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(chars.len(), 3, "'a', '\\'' and ' ' are char literals");
+        // 'static is a lifetime, not an unterminated char
+        let l = lex("&'static str; after()");
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "'static"));
+        assert!(l.toks.iter().any(|t| t.is_ident("after")));
+        // byte char b'x'
+        let l = lex("let b = b'x'; tail()");
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Char && t.text == "x"));
+        assert!(l.toks.iter().any(|t| t.is_ident("tail")));
+    }
+
+    #[test]
+    fn float_literals_keep_their_shape() {
+        let l = lex("let a = 1.5e-3; let b = 2.0f32; let c = 1..4; let d = 0xff;");
+        let nums: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1.5e-3", "2.0f32", "1", "4", "0xff"]);
+    }
+
+    #[test]
+    fn pragmas_are_collected_with_reasons() {
+        let src = "\
+x();\n\
+// lint: allow(panic-freedom) — startup path, cannot be reached poisoned\n\
+y();\n\
+z(); // lint: allow(lock-order, determinism): measured, single lock\n\
+w(); // lint: allow(registry)\n";
+        let l = lex(src);
+        assert_eq!(l.pragmas.len(), 3);
+        assert_eq!(l.pragmas[0].line, 2);
+        assert!(l.pragmas[0].has_reason);
+        assert!(l.allowed(3, "panic-freedom"), "pragma covers the next line");
+        assert!(l.allowed(2, "panic-freedom"), "pragma covers its own line");
+        assert!(!l.allowed(4, "panic-freedom"), "coverage stops after one line");
+        assert_eq!(l.pragmas[1].passes, vec!["lock-order", "determinism"]);
+        assert!(l.allowed(4, "determinism"));
+        assert!(!l.pragmas[2].has_reason, "reasonless pragma is flagged by the driver");
+    }
+
+    #[test]
+    fn cfg_test_attribute_tokens_survive() {
+        let l = lex("#[cfg(test)]\nmod tests { fn helper() {} }");
+        let kinds: Vec<&str> = idents(&l);
+        assert_eq!(kinds, vec!["cfg", "test", "mod", "tests", "fn", "helper"]);
+        assert!(l.toks[0].is_punct('#'));
+    }
+
+    #[test]
+    fn unterminated_constructs_do_not_loop_or_panic() {
+        lex("let s = \"never closed");
+        lex("/* never closed");
+        lex("let r = r#\"never closed");
+        lex("let c = '");
+        lex("'");
+    }
+}

@@ -1,0 +1,172 @@
+//! Metrics-merge pass: every field of a struct with an inherent
+//! `fn merge(&mut self, other: &Self)` must be touched by that merge.
+//!
+//! Worker shards each keep their own `ServeMetrics` and the router
+//! folds them with `merge()` at drain time. Adding a counter to the
+//! struct but forgetting the merge line silently zeroes it in every
+//! report — the classic "metric flatlined after refactor" bug. This
+//! pass makes the compiler-shaped hole visible: a field ident that
+//! never appears in the merge body is a finding.
+//!
+//! The check is name-based on purpose: `self.served += other.served`
+//! and `self.latency.merge(&other.latency)` both mention the field, and
+//! false negatives from a *mention without an actual fold* are beyond
+//! static reach — the regression tests pin the live structs instead.
+
+use std::collections::BTreeSet;
+
+use super::ast::FileMap;
+use super::lexer::{Lexed, TokKind};
+use super::{Finding, SourceFile, PASS_METRICS_MERGE};
+
+pub fn run(files: &[SourceFile], lexed: &[Lexed], maps: &[FileMap]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for ((file, lx), map) in files.iter().zip(lexed.iter()).zip(maps.iter()) {
+        for st in &map.structs {
+            if st.is_test || st.fields.is_empty() {
+                continue;
+            }
+            // the struct's inherent merge, if any
+            let Some(mergefn) = map
+                .fns
+                .iter()
+                .find(|f| f.name == "merge" && f.owner.as_deref() == Some(st.name.as_str()))
+            else {
+                continue;
+            };
+            if mergefn.is_test {
+                continue;
+            }
+            let body = &lx.toks[mergefn.body.0..=mergefn.body.1];
+            let mentioned: BTreeSet<&str> = body
+                .iter()
+                .filter(|t| t.kind == TokKind::Ident)
+                .map(|t| t.text.as_str())
+                .collect();
+            for field in &st.fields {
+                if mentioned.contains(field.as_str()) {
+                    continue;
+                }
+                if lx.allowed(mergefn.line, PASS_METRICS_MERGE) {
+                    continue;
+                }
+                out.push(Finding {
+                    pass: PASS_METRICS_MERGE,
+                    file: file.path.clone(),
+                    line: mergefn.line,
+                    message: format!(
+                        "{}::merge never touches field `{}` — shard values will be \
+                         silently dropped at drain time",
+                        st.name, field
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ast::map_file;
+    use crate::analysis::lexer::lex;
+
+    fn run_one(src: &str) -> Vec<Finding> {
+        let files =
+            vec![SourceFile { path: "src/serve/metrics.rs".to_string(), text: src.to_string() }];
+        let lexed = vec![lex(src)];
+        let maps = vec![map_file(&lexed[0])];
+        run(&files, &lexed, &maps)
+    }
+
+    #[test]
+    fn complete_merge_is_clean() {
+        let src = "
+pub struct M { pub a: u64, pub b: u64, pub h: H }
+impl M {
+    pub fn merge(&mut self, other: &Self) {
+        self.a += other.a;
+        self.b = self.b.max(other.b);
+        self.h.merge(&other.h);
+    }
+}
+";
+        assert!(run_one(src).is_empty());
+    }
+
+    /// Acceptance-criteria demo: deleting a merge line for one field is
+    /// caught.
+    #[test]
+    fn dropped_field_is_caught() {
+        let src = "
+pub struct M { pub a: u64, pub b: u64 }
+impl M {
+    pub fn merge(&mut self, other: &Self) {
+        self.a += other.a;
+    }
+}
+";
+        let f = run_one(src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("never touches field `b`"));
+    }
+
+    #[test]
+    fn structs_without_merge_are_ignored() {
+        let src = "pub struct Plain { pub a: u64, pub b: u64 }";
+        assert!(run_one(src).is_empty());
+    }
+
+    #[test]
+    fn merge_on_another_type_does_not_cover_this_struct() {
+        let src = "
+pub struct A { pub x: u64 }
+pub struct B { pub y: u64 }
+impl A {
+    pub fn merge(&mut self, other: &Self) { self.x += other.x; }
+}
+impl B {
+    pub fn merge(&mut self, other: &Self) { let _ = other; }
+}
+";
+        let f = run_one(src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("B::merge"));
+    }
+
+    #[test]
+    fn pragma_on_the_merge_fn_suppresses() {
+        let src = "
+pub struct M { pub a: u64, pub scratch: u64 }
+impl M {
+    // lint: allow(metrics-merge) — scratch is per-shard working state, not a metric
+    pub fn merge(&mut self, other: &Self) { self.a += other.a; }
+}
+";
+        assert!(run_one(src).is_empty());
+    }
+
+    /// Regression pin: the LIVE ServeMetrics and Histogram merges are
+    /// complete. If a field is ever added without a merge line, this
+    /// test fails before CI even runs the binary.
+    #[test]
+    fn live_serve_metrics_merge_is_complete() {
+        let src = include_str!("../serve/metrics.rs");
+        let files = vec![SourceFile {
+            path: "src/serve/metrics.rs".to_string(),
+            text: src.to_string(),
+        }];
+        let lexed = vec![lex(src)];
+        let maps = vec![map_file(&lexed[0])];
+        let f = run(&files, &lexed, &maps);
+        assert!(f.is_empty(), "live metrics merge incomplete: {f:?}");
+        // the pass actually saw the structs (guards against the scan
+        // silently matching nothing)
+        assert!(maps[0]
+            .structs
+            .iter()
+            .any(|s| s.name == "ServeMetrics" && s.fields.len() >= 25));
+        assert!(maps[0].structs.iter().any(|s| s.name == "Histogram" && s.fields.len() >= 5));
+    }
+}

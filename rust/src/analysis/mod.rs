@@ -1,0 +1,345 @@
+//! `scalebits-lint`: in-tree static analysis for the contracts the
+//! compiler cannot see.
+//!
+//! The serving stack leans on four informal contracts: locks are taken
+//! in one global order, the live request path never panics, float
+//! reductions happen only in pinned-lane modules, and every kill
+//! switch is registered, documented and parsed in one place. Each is
+//! one refactor away from silently breaking. This module is a
+//! dependency-free analyzer (hand-rolled lexer, brace-matching item
+//! map — the offline crates mirror has no `syn`) that turns those
+//! contracts into CI gates. The `scalebits-lint` binary wires it to
+//! the real tree; `ci.sh` runs it in every lane.
+//!
+//! Passes:
+//! * [`lock_order`] — cross-function lock acquisition cycle detection.
+//! * [`panics`] — no unwrap/expect/panic! on serve/runtime paths,
+//!   ratcheted against `rust/lint.baseline` (old sites grandfathered,
+//!   counts may only fall).
+//! * [`determinism`] — float accumulation confined to pinned-lane
+//!   modules; `unsafe` confined to kernel/simd.rs + runtime/pjrt.rs.
+//! * [`registry`] — SCALEBITS_* env reads go through [`crate::util::env`];
+//!   registry, ci.sh and README agree on the variable set.
+//! * [`metrics_merge`] — every field of a merge()-bearing struct is
+//!   folded by its merge.
+//!
+//! Suppression: `// lint: allow(<pass>, …) — <reason>` on the finding
+//! line or the line above. A pragma without a reason is itself a
+//! finding — suppressions must say why.
+
+pub mod ast;
+pub mod determinism;
+pub mod lexer;
+pub mod lock_order;
+pub mod metrics_merge;
+pub mod panics;
+pub mod registry;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+pub const PASS_LOCK_ORDER: &str = "lock-order";
+pub const PASS_PANIC_FREEDOM: &str = "panic-freedom";
+pub const PASS_DETERMINISM: &str = "determinism";
+pub const PASS_REGISTRY: &str = "registry";
+pub const PASS_METRICS_MERGE: &str = "metrics-merge";
+pub const PASS_PRAGMA: &str = "pragma";
+
+pub const ALL_PASSES: [&str; 6] = [
+    PASS_LOCK_ORDER,
+    PASS_PANIC_FREEDOM,
+    PASS_DETERMINISM,
+    PASS_REGISTRY,
+    PASS_METRICS_MERGE,
+    PASS_PRAGMA,
+];
+
+/// One source file handed to the analyzer; `path` is repo-relative
+/// (e.g. `rust/src/serve/router.rs`) and is what findings and the
+/// baseline key on. Pass scopes match on path substrings/suffixes, so
+/// test fixtures may use the shorter `src/…` form.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub pass: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.pass, self.message)
+    }
+}
+
+/// The committed ratchet: per-(pass, file) grandfathered finding
+/// counts. Lines are `<pass> <path> <count>`, sorted, `#` comments ok.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct Baseline {
+    pub counts: BTreeMap<(String, String), usize>,
+}
+
+impl Baseline {
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let mut counts = BTreeMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (Some(pass), Some(path), Some(n), None) =
+                (parts.next(), parts.next(), parts.next(), parts.next())
+            else {
+                return Err(format!("baseline line {}: want `<pass> <path> <count>`", ln + 1));
+            };
+            if !ALL_PASSES.contains(&pass) {
+                return Err(format!("baseline line {}: unknown pass `{pass}`", ln + 1));
+            }
+            let n: usize = n
+                .parse()
+                .map_err(|_| format!("baseline line {}: bad count `{n}`", ln + 1))?;
+            counts.insert((pass.to_string(), path.to_string()), n);
+        }
+        Ok(Baseline { counts })
+    }
+
+    /// Render in the committed format (deterministic order).
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "# scalebits-lint ratchet baseline — grandfathered finding counts.\n\
+             # Counts may only DECREASE; regenerate with `scalebits-lint --write-baseline`\n\
+             # after paying down debt. New files start at zero and are not listed.\n",
+        );
+        for ((pass, path), n) in &self.counts {
+            out.push_str(&format!("{pass} {path} {n}\n"));
+        }
+        out
+    }
+
+    /// Build a baseline that grandfathers exactly `findings`.
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for f in findings {
+            *counts.entry((f.pass.to_string(), f.file.clone())).or_insert(0) += 1;
+        }
+        Baseline { counts }
+    }
+}
+
+/// Outcome of a full run after ratcheting.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Fatal findings: everything not covered by the baseline.
+    pub fatal: Vec<Finding>,
+    /// Non-fatal notes (e.g. "count shrank — tighten the baseline").
+    pub notes: Vec<String>,
+}
+
+/// Passes the ratchet baseline applies to. Everything else is absolute:
+/// lock cycles, stray unsafe and registry drift have no acceptable
+/// nonzero level.
+fn ratcheted(pass: &str) -> bool {
+    pass == PASS_PANIC_FREEDOM
+}
+
+/// Compare findings against the baseline. Covered findings are dropped;
+/// excesses come back fatal; shrinkage becomes a note.
+pub fn apply_baseline(findings: Vec<Finding>, baseline: &Baseline) -> Report {
+    let mut report = Report::default();
+    // group ratcheted findings per (pass, file)
+    let mut grouped: BTreeMap<(String, String), Vec<Finding>> = BTreeMap::new();
+    for f in findings {
+        if ratcheted(f.pass) {
+            grouped.entry((f.pass.to_string(), f.file.clone())).or_default().push(f);
+        } else {
+            report.fatal.push(f);
+        }
+    }
+    for (key, group) in &grouped {
+        let allowed = baseline.counts.get(key).copied().unwrap_or(0);
+        if group.len() > allowed {
+            report.notes.push(format!(
+                "{} {}: {} findings vs {} grandfathered — new sites below",
+                key.0,
+                key.1,
+                group.len(),
+                allowed
+            ));
+            report.fatal.extend(group.iter().cloned());
+        } else if group.len() < allowed {
+            report.notes.push(format!(
+                "{} {}: down to {} findings from {} — run --write-baseline to lock it in",
+                key.0,
+                key.1,
+                group.len(),
+                allowed
+            ));
+        }
+    }
+    // baseline entries whose file now has NO findings at all
+    for (key, &allowed) in &baseline.counts {
+        if allowed > 0 && !grouped.contains_key(key) {
+            report.notes.push(format!(
+                "{} {}: clean (baseline still allows {}) — run --write-baseline",
+                key.0, key.1, allowed
+            ));
+        }
+    }
+    report
+}
+
+/// Run every pass over `files` (+ `docs` for the registry pass) and
+/// return raw findings, unratcheted, deterministically ordered.
+pub fn run_all(files: &[SourceFile], docs: &[(String, String)]) -> Vec<Finding> {
+    let lexed: Vec<lexer::Lexed> = files.iter().map(|f| lexer::lex(&f.text)).collect();
+    let maps: Vec<ast::FileMap> = lexed.iter().map(ast::map_file).collect();
+
+    let mut findings = Vec::new();
+    findings.extend(lock_order::run(files, &lexed, &maps));
+    findings.extend(panics::run(files, &lexed, &maps));
+    findings.extend(determinism::run(files, &lexed, &maps));
+    findings.extend(registry::run(files, &lexed, docs));
+    findings.extend(metrics_merge::run(files, &lexed, &maps));
+
+    // pragma hygiene: every suppression must carry a reason, and name a
+    // real pass
+    for (file, lx) in files.iter().zip(lexed.iter()) {
+        for p in &lx.pragmas {
+            if !p.has_reason {
+                findings.push(Finding {
+                    pass: PASS_PRAGMA,
+                    file: file.path.clone(),
+                    line: p.line,
+                    message: "lint pragma without a reason: write `// lint: allow(<pass>) — why`"
+                        .to_string(),
+                });
+            }
+            for name in &p.passes {
+                if name != "all" && !ALL_PASSES.contains(&name.as_str()) {
+                    findings.push(Finding {
+                        pass: PASS_PRAGMA,
+                        file: file.path.clone(),
+                        line: p.line,
+                        message: format!("lint pragma names unknown pass `{name}`"),
+                    });
+                }
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.pass, a.message.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.pass, b.message.as_str()))
+    });
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(pass: &'static str, file: &str, line: u32) -> Finding {
+        Finding { pass, file: file.to_string(), line, message: "m".to_string() }
+    }
+
+    #[test]
+    fn baseline_round_trips() {
+        let b = Baseline::parse(
+            "# comment\n\npanic-freedom src/serve/admission.rs 12\npanic-freedom src/runtime/interp.rs 3\n",
+        )
+        .unwrap();
+        assert_eq!(
+            b.counts[&("panic-freedom".to_string(), "src/serve/admission.rs".to_string())],
+            12
+        );
+        let again = Baseline::parse(&b.render()).unwrap();
+        assert_eq!(b, again);
+    }
+
+    #[test]
+    fn baseline_rejects_malformed_lines() {
+        assert!(Baseline::parse("panic-freedom src/x.rs").is_err());
+        assert!(Baseline::parse("panic-freedom src/x.rs twelve").is_err());
+        assert!(Baseline::parse("no-such-pass src/x.rs 1").is_err());
+        assert!(Baseline::parse("panic-freedom src/x.rs 1 extra").is_err());
+    }
+
+    #[test]
+    fn ratchet_blocks_growth_allows_equal_and_notes_shrink() {
+        let base = Baseline::parse("panic-freedom src/serve/a.rs 2\n").unwrap();
+        // equal: covered
+        let r = apply_baseline(
+            vec![f(PASS_PANIC_FREEDOM, "src/serve/a.rs", 1), f(PASS_PANIC_FREEDOM, "src/serve/a.rs", 9)],
+            &base,
+        );
+        assert!(r.fatal.is_empty());
+        assert!(r.notes.is_empty());
+        // growth: fatal
+        let r = apply_baseline(
+            vec![
+                f(PASS_PANIC_FREEDOM, "src/serve/a.rs", 1),
+                f(PASS_PANIC_FREEDOM, "src/serve/a.rs", 9),
+                f(PASS_PANIC_FREEDOM, "src/serve/a.rs", 20),
+            ],
+            &base,
+        );
+        assert_eq!(r.fatal.len(), 3, "the whole group is shown when the ratchet trips");
+        // shrink: clean but noted
+        let r = apply_baseline(vec![f(PASS_PANIC_FREEDOM, "src/serve/a.rs", 1)], &base);
+        assert!(r.fatal.is_empty());
+        assert_eq!(r.notes.len(), 1);
+        assert!(r.notes[0].contains("--write-baseline"));
+    }
+
+    #[test]
+    fn unlisted_files_get_no_grandfathering() {
+        let base = Baseline::default();
+        let r = apply_baseline(vec![f(PASS_PANIC_FREEDOM, "src/serve/new.rs", 4)], &base);
+        assert_eq!(r.fatal.len(), 1);
+    }
+
+    #[test]
+    fn non_ratcheted_passes_ignore_the_baseline() {
+        // even a baseline entry for lock-order cannot grandfather it
+        let base = Baseline::parse("lock-order src/serve/a.rs 5\n").unwrap();
+        let r = apply_baseline(vec![f(PASS_LOCK_ORDER, "src/serve/a.rs", 1)], &base);
+        assert_eq!(r.fatal.len(), 1, "cycles are never acceptable debt");
+    }
+
+    #[test]
+    fn reasonless_or_misnamed_pragmas_are_findings() {
+        let files = vec![SourceFile {
+            path: "src/serve/x.rs".to_string(),
+            text: "// lint: allow(panic-freedom)\nfn a() {}\n\
+                   // lint: allow(panick-freedom) — typo\nfn b() {}\n"
+                .to_string(),
+        }];
+        let found = run_all(&files, &[("ci.sh".to_string(), String::new())]);
+        let pragma: Vec<&Finding> = found.iter().filter(|x| x.pass == PASS_PRAGMA).collect();
+        assert_eq!(pragma.len(), 2, "{found:?}");
+        assert!(pragma[0].message.contains("without a reason"));
+        assert!(pragma[1].message.contains("unknown pass"));
+    }
+
+    #[test]
+    fn output_order_is_deterministic() {
+        let files = vec![SourceFile {
+            path: "src/serve/x.rs".to_string(),
+            text: "fn a(v: Option<u32>) { v.unwrap(); v.expect(\"x\"); }".to_string(),
+        }];
+        let a = run_all(&files, &[]);
+        let b = run_all(&files, &[]);
+        let ra: Vec<String> = a.iter().map(|x| x.to_string()).collect();
+        let rb: Vec<String> = b.iter().map(|x| x.to_string()).collect();
+        assert_eq!(ra, rb);
+        assert!(ra.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -1,0 +1,160 @@
+//! Panic-freedom pass: no `unwrap`/`expect`/`panic!`/`unreachable!` in
+//! non-test code on the serving and runtime paths.
+//!
+//! A panic inside a worker thread poisons every lock it holds and kills
+//! the request it was carrying; the router is built to turn failures
+//! into per-request errors instead (see `Ticket::wait`). This pass
+//! keeps new panic sites out of `src/serve/` and `src/runtime/`.
+//!
+//! Existing sites are grandfathered through the committed ratchet
+//! baseline (`rust/lint.baseline`): per-file counts may only go DOWN.
+//! The comparison against the baseline happens in the driver — this
+//! pass just reports every site it sees.
+
+use super::ast::FileMap;
+use super::lexer::{Lexed, TokKind};
+use super::{Finding, SourceFile, PASS_PANIC_FREEDOM};
+
+/// Paths the pass covers: the live serving and runtime layers.
+pub fn in_scope(path: &str) -> bool {
+    path.contains("src/serve/") || path.contains("src/runtime/")
+}
+
+const FORBIDDEN_METHODS: [&str; 2] = ["unwrap", "expect"];
+const FORBIDDEN_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+pub fn run(files: &[SourceFile], lexed: &[Lexed], maps: &[FileMap]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for ((file, lx), map) in files.iter().zip(lexed.iter()).zip(maps.iter()) {
+        if !in_scope(&file.path) {
+            continue;
+        }
+        let toks = &lx.toks;
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || map.is_test_tok(i) {
+                continue;
+            }
+            let name = t.text.as_str();
+            let method_site = FORBIDDEN_METHODS.contains(&name)
+                && i > 0
+                && toks[i - 1].is_punct('.')
+                && i + 1 < toks.len()
+                && toks[i + 1].is_punct('(');
+            let macro_site = FORBIDDEN_MACROS.contains(&name)
+                && i + 1 < toks.len()
+                && toks[i + 1].is_punct('!');
+            if !(method_site || macro_site) {
+                continue;
+            }
+            // `debug_assert!`-style macros are fine; only the four
+            // macros above abort unconditionally. `.expect(` on an
+            // iterator adapter chain is the same method either way.
+            if lx.allowed(t.line, PASS_PANIC_FREEDOM) {
+                continue;
+            }
+            out.push(Finding {
+                pass: PASS_PANIC_FREEDOM,
+                file: file.path.clone(),
+                line: t.line,
+                message: format!(
+                    "`{}{}` on the serve/runtime path: return an error instead (worker death \
+                     must surface through Ticket::wait, not a panic)",
+                    if method_site { "." } else { "" },
+                    if method_site { format!("{name}()") } else { format!("{name}!") },
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ast::map_file;
+    use crate::analysis::lexer::lex;
+
+    fn run_one(path: &str, src: &str) -> Vec<Finding> {
+        let files = vec![SourceFile { path: path.to_string(), text: src.to_string() }];
+        let lexed = vec![lex(src)];
+        let maps = vec![map_file(&lexed[0])];
+        run(&files, &lexed, &maps)
+    }
+
+    #[test]
+    fn unwrap_and_expect_fire_in_scope() {
+        let src = "
+fn f(x: Option<u32>) -> u32 {
+    let a = x.unwrap();
+    let b = x.expect(\"there\");
+    a + b
+}
+";
+        let f = run_one("src/serve/router.rs", src);
+        assert_eq!(f.len(), 2);
+        assert!(f[0].message.contains(".unwrap()"));
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn panic_family_macros_fire() {
+        let src = "
+fn f(k: u32) {
+    match k {
+        0 => panic!(\"zero\"),
+        1 => unreachable!(),
+        2 => todo!(),
+        _ => unimplemented!(),
+    }
+}
+";
+        let f = run_one("src/runtime/interp.rs", src);
+        assert_eq!(f.len(), 4);
+    }
+
+    #[test]
+    fn out_of_scope_files_are_not_checked() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert!(run_one("src/kernel/simd.rs", src).is_empty());
+        assert!(run_one("src/util/cli.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "
+fn live(x: Option<u32>) -> Option<u32> { x }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn case() { assert_eq!(live(Some(1)).unwrap(), 1); }
+}
+";
+        assert!(run_one("src/serve/api.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_with_reason_suppresses() {
+        let src = "
+fn f(x: Option<u32>) -> u32 {
+    // lint: allow(panic-freedom) — checked two lines above, slot is always filled
+    x.unwrap()
+}
+";
+        assert!(run_one("src/serve/router.rs", src).is_empty());
+    }
+
+    #[test]
+    fn idents_merely_named_unwrap_do_not_fire() {
+        let src = "
+fn unwrap_rate() -> f64 { 0.0 }
+fn f() { let unwrap = 3; let x = unwrap + 1; let s = \"x.unwrap()\"; }
+";
+        assert!(run_one("src/serve/router.rs", src).is_empty());
+    }
+
+    #[test]
+    fn debug_assert_is_not_a_panic_site() {
+        let src = "fn f(n: usize) { debug_assert!(n > 0); assert_eq!(n, n); }";
+        assert!(run_one("src/serve/router.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,250 @@
+//! Registry pass: every `SCALEBITS_*` environment variable flows
+//! through `util::env`, and the registry, `ci.sh`, and the README agree
+//! on which variables exist.
+//!
+//! Kill switches are only trustworthy if they are discoverable and
+//! parsed one way. Three rules:
+//!
+//! 1. **Single point of read.** `std::env::var("SCALEBITS_…")` (or the
+//!    `env!` macro) outside `util/env.rs` is a finding — call the
+//!    memoized accessors instead, so every reader agrees on the off-
+//!    spellings and on parse-once semantics.
+//! 2. **No ghost switches.** Any `SCALEBITS_*` name mentioned in
+//!    `ci.sh` or `README.md` must exist in the registry — docs cannot
+//!    advertise a switch the code does not honor.
+//! 3. **No secret switches.** Every registry variable must be exercised
+//!    or documented: it has to appear in `ci.sh` or `README.md`.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{Lexed, TokKind};
+use super::{Finding, SourceFile, PASS_REGISTRY};
+
+/// The one file allowed to read `SCALEBITS_*` raw.
+fn is_registry_file(path: &str) -> bool {
+    path.ends_with("util/env.rs")
+}
+
+/// Extract `SCALEBITS_*` names from free text (ci.sh, README).
+pub fn names_in_text(text: &str) -> BTreeSet<String> {
+    let b = text.as_bytes();
+    let mut out = BTreeSet::new();
+    let needle = b"SCALEBITS_";
+    let mut i = 0;
+    while i + needle.len() <= b.len() {
+        if &b[i..i + needle.len()] == needle {
+            let mut j = i + needle.len();
+            while j < b.len() && (b[j].is_ascii_uppercase() || b[j].is_ascii_digit() || b[j] == b'_')
+            {
+                j += 1;
+            }
+            if j > i + needle.len() {
+                out.insert(text[i..j].to_string());
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// The registry itself: `SCALEBITS_*` names inside string literals in
+/// util/env.rs. Scanned with the same extractor as free text so doc
+/// strings and format strings (`"SCALEBITS_KV={v}"`) contribute the
+/// NAME, not the whole literal.
+fn registry_names(env_rs: &Lexed) -> BTreeSet<String> {
+    env_rs
+        .toks
+        .iter()
+        .filter(|t| t.kind == TokKind::Str)
+        .flat_map(|t| names_in_text(&t.text))
+        .collect()
+}
+
+/// `docs`: (path, text) for ci.sh, README.md and anything else the
+/// driver wants cross-checked.
+pub fn run(files: &[SourceFile], lexed: &[Lexed], docs: &[(String, String)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+
+    // rule 1: raw reads outside the registry file
+    for (file, lx) in files.iter().zip(lexed.iter()) {
+        if is_registry_file(&file.path) {
+            continue;
+        }
+        let toks = &lx.toks;
+        for (i, t) in toks.iter().enumerate() {
+            let reader_call = (t.is_ident("var") || t.is_ident("var_os") || t.is_ident("env"))
+                && i + 2 < toks.len()
+                && (toks[i + 1].is_punct('(')
+                    || (toks[i + 1].is_punct('!') && i + 3 < toks.len() && toks[i + 2].is_punct('(')));
+            if !reader_call {
+                continue;
+            }
+            let lit = if toks[i + 1].is_punct('!') { &toks[i + 3] } else { &toks[i + 2] };
+            if lit.kind != TokKind::Str || !lit.text.starts_with("SCALEBITS_") {
+                continue;
+            }
+            if lx.allowed(t.line, PASS_REGISTRY) {
+                continue;
+            }
+            out.push(Finding {
+                pass: PASS_REGISTRY,
+                file: file.path.clone(),
+                line: t.line,
+                message: format!(
+                    "raw read of {}: go through util::env (memoized accessors keep the \
+                     off-spellings and parse-once semantics in one place)",
+                    lit.text
+                ),
+            });
+        }
+    }
+
+    // rules 2 and 3 need the registry file
+    let Some(env_idx) = files.iter().position(|f| is_registry_file(&f.path)) else {
+        out.push(Finding {
+            pass: PASS_REGISTRY,
+            file: "src/util/env.rs".to_string(),
+            line: 1,
+            message: "registry file util/env.rs missing from the scanned set".to_string(),
+        });
+        return out;
+    };
+    let registry = registry_names(&lexed[env_idx]);
+
+    for (path, text) in docs {
+        for name in names_in_text(text) {
+            if !registry.contains(&name) {
+                out.push(Finding {
+                    pass: PASS_REGISTRY,
+                    file: path.clone(),
+                    line: 1,
+                    message: format!(
+                        "{name} is mentioned here but absent from the util::env registry \
+                         (ghost switch: docs advertise what code does not honor)"
+                    ),
+                });
+            }
+        }
+    }
+
+    let documented: BTreeSet<String> =
+        docs.iter().flat_map(|(_, text)| names_in_text(text)).collect();
+    for name in &registry {
+        if !documented.contains(name) {
+            out.push(Finding {
+                pass: PASS_REGISTRY,
+                file: files[env_idx].path.clone(),
+                line: 1,
+                message: format!(
+                    "{name} is registered but appears in neither ci.sh nor README.md \
+                     (secret switch: register it in a CI lane or document it)"
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    const ENV_RS: &str = r#"
+pub const KILL_SWITCHES: [S; 2] = [
+    S { var: "SCALEBITS_SIMD" },
+    S { var: "SCALEBITS_KV" },
+];
+pub const BACKEND_VAR: &str = "SCALEBITS_BACKEND";
+"#;
+
+    fn setup(extra: &[(&str, &str)], docs: &[(&str, &str)]) -> Vec<Finding> {
+        let mut files = vec![SourceFile {
+            path: "src/util/env.rs".to_string(),
+            text: ENV_RS.to_string(),
+        }];
+        files.extend(extra.iter().map(|(p, s)| SourceFile {
+            path: p.to_string(),
+            text: s.to_string(),
+        }));
+        let lexed: Vec<Lexed> = files.iter().map(|f| lex(&f.text)).collect();
+        let docs: Vec<(String, String)> =
+            docs.iter().map(|(p, t)| (p.to_string(), t.to_string())).collect();
+        run(&files, &lexed, &docs)
+    }
+
+    const DOCS_ALL: (&str, &str) =
+        ("ci.sh", "SCALEBITS_SIMD=off SCALEBITS_KV=off SCALEBITS_BACKEND=interp");
+
+    /// Acceptance-criteria demo: a raw env::var("SCALEBITS_X") outside
+    /// util/env.rs is caught.
+    #[test]
+    fn raw_read_outside_registry_fires() {
+        let bad = r#"fn f() -> bool { std::env::var("SCALEBITS_SIMD").is_ok() }"#;
+        let f = setup(&[("src/kernel/simd.rs", bad)], &[DOCS_ALL]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("raw read of SCALEBITS_SIMD"));
+        assert_eq!(f[0].file, "src/kernel/simd.rs");
+    }
+
+    #[test]
+    fn env_macro_is_also_a_raw_read() {
+        let bad = r#"const X: &str = env!("SCALEBITS_KV");"#;
+        let f = setup(&[("src/lib.rs", bad)], &[DOCS_ALL]);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn registry_file_itself_may_read_raw() {
+        // ENV_RS has no var() call, but add one in a second registry
+        // fixture to prove the exemption path
+        let f = setup(&[], &[DOCS_ALL]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn ghost_switch_in_docs_fires() {
+        let f = setup(
+            &[],
+            &[DOCS_ALL, ("README.md", "set SCALEBITS_TURBO=1 for speed")],
+        );
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("SCALEBITS_TURBO"));
+        assert!(f[0].message.contains("ghost switch"));
+    }
+
+    #[test]
+    fn secret_switch_missing_from_docs_fires() {
+        let f = setup(&[], &[("ci.sh", "SCALEBITS_SIMD=off SCALEBITS_KV=off")]);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("SCALEBITS_BACKEND"));
+        assert!(f[0].message.contains("secret switch"));
+    }
+
+    #[test]
+    fn mentions_inside_test_strings_do_not_fire() {
+        // a test asserting on a NAME is not a read — no var( call
+        let ok = r#"
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn names() { assert_eq!(spec.var, "SCALEBITS_SIMD"); }
+}
+"#;
+        let f = setup(&[("src/util/cli.rs", ok)], &[DOCS_ALL]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn names_in_text_finds_all_spellings() {
+        let names = names_in_text("SCALEBITS_SIMD=off, `SCALEBITS_KV`, SCALEBITS_BACKEND.");
+        let want: BTreeSet<String> =
+            ["SCALEBITS_SIMD", "SCALEBITS_KV", "SCALEBITS_BACKEND"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(names, want);
+    }
+}

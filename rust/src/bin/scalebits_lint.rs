@@ -1,0 +1,160 @@
+//! `scalebits-lint` — run the in-tree contract linter over the repo.
+//!
+//! ```text
+//! scalebits-lint [--root DIR] [--baseline FILE] [--write-baseline] [--verbose]
+//! ```
+//!
+//! Walks `rust/src`, `rust/benches`, `rust/tests` and `examples/`,
+//! lexes every `.rs` file, runs the five contract passes (lock-order,
+//! panic-freedom, determinism, registry, metrics-merge) plus pragma
+//! hygiene, ratchets panic-freedom against `rust/lint.baseline`, and
+//! exits nonzero on any fatal finding. `ci.sh` runs this in every lane
+//! right after the build.
+//!
+//! `--write-baseline` regenerates the ratchet file from the current
+//! tree — use it after paying down grandfathered debt, never to bury
+//! new findings (review the diff: counts must only fall).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{Context, Result};
+
+use scalebits::analysis::{self, Baseline, SourceFile};
+use scalebits::util::cli::Args;
+
+/// Directories scanned for Rust sources, relative to the repo root.
+const SCAN_DIRS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "examples"];
+/// Free-text inputs for the registry cross-check.
+const DOC_FILES: [&str; 2] = ["ci.sh", "README.md"];
+const BASELINE_DEFAULT: &str = "rust/lint.baseline";
+
+fn main() -> ExitCode {
+    let args = Args::from_env(&["write-baseline", "verbose"]);
+    match run(&args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("scalebits-lint: error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run(args: &Args) -> Result<ExitCode> {
+    let root = match args.str_opt("root") {
+        Some(r) => PathBuf::from(r),
+        // the binary lives in rust/; the repo root is its parent
+        None => Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .context("rust/ has no parent directory")?
+            .to_path_buf(),
+    };
+
+    // -- collect sources ---------------------------------------------
+    let mut files = Vec::new();
+    for dir in SCAN_DIRS {
+        let d = root.join(dir);
+        if d.is_dir() {
+            collect_rs(&d, &root, &mut files)?;
+        }
+    }
+    if files.is_empty() {
+        anyhow::bail!("no .rs files under {} — wrong --root?", root.display());
+    }
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+
+    let mut docs = Vec::new();
+    for name in DOC_FILES {
+        let p = root.join(name);
+        if p.is_file() {
+            let text = fs::read_to_string(&p).with_context(|| p.display().to_string())?;
+            docs.push((name.to_string(), text));
+        }
+    }
+
+    // -- run ----------------------------------------------------------
+    let findings = analysis::run_all(&files, &docs);
+
+    let baseline_path = match args.str_opt("baseline") {
+        Some(p) => PathBuf::from(p),
+        None => root.join(BASELINE_DEFAULT),
+    };
+
+    if args.has_flag("write-baseline") {
+        let ratchetable: Vec<_> =
+            findings.iter().filter(|f| f.pass == "panic-freedom").cloned().collect();
+        let b = Baseline::from_findings(&ratchetable);
+        fs::write(&baseline_path, b.render())
+            .with_context(|| baseline_path.display().to_string())?;
+        println!(
+            "scalebits-lint: wrote {} ({} grandfathered findings across {} files)",
+            baseline_path.display(),
+            ratchetable.len(),
+            b.counts.len()
+        );
+        // still report the non-ratcheted passes so --write-baseline
+        // cannot mask a cycle or a registry break
+        let report = analysis::apply_baseline(findings, &b);
+        return Ok(finish(report, args.has_flag("verbose"), files.len()));
+    }
+
+    let baseline = if baseline_path.is_file() {
+        let text = fs::read_to_string(&baseline_path)
+            .with_context(|| baseline_path.display().to_string())?;
+        Baseline::parse(&text).map_err(anyhow::Error::msg)?
+    } else {
+        Baseline::default()
+    };
+
+    let report = analysis::apply_baseline(findings, &baseline);
+    Ok(finish(report, args.has_flag("verbose"), files.len()))
+}
+
+fn finish(report: analysis::Report, verbose: bool, n_files: usize) -> ExitCode {
+    for note in &report.notes {
+        println!("scalebits-lint: note: {note}");
+    }
+    for f in &report.fatal {
+        println!("{f}");
+    }
+    if report.fatal.is_empty() {
+        if verbose || !report.notes.is_empty() {
+            println!("scalebits-lint: clean ({n_files} files)");
+        }
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "scalebits-lint: {} finding(s) — fix, or suppress with \
+             `// lint: allow(<pass>) — <reason>` where reviewed",
+            report.fatal.len()
+        );
+        ExitCode::FAILURE
+    }
+}
+
+/// Recursively gather `.rs` files under `dir`; paths recorded relative
+/// to `root` with forward slashes so the baseline is portable.
+fn collect_rs(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+    for entry in fs::read_dir(dir).with_context(|| dir.display().to_string())? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            if entry.file_name() == "target" {
+                continue;
+            }
+            collect_rs(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let text = fs::read_to_string(&path).with_context(|| path.display().to_string())?;
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(SourceFile { path: rel, text });
+        }
+    }
+    Ok(())
+}

@@ -84,15 +84,14 @@ pub fn detected() -> SimdPath {
 /// The path used by the dispatching entry points, cached per process.
 /// `SCALEBITS_SIMD=off` (also `scalar` / `0`) forces the scalar mirror
 /// so both paths run under `cargo test` on any host; any other value
-/// (or unset) means auto-detect.
+/// (or unset) means auto-detect. The kill-switch is read through the
+/// [`crate::util::env`] registry — one parse for the implementation,
+/// the tests and the ci.sh lanes alike.
 pub fn active() -> SimdPath {
     static PATH: OnceLock<SimdPath> = OnceLock::new();
     *PATH.get_or_init(|| {
-        if let Ok(v) = std::env::var("SCALEBITS_SIMD") {
-            let v = v.to_ascii_lowercase();
-            if v == "off" || v == "scalar" || v == "0" {
-                return SimdPath::Scalar;
-            }
+        if !crate::util::env::simd_on() {
+            return SimdPath::Scalar;
         }
         detected()
     })
@@ -761,9 +760,10 @@ mod tests {
     #[test]
     fn env_override_forces_scalar() {
         // `active()` is cached per process, so we only assert the
-        // parsing contract here: when the var is set to "off" in CI the
-        // active path must be scalar.
-        if std::env::var("SCALEBITS_SIMD").map(|v| v == "off").unwrap_or(false) {
+        // contract here: when the registry says the kill-switch is off
+        // (the SCALEBITS_SIMD=off CI lane) the active path must be
+        // scalar. Same registry read as the implementation — no drift.
+        if !crate::util::env::simd_on() {
             assert_eq!(active(), SimdPath::Scalar);
         }
         // available_paths always includes scalar and is deduped.

@@ -33,6 +33,7 @@
 //! property testing, bench timing) are implemented in-tree under
 //! [`util`] and [`testkit`].
 
+pub mod analysis;
 pub mod baselines;
 pub mod calib;
 pub mod coordinator;

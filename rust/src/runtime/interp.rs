@@ -57,7 +57,6 @@ use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::OnceLock;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -88,36 +87,19 @@ pub const RMS_EPS: f64 = 1e-5;
 pub const SUPPORTED_EXECS: &[&str] =
     &["qloss", "qgrad", "qlogits", "qlogits_b1", "qpredict", "grams"];
 
-/// `SCALEBITS_KV` environment override: `off` / `recompute` / `0`
-/// force the recompute path even where incremental K/V state is
-/// available (same shape as the `SCALEBITS_SIMD` override). Read once.
+/// `SCALEBITS_KV` kill-switch (forces the recompute path even where
+/// incremental K/V state is available), via the process-wide
+/// [`crate::util::env`] registry — parse-once, memoized, one on/off
+/// semantics shared with the tests and the ci.sh lanes.
 fn kv_env_on() -> bool {
-    static ON: OnceLock<bool> = OnceLock::new();
-    *ON.get_or_init(|| {
-        if let Ok(v) = std::env::var("SCALEBITS_KV") {
-            let v = v.to_ascii_lowercase();
-            if v == "off" || v == "recompute" || v == "0" {
-                return false;
-            }
-        }
-        true
-    })
+    crate::util::env::kv_on()
 }
 
-/// `SCALEBITS_SPEC` environment override: `off` / `0` disable the
-/// self-speculative draft path even where it is available (same shape
-/// as the `SCALEBITS_SIMD` / `SCALEBITS_KV` overrides). Read once.
+/// `SCALEBITS_SPEC` kill-switch (disables the self-speculative draft
+/// path even where it is available), via the [`crate::util::env`]
+/// registry.
 fn spec_env_on() -> bool {
-    static ON: OnceLock<bool> = OnceLock::new();
-    *ON.get_or_init(|| {
-        if let Ok(v) = std::env::var("SCALEBITS_SPEC") {
-            let v = v.to_ascii_lowercase();
-            if v == "off" || v == "0" {
-                return false;
-            }
-        }
-        true
-    })
+    crate::util::env::spec_on()
 }
 
 /// Named f64 parameter set. Values are `Rc`-shared so the delta
@@ -2153,15 +2135,14 @@ mod tests {
 
     /// Mirror of the SIMD override test: when the environment forces
     /// the KV path off, `kv_active` must report false even with f32
-    /// serving activations.
+    /// serving activations. The test reads the SAME registry entry the
+    /// implementation does (`util::env`), so the two can never drift on
+    /// which spellings mean "off".
     #[test]
     fn kv_env_override_forces_recompute() {
-        if let Ok(v) = std::env::var("SCALEBITS_KV") {
-            let v = v.to_ascii_lowercase();
-            if v == "off" || v == "recompute" || v == "0" {
-                let (be, _w, _g, _tokens) = kv_backend();
-                assert!(!be.kv_active(), "SCALEBITS_KV={v} must force recompute");
-            }
+        if !crate::util::env::kv_on() {
+            let (be, _w, _g, _tokens) = kv_backend();
+            assert!(!be.kv_active(), "SCALEBITS_KV is off: must force recompute");
         }
     }
 
@@ -2292,15 +2273,13 @@ mod tests {
 
     /// Mirror of the SIMD/KV override tests: when the environment
     /// forces the speculative path off, `spec_active` must report false
-    /// even with f32 serving activations.
+    /// even with f32 serving activations. Reads the `util::env`
+    /// registry, exactly like the implementation.
     #[test]
     fn spec_env_override_forces_off() {
-        if let Ok(v) = std::env::var("SCALEBITS_SPEC") {
-            let v = v.to_ascii_lowercase();
-            if v == "off" || v == "0" {
-                let (be, _w, _g, _tokens) = kv_backend();
-                assert!(!be.spec_active(), "SCALEBITS_SPEC={v} must disable drafting");
-            }
+        if !crate::util::env::spec_on() {
+            let (be, _w, _g, _tokens) = kv_backend();
+            assert!(!be.spec_active(), "SCALEBITS_SPEC is off: must disable drafting");
         }
     }
 }

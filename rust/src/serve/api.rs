@@ -374,7 +374,12 @@ impl Ticket {
                 Err(_) => bail!("worker died before finishing request {}", self.id),
             }
         }
-        Ok(self.outcome.as_ref().expect("outcome set by loop"))
+        match self.outcome.as_ref() {
+            Some(o) => Ok(o),
+            // the loop above only exits with an outcome in place; this
+            // arm keeps the request path panic-free regardless
+            None => bail!("request {} lost its outcome", self.id),
+        }
     }
 }
 
@@ -453,7 +458,13 @@ impl Client {
         }
         let mut best: Option<(usize, usize)> = None; // (depth, worker)
         for (w, cache) in self.caches.iter().enumerate() {
-            let d = cache.lock().expect("cache lock").match_depth(tokens);
+            // A poisoned cache (its worker panicked mid-mutation) must
+            // not panic the CLIENT thread too: placement is advisory,
+            // so treat that worker as cache-cold and keep going.
+            let d = match cache.lock() {
+                Ok(c) => c.match_depth(tokens),
+                Err(_) => 0,
+            };
             if d > best.map_or(0, |(bd, _)| bd) {
                 best = Some((d, w));
             }

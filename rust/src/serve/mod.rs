@@ -68,6 +68,16 @@
 //! Shutdown closes every queue; workers drain all admitted requests and
 //! decode their live sets to completion before exiting, so nothing
 //! accepted is ever dropped.
+//!
+//! Lock order: the subsystem holds at most two locks at once, always
+//! prefix-cache (`router`'s shared [`cache::PrefixCache`]) BEFORE the
+//! bounded-queue state ([`admission`]'s `Mutex<State>` + `Condvar`) —
+//! the only overlap is a queue-depth probe taken while the cache is
+//! held. This order is not a convention on trust: the `scalebits-lint`
+//! lock-order pass ([`crate::analysis::lock_order`]) rebuilds the
+//! cross-function lock graph on every CI lane and fails the build on
+//! any cycle, so a reordered acquisition anywhere in the crate is
+//! caught before it can deadlock a worker.
 
 pub mod admission;
 pub mod api;

@@ -591,6 +591,20 @@ impl Drop for CloseOnExit {
     }
 }
 
+/// Lock the shared prefix cache, surfacing poisoning as an error
+/// instead of panicking. A poisoned cache means some thread panicked
+/// mid-mutation — its pin/byte bookkeeping can no longer be trusted, so
+/// the worker exits with this error; its queue closes and drains
+/// ([`CloseOnExit`]) and every waiting client observes worker death
+/// through `Ticket::wait`/`poll` (the PR 4 "never a fabricated
+/// outcome" contract), rather than a second panic cascading through
+/// the pool.
+fn lock_cache(cache: &Mutex<PrefixCache>) -> Result<std::sync::MutexGuard<'_, PrefixCache>> {
+    cache
+        .lock()
+        .map_err(|_| anyhow!("prefix cache poisoned: a thread panicked while holding it"))
+}
+
 /// One worker: builds its own backend + session on this thread (PJRT
 /// handles are `!Send`), then drives a [`Scheduler`] until shutdown.
 /// Pure wiring — every placement decision (who is live, who is penned,
@@ -651,7 +665,7 @@ fn worker_loop(
         // slot refills on the next admit. Retiring releases the
         // sequence's prefix-cache pins and K/V state.
         for s in sched.drain_defunct() {
-            release_seq(&cache, &session, &s);
+            release_seq(&cache, &session, &s)?;
             if s.cancelled() {
                 s.finish(Finish::Cancelled, worker, &mut metrics);
             } else {
@@ -676,7 +690,7 @@ fn worker_loop(
             let depth = s.cache_depth.unwrap_or(0);
             if depth > 0 {
                 let prompt = &s.tokens[..s.prompt_len];
-                cache.lock().expect("prefix cache lock").unpin(prompt, depth);
+                lock_cache(&cache)?.unpin(prompt, depth);
             }
         }
         if sched.live_len() == 0 {
@@ -707,8 +721,7 @@ fn worker_loop(
             if let Some(prev) = s.cache_depth {
                 if prev > 0 && !s.cache_pinned {
                     let prompt = &s.tokens[..s.prompt_len];
-                    let (depth, _blobs) =
-                        cache.lock().expect("prefix cache lock").lookup_pin(prompt, prev);
+                    let (depth, _blobs) = lock_cache(&cache)?.lookup_pin(prompt, prev);
                     s.cache_depth = Some(depth);
                     s.cache_pinned = depth > 0;
                 }
@@ -718,7 +731,7 @@ fn worker_loop(
             }
             let prompt = &s.tokens[..s.prompt_len];
             let (depth, blobs) = {
-                let mut c = cache.lock().expect("prefix cache lock");
+                let mut c = lock_cache(&cache)?;
                 if !c.enabled() {
                     s.cache_depth = Some(0);
                     continue;
@@ -812,7 +825,7 @@ fn worker_loop(
                     s.cache_inserted = true;
                     let (id, record) = (s.id, s.record);
                     let prompt = &sched.live()[r.seq].tokens[..sched.live()[r.seq].prompt_len];
-                    let mut c = cache.lock().expect("prefix cache lock");
+                    let mut c = lock_cache(&cache)?;
                     if c.enabled() {
                         c.insert_path(prompt, prompt.len(), |a, b| {
                             if kv_on {
@@ -844,7 +857,7 @@ fn worker_loop(
         }
         // Retire completed sequences; everyone else decodes on.
         for s in sched.drain_done() {
-            release_seq(&cache, &session, &s);
+            release_seq(&cache, &session, &s)?;
             s.finish(Finish::Completed, worker, &mut metrics);
         }
     }
@@ -854,8 +867,10 @@ fn worker_loop(
 /// Retire-side bookkeeping, run for EVERY sequence leaving a worker
 /// (completed, cancelled or expired; recorded or warmup): release its
 /// prefix-cache pins so its blocks become evictable, and drop its
-/// per-sequence K/V state.
-fn release_seq(cache: &Mutex<PrefixCache>, session: &Session, s: &DecodeSeq) {
+/// per-sequence K/V state. A poisoned cache lock is a worker-fatal
+/// error, not a panic — the remaining drains are abandoned and their
+/// clients observe worker death through their tickets.
+fn release_seq(cache: &Mutex<PrefixCache>, session: &Session, s: &DecodeSeq) -> Result<()> {
     // `cache_pinned` (not just `cache_depth`) gates the unpin: a
     // sequence retired straight out of the pen (cancelled/expired
     // while preempted) already dropped its pins on the way in, and a
@@ -865,9 +880,10 @@ fn release_seq(cache: &Mutex<PrefixCache>, session: &Session, s: &DecodeSeq) {
         if let Some(depth) = s.cache_depth {
             if depth > 0 {
                 let prompt = &s.tokens[..s.prompt_len];
-                cache.lock().expect("prefix cache lock").unpin(prompt, depth);
+                lock_cache(cache)?.unpin(prompt, depth);
             }
         }
     }
     session.backend().kv_free(s.id);
+    Ok(())
 }

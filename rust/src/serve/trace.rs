@@ -113,6 +113,7 @@ pub fn shared_template_trace(
         for tpl in 0..templates {
             let gap = rng.exp(rate_per_sec.max(1e-9));
             if gap.is_finite() && gap > 0.0 {
+                // lint: allow(determinism) — u64 adds of pre-rounded terms; seeded RNG pins the order
                 at_us += (gap * 1e6) as u64;
             }
             out.push(TraceArrival {

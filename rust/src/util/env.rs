@@ -1,0 +1,190 @@
+//! The `SCALEBITS_*` environment registry: every runtime kill-switch
+//! and override in the process reads through here, exactly once.
+//!
+//! Before this module the overrides were scattered `std::env::var`
+//! calls — `SCALEBITS_KV` was parsed independently in the interpreter
+//! AND in its test module, `SCALEBITS_SPEC` in the serve bench — and
+//! nothing stopped a third copy from drifting to different accepted
+//! values than the ci.sh lanes exercise. Now:
+//!
+//! * [`KILL_SWITCHES`] is the single table of switch names, accepted
+//!   "off" spellings and documentation. Adding a switch means adding a
+//!   row here (and a ci.sh lane + README mention — the
+//!   `scalebits-lint` registry pass cross-checks all three).
+//! * Reads are memoized per process ([`switch_on`]): the value observed
+//!   at first read is the value every later read sees, so a mid-run
+//!   `setenv` can never split the process into two configurations.
+//! * Raw `env::var("SCALEBITS_…")` anywhere outside this file is a CI
+//!   failure (`scalebits-lint`, pass `registry`).
+//!
+//! The parse itself is [`parse_on`], a pure function the unit tests pin
+//! down — the tests and the runtime cannot disagree on what "off"
+//! means, because both call the same code.
+
+use std::sync::OnceLock;
+
+/// A registered kill-switch: one `SCALEBITS_*` variable that turns a
+/// serving-path feature off for the whole process.
+pub struct SwitchSpec {
+    pub switch: Switch,
+    /// Environment variable name (always `SCALEBITS_*`).
+    pub var: &'static str,
+    /// Accepted "off" spellings, compared ASCII-case-insensitively.
+    /// Any other value — or the variable being unset — means ON.
+    pub off_values: &'static [&'static str],
+    /// What turning it off forces (for docs and lint output).
+    pub doc: &'static str,
+}
+
+/// The runtime kill-switches, indexable by [`Switch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Switch {
+    /// `SCALEBITS_SIMD` — force the scalar unpack-and-FMA mirror.
+    Simd = 0,
+    /// `SCALEBITS_KV` — force full-window recompute decode.
+    Kv = 1,
+    /// `SCALEBITS_SPEC` — disable self-speculative drafting.
+    Spec = 2,
+}
+
+/// The registry. `scalebits-lint` cross-checks this table against the
+/// ci.sh lanes and the README, so a switch cannot exist without CI
+/// coverage and docs (or vice versa).
+pub const KILL_SWITCHES: [SwitchSpec; 3] = [
+    SwitchSpec {
+        switch: Switch::Simd,
+        var: "SCALEBITS_SIMD",
+        off_values: &["off", "scalar", "0"],
+        doc: "forces the scalar SIMD mirror (kernel::simd)",
+    },
+    SwitchSpec {
+        switch: Switch::Kv,
+        var: "SCALEBITS_KV",
+        off_values: &["off", "recompute", "0"],
+        doc: "forces full-window recompute decode (runtime::interp)",
+    },
+    SwitchSpec {
+        switch: Switch::Spec,
+        var: "SCALEBITS_SPEC",
+        off_values: &["off", "0"],
+        doc: "disables self-speculative drafting (runtime::interp)",
+    },
+];
+
+/// `SCALEBITS_BACKEND` — not a kill-switch (it selects a backend rather
+/// than turning one off) but registered here for the same reason: one
+/// read, one parse, lint-enforced.
+pub const BACKEND_VAR: &str = "SCALEBITS_BACKEND";
+
+/// Pure parse: is the feature ON given the variable's value?
+/// `None` (unset) and unrecognized values mean ON — a kill-switch can
+/// only kill, never enable something the build would not do anyway.
+pub fn parse_on(spec: &SwitchSpec, value: Option<&str>) -> bool {
+    match value {
+        None => true,
+        Some(v) => {
+            let v = v.to_ascii_lowercase();
+            !spec.off_values.iter().any(|off| *off == v)
+        }
+    }
+}
+
+pub fn spec_of(s: Switch) -> &'static SwitchSpec {
+    &KILL_SWITCHES[s as usize]
+}
+
+/// Is the switch ON? First call reads and parses the environment; every
+/// later call returns the memoized answer (one on/off semantics per
+/// process — see the module docs).
+pub fn switch_on(s: Switch) -> bool {
+    static CACHE: [OnceLock<bool>; 3] = [OnceLock::new(), OnceLock::new(), OnceLock::new()];
+    let spec = spec_of(s);
+    *CACHE[s as usize].get_or_init(|| parse_on(spec, std::env::var(spec.var).ok().as_deref()))
+}
+
+/// `SCALEBITS_SIMD` is not forcing the scalar mirror.
+pub fn simd_on() -> bool {
+    switch_on(Switch::Simd)
+}
+
+/// `SCALEBITS_KV` is not forcing recompute decode.
+pub fn kv_on() -> bool {
+    switch_on(Switch::Kv)
+}
+
+/// `SCALEBITS_SPEC` is not disabling speculative drafting.
+pub fn spec_on() -> bool {
+    switch_on(Switch::Spec)
+}
+
+/// The `SCALEBITS_BACKEND` override, memoized (`None` = unset: every
+/// component picks its own default/auto backend).
+pub fn backend_override() -> Option<&'static str> {
+    static CACHE: OnceLock<Option<String>> = OnceLock::new();
+    CACHE.get_or_init(|| std::env::var(BACKEND_VAR).ok()).as_deref()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_wellformed_and_unique() {
+        let mut seen = Vec::new();
+        for spec in &KILL_SWITCHES {
+            assert!(spec.var.starts_with("SCALEBITS_"), "{} must be namespaced", spec.var);
+            assert!(!spec.off_values.is_empty(), "{} needs at least one off spelling", spec.var);
+            assert!(!seen.contains(&spec.var), "{} registered twice", spec.var);
+            seen.push(spec.var);
+        }
+        assert!(BACKEND_VAR.starts_with("SCALEBITS_"));
+        // the enum discriminant IS the table index — switch_on depends on it
+        for (i, spec) in KILL_SWITCHES.iter().enumerate() {
+            assert_eq!(spec.switch as usize, i, "{} out of order", spec.var);
+        }
+    }
+
+    #[test]
+    fn parse_accepts_documented_off_spellings_case_insensitively() {
+        let simd = spec_of(Switch::Simd);
+        for v in ["off", "OFF", "Scalar", "0"] {
+            assert!(!parse_on(simd, Some(v)), "SCALEBITS_SIMD={v} must mean off");
+        }
+        let kv = spec_of(Switch::Kv);
+        for v in ["off", "recompute", "RECOMPUTE", "0"] {
+            assert!(!parse_on(kv, Some(v)), "SCALEBITS_KV={v} must mean off");
+        }
+        let spec = spec_of(Switch::Spec);
+        for v in ["off", "0"] {
+            assert!(!parse_on(spec, Some(v)), "SCALEBITS_SPEC={v} must mean off");
+        }
+        // `recompute` is a KV spelling, not a SPEC/SIMD one
+        assert!(parse_on(spec, Some("recompute")));
+        assert!(parse_on(simd, Some("recompute")));
+    }
+
+    #[test]
+    fn unset_and_unknown_values_mean_on() {
+        for spec in &KILL_SWITCHES {
+            assert!(parse_on(spec, None), "{} unset must mean on", spec.var);
+            assert!(parse_on(spec, Some("on")), "{}=on must mean on", spec.var);
+            assert!(parse_on(spec, Some("yes")), "{}=yes must mean on", spec.var);
+            assert!(parse_on(spec, Some("")), "{}='' must mean on", spec.var);
+        }
+    }
+
+    /// The memoized read agrees with the pure parse of the live
+    /// environment (whatever the CI lane set it to).
+    #[test]
+    fn memoized_reads_match_the_live_environment() {
+        for spec in &KILL_SWITCHES {
+            let live = parse_on(spec, std::env::var(spec.var).ok().as_deref());
+            assert_eq!(switch_on(spec.switch), live, "{} memo drifted", spec.var);
+        }
+        assert_eq!(
+            backend_override(),
+            std::env::var(BACKEND_VAR).ok().as_deref(),
+            "backend override memo drifted"
+        );
+    }
+}

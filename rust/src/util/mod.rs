@@ -5,6 +5,7 @@
 //! this project needs them.
 
 pub mod cli;
+pub mod env;
 pub mod json;
 pub mod rng;
 pub mod table;

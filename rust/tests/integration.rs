@@ -29,7 +29,9 @@ fn real_artifacts() -> PathBuf {
 }
 
 fn force_interp() -> bool {
-    std::env::var("SCALEBITS_BACKEND").map(|v| v == "interp").unwrap_or(false)
+    // `SCALEBITS_BACKEND` goes through the util::env registry like
+    // every other SCALEBITS_* variable (raw reads are a lint failure).
+    scalebits::util::env::backend_override() == Some("interp")
 }
 
 /// Real PJRT artifacts present and not overridden?
@@ -1662,10 +1664,7 @@ fn runtime_rejects_bad_shapes() {
 /// counter asserts flip — drafting requested and switched off must
 /// count exactly zero.
 fn spec_disabled_by_env() -> bool {
-    matches!(
-        std::env::var("SCALEBITS_SPEC").ok().map(|v| v.to_ascii_lowercase()).as_deref(),
-        Some("off") | Some("0")
-    )
+    !scalebits::util::env::spec_on()
 }
 
 /// THE acceptance sweep for self-speculative decoding: for every
