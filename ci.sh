@@ -76,15 +76,17 @@ cargo build --release --offline --examples
 
 if [[ "$LANE" == "bench-smoke" ]]; then
   # Fast regression lane: the kernel bench verifies the fused packed
-  # GEMM bitwise against dequantize+reference AND the active SIMD path
-  # bitwise against forced-scalar (every mix, dense f32 included)
-  # before timing anything, and the
+  # GEMM bitwise against dequantize+reference, the active SIMD path
+  # bitwise against forced-scalar (every mix, dense f32 included), AND
+  # the int8 GEMM bitwise against scalar plus the margin-aware token-ID
+  # parity proxy — all before timing anything; the
   # serve bench runs the decode-mode serving stack end-to-end
   # (multi-token continuous batching, the chunked-prefill lifecycle —
   # a long prompt must complete AFTER short requests stream past it —
-  # the deadline/cancel round-trip and the prefix-cache round-trip: a
-  # repeated prompt must skip every whole cached block bitwise); both
-  # run artifact-less (synthetic model on the interpreter backend).
+  # the deadline/cancel round-trip, the prefix-cache round-trip: a
+  # repeated prompt must skip every whole cached block bitwise, and the
+  # int8 round-trip: both activation paths decode deterministically);
+  # both run artifact-less (synthetic model on the interpreter backend).
   echo "== bench smoke: bench_kernel"
   cargo bench --offline --bench bench_kernel -- --smoke
   echo "== bench smoke: bench_serve (decode mode)"
@@ -123,8 +125,9 @@ echo "== cargo test (kernel + f32-serving net, SCALEBITS_SIMD=off)"
 # GEMM tests are the real coverage here.
 SCALEBITS_SIMD=off cargo test -q --offline --lib kernel
 SCALEBITS_SIMD=off cargo test -q --offline --lib f32_serving
+SCALEBITS_SIMD=off cargo test -q --offline --lib int8
 SCALEBITS_SIMD=off cargo test -q --offline --test integration -- \
-  f32_serving packed_serving
+  f32_serving packed_serving int8_serving
 
 echo "== cargo test (serving net, SCALEBITS_KV=off)"
 # Second pass of the KV-sensitive serving tests with the runtime
@@ -138,6 +141,17 @@ echo "== cargo test (serving net, SCALEBITS_KV=off)"
 SCALEBITS_KV=off cargo test -q --offline --lib kv
 SCALEBITS_KV=off cargo test -q --offline --test integration -- \
   decode prefix preempted shared
+
+echo "== cargo test (serving net, SCALEBITS_INT8=off)"
+# Second pass of the int8-sensitive tests with the kill-switch demoting
+# int8 serving to the f32 path, so an `--activations int8` deployment
+# with the switch thrown stays bitwise-f32. The int8-vs-f32 tolerance
+# tests degenerate (int8 logits ARE the f32 logits — every bound holds
+# trivially); the real coverage is the demotion identity itself plus
+# the decode sweeps completing with int8 requested but switched off.
+SCALEBITS_INT8=off cargo test -q --offline --lib int8
+SCALEBITS_INT8=off cargo test -q --offline --test integration -- \
+  int8_serving decode
 
 echo "== cargo test (serving net, SCALEBITS_SPEC=off)"
 # Second pass of the speculation-sensitive tests with the kill-switch

@@ -18,13 +18,21 @@
 //!     "no runtime overhead" claim: per-block bitwidth dispatch must
 //!     cost ~nothing next to uniform-width unpacking.
 //!
-//! Before timing anything (including --smoke), two gates run:
+//! Before timing anything (including --smoke), three gates run:
 //!   1. the fused f64 kernel vs dequantize()+reference-matmul
 //!      (bitwise by the accumulation-order contract);
 //!   2. the SIMD f32 kernels vs their forced-scalar twins — BITWISE
 //!      equality on every mixture (the pinned-lane-algebra contract;
 //!      `SCALEBITS_SIMD=off` forces the scalar path process-wide,
-//!      this gate exercises both paths in one process).
+//!      this gate exercises both paths in one process);
+//!   3. the int8-activation GEMM: SIMD vs scalar BITWISE on every
+//!      mixture (the stronger exact-i32 contract), plus the
+//!      margin-aware token-ID parity proxy against the f32 path.
+//!
+//! bytes_streamed accounting: every row counts its weight traffic
+//! (packed words + scales, or the dense matrix) PLUS the streamed
+//! activation input at its storage width — without the activation
+//! term, cross-precision decode rows were not comparable.
 //!
 //! Run: cargo bench --offline --bench bench_kernel [-- --smoke]
 //! For peak SIMD throughput: RUSTFLAGS="-C target-cpu=native".
@@ -56,8 +64,9 @@ fn matmul_nt_naive(x: &[f64], w: &[f64], m: usize, k: usize, n: usize) -> Vec<f6
 }
 
 /// Effective decompression bandwidth: bytes the kernel actually
-/// streams (packed words + scales, or the dense weight matrix),
-/// divided by mean wall time.
+/// streams (packed words + scales — or the dense weight matrix —
+/// plus the activation input at its storage width), divided by mean
+/// wall time.
 fn gbps(bytes: usize, mean_us: f64) -> f64 {
     (bytes as f64 / 1e9) / (mean_us * 1e-6).max(1e-12)
 }
@@ -167,12 +176,81 @@ fn main() -> anyhow::Result<()> {
     }
     println!("gate 2: SIMD ({}) f32 kernels == scalar, bitwise, all mixtures", active.name());
 
+    // ---- gate 3: int8-activation GEMM ------------------------------
+    // (a) SIMD == scalar BITWISE on every mixture. The integer-domain
+    // contract is STRONGER than the f32 one: i32 block dots are exact
+    // and associative, so every ISA path is identical by construction
+    // with no pinned lanes — a differing bit is a decode/rescale bug.
+    for (key, _, f) in &mixes {
+        let grid: Vec<i32> = (0..nblocks).map(|i| f(i)).collect();
+        let pm = PackedMat::quantize(&w, &grid, br, bc);
+        let ys = kernel::matmul_nt_packed_i8_with(simd::SimdPath::Scalar, &x32, &pm, m, threads);
+        let yv = kernel::matmul_nt_packed_i8_with(active, &x32, &pm, m, threads);
+        anyhow::ensure!(
+            ys == yv,
+            "{key}: {} int8 GEMM is not bitwise-identical to scalar",
+            active.name()
+        );
+    }
+    // (b) token-ID parity proxy vs the f32 path: per activation row,
+    // the int8 argmax must equal the f32 argmax wherever the f32
+    // margin (top1 - top2) exceeds twice the measured int8 row error.
+    // Margin-aware is the sound form of the serving parity gate: a
+    // sub-margin argmax is decided by bits the int8 tolerance contract
+    // never promises to preserve, while a decisive flip is a real bug.
+    {
+        let y8 = kernel::matmul_nt_packed_i8(&x32, &pm_mixed, m);
+        let y32 = kernel::matmul_nt_packed_f32(&x32, &pm_mixed, m);
+        for i in 0..m {
+            let r8 = &y8[i * n..(i + 1) * n];
+            let r32 = &y32[i * n..(i + 1) * n];
+            let mut err = 0.0f32;
+            for j in 0..n {
+                err = err.max((r8[j] - r32[j]).abs());
+            }
+            let mut a32 = 0usize;
+            for j in 1..n {
+                if r32[j] > r32[a32] {
+                    a32 = j;
+                }
+            }
+            let mut margin = f32::INFINITY;
+            for j in 0..n {
+                if j != a32 {
+                    margin = margin.min(r32[a32] - r32[j]);
+                }
+            }
+            if margin > 2.0 * err {
+                let mut a8 = 0usize;
+                for j in 1..n {
+                    if r8[j] > r8[a8] {
+                        a8 = j;
+                    }
+                }
+                anyhow::ensure!(
+                    a8 == a32,
+                    "row {i}: int8 argmax {a8} != f32 argmax {a32} despite decisive \
+                     margin (margin {margin:.3e}, int8 err {err:.3e})"
+                );
+            }
+        }
+    }
+    println!(
+        "gate 3: int8 GEMM == scalar bitwise ({}), all mixtures; token-ID parity proxy holds",
+        active.name()
+    );
+
     println!(
         "GEMM {m}x{k} @ {n}x{k}^T, {br}x{bc} blocks, {threads} worker threads, \
          simd path {}, native kernels",
         active.name()
     );
     let mut rows = Json::obj();
+    // Streamed activation input at storage width — f32 rows read x as
+    // f32 (4B/elem), f64 rows as f64 (8B/elem). Part of every row's
+    // bytes_streamed so cross-precision rows compare like for like.
+    let act_bytes_f32 = m * k * 4;
+    let act_bytes_f64 = m * k * 8;
 
     // ---- packed f32 rows (the serving path) ------------------------
     let mut fused_int4_us = f64::NAN;
@@ -181,7 +259,7 @@ fn main() -> anyhow::Result<()> {
     for (key, label, f) in &mixes {
         let grid: Vec<i32> = (0..nblocks).map(|i| f(i)).collect();
         let pm = PackedMat::quantize(&w, &grid, br, bc);
-        let bytes = pm.stream_bytes();
+        let bytes = pm.stream_bytes() + act_bytes_f32;
         let stats = timer::bench(warmup, iters, || {
             std::hint::black_box(kernel::matmul_nt_packed_f32(&x32, &pm, m));
         });
@@ -196,6 +274,22 @@ fn main() -> anyhow::Result<()> {
         rows.set(key, row_json(&stats, bytes));
     }
 
+    // ---- packed int8 row (the integer-domain serving path) ---------
+    // Same mixture, activations quantized per row to int8 inside the
+    // kernel; the activation input it streams is still the f32 x.
+    {
+        let bytes = pm_mixed.stream_bytes() + act_bytes_f32;
+        let stats = timer::bench(warmup, iters, || {
+            std::hint::black_box(kernel::matmul_nt_packed_i8(&x32, &pm_mixed, m));
+        });
+        println!(
+            "{} | {:5.1} GB/s",
+            stats.line("packed int8 mixed 40/40/20 (--activations int8)"),
+            gbps(bytes, stats.mean_us)
+        );
+        rows.set("mixed_40_40_20_i8", row_json(&stats, bytes));
+    }
+
     // ---- f64 continuity rows (search/golden serving path) ----------
     // The pre-SIMD serving numerics (`--activations f64`): kept so the
     // f64-vs-f32 activation cost stays measured, not folklore.
@@ -204,7 +298,7 @@ fn main() -> anyhow::Result<()> {
         ("uniform_int4_f64", "packed f64 uniform INT4 (--activations f64)", &pm4),
         ("mixed_40_40_20_f64", "packed f64 mixed 40/40/20 (--activations f64)", &pm_mixed),
     ] {
-        let bytes = pm.stream_bytes();
+        let bytes = pm.stream_bytes() + act_bytes_f64;
         let stats = timer::bench(warmup, iters, || {
             std::hint::black_box(kernel::matmul_nt_packed(&x, pm, m));
         });
@@ -222,7 +316,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(matmul_nt_naive(&x, &deq, m, k, n));
     });
     println!("{}", stats.line("dequant + naive matmul (pre-kernel path)"));
-    rows.set("dequant_naive_int4", row_json(&stats, pm4.stream_bytes()));
+    rows.set("dequant_naive_int4", row_json(&stats, pm4.stream_bytes() + act_bytes_f64));
     let dequant_naive_us = stats.mean_us;
     // (b) same materialization, but through the parallel dense kernel —
     // isolates what fusion buys over a fast dequantize-then-GEMM.
@@ -231,7 +325,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(kernel::matmul_nt(&x, &deq, m, k, n));
     });
     println!("{}", stats.line("dequant + blocked dense kernel"));
-    rows.set("dequant_blocked_int4", row_json(&stats, pm4.stream_bytes()));
+    rows.set("dequant_blocked_int4", row_json(&stats, pm4.stream_bytes() + act_bytes_f64));
 
     // ---- dense baselines (uncompressed weights) --------------------
     // dense_f32: f32 weights through the f64 arithmetic path — the
@@ -239,7 +333,7 @@ fn main() -> anyhow::Result<()> {
     // denominator of the headline speedup: compressed f32 serving vs
     // what dense serving actually cost before this kernel family).
     let wfull: Vec<f64> = w.data.iter().map(|&v| v as f64).collect();
-    let dense_bytes_f64 = n * k * 8;
+    let dense_bytes_f64 = n * k * 8 + act_bytes_f64;
     let stats = timer::bench(warmup, iters, || {
         std::hint::black_box(kernel::matmul_nt(&x, &wfull, m, k, n));
     });
@@ -254,7 +348,7 @@ fn main() -> anyhow::Result<()> {
     // through the SIMD f32 dense kernel. At compute-bound shapes the
     // packed path ties this; the packed win over it shows at decode
     // shapes (below), where bytes dominate.
-    let dense_bytes_f32 = n * k * 4;
+    let dense_bytes_f32 = n * k * 4 + act_bytes_f32;
     let stats = timer::bench(warmup, iters, || {
         std::hint::black_box(kernel::matmul_nt_f32(&x32, &w.data, m, k, n));
     });
@@ -277,7 +371,7 @@ fn main() -> anyhow::Result<()> {
         idx.push((rng.below(n), rng.below(k)));
         vals.push(rng.normal() as f32);
     }
-    let scatter_bytes = pm4.stream_bytes() + n_out * (8 + 4);
+    let scatter_bytes = pm4.stream_bytes() + n_out * (8 + 4) + act_bytes_f32;
     let stats = timer::bench(warmup, iters, || {
         let mut y = kernel::matmul_nt_packed_f32(&x32, &pm4, m);
         for (t, &(r, c)) in idx.iter().enumerate() {
@@ -301,9 +395,14 @@ fn main() -> anyhow::Result<()> {
     for &dm in decode_ms {
         let xd32 = &x32[..dm * k];
         let xd64 = &x[..dm * k];
-        let bytes_p = pm_mixed.stream_bytes();
+        let bytes_p = pm_mixed.stream_bytes() + dm * k * 4;
+        let bytes_d32 = n * k * 4 + dm * k * 4;
+        let bytes_d64 = n * k * 8 + dm * k * 8;
         let stats_p = timer::bench(warmup, iters, || {
             std::hint::black_box(kernel::matmul_nt_packed_f32(xd32, &pm_mixed, dm));
+        });
+        let stats_i8 = timer::bench(warmup, iters, || {
+            std::hint::black_box(kernel::matmul_nt_packed_i8(xd32, &pm_mixed, dm));
         });
         let stats_d = timer::bench(warmup, iters, || {
             std::hint::black_box(kernel::matmul_nt_f32(xd32, &w.data, dm, k, n));
@@ -312,25 +411,31 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(kernel::matmul_nt(xd64, &wfull, dm, k, n));
         });
         println!(
-            "decode m={dm}: mixed 40/40/20 {:7.1}us ({:5.1} GB/s) | dense f32 SIMD \
-             {:7.1}us ({:5.1} GB/s) | dense f64 {:7.1}us | packed vs dense f32: {:.2}x",
+            "decode m={dm}: mixed 40/40/20 {:7.1}us ({:5.1} GB/s) | int8 {:7.1}us \
+             ({:5.1} GB/s) | dense f32 SIMD {:7.1}us ({:5.1} GB/s) | dense f64 \
+             {:7.1}us | packed vs dense f32: {:.2}x | int8 vs f32 packed: {:.2}x",
             stats_p.mean_us,
             gbps(bytes_p, stats_p.mean_us),
+            stats_i8.mean_us,
+            gbps(bytes_p, stats_i8.mean_us),
             stats_d.mean_us,
-            gbps(dense_bytes_f32, stats_d.mean_us),
+            gbps(bytes_d32, stats_d.mean_us),
             stats_d64.mean_us,
-            stats_d.mean_us / stats_p.mean_us
+            stats_d.mean_us / stats_p.mean_us,
+            stats_p.mean_us / stats_i8.mean_us
         );
         decode.set(
             &format!("m{dm}"),
             Json::from_pairs(vec![
                 ("mixed_40_40_20", row_json(&stats_p, bytes_p)),
-                ("dense_f32_simd", row_json(&stats_d, dense_bytes_f32)),
-                ("dense_f64", row_json(&stats_d64, dense_bytes_f64)),
+                ("mixed_40_40_20_i8", row_json(&stats_i8, bytes_p)),
+                ("dense_f32_simd", row_json(&stats_d, bytes_d32)),
+                ("dense_f64", row_json(&stats_d64, bytes_d64)),
                 (
                     "speedup_mixed_vs_dense_f32_simd",
                     Json::Num(stats_d.mean_us / stats_p.mean_us),
                 ),
+                ("speedup_i8_vs_f32", Json::Num(stats_p.mean_us / stats_i8.mean_us)),
             ]),
         );
     }
@@ -386,14 +491,20 @@ fn main() -> anyhow::Result<()> {
              iters, then mean/p50 over {iters} iters, every row); packed/dense rows are the \
              f32 SIMD serving kernels unless keyed _f64; dense_f32 keeps its historical \
              meaning (f32 weights, f64 arithmetic — the pre-SIMD serving baseline); \
-             bytes_streamed = packed words + scales (or the dense weight matrix), gbps = \
-             bytes_streamed / mean wall time; gates: fused f64 verified against \
-             dequantize+reference AND SIMD f32 verified bitwise against forced scalar, \
-             before timing"
+             bytes_streamed = packed words + scales (or the dense weight matrix) PLUS the \
+             streamed activation input at its storage width (m*k*4 for f32 rows, m*k*8 \
+             for f64 rows — NEW in this revision; earlier snapshots counted weight \
+             traffic only), gbps = bytes_streamed / mean wall time; gates: fused f64 \
+             verified against dequantize+reference, SIMD f32 verified bitwise against \
+             forced scalar, AND int8 GEMM verified bitwise against scalar plus the \
+             margin-aware token-ID parity proxy vs the f32 path, all before timing"
         )),
     );
     if smoke {
-        println!("--smoke: correctness + SIMD/scalar gates passed; not overwriting BENCH_kernel.json");
+        println!(
+            "--smoke: correctness + SIMD/scalar + int8 gates passed; not overwriting \
+             BENCH_kernel.json"
+        );
     } else {
         let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
         let path = root.parent().unwrap_or(&root).join("BENCH_kernel.json");

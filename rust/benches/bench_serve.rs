@@ -31,7 +31,11 @@
 //!      (`--spec-k`/`--spec-bits`) — decode tok/s, draft accept-rate
 //!      and the spec-over-plain uplift (a verify round emits
 //!      accepted+1 tokens for one target step plus k cheap 2-bit
-//!      draft steps; bitwise-identical output by construction).
+//!      draft steps; bitwise-identical output by construction),
+//!   8. int8 serving activations: the same decode load served with
+//!      `--activations f32` vs `--activations int8` — decode tok/s
+//!      and the int8-over-f32 uplift (integer-domain GEMM under the
+//!      documented tolerance gate).
 //!
 //! Backend: auto-detected. With `rust/artifacts/` present the sweep
 //! runs on PJRT; without artifacts it generates a deterministic
@@ -50,7 +54,7 @@ use std::time::Duration;
 use scalebits::calib::TokenStream;
 use scalebits::model::Manifest;
 use scalebits::quant::{BitAlloc, BlockIndex};
-use scalebits::runtime::{BackendKind, Session};
+use scalebits::runtime::{ActPrecision, BackendKind, Session};
 use scalebits::serve::{
     percentile, run_workload, shared_template_trace, Router, ServeConfig, WorkloadSpec,
 };
@@ -458,6 +462,42 @@ fn main() -> anyhow::Result<()> {
         out.set("spec_decode", section);
     }
 
+    // 8. int8 serving activations: the identical decode load served
+    // off the f32 path and the integer-domain path. Per-row activation
+    // quantization keeps every row's result independent of the batch
+    // it rides in, so the uplift below is pure kernel speed — not a
+    // scheduling artifact.
+    if !smoke {
+        let (n8, rate8) = if interp { (24usize, 400.0) } else { (12, 50.0) };
+        let mut tps = [f64::NAN; 2];
+        for (slot, acts) in [(0usize, ActPrecision::F32), (1, ActPrecision::Int8)] {
+            let mut cfg = ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 4));
+            cfg.backend = kind;
+            cfg.activations = acts;
+            let mut server = Router::start(cfg)?;
+            let spec = WorkloadSpec::new(seq, n8, rate8, 19).max_new_tokens(max_new);
+            let wl = run_workload(&mut server, &stream, &spec)?;
+            let rep = server.shutdown()?;
+            tps[slot] = wl.decode_tps();
+            println!(
+                "activations {} | {:.1} decode tok/s, itl p50 {:.0}us",
+                acts.name(),
+                wl.decode_tps(),
+                rep.total.inter_token.p50_us(),
+            );
+        }
+        let ratio = tps[1] / tps[0].max(1e-9);
+        println!("  int8-activation decode speedup over f32: {ratio:.2}x");
+        out.set(
+            "int8_decode",
+            Json::from_pairs(vec![
+                ("decode_tps_f32", Json::Num(tps[0])),
+                ("decode_tps_int8", Json::Num(tps[1])),
+                ("int8_over_f32", Json::Num(ratio)),
+            ]),
+        );
+    }
+
     // Smoke-gated chunked-prefill lifecycle: a LONG prompt served with
     // a small chunk must not block short requests — they stream tokens
     // and complete while the long prompt is still prefilling (this is
@@ -613,6 +653,56 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Smoke-gated int8 round-trip: the same prompt served with f32 and
+    // int8 activations. Each precision must decode deterministically
+    // (two identical requests, bitwise-identical tokens — the int8
+    // path's batch-invariance claim through the real threaded stack),
+    // and under SCALEBITS_INT8=off the int8 config must demote to the
+    // f32 path bitwise. Cross-precision token parity is gated where
+    // logit margins are measurable: the margin-aware gates in
+    // bench_kernel (GEMM argmax) and the runtime/integration tests.
+    {
+        let int8_on = scalebits::util::env::int8_on();
+        let prompt = stream.tokens[4 * seq..4 * seq + seq / 2].to_vec();
+        let mut runs = Vec::new();
+        for acts in [ActPrecision::F32, ActPrecision::Int8] {
+            let mut cfg = ServeConfig::new(artifacts.clone(), BitAlloc::uniform(&index, 4));
+            cfg.backend = kind;
+            cfg.activations = acts;
+            let mut server = Router::start(cfg)?;
+            let mut warm = server.submit_warmup(stream.tokens[..seq].to_vec())?;
+            warm.wait().expect("warmup");
+            let mut reps = Vec::new();
+            for _ in 0..2 {
+                let mut t = server.submit_request(
+                    scalebits::serve::GenRequest::new(prompt.clone()).max_new_tokens(4),
+                )?;
+                let o = t.wait().expect("int8 round-trip ticket");
+                assert_eq!(o.finish, scalebits::serve::Finish::Completed);
+                assert_eq!(o.tokens.len(), 4, "requested decode length");
+                reps.push(o.tokens.clone());
+            }
+            server.shutdown()?;
+            assert_eq!(
+                reps[0], reps[1],
+                "{} serving must decode deterministically",
+                acts.name()
+            );
+            runs.push(reps.remove(0));
+        }
+        if !int8_on {
+            assert_eq!(
+                runs[0], runs[1],
+                "SCALEBITS_INT8=off must demote int8 serving to the f32 path bitwise"
+            );
+        }
+        println!(
+            "int8 round-trip: deterministic on both paths; int8 {} f32 tokens (int8 {})",
+            if runs[0] == runs[1] { "==" } else { "!=" },
+            if int8_on { "on" } else { "off -> demoted" }
+        );
+    }
+
     out.set(
         "environment",
         Json::Str(format!(
@@ -634,7 +724,9 @@ fn main() -> anyhow::Result<()> {
              multi-turn trace with the radix prefix cache off vs on; \
              spec_decode sweeps the self-speculative draft depth (spec_bits=2 \
              uniform draft off the same weights; accept_rate = accepted/drafted; \
-             emitted tokens are bitwise-identical at every spec_k)"
+             emitted tokens are bitwise-identical at every spec_k); int8_decode \
+             serves the same decode load with f32 vs int8 activations \
+             (integer-domain GEMM under the documented tolerance gate)"
                 .to_string(),
         ),
     );

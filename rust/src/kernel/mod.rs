@@ -29,6 +29,18 @@
 //!   runtime-detected, `SCALEBITS_SIMD=off` to force scalar). All
 //!   three paths share one pinned lane algebra, so the f32 results are
 //!   bitwise identical across ISAs and across the env override.
+//! * **Fused integer-domain matmul, int8 activations**
+//!   ([`matmul_nt_packed_i8`]): the int8 serving path. Activation rows
+//!   are symmetrically quantized to i8 (per row, sharing
+//!   `quant::group_scale`), packed weight codes decode straight to i8 —
+//!   no sign-extend-to-float — and every (activation row × block
+//!   column) pair accumulates with a widening integer dot product
+//!   ([`simd::dot_i8_with`]). The combined `act_scale × weight_scale`
+//!   f32 rescale is applied once per block column, summed in ascending
+//!   block-column order. i32 accumulation is exact and associative, so
+//!   every ISA path is bitwise identical **by construction** (stronger
+//!   than the pinned-lane f32 contract); FP-sentinel blocks contribute
+//!   through one shared fixed-order scalar f32 loop.
 //! * **Dense f64 kernels** ([`matmul_nt`], [`matmul_nn_acc`],
 //!   [`accum_wgrad`], [`gram`]): the interpreter's forward/backward
 //!   primitives, re-implemented with tile-parallel scheduling over
@@ -393,6 +405,136 @@ pub fn matmul_nt_f32_with(
         for i in 0..m {
             y[i * dout + o0..i * dout + o0 + width]
                 .copy_from_slice(&tile[i * width..(i + 1) * width]);
+        }
+    }
+    y
+}
+
+// ---------------------------------------------------------------------
+// fused integer-domain matmul, int8 activations (the int8 serving path)
+
+/// `y[m, n] = x[m, k] @ dequantize(w)[n, k]^T`, computed in the INTEGER
+/// domain: activation rows are symmetrically quantized to i8
+/// ([`crate::quant::quant_act_i8`], per row, sharing
+/// `quant::group_scale` with the weight quantizer), packed weight codes
+/// decode straight to i8 ([`simd::decode_row_segment_i8`] — no
+/// sign-extend-to-float), and each (activation row × block column) pair
+/// accumulates with a widening integer dot product
+/// ([`simd::dot_i8_with`]). The combined `act_scale × weight_scale` f32
+/// rescale is applied ONCE per block column, and the per-block f32
+/// contributions are summed in ascending block-column order.
+///
+/// Determinism contract (stronger than the f32 path's pinned lanes,
+/// property-tested): the i32 block dots are exact, so they are bitwise
+/// identical on every ISA *by construction* — associativity makes lane
+/// order irrelevant — and the f32 rescale/sum has one fixed order.
+/// FP-sentinel blocks keep their raw-f32 weights and multiply the
+/// ORIGINAL f32 activations through one shared fixed-order scalar loop,
+/// so they too are identical on every path. Pruned blocks contribute
+/// exactly 0. Results are bitwise identical at every thread count and
+/// on every SIMD path.
+pub fn matmul_nt_packed_i8(x: &[f32], w: &PackedMat, m: usize) -> Vec<f32> {
+    matmul_nt_packed_i8_threads(x, w, m, packed_gemm_threads(m, w))
+}
+
+/// [`matmul_nt_packed_i8`] with an explicit thread count.
+pub fn matmul_nt_packed_i8_threads(x: &[f32], w: &PackedMat, m: usize, threads: usize) -> Vec<f32> {
+    matmul_nt_packed_i8_with(simd::active(), x, w, m, threads)
+}
+
+/// [`matmul_nt_packed_i8`] with an explicit SIMD path and thread count
+/// — the property tests and the bench's int8 bitwise gate drive both
+/// paths in one process through this.
+pub fn matmul_nt_packed_i8_with(
+    path: simd::SimdPath,
+    x: &[f32],
+    w: &PackedMat,
+    m: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let (n, k) = (w.rows, w.cols);
+    assert_eq!(x.len(), m * k, "x is [m={m}, k={k}]");
+    let nbr = w.n_block_rows();
+    let nbc = w.n_block_cols();
+    // Quantize every activation row once, up front. Row-local by
+    // construction, so each row's codes are independent of m — the
+    // batch-invariance the serving decode contracts rely on.
+    let mut xq = vec![0i8; m * k];
+    let mut xs = vec![0.0f32; m];
+    for i in 0..m {
+        xs[i] = crate::quant::quant_act_i8(&x[i * k..(i + 1) * k], &mut xq[i * k..(i + 1) * k]);
+    }
+    let mut y = vec![0.0f32; m * n];
+
+    // One task per weight row-block: decode each row segment to i8
+    // once, then run the widening integer dot against every activation
+    // row's code slice, rescaling per block column in ascending order.
+    let stripe = |bi: usize| -> Vec<f32> {
+        let r0 = bi * w.block_rows;
+        let bh = w.block_rows.min(n - r0);
+        let mut tile = vec![0.0f32; bh * m];
+        let mut codebuf = vec![0i8; w.block_cols];
+        let mut fpbuf = vec![0.0f32; w.block_cols];
+        for lr in 0..bh {
+            let row = r0 + lr;
+            for bj in 0..nbc {
+                let rs = w.row_segment(row, bj);
+                if rs.bits <= 0 {
+                    continue;
+                }
+                if rs.bits >= FP_SENTINEL_BITS {
+                    // Raw-f32 block: fixed-order scalar f32 against the
+                    // ORIGINAL activations — shared by every path.
+                    let fb = &mut fpbuf[..rs.width];
+                    simd::decode_fp_row_segment_f32(rs.seg, fb);
+                    for i in 0..m {
+                        let xr = &x[i * k + rs.c0..i * k + rs.c0 + rs.width];
+                        let mut acc = 0.0f32;
+                        for (xv, wv) in xr.iter().zip(fb.iter()) {
+                            acc += xv * wv;
+                        }
+                        tile[lr * m + i] += acc;
+                    }
+                } else {
+                    let cb = &mut codebuf[..rs.width];
+                    simd::decode_row_segment_i8(rs.seg, rs.bits, cb);
+                    for i in 0..m {
+                        let aq = &xq[i * k + rs.c0..i * k + rs.c0 + rs.width];
+                        let acc = simd::dot_i8_with(path, aq, cb);
+                        tile[lr * m + i] += acc as f32 * (xs[i] * rs.scale);
+                    }
+                }
+            }
+        }
+        tile
+    };
+    let scatter = |y: &mut [f32], bi: usize, tile: &[f32]| {
+        let r0 = bi * w.block_rows;
+        let bh = w.block_rows.min(n - r0);
+        for lr in 0..bh {
+            for i in 0..m {
+                y[i * n + r0 + lr] = tile[lr * m + i];
+            }
+        }
+    };
+
+    if threads <= 1 || nbr <= 1 {
+        for bi in 0..nbr {
+            let tile = stripe(bi);
+            scatter(&mut y, bi, &tile[..]);
+        }
+    } else {
+        let per_group = nbr.div_ceil(threads.min(nbr));
+        let groups: Vec<usize> = (0..nbr.div_ceil(per_group)).collect();
+        let group_tiles = threadpool::par_map(&groups, |_, &gr| {
+            let lo = gr * per_group;
+            let hi = (lo + per_group).min(nbr);
+            (lo..hi).map(&stripe).collect::<Vec<Vec<f32>>>()
+        });
+        for (&gr, tiles) in groups.iter().zip(group_tiles.iter()) {
+            for (off, tile) in tiles.iter().enumerate() {
+                scatter(&mut y, gr * per_group + off, &tile[..]);
+            }
         }
     }
     y
@@ -894,6 +1036,194 @@ mod tests {
         assert_eq!(serial, par4);
         assert_eq!(serial, auto);
         assert_eq!(serial, many);
+    }
+
+    // -----------------------------------------------------------------
+    // int8 serving kernels
+
+    /// f64 reference for the int8 GEMM: same quantization decisions
+    /// (per-row act codes via quant_act_i8, weight codes via the
+    /// bitwise-tested i8 decoder), but dots and rescales in f64 with a
+    /// naive loop — independent of the kernel's stripe/scatter and f32
+    /// ordering, so it catches scale-placement and indexing errors.
+    fn matmul_i8_ref(x: &[f32], pm: &PackedMat, m: usize) -> Vec<f64> {
+        let (n, k) = (pm.rows, pm.cols);
+        let mut xq = vec![0i8; m * k];
+        let mut xs = vec![0.0f32; m];
+        for i in 0..m {
+            xs[i] =
+                crate::quant::quant_act_i8(&x[i * k..(i + 1) * k], &mut xq[i * k..(i + 1) * k]);
+        }
+        let mut y = vec![0.0f64; m * n];
+        for row in 0..n {
+            for bj in 0..pm.n_block_cols() {
+                let rs = pm.row_segment(row, bj);
+                if rs.bits <= 0 {
+                    continue;
+                }
+                if rs.bits >= crate::quant::FP_SENTINEL_BITS {
+                    let mut fb = vec![0.0f32; rs.width];
+                    simd::decode_fp_row_segment_f32(rs.seg, &mut fb);
+                    for i in 0..m {
+                        for t in 0..rs.width {
+                            y[i * n + row] += x[i * k + rs.c0 + t] as f64 * fb[t] as f64;
+                        }
+                    }
+                } else {
+                    let mut cb = vec![0i8; rs.width];
+                    simd::decode_row_segment_i8(rs.seg, rs.bits, &mut cb);
+                    for i in 0..m {
+                        let mut acc = 0i64;
+                        for t in 0..rs.width {
+                            acc += xq[i * k + rs.c0 + t] as i64 * cb[t] as i64;
+                        }
+                        y[i * n + row] += acc as f64 * xs[i] as f64 * rs.scale as f64;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn packed_gemm_i8_simd_matches_scalar_bitwise() {
+        // The tentpole property, int8 edition: identical bits on every
+        // available SIMD path and thread count, for every bitwidth
+        // (pruned, 1..=8, FP sentinel) and ragged shape — exactness of
+        // the i32 block dots makes this hold by construction; this test
+        // is the executable proof.
+        forall("packed-gemm-i8-simd", Config { cases: 32, ..Config::default() }, |g| {
+            let br = *g.pick(&[4usize, 8, 16]);
+            let bc = *g.pick(&[4usize, 8, 16]);
+            let rows = g.usize_in(1, 33);
+            let cols = g.usize_in(1, 72);
+            let m = g.usize_in(1, 5);
+            let w = {
+                let mut rng = Rng::new(g.rng.next_u64());
+                Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal_f32()).collect())
+                    .unwrap()
+            };
+            let nblocks = rows.div_ceil(br) * cols.div_ceil(bc);
+            let bits: Vec<i32> =
+                (0..nblocks).map(|_| *g.pick(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9])).collect();
+            let pm = PackedMat::quantize(&w, &bits, br, bc);
+            let x = rand_xf(m, cols, g.rng.next_u64());
+            let want = matmul_nt_packed_i8_with(simd::SimdPath::Scalar, &x, &pm, m, 1);
+            for path in simd::available_paths() {
+                for threads in [1usize, 3] {
+                    let got = matmul_nt_packed_i8_with(path, &x, &pm, m, threads);
+                    for i in 0..want.len() {
+                        crate::prop_assert!(
+                            got[i].to_bits() == want[i].to_bits(),
+                            "path={} threads={threads} elem {i}: {} vs {}",
+                            path.name(),
+                            got[i],
+                            want[i]
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_gemm_i8_matches_f64_reference() {
+        // Scale placement + indexing: the kernel must track the naive
+        // f64 reference (same quantization decisions, f64 arithmetic)
+        // to f32 roundoff — NOT merely be self-consistent.
+        forall("packed-gemm-i8-ref", Config { cases: 24, ..Config::default() }, |g| {
+            let br = *g.pick(&[4usize, 8, 16]);
+            let bc = *g.pick(&[4usize, 8, 16]);
+            let rows = g.usize_in(1, 33);
+            let cols = g.usize_in(1, 48);
+            let m = g.usize_in(1, 4);
+            let w = {
+                let mut rng = Rng::new(g.rng.next_u64());
+                Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal_f32()).collect())
+                    .unwrap()
+            };
+            let nblocks = rows.div_ceil(br) * cols.div_ceil(bc);
+            let bits: Vec<i32> =
+                (0..nblocks).map(|_| *g.pick(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9])).collect();
+            let pm = PackedMat::quantize(&w, &bits, br, bc);
+            let x = rand_xf(m, cols, g.rng.next_u64());
+            let want = matmul_i8_ref(&x, &pm, m);
+            let got = matmul_nt_packed_i8_threads(&x, &pm, m, 1);
+            for i in 0..want.len() {
+                let tol = 1e-4 * want[i].abs().max(1.0);
+                crate::prop_assert!(
+                    (got[i] as f64 - want[i]).abs() <= tol,
+                    "elem {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_gemm_i8_saturation_edges_exact() {
+        // Drive both operands to the ±127 clamp edge: constant-|2.0|
+        // activations (scale 2/127, codes ±127) against constant-1.0
+        // 8-bit weights (scale 1/127, codes 127). The maddubs pair sums
+        // hit their extreme ±32258 and the i32 dot (k·127² = 1032256)
+        // is exact, so the output is the kernel's one f32 rescale of a
+        // hand-computable integer: compare against that exact
+        // expression bitwise. The alternating row cancels to integer 0,
+        // which rescales to exactly 0.0.
+        let k = 64usize;
+        let n = 16usize;
+        let w = Mat::from_vec(n, k, vec![1.0f32; n * k]).unwrap();
+        let pm = PackedMat::quantize(&w, &[8], n, k);
+        let mut x = vec![2.0f32; 2 * k];
+        for t in 0..k {
+            x[k + t] = if t % 2 == 0 { 2.0 } else { -2.0 };
+        }
+        let act_scale = 2.0f32 / 127.0;
+        let w_scale = 1.0f32 / 127.0;
+        let expected = (k as i32 * 127 * 127) as f32 * (act_scale * w_scale);
+        for path in simd::available_paths() {
+            let y = matmul_nt_packed_i8_with(path, &x, &pm, 2, 1);
+            for r in 0..n {
+                assert_eq!(y[r], expected, "path={} row {r}", path.name());
+                assert_eq!(y[n + r], 0.0, "path={} alt row {r}", path.name());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_i8_deterministic_across_worker_counts() {
+        let w = rand_mat(64, 64, 81);
+        let bits: Vec<i32> =
+            (0..(64 / 16) * (64 / 16)).map(|i| [1, 2, 3, 4, 8, 9][i % 6]).collect();
+        let pm = PackedMat::quantize(&w, &bits, 16, 16);
+        let x = rand_xf(8, 64, 82);
+        let serial = matmul_nt_packed_i8_threads(&x, &pm, 8, 1);
+        let par4 = matmul_nt_packed_i8_threads(&x, &pm, 8, 4);
+        let auto = matmul_nt_packed_i8(&x, &pm, 8);
+        let many = matmul_nt_packed_i8_threads(&x, &pm, 8, threadpool::n_workers().max(2));
+        assert_eq!(serial, par4);
+        assert_eq!(serial, auto);
+        assert_eq!(serial, many);
+    }
+
+    #[test]
+    fn packed_gemm_i8_rows_are_batch_invariant() {
+        // Per-row activation quantization is row-local, so row i's
+        // outputs must be bitwise identical whether computed alone
+        // (m=1) or inside a batch — the invariance the serving decode
+        // contracts (KV reuse, verify-row expansion) rely on.
+        let w = rand_mat(32, 48, 91);
+        let bits: Vec<i32> = (0..(32 / 8) * (48 / 16)).map(|i| [2, 3, 8, 9, 0, 5][i % 6]).collect();
+        let pm = PackedMat::quantize(&w, &bits, 8, 16);
+        let x = rand_xf(4, 48, 92);
+        let batch = matmul_nt_packed_i8_threads(&x, &pm, 4, 1);
+        for i in 0..4 {
+            let solo = matmul_nt_packed_i8_threads(&x[i * 48..(i + 1) * 48], &pm, 1, 1);
+            assert_eq!(&batch[i * 32..(i + 1) * 32], &solo[..], "row {i}");
+        }
     }
 
     #[test]

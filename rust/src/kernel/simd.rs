@@ -31,14 +31,26 @@
 //!
 //! Per-bitwidth vectorization (see the README dispatch table):
 //! 1/2/4/8-bit planes decode whole `u64` words with shift-and-mask +
-//! nibble-LUT lane tricks; 3-bit planes decode 64 codes per THREE-word
-//! (192-bit) group — the fields straddle `u64` boundaries, but 24 bits
-//! (8 codes) always start on a byte boundary, so each 8-code round
-//! broadcasts one scalar-extracted 24-bit window and applies per-lane
-//! variable shifts (`_mm256_srlv_epi32` / `vshlq_u32` with negative
-//! counts), mask, and `(v ^ 4) - 4` sign extension — elementwise-exact
-//! like every other decoder. 5/6/7-bit planes and FP-sentinel blocks
-//! share the scalar path on every ISA.
+//! nibble-LUT lane tricks; the straddling widths 3/5/6/7 decode in
+//! groups of `lcm(8·bits, 64)` bits (192/320/192/448) — the fields
+//! straddle `u64` boundaries, but 8 codes (`8·bits` bits: 24/40/48/56)
+//! always start on a byte boundary, so each 8-code round extracts one
+//! byte-aligned scalar window and applies per-lane variable shifts
+//! (`_mm256_srlv_epi32` / `vshlq_u32` with negative counts), mask, and
+//! `(v ^ s) - s` sign extension with `s = 1 << (bits-1)` —
+//! elementwise-exact like every other decoder. Only FP-sentinel blocks
+//! share the scalar path on every ISA (they are a bit reinterpretation
+//! with nothing to vectorize).
+//!
+//! **Int8 serving primitives** (the integer-domain GEMM,
+//! [`super::matmul_nt_packed_i8`]): [`decode_row_segment_i8`] extracts
+//! packed weight codes straight into i8 — integer extraction is exact,
+//! so one shared routine serves every ISA — and [`dot_i8_with`] runs
+//! the widening integer dot product (AVX2 `maddubs`/`madd`, NEON
+//! `vmull_s8`/`vpadalq_s16`, scalar i32 mirror). Because i32
+//! accumulation is exact and associative, the int8 paths are bitwise
+//! identical **by construction**, a strictly stronger contract than the
+//! pinned-lane f32 algebra below.
 
 use std::sync::OnceLock;
 
@@ -240,10 +252,11 @@ pub fn decode_row_segment_f32_scalar(seg: &[u64], bits: i32, scale: f32, out: &m
     decode_scalar_range(seg, bits, scale, out, 0);
 }
 
-/// Decode one packed row segment via an explicit path. Bitwidths with
-/// a vector decoder (1/2/4/8 — whole-word lane tricks — and 3, via
-/// 192-bit groups) dispatch to it; the remaining word-straddling
-/// widths (5/6/7) use the scalar loop on every ISA.
+/// Decode one packed row segment via an explicit path. Every quantized
+/// bitwidth (1..=8) has a vector decoder: whole-word lane tricks for
+/// 1/2/4/8, byte-aligned straddle windows for 3/5/6/7. The scalar loop
+/// remains as the `SimdPath::Scalar` mirror and the ragged-tail
+/// epilogue of the group-granular vector decoders.
 #[inline]
 pub fn decode_row_segment_f32_with(
     path: SimdPath,
@@ -253,14 +266,14 @@ pub fn decode_row_segment_f32_with(
     out: &mut [f32],
 ) {
     #[cfg(target_arch = "x86_64")]
-    if path == SimdPath::Avx2 && matches!(bits, 1 | 2 | 3 | 4 | 8) {
+    if path == SimdPath::Avx2 && (1..=8).contains(&bits) {
         // SAFETY: `SimdPath::Avx2` is only produced by `detected()` after
         // runtime AVX2+FMA detection succeeded on this machine.
         unsafe { x86::decode_row_segment(seg, bits, scale, out) };
         return;
     }
     #[cfg(target_arch = "aarch64")]
-    if path == SimdPath::Neon && matches!(bits, 1 | 2 | 3 | 4 | 8) {
+    if path == SimdPath::Neon && (1..=8).contains(&bits) {
         // SAFETY: `SimdPath::Neon` is only produced by `detected()` after
         // runtime NEON detection succeeded on this machine.
         unsafe { neon::decode_row_segment(seg, bits, scale, out) };
@@ -308,6 +321,130 @@ fn win24_3bit(w: &[u64; 3], r: usize) -> u32 {
     v as u32
 }
 
+/// Straddle-group geometry for bitwidth `b` in {5, 6, 7}: the group is
+/// `lcm(8·b, 64)` bits — (words per group, 8-code rounds per group).
+/// 5-bit: 5 words / 8 rounds (64 codes); 6-bit: 3 words / 4 rounds
+/// (32 codes); 7-bit: 7 words / 8 rounds (64 codes).
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline]
+fn straddle_group(b: usize) -> (usize, usize) {
+    match b {
+        5 => (5, 8),
+        6 => (3, 4),
+        7 => (7, 8),
+        _ => unreachable!("straddle groups are defined for 5/6/7-bit planes"),
+    }
+}
+
+/// The 8-code (`8·b`-bit, 40/48/56-bit) window starting at byte `b*r`
+/// of one straddle group — the wider sibling of [`win24_3bit`]. The
+/// window is byte-aligned by construction, spans at most two of the
+/// group's words (`off + 8·b ≤ 128`), and a straddle (`off + 8·b > 64`)
+/// implies `off > 0` (since `8·b < 64`) and `wi + 1` in-bounds (the
+/// group's last round ends exactly on the group boundary). Bits above
+/// `8·b` may carry garbage; the per-lane masks remove them.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline]
+fn win8(w: &[u64], r: usize, b: usize) -> u64 {
+    let p = 8 * b * r;
+    let wi = p >> 6;
+    let off = p & 63;
+    let mut v = w[wi] >> off;
+    if off + 8 * b > 64 {
+        v |= w[wi + 1] << (64 - off);
+    }
+    v
+}
+
+// ---------------------------------------------------------------------
+// integer-domain (int8) primitives for the int8-activation GEMM
+
+/// Decode one packed row segment straight into i8 codes — the integer
+/// domain, no sign-extend-to-float. Integer extraction is exact, so one
+/// shared routine serves every ISA bit-for-bit; the SIMD/scalar split
+/// of the int8 GEMM lives in the widening dot product ([`dot_i8_with`]).
+/// 1-bit planes decode to ±1 (their mean-abs scale carries the
+/// magnitude). All codes lie in [-127, 127]: the quantizer clamps to
+/// ±(2^(bits-1) - 1), so −128 never occurs — the no-saturation
+/// precondition of the AVX2 `maddubs` dot.
+pub fn decode_row_segment_i8(seg: &[u64], bits: i32, out: &mut [i8]) {
+    let b = bits as usize;
+    match bits {
+        1 => {
+            // 1-bit codes are sign bits: 1 -> +1, 0 -> -1.
+            for (t, d) in out.iter_mut().enumerate() {
+                *d = if (seg[t >> 6] >> (t & 63)) & 1 == 1 { 1 } else { -1 };
+            }
+        }
+        2 | 4 | 8 => {
+            // Power-of-two widths never straddle a word: shift the
+            // field to the top, sign-extend with one arithmetic shift.
+            let cpw = 64 / b;
+            for (t, d) in out.iter_mut().enumerate() {
+                let word = seg[t / cpw];
+                let off = (t % cpw) * b;
+                *d = (((word << (64 - off - b)) as i64) >> (64 - b)) as i8;
+            }
+        }
+        _ => {
+            // Straddling widths (3/5/6/7): fields may span two words.
+            let mask = (1u64 << b) - 1;
+            let sign = 1u64 << (b - 1);
+            for (t, d) in out.iter_mut().enumerate() {
+                let bitpos = t * b;
+                let wi = bitpos >> 6;
+                let off = bitpos & 63;
+                let mut v = seg[wi] >> off;
+                if off + b > 64 {
+                    v |= seg[wi + 1] << (64 - off);
+                }
+                v &= mask;
+                *d = if v & sign != 0 { (v | !mask) as i64 as i8 } else { v as i8 };
+            }
+        }
+    }
+}
+
+/// Widening integer dot product, scalar mirror: i8×i8 products summed
+/// in i32. Every product is exact (|a·b| ≤ 127² = 16129) and i32
+/// addition is associative, so any evaluation order — including the
+/// SIMD lane orders — produces the same i32. Callers keep segment
+/// lengths below 2^17 elements so the sum cannot overflow
+/// (127²·2^17 < 2^31); block columns are far smaller in practice.
+pub fn dot_i8_scalar(a: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), w.len());
+    let mut acc = 0i32;
+    for j in 0..a.len() {
+        acc += a[j] as i32 * w[j] as i32;
+    }
+    acc
+}
+
+/// Widening integer dot product via an explicit path. AVX2 pairs
+/// `_mm256_maddubs_epi16` (unsigned×signed i8→i16) with
+/// `_mm256_madd_epi16` (i16 pairs→i32); NEON uses `vmull_s8` +
+/// `vpadalq_s16` widening accumulates. Both operands must lie in
+/// [-127, 127] (the quantizer's clamp guarantees it): |a| ≤ 127 bounds
+/// the `maddubs` pair sums by 2·127² = 32258 < i16::MAX, so nothing
+/// saturates and every path is bitwise identical to the scalar mirror
+/// by construction.
+#[inline]
+pub fn dot_i8_with(path: SimdPath, a: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), w.len());
+    debug_assert!(a.iter().all(|&v| v != i8::MIN) && w.iter().all(|&v| v != i8::MIN));
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `SimdPath::Avx2` is only ever produced by `detected()`
+        // after runtime AVX2+FMA detection succeeded on this machine.
+        SimdPath::Avx2 => unsafe { x86::dot_i8(a, w) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `SimdPath::Neon` is only produced by `detected()` after
+        // runtime NEON detection succeeded on this machine.
+        SimdPath::Neon => unsafe { neon::dot_i8(a, w) },
+        _ => dot_i8_scalar(a, w),
+    }
+}
+
 // ---------------------------------------------------------------------
 // AVX2 (+FMA) implementations
 //
@@ -318,7 +455,7 @@ fn win24_3bit(w: &[u64; 3], r: usize) -> u32 {
 
 #[cfg(target_arch = "x86_64")]
 mod x86 {
-    use super::{decode_scalar_range, finish_dot, win24_3bit, LANES};
+    use super::{decode_scalar_range, finish_dot, straddle_group, win24_3bit, win8, LANES};
     use std::arch::x86_64::*;
 
     /// Pinned-lane dot: 4 ymm accumulators = lanes 0..8, 8..16, 16..24,
@@ -358,7 +495,7 @@ mod x86 {
         finish_dot(&mut lanes, a, b, nb * LANES)
     }
 
-    /// Per-bitwidth word-level decode; `bits` must be in {1,2,3,4,8}.
+    /// Per-bitwidth word-level decode; `bits` must be in 1..=8.
     #[target_feature(enable = "avx2")]
     pub unsafe fn decode_row_segment(seg: &[u64], bits: i32, scale: f32, out: &mut [f32]) {
         match bits {
@@ -366,9 +503,82 @@ mod x86 {
             2 => decode2(seg, scale, out),
             3 => decode3(seg, scale, out),
             4 => decode4(seg, scale, out),
+            5 | 6 | 7 => decode_straddle(seg, bits, scale, out),
             8 => decode8(seg, scale, out),
-            _ => unreachable!("vector decode only handles 1/2/3/4/8-bit planes"),
+            _ => unreachable!("vector decode only handles quantized (1..=8-bit) planes"),
         }
+    }
+
+    /// 5/6/7-bit: the 3-bit scheme widened to 40/48/56-bit windows.
+    /// Each 8-code round extracts one byte-aligned window (`win8`),
+    /// splits it into two u32 halves at `4·bits` (codes 0..3 and 4..7 —
+    /// the split keeps every per-lane shift ≤ 3·bits ≤ 21, within the
+    /// 32-bit lanes), right-shifts by {0, b, 2b, 3b} per lane (`srlv`),
+    /// masks to `bits`, and sign-extends with `(v ^ s) - s`,
+    /// `s = 1 << (bits-1)` — integer ops plus one exact i32→f32 convert
+    /// and one multiply, bitwise identical to the scalar straddle loop.
+    #[target_feature(enable = "avx2")]
+    unsafe fn decode_straddle(seg: &[u64], bits: i32, scale: f32, out: &mut [f32]) {
+        let b = bits as usize;
+        let (nw, rounds) = straddle_group(b);
+        let cpg = rounds * 8;
+        let full = out.len() / cpg;
+        let vscale = _mm256_set1_ps(scale);
+        let bi = bits;
+        let shifts = _mm256_setr_epi32(0, bi, 2 * bi, 3 * bi, 0, bi, 2 * bi, 3 * bi);
+        let mask = _mm256_set1_epi32((1i32 << b) - 1);
+        let sign = _mm256_set1_epi32(1 << (b - 1));
+        let dst = out.as_mut_ptr();
+        for g in 0..full {
+            let w = &seg[g * nw..(g + 1) * nw];
+            for r in 0..rounds {
+                let win = win8(w, r, b);
+                let lo = _mm_set1_epi32(win as u32 as i32);
+                let hi = _mm_set1_epi32((win >> (4 * b)) as u32 as i32);
+                let field = _mm256_and_si256(
+                    _mm256_srlv_epi32(_mm256_set_m128i(hi, lo), shifts),
+                    mask,
+                );
+                let codes = _mm256_sub_epi32(_mm256_xor_si256(field, sign), sign);
+                let v = _mm256_mul_ps(_mm256_cvtepi32_ps(codes), vscale);
+                _mm256_storeu_ps(dst.add(g * cpg + r * 8), v);
+            }
+        }
+        decode_scalar_range(seg, bits, scale, out, full * cpg);
+    }
+
+    /// Widening integer dot: 32 i8 pairs per iteration. `maddubs` wants
+    /// an unsigned left operand, so feed `|a|` and transfer the
+    /// activation sign onto the weight byte (`sign_epi8`):
+    /// |a|·sgn(a)·w == a·w. With both operands in [-127, 127] the i16
+    /// pair sums are bounded by 2·127² = 32258 — no saturation — and
+    /// the i32 accumulation is exact, so the result equals the scalar
+    /// mirror bit-for-bit regardless of lane order.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8(a: &[i8], w: &[i8]) -> i32 {
+        let n = a.len();
+        let nb = n / 32;
+        let pa = a.as_ptr();
+        let pw = w.as_ptr();
+        let ones = _mm256_set1_epi16(1);
+        let mut acc = _mm256_setzero_si256();
+        for t in 0..nb {
+            // Unaligned loads of 32 consecutive i8; t*32 + 32 <= n by
+            // construction of nb.
+            let va = _mm256_loadu_si256(pa.add(t * 32) as *const __m256i);
+            let vw = _mm256_loadu_si256(pw.add(t * 32) as *const __m256i);
+            let ua = _mm256_abs_epi8(va);
+            let sw = _mm256_sign_epi8(vw, va);
+            let p16 = _mm256_maddubs_epi16(ua, sw);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(p16, ones));
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut sum: i32 = lanes.iter().sum();
+        for j in nb * 32..n {
+            sum += a[j] as i32 * w[j] as i32;
+        }
+        sum
     }
 
     /// 3-bit: 64 codes per 192-bit (three-word) group, 8 codes per
@@ -504,7 +714,7 @@ mod x86 {
 
 #[cfg(target_arch = "aarch64")]
 mod neon {
-    use super::{decode_scalar_range, finish_dot, win24_3bit, LANES};
+    use super::{decode_scalar_range, finish_dot, straddle_group, win24_3bit, win8, LANES};
     use std::arch::aarch64::*;
 
     /// Pinned-lane dot: 8 q accumulators = lanes 0..4, 4..8, ..., 28..32;
@@ -530,16 +740,76 @@ mod neon {
         finish_dot(&mut lanes, a, b, nb * LANES)
     }
 
-    /// Per-bitwidth word-level decode; `bits` must be in {1,2,3,4,8}.
+    /// Per-bitwidth word-level decode; `bits` must be in 1..=8.
     pub unsafe fn decode_row_segment(seg: &[u64], bits: i32, scale: f32, out: &mut [f32]) {
         match bits {
             1 => decode1(seg, scale, out),
             2 => decode2(seg, scale, out),
             3 => decode3(seg, scale, out),
             4 => decode4(seg, scale, out),
+            5 | 6 | 7 => decode_straddle(seg, bits, scale, out),
             8 => decode8(seg, scale, out),
-            _ => unreachable!("vector decode only handles 1/2/3/4/8-bit planes"),
+            _ => unreachable!("vector decode only handles quantized (1..=8-bit) planes"),
         }
+    }
+
+    /// 5/6/7-bit: the 3-bit scheme widened to 40/48/56-bit windows —
+    /// the NEON twin of the AVX2 `decode_straddle`. Each 8-code round
+    /// extracts one byte-aligned window (`win8`), splits it into two
+    /// u32 halves at `4·bits` (keeping every shift ≤ 3·bits ≤ 21),
+    /// applies `vshlq_u32` with NEGATIVE per-lane counts (the variable
+    /// right shift), masks, and sign-extends with `(v ^ s) - s` —
+    /// elementwise-exact, so bitwise identical to the scalar loop.
+    unsafe fn decode_straddle(seg: &[u64], bits: i32, scale: f32, out: &mut [f32]) {
+        let b = bits as usize;
+        let (nw, rounds) = straddle_group(b);
+        let cpg = rounds * 8;
+        let full = out.len() / cpg;
+        let shl: [i32; 4] = [0, -bits, -2 * bits, -3 * bits];
+        let s = vld1q_s32(shl.as_ptr());
+        let mask = vdupq_n_u32((1u32 << b) - 1);
+        let sign = vdupq_n_s32(1 << (b - 1));
+        let dst = out.as_mut_ptr();
+        for g in 0..full {
+            let w = &seg[g * nw..(g + 1) * nw];
+            for r in 0..rounds {
+                let win = win8(w, r, b);
+                let lo = vdupq_n_u32(win as u32);
+                let hi = vdupq_n_u32((win >> (4 * b)) as u32);
+                let f0 = vandq_u32(vshlq_u32(lo, s), mask);
+                let f1 = vandq_u32(vshlq_u32(hi, s), mask);
+                let c0 = vsubq_s32(veorq_s32(vreinterpretq_s32_u32(f0), sign), sign);
+                let c1 = vsubq_s32(veorq_s32(vreinterpretq_s32_u32(f1), sign), sign);
+                vst1q_f32(dst.add(g * cpg + r * 8), vmulq_n_f32(vcvtq_f32_s32(c0), scale));
+                vst1q_f32(dst.add(g * cpg + r * 8 + 4), vmulq_n_f32(vcvtq_f32_s32(c1), scale));
+            }
+        }
+        decode_scalar_range(seg, bits, scale, out, full * cpg);
+    }
+
+    /// Widening integer dot: 16 i8 pairs per iteration via `vmull_s8`
+    /// (i8×i8→i16, exact — products bounded by 127²) + `vpadalq_s16`
+    /// (pairwise widening accumulate into i32). Exact integer
+    /// arithmetic throughout — bitwise equal to the scalar mirror.
+    pub unsafe fn dot_i8(a: &[i8], w: &[i8]) -> i32 {
+        let n = a.len();
+        let nb = n / 16;
+        let pa = a.as_ptr();
+        let pw = w.as_ptr();
+        let mut acc = vdupq_n_s32(0);
+        for t in 0..nb {
+            let va = vld1q_s8(pa.add(t * 16));
+            let vw = vld1q_s8(pw.add(t * 16));
+            let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vw));
+            let hi = vmull_s8(vget_high_s8(va), vget_high_s8(vw));
+            acc = vpadalq_s16(acc, lo);
+            acc = vpadalq_s16(acc, hi);
+        }
+        let mut sum = vaddvq_s32(acc);
+        for j in nb * 16..n {
+            sum += a[j] as i32 * w[j] as i32;
+        }
+        sum
     }
 
     /// 3-bit: 64 codes per 192-bit (three-word) group, 8 codes per
@@ -754,6 +1024,58 @@ mod tests {
         decode_fp_row_segment_f32(&seg, &mut out);
         for (o, v) in out.iter().zip(&vals) {
             assert_eq!(o.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn int8_decode_agrees_with_f32_decode_at_unit_scale() {
+        // The i8 decoder must extract exactly the codes the f32 decoder
+        // scales: at scale = 1.0 the f32 output IS the code value (all
+        // codes fit exactly in f32), so the two decoders cross-check.
+        let mut rng = Rng::new(0x18_DE);
+        for &bits in &[1i32, 2, 3, 4, 5, 6, 7, 8] {
+            for &len in &[1usize, 7, 16, 33, 64, 65, 127, 200] {
+                let words = (len * bits as usize).div_ceil(64);
+                let seg = rand_words(words, rng.next_u64());
+                let mut f = vec![0.0f32; len];
+                decode_row_segment_f32_scalar(&seg, bits, 1.0, &mut f);
+                let mut c = vec![0i8; len];
+                decode_row_segment_i8(&seg, bits, &mut c);
+                for t in 0..len {
+                    assert_eq!(c[t] as f32, f[t], "bits={bits} len={len} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_dot_matches_scalar_bitwise_all_paths() {
+        // i32 accumulation is exact, so every path must return the
+        // identical i32 on every length — including the saturation
+        // edges: all-(±127) operands drive the AVX2 maddubs pair sums
+        // to their extreme ±32258, just inside the i16 range.
+        let mut rng = Rng::new(0x1D_07);
+        for &len in &[0usize, 1, 5, 15, 16, 17, 31, 32, 33, 63, 64, 100, 257] {
+            let mut cases: Vec<(Vec<i8>, Vec<i8>)> = Vec::new();
+            let a: Vec<i8> = (0..len).map(|_| (rng.next_u64() % 255) as i8).collect();
+            let w: Vec<i8> = (0..len).map(|_| (rng.next_u64() % 255) as i8).collect();
+            // next_u64()%255 yields 0..=254 -> as i8 covers [-128, 126];
+            // bump the one forbidden value to the clamp edge.
+            let fix = |v: Vec<i8>| v.into_iter().map(|x| if x == i8::MIN { -127 } else { x }).collect::<Vec<i8>>();
+            cases.push((fix(a), fix(w)));
+            cases.push((vec![127i8; len], vec![127i8; len]));
+            cases.push((vec![127i8; len], vec![-127i8; len]));
+            cases.push((
+                (0..len).map(|j| if j % 2 == 0 { 127 } else { -127 }).collect(),
+                vec![127i8; len],
+            ));
+            for (a, w) in cases {
+                let want = dot_i8_scalar(&a, &w);
+                for path in available_paths() {
+                    let got = dot_i8_with(path, &a, &w);
+                    assert_eq!(got, want, "path={} len={len}", path.name());
+                }
+            }
         }
     }
 

@@ -83,6 +83,27 @@ pub fn quant_group_codes(w: &[f32], bits: i32) -> (Vec<i8>, f32) {
     (codes, scale)
 }
 
+/// Symmetric per-row int8 quantization of a serving ACTIVATION row —
+/// the activation half of the integer-domain GEMM
+/// ([`crate::kernel::matmul_nt_packed_i8`]). Shares [`group_scale`]
+/// (bits = 8: amax/127) with the weight quantizer, so the two sides of
+/// the int8 dot product can never drift to different scale semantics;
+/// the element math is exactly [`quant_group_codes`] at 8 bits, writing
+/// into a caller-owned buffer so the GEMM can quantize row-by-row
+/// without per-row allocation. Codes land in [-127, 127] (never −128 —
+/// the `maddubs` no-saturation precondition). An all-zero row yields
+/// scale 0 and all-zero codes; the kernel's `act_scale × weight_scale`
+/// rescale then contributes an exact 0.
+pub fn quant_act_i8(x: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(x.len(), out.len());
+    let scale = group_scale(x, 8);
+    let safe = if scale > 0.0 { scale } else { 1.0 };
+    for (d, v) in out.iter_mut().zip(x) {
+        *d = (*v / safe).round_ties_even().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
 /// Fake-quantize a whole matrix under a per-block bit grid.
 pub fn fakequant_mat(w: &Mat, bits: &[i32], block_rows: usize, block_cols: usize) -> Mat {
     let (nbr, nbc) = (w.rows / block_rows, w.cols / block_cols);
@@ -608,6 +629,26 @@ mod tests {
                 fq.data[i]
             );
         }
+    }
+
+    #[test]
+    fn act_quant_matches_weight_quant_at_8_bits() {
+        // quant_act_i8 must be quant_group_codes(_, 8) elementwise —
+        // same shared group_scale, same round/clamp — plus the zero-row
+        // edge case.
+        forall("act-quant-shared", Config::default(), |g| {
+            let n = g.usize_in(1, 64);
+            let x = g.vec_f32(n);
+            let (codes, scale) = quant_group_codes(&x, 8);
+            let mut got = vec![0i8; n];
+            let s2 = quant_act_i8(&x, &mut got);
+            crate::prop_assert!(s2 == scale && got == codes, "n={n}");
+            crate::prop_assert!(got.iter().all(|&c| c != i8::MIN), "code -128 produced");
+            Ok(())
+        });
+        let mut z = vec![1i8; 4];
+        assert_eq!(quant_act_i8(&[0.0; 4], &mut z), 0.0);
+        assert_eq!(z, vec![0i8; 4]);
     }
 
     #[test]

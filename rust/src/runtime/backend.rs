@@ -160,12 +160,24 @@ impl BackendKind {
 ///// tolerance gate: f32 serving must produce *identical token IDs* on
 /// the decode acceptance sweeps and bounded logit divergence vs f64
 /// (see the README kernel section and `tests/integration.rs`).
+///
+/// `Int8` tightens the ladder one more rung: linear-layer activations
+/// are symmetrically quantized to int8 per row and the packed-weight
+/// GEMMs accumulate in the integer domain
+/// ([`crate::kernel::matmul_nt_packed_i8`]); norms, softmax, RoPE and
+/// the FP-sentinel planes stay f32. Its gate mirrors the f32 one but is
+/// anchored to f32: identical token IDs on the decode sweeps, bounded
+/// logit divergence vs the f32 path. `SCALEBITS_INT8=off` forces the
+/// interpreter back to f32 serving regardless of this setting.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ActPrecision {
     /// f64 activations — bitwise-parity serving (the pre-SIMD path).
     F64,
     /// f32 activations on the SIMD kernels — the serving default.
     F32,
+    /// int8 activations × integer dot products for the linear layers
+    /// (everything else stays f32) — the fastest decode path.
+    Int8,
 }
 
 impl ActPrecision {
@@ -174,7 +186,8 @@ impl ActPrecision {
         match s {
             "f64" => Ok(ActPrecision::F64),
             "f32" => Ok(ActPrecision::F32),
-            other => bail!("unknown activation precision {other:?}; expected f32|f64"),
+            "int8" | "i8" => Ok(ActPrecision::Int8),
+            other => bail!("unknown activation precision {other:?}; expected f32|f64|int8"),
         }
     }
 
@@ -182,6 +195,7 @@ impl ActPrecision {
         match self {
             ActPrecision::F64 => "f64",
             ActPrecision::F32 => "f32",
+            ActPrecision::Int8 => "int8",
         }
     }
 }
@@ -304,6 +318,19 @@ impl ExecOut {
     pub fn to_mat(&self, rows: usize, cols: usize) -> Result<Mat> {
         Mat::from_vec(rows, cols, self.to_vec_f32()?)
     }
+}
+
+/// One row of a batched speculative-draft step (see
+/// [`ExecBackend::spec_draft_rows`]).
+pub struct SpecRow<'a> {
+    /// Target sequence whose K/V state (if any) the draft forks a
+    /// scratch copy of; `None` drafts from a fresh scratch state. The
+    /// target state is never mutated.
+    pub seq: Option<u64>,
+    /// The UNSLID window to continue (absolute positions `0..len`).
+    pub window: &'a [i32],
+    /// Maximum tokens to draft for this row.
+    pub k: usize,
 }
 
 /// One row of a KV-backed step (see [`ExecBackend::kv_step`]).
@@ -509,6 +536,27 @@ pub trait ExecBackend {
         Ok(Vec::new())
     }
 
+    /// Draft for MANY rows in one call. Backends that can batch
+    /// amortize the per-iteration weight decode across rows (the
+    /// interpreter runs all rows' draft forwards in lockstep —
+    /// iteration j computes draft token j of every still-drafting row
+    /// in ONE multi-row step); this default loops [`Self::spec_draft`]
+    /// per row. Either way the tokens are bitwise identical to the
+    /// sequential path — the forward's row results are independent of
+    /// how rows are batched.
+    fn spec_draft_rows(
+        &self,
+        name: &str,
+        rows: &[SpecRow<'_>],
+        bits: i32,
+        grids: &DeviceGrids,
+        weights: &DeviceWeights,
+    ) -> Result<Vec<Vec<i32>>> {
+        rows.iter()
+            .map(|r| self.spec_draft(name, r.seq, r.window, bits, r.k, grids, weights))
+            .collect()
+    }
+
     /// Per-executable execution counters since the last reset.
     fn stats(&self) -> HashMap<String, ExecStats>;
 
@@ -554,9 +602,10 @@ mod tests {
 
     #[test]
     fn act_precision_parse_roundtrip() {
-        for a in [ActPrecision::F32, ActPrecision::F64] {
+        for a in [ActPrecision::F32, ActPrecision::F64, ActPrecision::Int8] {
             assert_eq!(ActPrecision::parse(a.name()).unwrap(), a);
         }
+        assert_eq!(ActPrecision::parse("i8").unwrap(), ActPrecision::Int8);
         assert!(ActPrecision::parse("f16").is_err());
     }
 

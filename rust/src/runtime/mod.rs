@@ -37,7 +37,7 @@ pub mod session;
 
 pub use backend::{
     open_backend, ActPrecision, BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut,
-    ExecStats, KvRow, TransferStats,
+    ExecStats, KvRow, SpecRow, TransferStats,
 };
 pub use interp::InterpBackend;
 pub use pjrt::{

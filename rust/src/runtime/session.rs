@@ -23,7 +23,7 @@ use anyhow::Result;
 
 use super::backend::{
     open_backend, ActPrecision, BackendKind, DeviceGrids, DeviceWeights, ExecBackend, ExecOut,
-    KvRow,
+    KvRow, SpecRow,
 };
 use super::pjrt::Engine;
 use crate::model::{Manifest, WeightStore};
@@ -89,8 +89,10 @@ impl Session {
     /// Select the activation precision for the serving graphs (see
     /// [`ExecBackend::set_activations`]): f32 runs the SIMD forward
     /// under the documented tolerance gate (identical token IDs,
-    /// bounded logit divergence); f64 keeps bitwise golden parity.
-    /// No re-upload — weights and grids stay resident.
+    /// bounded logit divergence); int8 additionally runs the quantized
+    /// projections on the integer-domain GEMM (gate anchored to f32;
+    /// `SCALEBITS_INT8=off` demotes it back to f32); f64 keeps bitwise
+    /// golden parity. No re-upload — weights and grids stay resident.
     pub fn set_activations(&self, act: ActPrecision) -> Result<()> {
         self.backend.set_activations(act)
     }
@@ -266,29 +268,32 @@ impl Session {
         let seq = self.manifest().config.seq_len;
         let spec_on = name == "qpredict" && self.backend.spec_active();
 
-        // 1. draft: greedy low-bit proposals per eligible row. A row is
-        // eligible when it emits from an unslid window with headroom —
-        // the verify windows `W ++ d[..j]` must all fit in seq_len.
-        let mut drafts: Vec<Vec<i32>> = Vec::with_capacity(rows.len());
-        for r in rows {
+        // 1. draft: greedy low-bit proposals for ALL eligible rows in
+        // one batched call — the backend runs the rows' draft forwards
+        // in lockstep, sharing the per-iteration weight decode (tokens
+        // bitwise identical to per-row drafting). A row is eligible
+        // when it emits from an unslid window with headroom — the
+        // verify windows `W ++ d[..j]` must all fit in seq_len.
+        let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); rows.len()];
+        let mut srows: Vec<SpecRow> = Vec::new();
+        let mut sidx: Vec<usize> = Vec::new();
+        for (i, r) in rows.iter().enumerate() {
             let k = if spec_on && r.emit && r.pos0 == 0 && r.window.len() < seq {
                 r.spec_k.min(seq - r.window.len())
             } else {
                 0
             };
-            drafts.push(if k == 0 {
-                Vec::new()
-            } else {
-                self.backend.spec_draft(
-                    name,
-                    r.seq,
-                    r.window,
-                    spec_bits,
-                    k,
-                    &self.grids,
-                    &self.weights,
-                )?
-            });
+            if k > 0 {
+                srows.push(SpecRow { seq: r.seq, window: r.window, k });
+                sidx.push(i);
+            }
+        }
+        if !srows.is_empty() {
+            let drafted =
+                self.backend.spec_draft_rows(name, &srows, spec_bits, &self.grids, &self.weights)?;
+            for (i, d) in sidx.into_iter().zip(drafted) {
+                drafts[i] = d;
+            }
         }
 
         // 2. expand: k extra verify rows per drafting row, windows

@@ -92,10 +92,14 @@ pub struct ServeConfig {
     /// anti-starvation knob; `Duration::ZERO` disables aging).
     pub aging: Duration,
     /// Activation precision for the serving forward
-    /// (`--activations {f32,f64}`). Defaults to f32 — the SIMD
+    /// (`--activations {f32,f64,int8}`). Defaults to f32 — the SIMD
     /// kernels under the documented tolerance gate (identical token
-    /// IDs, bounded logit divergence vs f64). `f64` restores bitwise
-    /// parity with the search/eval goldens at decode-throughput cost.
+    /// IDs, bounded logit divergence vs f64). `int8` runs the
+    /// quantized projections on the integer-domain GEMM (token IDs
+    /// bitwise equal to f32 on the decode sweeps, logits within the
+    /// documented bound; `SCALEBITS_INT8=off` demotes it back to
+    /// f32). `f64` restores bitwise parity with the search/eval
+    /// goldens at decode-throughput cost.
     pub activations: ActPrecision,
     /// Incremental KV decode state (`--kv {on,off}`). On (default),
     /// eligible step rows feed only their NEW tokens; the backend

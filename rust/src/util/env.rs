@@ -45,12 +45,14 @@ pub enum Switch {
     Kv = 1,
     /// `SCALEBITS_SPEC` — disable self-speculative drafting.
     Spec = 2,
+    /// `SCALEBITS_INT8` — force f32 serving activations.
+    Int8 = 3,
 }
 
 /// The registry. `scalebits-lint` cross-checks this table against the
 /// ci.sh lanes and the README, so a switch cannot exist without CI
 /// coverage and docs (or vice versa).
-pub const KILL_SWITCHES: [SwitchSpec; 3] = [
+pub const KILL_SWITCHES: [SwitchSpec; 4] = [
     SwitchSpec {
         switch: Switch::Simd,
         var: "SCALEBITS_SIMD",
@@ -68,6 +70,12 @@ pub const KILL_SWITCHES: [SwitchSpec; 3] = [
         var: "SCALEBITS_SPEC",
         off_values: &["off", "0"],
         doc: "disables self-speculative drafting (runtime::interp)",
+    },
+    SwitchSpec {
+        switch: Switch::Int8,
+        var: "SCALEBITS_INT8",
+        off_values: &["off", "f32", "0"],
+        doc: "forces f32 serving activations (disables the int8 path)",
     },
 ];
 
@@ -97,7 +105,8 @@ pub fn spec_of(s: Switch) -> &'static SwitchSpec {
 /// later call returns the memoized answer (one on/off semantics per
 /// process — see the module docs).
 pub fn switch_on(s: Switch) -> bool {
-    static CACHE: [OnceLock<bool>; 3] = [OnceLock::new(), OnceLock::new(), OnceLock::new()];
+    static CACHE: [OnceLock<bool>; 4] =
+        [OnceLock::new(), OnceLock::new(), OnceLock::new(), OnceLock::new()];
     let spec = spec_of(s);
     *CACHE[s as usize].get_or_init(|| parse_on(spec, std::env::var(spec.var).ok().as_deref()))
 }
@@ -115,6 +124,11 @@ pub fn kv_on() -> bool {
 /// `SCALEBITS_SPEC` is not disabling speculative drafting.
 pub fn spec_on() -> bool {
     switch_on(Switch::Spec)
+}
+
+/// `SCALEBITS_INT8` is not forcing f32 serving activations.
+pub fn int8_on() -> bool {
+    switch_on(Switch::Int8)
 }
 
 /// The `SCALEBITS_BACKEND` override, memoized (`None` = unset: every
@@ -158,9 +172,14 @@ mod tests {
         for v in ["off", "0"] {
             assert!(!parse_on(spec, Some(v)), "SCALEBITS_SPEC={v} must mean off");
         }
-        // `recompute` is a KV spelling, not a SPEC/SIMD one
+        let int8 = spec_of(Switch::Int8);
+        for v in ["off", "F32", "0"] {
+            assert!(!parse_on(int8, Some(v)), "SCALEBITS_INT8={v} must mean off");
+        }
+        // `recompute` is a KV spelling, not a SPEC/SIMD/INT8 one
         assert!(parse_on(spec, Some("recompute")));
         assert!(parse_on(simd, Some("recompute")));
+        assert!(parse_on(int8, Some("recompute")));
     }
 
     #[test]
